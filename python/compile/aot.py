@@ -1,0 +1,208 @@
+"""AOT lowering: every L2 entry point -> artifacts/*.hlo.txt + manifest.json.
+
+Interchange format is HLO *text*, NOT a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Python runs ONCE, at build time (`make artifacts`); the rust binary is
+self-contained afterwards and never touches python on the request path.
+
+Artifact inventory (per validation config, see model.VALIDATION_CONFIGS):
+
+  attention tiles — the universal decomposition every SP algorithm uses
+  (DESIGN.md §4): all distributed attention reduces to carry-kernel calls
+  on [B, chunk, g, D] tiles, g ranging over divisors of H:
+    attn_partial_{cfg}_h{g}   q,k,v tile + (O',l,m) carry -> (O',l,m)
+    attn_merge_{cfg}_h{g}     two states -> merged state
+    attn_finalize_{cfg}_h{g}  (O',l) -> O
+    attn_full_{cfg}           [B,L,H,D] single-device oracle
+
+  model stages (Ls in {L, chunk} — full and per-rank shard):
+    dit_embed_{cfg}_l{Ls}     x_tokens,t -> h0,c
+    dit_block{i}_qkv_{cfg}_l{Ls}
+    dit_block{i}_post_{cfg}_l{Ls}
+    dit_final_{cfg}_l{Ls}
+    dit_forward_{cfg}         fused oracle (x,t -> eps)
+    ddim_step_{cfg}           sampler update
+    vae_decode_{cfg}          toy VAE decode
+
+The manifest lists every artifact with exact input/output shapes; the rust
+runtime refuses shape-mismatched calls at load time rather than at runtime.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import flash_attention_carry, merge_states
+from .kernels.ref import finalize as ref_finalize
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange).
+
+    print_large_constants=True is ESSENTIAL: the default elides weight
+    arrays as `constant({...})`, which the text parser silently turns
+    into zeros — the model would "run" but with zero weights.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(tuple(shape), F32)
+
+
+class Builder:
+    def __init__(self, out_dir: str, verbose: bool = True):
+        self.out_dir = out_dir
+        self.manifest = {"version": 1, "configs": [], "artifacts": []}
+        self.verbose = verbose
+
+    def add(self, name: str, fn, in_specs):
+        """Lower `fn` at `in_specs` and record it in the manifest."""
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        out = jax.eval_shape(fn, *in_specs)
+        out_shapes = [list(o.shape) for o in jax.tree_util.tree_leaves(out)]
+        self.manifest["artifacts"].append({
+            "name": name,
+            "file": fname,
+            "inputs": [list(s.shape) for s in in_specs],
+            "outputs": out_shapes,
+        })
+        if self.verbose:
+            print(f"  lowered {name}: "
+                  f"{[tuple(s.shape) for s in in_specs]} -> {out_shapes}")
+
+    def add_config(self, cfg: model.DiTConfig):
+        self.manifest["configs"].append({
+            "name": cfg.name, "b": cfg.b, "l": cfg.l, "h": cfg.h,
+            "d": cfg.d, "depth": cfg.depth, "c_in": cfg.c_in,
+            "mesh": cfg.mesh, "hidden": cfg.hidden, "chunk": cfg.chunk,
+            "head_groups": cfg.head_groups(), "seed": cfg.seed,
+        })
+
+    def save_manifest(self):
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(self.manifest, f, indent=1)
+
+
+def lower_attention_tiles(b: Builder, cfg: model.DiTConfig):
+    """The universal attention tile set (see module docstring)."""
+    B, Lc, D = cfg.b, cfg.chunk, cfg.d
+
+    for g in cfg.head_groups():
+        q = spec(B, Lc, g, D)
+        kv = spec(B, Lc, g, D)
+        st_o, st_l, st_m = spec(B, Lc, g, D), spec(B, g, Lc), spec(B, g, Lc)
+
+        def partial(qq, kk, vv, oc, lc, mc):
+            return flash_attention_carry(qq, kk, vv, oc, lc, mc,
+                                         finalize=False)
+
+        def merge(o1, l1, m1, o2, l2, m2):
+            return merge_states(o1, l1, m1, o2, l2, m2)
+
+        def fin(o, l):
+            return ref_finalize(o, l)
+
+        b.add(f"attn_partial_{cfg.name}_h{g}", partial,
+              [q, kv, kv, st_o, st_l, st_m])
+        b.add(f"attn_merge_{cfg.name}_h{g}", merge,
+              [st_o, st_l, st_m, st_o, st_l, st_m])
+        b.add(f"attn_finalize_{cfg.name}_h{g}", fin, [st_o, st_l])
+
+        # span variants (§Perf L3-2): one fused call absorbing 2^k chunk
+        # tiles of KV at once — fewer kernel dispatches on the rust hot
+        # path, exactly the fusion the paper's Algorithm-2 kernel does.
+        span = 2
+        while span <= cfg.mesh:
+            kv_s = spec(B, span * Lc, g, D)
+            b.add(f"attn_partial_{cfg.name}_h{g}_s{span}", partial,
+                  [q, kv_s, kv_s, st_o, st_l, st_m])
+            span *= 2
+
+    # single-device oracle at full shape
+    from .kernels import flash_attention
+
+    def full(qq, kk, vv):
+        return flash_attention(qq, kk, vv)
+
+    s = spec(cfg.b, cfg.l, cfg.h, cfg.d)
+    b.add(f"attn_full_{cfg.name}", full, [s, s, s])
+
+
+def lower_model_stages(b: Builder, cfg: model.DiTConfig):
+    w = model.make_weights(cfg)
+    B, L, Lc, hid, cin = cfg.b, cfg.l, cfg.chunk, cfg.hidden, cfg.c_in
+
+    for ls in sorted({L, Lc}):
+        b.add(f"dit_embed_{cfg.name}_l{ls}",
+              functools.partial(model.embed, cfg, w),
+              [spec(B, ls, cin), spec(B)])
+        for i in range(cfg.depth):
+            wb = w[f"block{i}"]
+            b.add(f"dit_block{i}_qkv_{cfg.name}_l{ls}",
+                  functools.partial(model.block_qkv, cfg, wb),
+                  [spec(B, ls, hid), spec(B, hid)])
+            b.add(f"dit_block{i}_post_{cfg.name}_l{ls}",
+                  functools.partial(model.block_post, cfg, wb),
+                  [spec(B, ls, hid), spec(B, ls, cfg.h, cfg.d), spec(B, hid)])
+        b.add(f"dit_final_{cfg.name}_l{ls}",
+              functools.partial(model.final_layer, cfg, w),
+              [spec(B, ls, hid), spec(B, hid)])
+
+    b.add(f"dit_forward_{cfg.name}",
+          functools.partial(model.dit_forward, cfg, w),
+          [spec(B, L, cin), spec(B)])
+    b.add(f"ddim_step_{cfg.name}", model.ddim_step,
+          [spec(B, L, cin), spec(B, L, cin), spec(), spec()])
+    b.add(f"vae_decode_{cfg.name}",
+          functools.partial(model.vae_decode, cfg, w),
+          [spec(B, L, cin)])
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts",
+                    help="directory to write *.hlo.txt + manifest.json")
+    ap.add_argument("--configs", default=None,
+                    help="comma-separated config names (default: all)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    names = args.configs.split(",") if args.configs else None
+    b = Builder(args.out_dir)
+    for cfg in model.VALIDATION_CONFIGS:
+        if names and cfg.name not in names:
+            continue
+        print(f"config {cfg.name}: B={cfg.b} L={cfg.l} H={cfg.h} D={cfg.d} "
+              f"hidden={cfg.hidden} chunk={cfg.chunk}")
+        b.add_config(cfg)
+        lower_attention_tiles(b, cfg)
+        lower_model_stages(b, cfg)
+    b.save_manifest()
+    n = len(b.manifest["artifacts"])
+    print(f"wrote {n} artifacts + manifest.json to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

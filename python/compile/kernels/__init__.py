@@ -1,0 +1,10 @@
+"""L1 Pallas kernels for SwiftFusion: fused multi-QKV flash attention with
+softmax-state carry (the Algorithm-2 analog) plus pure-jnp oracles."""
+
+from . import ref  # noqa: F401
+from .flash_attention import (  # noqa: F401
+    flash_attention,
+    flash_attention_carry,
+    flash_attention_multi_kv,
+    merge_states,
+)

@@ -1,0 +1,228 @@
+"""L1 Pallas kernel: fused multi-QKV flash attention with softmax-state carry.
+
+This is the TPU rethink of the paper's Algorithm 2 (an Ampere CUDA kernel
+built on mma.m16n8k16 + ldmatrix + warp shuffles). The insight preserved —
+see DESIGN.md §Hardware-Adaptation — is a single fused kernel that:
+
+  (a) computes attention of a Q tile against a KV partition,
+  (b) *carries in* the running softmax state (O', l, m) accumulated from
+      previously-seen KV partitions (as Ring / Torus Attention deliver
+      them), instead of re-initializing to (0, 0, -inf), and
+  (c) finalizes (divides O' by l) only when told this is the last partition,
+
+so that chunked arrivals never pay re-normalization, extra kernel launches,
+or global-memory round trips of the full score matrix.
+
+CUDA -> Pallas mapping:
+  threadblock tile over (q-tile, batch, head) -> grid=(B, H, nq, nk) with
+    BlockSpec index maps (nk innermost, revisiting the same output block);
+  shared-memory staging of K/V tiles          -> VMEM blocks via BlockSpec,
+    double-buffered by the Pallas pipeline;
+  mma.sync.m16n8k16 tensor-core tiles         -> MXU-shaped jnp.dot with
+    f32 accumulation (preferred_element_type);
+  warp-shuffle rowmax/rowsum (%4 lanes)       -> whole-row VPU reductions
+    along the minor axis — the threadIdx.x%4==0 de-duplication trick is
+    unnecessary because reductions here are not distributed across lanes;
+  `finalize` kernel parameter                 -> static specialization (two
+    compiled variants share the body).
+
+The kernel is lowered with interpret=True: the CPU PJRT plugin cannot run
+Mosaic custom-calls, so real-TPU performance is argued structurally (VMEM
+footprint / MXU alignment) in DESIGN.md, and correctness is validated here
+against kernels.ref via pytest/hypothesis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = float("-inf")
+
+# Default tile sizes. 128 matches the MXU systolic-array edge; interp mode
+# doesn't care, but the lowered structure is what we'd ship to TPU.
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+
+def _pick_block(block: int, length: int) -> int:
+    """Largest tile <= `block` that divides `length` (keeps the kernel
+    mask-free; ragged partitions are padded by the L2 caller instead)."""
+    b = min(block, length)
+    while length % b != 0:
+        b -= 1
+    return b
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, oc_ref, lc_ref, mc_ref,
+                 o_ref, l_ref, m_ref, *, scale: float, nk: int,
+                 finalize: bool):
+    """Grid point = (b, h, iq, ik); ik is innermost and revisits the same
+    output block, accumulating the running (O', l, m) state in-place."""
+    ik = pl.program_id(3)
+
+    # [bq, d] / [bk, d] tiles in VMEM (leading singleton b,h squeezed).
+    q = q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    @pl.when(ik == 0)
+    def _init():
+        # First KV tile of this partition: seed the output refs from the
+        # carried-in state of previously merged partitions.
+        o_ref[0, 0] = oc_ref[0, 0]
+        l_ref[0, 0] = lc_ref[0, 0]
+        m_ref[0, 0] = mc_ref[0, 0]
+
+    m_prev = m_ref[0, 0]                       # [bq]
+    l_prev = l_ref[0, 0]                       # [bq]
+    o_prev = o_ref[0, 0]                       # [bq, d]
+
+    # MXU matmul, f32 accumulate (the mma.m16n8k16 analog).
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale   # [bq, bk]
+
+    m_cur = jnp.max(s, axis=-1)                # row-max on the VPU
+    m_new = jnp.maximum(m_prev, m_cur)
+    # alpha rescales the carried state; guard the -inf - -inf = nan case
+    # (state that has never seen a key: l=0, contributes nothing).
+    alpha = jnp.where(jnp.isneginf(m_prev) & jnp.isneginf(m_new),
+                      0.0, jnp.exp(m_prev - m_new))
+    p = jnp.exp(s - m_new[:, None])            # [bq, bk]
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+    pv = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)    # [bq, d]
+    o_new = o_prev * alpha[:, None] + pv
+
+    if finalize:
+        is_last = ik == nk - 1
+
+        @pl.when(is_last)
+        def _fin():
+            inv = jnp.where(l_new == 0.0, 0.0, 1.0 / l_new)
+            o_ref[0, 0] = o_new * inv[:, None]
+            l_ref[0, 0] = l_new
+            m_ref[0, 0] = m_new
+
+        @pl.when(jnp.logical_not(is_last))
+        def _acc():
+            o_ref[0, 0] = o_new
+            l_ref[0, 0] = l_new
+            m_ref[0, 0] = m_new
+    else:
+        o_ref[0, 0] = o_new
+        l_ref[0, 0] = l_new
+        m_ref[0, 0] = m_new
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("finalize", "block_q", "block_k", "scale"))
+def flash_attention_carry(q, k, v, o_carry, l_carry, m_carry, *,
+                          finalize: bool = False,
+                          block_q: int = DEFAULT_BLOCK_Q,
+                          block_k: int = DEFAULT_BLOCK_K,
+                          scale: float | None = None):
+    """Attention of q against one KV partition, merged into carried state.
+
+    Args:
+      q:        [B, Lq, H, D]
+      k, v:     [B, Lk, H, D]   one KV partition (e.g. one Ring step's tile)
+      o_carry:  [B, Lq, H, D]   running O' (unnormalized output)
+      l_carry:  [B, H, Lq]      running softmax sum
+      m_carry:  [B, H, Lq]      running softmax max
+      finalize: if True, the returned o is normalized (O = O'/l)
+
+    Returns (o, l, m) with the same layouts as the carries.
+    """
+    b, lq, h, d = q.shape
+    _, lk, _, _ = k.shape
+    if scale is None:
+        scale = float(1.0 / (d ** 0.5))
+
+    bq = _pick_block(block_q, lq)
+    bk = _pick_block(block_k, lk)
+    nq, nk = lq // bq, lk // bk
+
+    # [B, H, L, D] layout so tiles are contiguous [bq, D] VMEM blocks.
+    qt = jnp.transpose(q, (0, 2, 1, 3))
+    kt = jnp.transpose(k, (0, 2, 1, 3))
+    vt = jnp.transpose(v, (0, 2, 1, 3))
+    ot = jnp.transpose(o_carry, (0, 2, 1, 3))
+
+    grid = (b, h, nq, nk)
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, nk=nk, finalize=finalize)
+
+    o, l, m = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda ib, ih, iq, ik: (ib, ih, ik, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda ib, ih, iq, ik: (ib, ih, ik, 0)),
+            pl.BlockSpec((1, 1, bq, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, bq), lambda ib, ih, iq, ik: (ib, ih, iq)),
+            pl.BlockSpec((1, 1, bq), lambda ib, ih, iq, ik: (ib, ih, iq)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, bq), lambda ib, ih, iq, ik: (ib, ih, iq)),
+            pl.BlockSpec((1, 1, bq), lambda ib, ih, iq, ik: (ib, ih, iq)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, lq, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, lq), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, lq), jnp.float32),
+        ],
+        interpret=True,
+    )(qt, kt, vt, ot, l_carry, m_carry)
+
+    return jnp.transpose(o, (0, 2, 1, 3)), l, m
+
+
+def flash_attention(q, k, v, *, block_q=DEFAULT_BLOCK_Q,
+                    block_k=DEFAULT_BLOCK_K, scale=None):
+    """Single-shot fused attention (the FlashAttention-2 baseline path,
+    used by the Fig. 12 microbenchmark and the single-device oracle)."""
+    b, lq, h, d = q.shape
+    o0 = jnp.zeros((b, lq, h, d), jnp.float32)
+    l0 = jnp.zeros((b, h, lq), jnp.float32)
+    m0 = jnp.full((b, h, lq), NEG_INF, jnp.float32)
+    o, _, _ = flash_attention_carry(
+        q, k, v, o0, l0, m0, finalize=True,
+        block_q=block_q, block_k=block_k, scale=scale)
+    return o
+
+
+def flash_attention_multi_kv(q, kvs, *, block_q=DEFAULT_BLOCK_Q,
+                             block_k=DEFAULT_BLOCK_K, scale=None):
+    """Multi-KV entry point (Algorithm-2 semantics): fold a list of KV
+    partitions through the carry kernel, finalizing on the last one."""
+    b, lq, h, d = q.shape
+    o = jnp.zeros((b, lq, h, d), jnp.float32)
+    l = jnp.zeros((b, h, lq), jnp.float32)
+    m = jnp.full((b, h, lq), NEG_INF, jnp.float32)
+    for i, (k, v) in enumerate(kvs):
+        o, l, m = flash_attention_carry(
+            q, k, v, o, l, m, finalize=(i == len(kvs) - 1),
+            block_q=block_q, block_k=block_k, scale=scale)
+    return o
+
+
+def merge_states(o1, l1, m1, o2, l2, m2):
+    """Pure-jnp merge of two carried states (Appendix C Eq. 3) — used by
+    the L2 graph when Torus Attention merges partials computed on
+    *different* Q chunks' timelines; lowered into the same HLO artifact."""
+    m = jnp.maximum(m1, m2)
+    a1 = jnp.where(jnp.isneginf(m1) & jnp.isneginf(m), 0.0, jnp.exp(m1 - m))
+    a2 = jnp.where(jnp.isneginf(m2) & jnp.isneginf(m), 0.0, jnp.exp(m2 - m))
+    l = l1 * a1 + l2 * a2
+    s1 = jnp.transpose(a1, (0, 2, 1))[..., None]
+    s2 = jnp.transpose(a2, (0, 2, 1))[..., None]
+    return o1 * s1 + o2 * s2, l, m

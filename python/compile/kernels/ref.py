@@ -1,0 +1,101 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+These implement the math of the paper's Appendix C exactly, with no tiling
+or memory-hierarchy tricks, and serve as the ground truth that the Pallas
+kernels (and, transitively, the rust SP algorithms that consume the lowered
+HLO) are validated against.
+
+Notation follows the paper: attention over Q [B, Lq, H, D] and K/V
+[B, Lk, H, D]; the partial-softmax state is the triplet (O', l, m) with
+O' = O * l (the FlashAttention-2 "unnormalized output" trick, Appendix C
+"Optimizing Floating-Point Operations"), so merging two partials costs no
+divisions and the single division happens at finalization.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = float("-inf")
+
+
+def attention(q, k, v, scale=None):
+    """Vanilla full softmax attention. q,k,v: [B, L{q,k}, H, D] -> [B, Lq, H, D].
+
+    The global oracle: every distributed algorithm must reproduce this.
+    """
+    b, lq, h, d = q.shape
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.array(d, dtype=jnp.float32))
+    # [B, H, Lq, Lk]
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def attention_partial(q, k, v, scale=None):
+    """One KV-partition's contribution as an (O', l, m) triplet (Eq. 1).
+
+    Returns:
+      o_prime: [B, Lq, H, D]  -- unnormalized output O' = O * l
+      l:       [B, H, Lq]     -- running softmax sum
+      m:       [B, H, Lq]     -- running softmax max (of scaled scores)
+    """
+    b, lq, h, d = q.shape
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.array(d, dtype=jnp.float32))
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    m = jnp.max(s, axis=-1)  # [B, H, Lq]
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)  # [B, H, Lq]
+    o_prime = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return o_prime, l, m
+
+
+def merge_partials(o1, l1, m1, o2, l2, m2):
+    """Merge two (O', l, m) partial states (Appendix C, Eq. 2/3).
+
+    m  = max(m1, m2)
+    l  = l1·e^{m1−m} + l2·e^{m2−m}
+    O' = O'1·e^{m1−m} + O'2·e^{m2−m}
+    """
+    m = jnp.maximum(m1, m2)
+    # e^{-inf - -inf} would be nan; a partial that never saw a key has
+    # m = -inf and l = 0 and contributes nothing.
+    a1 = jnp.where(jnp.isneginf(m1) & jnp.isneginf(m), 0.0, jnp.exp(m1 - m))
+    a2 = jnp.where(jnp.isneginf(m2) & jnp.isneginf(m), 0.0, jnp.exp(m2 - m))
+    l = l1 * a1 + l2 * a2
+    # broadcast [B,H,Lq] scale onto [B,Lq,H,D]
+    s1 = jnp.transpose(a1, (0, 2, 1))[..., None]
+    s2 = jnp.transpose(a2, (0, 2, 1))[..., None]
+    o = o1 * s1 + o2 * s2
+    return o, l, m
+
+
+def finalize(o_prime, l):
+    """O = O' / l  (the single division, Appendix C)."""
+    inv = jnp.where(l == 0.0, 0.0, 1.0 / l)
+    return o_prime * jnp.transpose(inv, (0, 2, 1))[..., None]
+
+
+def attention_multi_kv(q, kvs, scale=None):
+    """Reference for the multi-KV fused kernel: sequential merge over
+    KV partitions, as Ring/Torus Attention would see them arrive."""
+    o = l = m = None
+    for k, v in kvs:
+        op, lp, mp = attention_partial(q, k, v, scale=scale)
+        if o is None:
+            o, l, m = op, lp, mp
+        else:
+            o, l, m = merge_partials(o, l, m, op, lp, mp)
+    return finalize(o, l)
+
+
+def zero_state(b, lq, h, d, dtype=jnp.float32):
+    """Identity element of the merge monoid: O'=0, l=0, m=-inf."""
+    o = jnp.zeros((b, lq, h, d), dtype=dtype)
+    l = jnp.zeros((b, h, lq), dtype=dtype)
+    m = jnp.full((b, h, lq), NEG_INF, dtype=dtype)
+    return o, l, m

@@ -1,0 +1,252 @@
+"""L2: the DiT (Diffusion Transformer) compute graph in JAX.
+
+This is the scaled-down analog of the paper's Flux / CogVideoX backbones:
+adaLN-Zero DiT blocks (Peebles & Xie architecture, which both models build
+on), with the attention hot-spot delegated to the L1 Pallas kernel
+(kernels.flash_attention). The paper's figures depend on (B, L, H, D) and
+the network constants — not on trained weight values — so weights are
+synthetic, deterministic per config, and baked into the lowered HLO as
+constants (the rust runtime then needs no weight I/O; see DESIGN.md).
+
+The model is lowered by aot.py into *split* entry points so the rust L3
+coordinator can interleave its distributed attention algorithms between
+them, exactly where NCCL/NVSHMEM calls sit in the paper's engine:
+
+    dit_embed       x_tokens, t            -> h0, c
+    dit_block{i}_qkv   x_shard, c          -> q, k, v      (pre-attention)
+    [ distributed attention: rust sp::* over attn_partial/merge/finalize ]
+    dit_block{i}_post  x_shard, attn_out, c -> x_shard'    (proj+MLP)
+    dit_final       x_shard, c             -> eps_tokens
+    ddim_step       x, eps, abar_t, abar_p -> x_prev
+    vae_decode      x0_tokens              -> pixel patches
+
+plus a fused single-device oracle `dit_forward` used by the quickstart and
+by rust integration tests as ground truth for the distributed paths.
+
+Every function is pointwise in the sequence dimension except attention, so
+sequence-sharded shards can be fed directly — the property sequence
+parallelism relies on (Section 2.2 of the paper).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+import jax.numpy as jnp
+
+from .kernels import flash_attention
+
+
+@dataclasses.dataclass(frozen=True)
+class DiTConfig:
+    """A scaled-down DiT instance + the workload shape it serves.
+
+    `l` is the *global* sequence length (number of latent tokens); `chunk`
+    is the finest sequence granularity the distributed engine uses
+    (l / P_total for the largest mesh this config is validated on).
+    """
+    name: str
+    b: int          # batch size
+    l: int          # global sequence length (tokens)
+    h: int          # number of attention heads (paper: 24)
+    d: int          # head dimension (paper: 64 / 128)
+    depth: int      # number of DiT blocks
+    c_in: int       # patchified input channels (C * p^2)
+    mesh: int       # max total ranks this config is validated on
+    seed: int = 0
+
+    @property
+    def hidden(self) -> int:
+        return self.h * self.d
+
+    @property
+    def chunk(self) -> int:
+        return self.l // self.mesh
+
+    def head_groups(self):
+        """Head-group sizes the SP algorithms may shard to (divisors of h)."""
+        return [g for g in range(1, self.h + 1) if self.h % g == 0]
+
+
+# The configs the rust engine validates real numerics on. Mirrored in
+# rust/src/config/validation.rs — keep in sync (checked by manifest tests).
+VALIDATION_CONFIGS = [
+    DiTConfig(name="small4", b=1, l=128, h=4, d=16, depth=2, c_in=16, mesh=4, seed=1),
+    DiTConfig(name="small8", b=2, l=256, h=8, d=16, depth=2, c_in=16, mesh=8, seed=2),
+]
+
+
+def get_config(name: str) -> DiTConfig:
+    for c in VALIDATION_CONFIGS:
+        if c.name == name:
+            return c
+    raise KeyError(name)
+
+
+# ---------------------------------------------------------------------------
+# Weights
+# ---------------------------------------------------------------------------
+
+def _linear_init(rng, fan_in, fan_out, gain=1.0):
+    w = rng.standard_normal((fan_in, fan_out)).astype(np.float32)
+    w *= gain / math.sqrt(fan_in)
+    b = np.zeros((fan_out,), np.float32)
+    return jnp.asarray(w), jnp.asarray(b)
+
+
+def make_weights(cfg: DiTConfig):
+    """Deterministic synthetic weights for `cfg` (seeded; identical across
+    processes so python tests and rust artifacts agree bit-for-bit)."""
+    rng = np.random.default_rng(cfg.seed)
+    hid = cfg.hidden
+    w = {}
+    w["embed"] = _linear_init(rng, cfg.c_in, hid)
+    w["t_mlp1"] = _linear_init(rng, hid, hid)
+    w["t_mlp2"] = _linear_init(rng, hid, hid)
+    for i in range(cfg.depth):
+        blk = {}
+        # adaLN-Zero starts modulation at zero (identity blocks); we use
+        # small-random instead so validation numerics are non-trivial.
+        blk["mod"] = _linear_init(rng, hid, 6 * hid, gain=0.1)
+        blk["qkv"] = _linear_init(rng, hid, 3 * hid)
+        blk["proj"] = _linear_init(rng, hid, hid)
+        blk["mlp1"] = _linear_init(rng, hid, 4 * hid)
+        blk["mlp2"] = _linear_init(rng, 4 * hid, hid)
+        w[f"block{i}"] = blk
+    # final adaLN (shift, scale) + projection back to token space
+    w["final_mod"] = _linear_init(rng, hid, 2 * hid, gain=0.1)
+    w["final"] = _linear_init(rng, hid, cfg.c_in)
+    # toy linear VAE decoder: latent token -> 2x2 RGB patch (12 values)
+    w["vae"] = _linear_init(rng, cfg.c_in, 12)
+    return w
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+def _linear(x, wb):
+    w, b = wb
+    return x @ w + b
+
+
+def _layer_norm(x, eps=1e-6):
+    # elementwise_affine=False, as in DiT adaLN blocks
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps)
+
+
+def _modulate(x, shift, scale):
+    # shift/scale: [B, hidden] broadcast over the sequence dim
+    return x * (1.0 + scale[:, None, :]) + shift[:, None, :]
+
+
+def _silu(x):
+    return x * jnp.reciprocal(1.0 + jnp.exp(-x))
+
+
+def timestep_embedding(t, dim):
+    """Sinusoidal timestep embedding (DDPM convention). t: [B] float32."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    args = t[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)
+
+
+def embed(cfg: DiTConfig, w, x_tokens, t):
+    """Patch-embedded tokens + conditioning vector.
+
+    x_tokens: [B, Ls, c_in], t: [B] -> (h0 [B, Ls, hidden], c [B, hidden])
+    """
+    h0 = _linear(x_tokens, w["embed"])
+    te = timestep_embedding(t, cfg.hidden)
+    c = _linear(_silu(_linear(te, w["t_mlp1"])), w["t_mlp2"])
+    return h0, c
+
+
+def block_modulation(w_blk, c):
+    """The six adaLN-Zero modulation tensors of one block: [B, hidden] each."""
+    mod = _linear(_silu(c), w_blk["mod"])
+    return jnp.split(mod, 6, axis=-1)
+
+
+def block_qkv(cfg: DiTConfig, w_blk, x, c):
+    """Pre-attention half of a DiT block (pointwise in sequence).
+
+    x: [B, Ls, hidden] -> q, k, v: [B, Ls, H, D]
+    """
+    shift1, scale1, _, _, _, _ = block_modulation(w_blk, c)
+    xin = _modulate(_layer_norm(x), shift1, scale1)
+    qkv = _linear(xin, w_blk["qkv"])
+    b, ls, _ = qkv.shape
+    qkv = qkv.reshape(b, ls, 3, cfg.h, cfg.d)
+    return qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+
+
+def block_post(cfg: DiTConfig, w_blk, x, attn_out, c):
+    """Post-attention half: out-projection, gated residual, MLP.
+
+    x: [B, Ls, hidden], attn_out: [B, Ls, H, D] -> [B, Ls, hidden]
+    """
+    _, _, gate1, shift2, scale2, gate2 = block_modulation(w_blk, c)
+    b, ls = x.shape[:2]
+    a = attn_out.reshape(b, ls, cfg.hidden)
+    x = x + gate1[:, None, :] * _linear(a, w_blk["proj"])
+    m = _modulate(_layer_norm(x), shift2, scale2)
+    m = _linear(_silu(_linear(m, w_blk["mlp1"])), w_blk["mlp2"])
+    return x + gate2[:, None, :] * m
+
+
+def final_layer(cfg: DiTConfig, w, x, c):
+    """adaLN final layer -> eps prediction in token space. [B, Ls, c_in]."""
+    mod = _linear(_silu(c), w["final_mod"])
+    shift, scale = jnp.split(mod, 2, axis=-1)
+    return _linear(_modulate(_layer_norm(x), shift, scale), w["final"])
+
+
+def dit_forward(cfg: DiTConfig, w, x_tokens, t):
+    """Fused single-device forward — the oracle for all distributed paths.
+
+    Attention goes through the L1 Pallas kernel so the oracle exercises the
+    identical numeric path the distributed artifacts use.
+    """
+    x, c = embed(cfg, w, x_tokens, t)
+    for i in range(cfg.depth):
+        w_blk = w[f"block{i}"]
+        q, k, v = block_qkv(cfg, w_blk, x, c)
+        attn = flash_attention(q, k, v)
+        x = block_post(cfg, w_blk, x, attn, c)
+    return final_layer(cfg, w, x, c)
+
+
+# ---------------------------------------------------------------------------
+# Sampler + toy VAE
+# ---------------------------------------------------------------------------
+
+def ddim_step(x, eps, abar_t, abar_prev):
+    """One deterministic DDIM update. x, eps: [B, Ls, c_in]; abar_*: [] f32."""
+    sqrt_abar = jnp.sqrt(abar_t)
+    sqrt_1m = jnp.sqrt(1.0 - abar_t)
+    x0 = (x - sqrt_1m * eps) / sqrt_abar
+    return jnp.sqrt(abar_prev) * x0 + jnp.sqrt(1.0 - abar_prev) * eps
+
+
+def ddim_alphas(num_steps: int, total: int = 1000):
+    """Host-side schedule: cosine alpha-bar at `num_steps` evenly spaced t's.
+
+    Returns (ts, abars) as python lists; mirrored in rust model/sampler.rs.
+    """
+    def abar(t):
+        return math.cos((t / total + 0.008) / 1.008 * math.pi / 2) ** 2
+    ts = [total - 1 - i * (total // num_steps) for i in range(num_steps)]
+    return ts, [abar(t) for t in ts]
+
+
+def vae_decode(cfg: DiTConfig, w, x0_tokens):
+    """Toy linear VAE decoder: latent token -> 2x2 RGB patch values in [0,1].
+    Stands in for the paper's VAE stage (Figure 1) on the serving path."""
+    pix = _linear(x0_tokens, w["vae"])
+    return jnp.reciprocal(1.0 + jnp.exp(-pix))  # sigmoid to [0,1]

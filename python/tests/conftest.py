@@ -1,0 +1,8 @@
+"""Make `compile` importable regardless of pytest invocation directory
+(the canonical invocations are `cd python && pytest tests/` and
+`pytest python/tests/` from the repo root)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

@@ -1,0 +1,132 @@
+"""AOT pipeline tests: manifest integrity and HLO-text artifact validity.
+
+These run against a small throwaway lowering (tmp dir) so they don't
+require `make artifacts` to have run, plus consistency checks on the real
+artifacts/ directory when it exists.
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+ARTIFACTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def mini_build(tmp_path_factory):
+    """Lower just the attention tiles of small4 into a tmp dir."""
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    b = aot.Builder(out, verbose=False)
+    cfg = model.VALIDATION_CONFIGS[0]
+    b.add_config(cfg)
+    aot.lower_attention_tiles(b, cfg)
+    b.save_manifest()
+    return out, b.manifest
+
+
+class TestBuilder:
+    def test_manifest_written(self, mini_build):
+        out, _ = mini_build
+        with open(os.path.join(out, "manifest.json")) as f:
+            m = json.load(f)
+        assert m["version"] == 1
+        assert m["configs"][0]["name"] == "small4"
+
+    def test_every_artifact_file_exists(self, mini_build):
+        out, manifest = mini_build
+        for a in manifest["artifacts"]:
+            path = os.path.join(out, a["file"])
+            assert os.path.exists(path), a["name"]
+            text = open(path).read()
+            # HLO text sanity: module header + entry computation
+            assert text.startswith("HloModule"), a["name"]
+            assert "ENTRY" in text, a["name"]
+
+    def test_attention_tile_shapes(self, mini_build):
+        _, manifest = mini_build
+        cfg = model.VALIDATION_CONFIGS[0]
+        by_name = {a["name"]: a for a in manifest["artifacts"]}
+        for g in cfg.head_groups():
+            a = by_name[f"attn_partial_{cfg.name}_h{g}"]
+            assert a["inputs"][0] == [cfg.b, cfg.chunk, g, cfg.d]
+            assert a["inputs"][4] == [cfg.b, g, cfg.chunk]
+            assert a["outputs"][0] == [cfg.b, cfg.chunk, g, cfg.d]
+            m = by_name[f"attn_merge_{cfg.name}_h{g}"]
+            assert len(m["inputs"]) == 6 and len(m["outputs"]) == 3
+            f = by_name[f"attn_finalize_{cfg.name}_h{g}"]
+            assert len(f["inputs"]) == 2 and len(f["outputs"]) == 1
+
+    def test_full_oracle_shape(self, mini_build):
+        _, manifest = mini_build
+        cfg = model.VALIDATION_CONFIGS[0]
+        by_name = {a["name"]: a for a in manifest["artifacts"]}
+        a = by_name[f"attn_full_{cfg.name}"]
+        assert a["inputs"][0] == [cfg.b, cfg.l, cfg.h, cfg.d]
+
+    def test_config_record_complete(self, mini_build):
+        _, manifest = mini_build
+        c = manifest["configs"][0]
+        for key in ("name", "b", "l", "h", "d", "depth", "c_in", "mesh",
+                    "hidden", "chunk", "head_groups", "seed"):
+            assert key in c
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ARTIFACTS_DIR, "manifest.json")),
+                    reason="run `make artifacts` first")
+class TestRealArtifacts:
+    """Consistency of the checked-out artifacts/ build (if present)."""
+
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ARTIFACTS_DIR, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_all_configs_present(self, manifest):
+        names = {c["name"] for c in manifest["configs"]}
+        assert names == {c.name for c in model.VALIDATION_CONFIGS}
+
+    def test_all_files_exist(self, manifest):
+        for a in manifest["artifacts"]:
+            assert os.path.exists(os.path.join(ARTIFACTS_DIR, a["file"])), a["name"]
+
+    def test_expected_entry_points(self, manifest):
+        names = {a["name"] for a in manifest["artifacts"]}
+        for cfg in model.VALIDATION_CONFIGS:
+            assert f"dit_forward_{cfg.name}" in names
+            assert f"ddim_step_{cfg.name}" in names
+            assert f"vae_decode_{cfg.name}" in names
+            for g in cfg.head_groups():
+                assert f"attn_partial_{cfg.name}_h{g}" in names
+            for ls in {cfg.l, cfg.chunk}:
+                assert f"dit_embed_{cfg.name}_l{ls}" in names
+                for i in range(cfg.depth):
+                    assert f"dit_block{i}_qkv_{cfg.name}_l{ls}" in names
+                    assert f"dit_block{i}_post_{cfg.name}_l{ls}" in names
+
+    def test_no_dangling_files(self, manifest):
+        listed = {a["file"] for a in manifest["artifacts"]} | {"manifest.json"}
+        on_disk = {f for f in os.listdir(ARTIFACTS_DIR) if not f.startswith(".")}
+        assert on_disk <= listed, on_disk - listed
+
+
+class TestNoElidedConstants:
+    def test_hlo_text_keeps_large_constants(self, mini_build):
+        """Regression: as_hlo_text must print weight arrays, not elide
+        them as `constant({...})` (the text parser zeroes elisions)."""
+        out, manifest = mini_build
+        for a in manifest["artifacts"]:
+            text = open(os.path.join(out, a["file"])).read()
+            assert "constant({...})" not in text, a["name"]
+
+    @pytest.mark.skipif(
+        not os.path.exists(os.path.join(ARTIFACTS_DIR, "manifest.json")),
+        reason="run `make artifacts` first")
+    def test_real_artifacts_have_no_elisions(self):
+        with open(os.path.join(ARTIFACTS_DIR, "manifest.json")) as f:
+            m = json.load(f)
+        for a in m["artifacts"]:
+            text = open(os.path.join(ARTIFACTS_DIR, a["file"])).read()
+            assert "constant({...})" not in text, a["name"]

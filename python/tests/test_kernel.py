@@ -1,0 +1,184 @@
+"""Pallas kernel vs pure-jnp reference — the CORE correctness signal.
+
+Everything downstream (the AOT HLO artifacts, and through them every rust
+SP algorithm) computes attention with this kernel, so it is swept across
+shapes, tile sizes, partition counts, and numeric regimes against ref.py.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    ref,
+    flash_attention,
+    flash_attention_carry,
+    flash_attention_multi_kv,
+    merge_states,
+)
+
+RNG = np.random.default_rng(7)
+
+
+def rand(*shape, scale=0.5):
+    return jnp.array(RNG.standard_normal(shape) * scale, jnp.float32)
+
+
+def make_qkv(b, l, h, d, lk=None):
+    lk = lk or l
+    return rand(b, l, h, d), rand(b, lk, h, d), rand(b, lk, h, d)
+
+
+class TestSingleShot:
+    @pytest.mark.parametrize("b,l,h,d", [
+        (1, 16, 1, 8),
+        (2, 64, 4, 32),
+        (1, 128, 2, 64),
+        (1, 96, 3, 16),   # L not a power of two
+        (3, 32, 24, 8),   # paper's H=24
+    ])
+    def test_matches_reference(self, b, l, h, d):
+        q, k, v = make_qkv(b, l, h, d)
+        got = flash_attention(q, k, v)
+        want = ref.attention(q, k, v)
+        np.testing.assert_allclose(np.array(got), np.array(want),
+                                   atol=2e-5, rtol=1e-4)
+
+    @pytest.mark.parametrize("bq,bk", [(8, 8), (16, 32), (32, 16), (128, 128), (7, 5)])
+    def test_tile_size_invariance(self, bq, bk):
+        """Output must not depend on the tiling (the kernel's analog of the
+        paper's tQO/tKV parameters)."""
+        q, k, v = make_qkv(1, 64, 2, 16)
+        want = ref.attention(q, k, v)
+        got = flash_attention(q, k, v, block_q=bq, block_k=bk)
+        np.testing.assert_allclose(np.array(got), np.array(want),
+                                   atol=2e-5, rtol=1e-4)
+
+    def test_rectangular_lq_ne_lk(self):
+        q, k, v = make_qkv(1, 32, 2, 16, lk=48)
+        got = flash_attention(q, k, v, block_q=16, block_k=16)
+        want = ref.attention(q, k, v)
+        np.testing.assert_allclose(np.array(got), np.array(want), atol=2e-5)
+
+    def test_custom_scale(self):
+        q, k, v = make_qkv(1, 16, 1, 8)
+        got = flash_attention(q, k, v, scale=0.25)
+        want_s = ref.attention_partial(q, k, v, scale=0.25)
+        want = ref.finalize(want_s[0], want_s[1])
+        np.testing.assert_allclose(np.array(got), np.array(want), atol=2e-5)
+
+    def test_large_scores_stable(self):
+        q = jnp.full((1, 8, 1, 8), 20.0, jnp.float32)
+        k = jnp.full((1, 8, 1, 8), 20.0, jnp.float32)
+        v = rand(1, 8, 1, 8)
+        got = flash_attention(q, k, v, block_q=4, block_k=4)
+        assert np.isfinite(np.array(got)).all()
+
+
+class TestCarrySemantics:
+    """The Algorithm-2 analog behaviours: carry-in, no finalize, finalize."""
+
+    def test_carry_chain_equals_full(self):
+        b, l, h, d = 1, 48, 2, 8
+        q, k, v = make_qkv(b, l, h, d)
+        o = jnp.zeros((b, l, h, d), jnp.float32)
+        lacc = jnp.zeros((b, h, l), jnp.float32)
+        m = jnp.full((b, h, l), -np.inf, jnp.float32)
+        for i in range(3):
+            ks, vs = k[:, i*16:(i+1)*16], v[:, i*16:(i+1)*16]
+            o, lacc, m = flash_attention_carry(
+                q, ks, vs, o, lacc, m, finalize=(i == 2),
+                block_q=16, block_k=8)
+        want = ref.attention(q, k, v)
+        np.testing.assert_allclose(np.array(o), np.array(want), atol=2e-5)
+
+    def test_unfinalized_state_matches_ref_partial(self):
+        """finalize=False must return the raw (O', l, m) triplet so a later
+        partition (arriving over the ring) can be merged in."""
+        q, k, v = make_qkv(1, 16, 2, 8)
+        o0 = jnp.zeros((1, 16, 2, 8), jnp.float32)
+        l0 = jnp.zeros((1, 2, 16), jnp.float32)
+        m0 = jnp.full((1, 2, 16), -np.inf, jnp.float32)
+        o, l, m = flash_attention_carry(q, k, v, o0, l0, m0,
+                                        finalize=False, block_q=16, block_k=16)
+        ro, rl, rm = ref.attention_partial(q, k, v)
+        np.testing.assert_allclose(np.array(o), np.array(ro), atol=2e-5, rtol=1e-4)
+        np.testing.assert_allclose(np.array(l), np.array(rl), atol=2e-5, rtol=1e-4)
+        np.testing.assert_allclose(np.array(m), np.array(rm), atol=1e-6)
+
+    def test_carry_tiled_k_no_double_count(self):
+        """The paper's threadIdx%4 l-duplication bug class: chaining with
+        multiple K tiles per call must not double-count the carried l."""
+        q, k, v = make_qkv(1, 16, 1, 8, lk=32)
+        o0 = jnp.zeros((1, 16, 1, 8), jnp.float32)
+        l0 = jnp.zeros((1, 1, 16), jnp.float32)
+        m0 = jnp.full((1, 1, 16), -np.inf, jnp.float32)
+        # partition 1 with 4 internal K tiles, then partition 2 finalizing
+        o, l, m = flash_attention_carry(q, k[:, :16], v[:, :16], o0, l0, m0,
+                                        finalize=False, block_q=8, block_k=4)
+        o, l, m = flash_attention_carry(q, k[:, 16:], v[:, 16:], o, l, m,
+                                        finalize=True, block_q=8, block_k=4)
+        want = ref.attention(q, k, v)
+        np.testing.assert_allclose(np.array(o), np.array(want), atol=2e-5)
+
+    def test_merge_states_matches_ref(self):
+        q, k, v = make_qkv(1, 8, 2, 4, lk=16)
+        a = ref.attention_partial(q, k[:, :8], v[:, :8])
+        b = ref.attention_partial(q, k[:, 8:], v[:, 8:])
+        got = merge_states(*a, *b)
+        want = ref.merge_partials(*a, *b)
+        for x, y in zip(got, want):
+            np.testing.assert_allclose(np.array(x), np.array(y), rtol=1e-5, atol=1e-6)
+
+
+class TestMultiKV:
+    @pytest.mark.parametrize("nparts", [1, 2, 4, 6])
+    def test_matches_full(self, nparts):
+        b, l, h, d = 1, 48, 2, 16
+        q, k, v = make_qkv(b, l, h, d)
+        step = l // nparts
+        kvs = [(k[:, i*step:(i+1)*step], v[:, i*step:(i+1)*step])
+               for i in range(nparts)]
+        got = flash_attention_multi_kv(q, kvs, block_q=16, block_k=8)
+        want = ref.attention(q, k, v)
+        np.testing.assert_allclose(np.array(got), np.array(want), atol=2e-5)
+
+    def test_uneven_partitions(self):
+        """Torus Attention delivers discontiguous, uneven KV partitions."""
+        q, k, v = make_qkv(1, 32, 2, 8, lk=40)
+        bounds = [0, 8, 24, 40]
+        kvs = [(k[:, a:b], v[:, a:b]) for a, b in zip(bounds, bounds[1:])]
+        got = flash_attention_multi_kv(q, kvs, block_q=8, block_k=8)
+        want = ref.attention(q, k, v)
+        np.testing.assert_allclose(np.array(got), np.array(want), atol=2e-5)
+
+    def test_arrival_order_invariance(self):
+        """Ring vs Torus deliver KV partitions in different orders; the
+        result must be identical (merge commutativity end-to-end)."""
+        q, k, v = make_qkv(1, 24, 2, 8)
+        parts = [(k[:, i*8:(i+1)*8], v[:, i*8:(i+1)*8]) for i in range(3)]
+        o1 = flash_attention_multi_kv(q, parts, block_q=8, block_k=8)
+        o2 = flash_attention_multi_kv(q, parts[::-1], block_q=8, block_k=8)
+        np.testing.assert_allclose(np.array(o1), np.array(o2), atol=2e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    l=st.sampled_from([16, 32, 48]),
+    h=st.sampled_from([1, 2, 4]),
+    d=st.sampled_from([8, 16, 32]),
+    bq=st.sampled_from([8, 16, 128]),
+    bk=st.sampled_from([8, 16, 128]),
+)
+def test_kernel_hypothesis_sweep(b, l, h, d, bq, bk):
+    """Hypothesis sweep over shapes x tile sizes vs the oracle."""
+    rng = np.random.default_rng(b + l + h + d + bq + bk)
+    q = jnp.array(rng.standard_normal((b, l, h, d)), jnp.float32)
+    k = jnp.array(rng.standard_normal((b, l, h, d)), jnp.float32)
+    v = jnp.array(rng.standard_normal((b, l, h, d)), jnp.float32)
+    got = flash_attention(q, k, v, block_q=bq, block_k=bk)
+    want = ref.attention(q, k, v)
+    np.testing.assert_allclose(np.array(got), np.array(want),
+                               atol=3e-5, rtol=1e-4)

@@ -1,0 +1,168 @@
+"""Tests for the pure-jnp oracles themselves (ref.py).
+
+The oracles are the root of the correctness chain (Pallas kernel -> HLO
+artifacts -> rust SP algorithms), so they get their own algebra tests:
+the (O', l, m) merge must be a commutative monoid action whose fold equals
+full softmax attention no matter how the KV sequence is partitioned.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+RNG = np.random.default_rng(1234)
+
+
+def rand(*shape):
+    return jnp.array(RNG.standard_normal(shape) * 0.5, jnp.float32)
+
+
+def make_qkv(b, l, h, d, lk=None):
+    lk = lk or l
+    return rand(b, l, h, d), rand(b, lk, h, d), rand(b, lk, h, d)
+
+
+class TestAttentionOracle:
+    def test_softmax_rows_sum_to_one_property(self):
+        """attention(q,k,v) with v=ones must return ones (softmax rows sum to 1)."""
+        q, k, _ = make_qkv(2, 16, 2, 8)
+        v = jnp.ones((2, 16, 2, 8), jnp.float32)
+        o = ref.attention(q, k, v)
+        np.testing.assert_allclose(np.array(o), 1.0, atol=1e-6)
+
+    def test_single_key_returns_its_value(self):
+        """With one key, output == that key's value regardless of scores."""
+        q = rand(1, 8, 2, 4)
+        k = rand(1, 1, 2, 4)
+        v = rand(1, 1, 2, 4)
+        o = ref.attention(q, k, v)
+        np.testing.assert_allclose(
+            np.array(o), np.broadcast_to(np.array(v), o.shape), atol=1e-6)
+
+    def test_head_independence(self):
+        """Attention must be head-independent — the property Ulysses
+        Attention exploits (Section 2.2)."""
+        q, k, v = make_qkv(1, 12, 4, 8)
+        full = ref.attention(q, k, v)
+        for h in range(4):
+            per_head = ref.attention(q[:, :, h:h+1], k[:, :, h:h+1], v[:, :, h:h+1])
+            np.testing.assert_allclose(
+                np.array(full[:, :, h:h+1]), np.array(per_head), atol=1e-6)
+
+    def test_permuting_keys_is_invariant(self):
+        """Softmax attention is permutation-invariant in the KV sequence —
+        why Ring/Torus arrival order doesn't matter."""
+        q, k, v = make_qkv(1, 8, 2, 4, lk=10)
+        perm = RNG.permutation(10)
+        o1 = ref.attention(q, k, v)
+        o2 = ref.attention(q, k[:, perm], v[:, perm])
+        np.testing.assert_allclose(np.array(o1), np.array(o2), atol=1e-6)
+
+    def test_scale_default_is_rsqrt_d(self):
+        q, k, v = make_qkv(1, 8, 1, 16)
+        o1 = ref.attention(q, k, v)
+        o2 = ref.attention(q, k, v, scale=1.0 / np.sqrt(16.0))
+        np.testing.assert_allclose(np.array(o1), np.array(o2), atol=1e-7)
+
+
+class TestPartialMergeAlgebra:
+    def fold(self, q, parts):
+        o, l, m = ref.attention_partial(q, *parts[0])
+        for k, v in parts[1:]:
+            o2, l2, m2 = ref.attention_partial(q, k, v)
+            o, l, m = ref.merge_partials(o, l, m, o2, l2, m2)
+        return ref.finalize(o, l)
+
+    @pytest.mark.parametrize("nparts", [1, 2, 3, 4, 8])
+    def test_fold_equals_full_attention(self, nparts):
+        """Partition-invariance: merging per-partition partials == full
+        attention (Appendix C correctness)."""
+        b, l, h, d = 2, 24, 2, 8
+        q, k, v = make_qkv(b, l, h, d)
+        step = l // nparts
+        parts = [(k[:, i*step:(i+1)*step], v[:, i*step:(i+1)*step])
+                 for i in range(nparts)]
+        got = self.fold(q, parts)
+        want = ref.attention(q, k, v)
+        np.testing.assert_allclose(np.array(got), np.array(want), atol=1e-5)
+
+    def test_merge_commutative(self):
+        q, k, v = make_qkv(1, 8, 2, 4, lk=16)
+        a = ref.attention_partial(q, k[:, :8], v[:, :8])
+        b = ref.attention_partial(q, k[:, 8:], v[:, 8:])
+        ab = ref.merge_partials(*a, *b)
+        ba = ref.merge_partials(*b, *a)
+        for x, y in zip(ab, ba):
+            np.testing.assert_allclose(np.array(x), np.array(y), rtol=1e-6)
+
+    def test_merge_associative(self):
+        q, k, v = make_qkv(1, 8, 2, 4, lk=24)
+        ps = [ref.attention_partial(q, k[:, i*8:(i+1)*8], v[:, i*8:(i+1)*8])
+              for i in range(3)]
+        left = ref.merge_partials(*ref.merge_partials(*ps[0], *ps[1]), *ps[2])
+        right = ref.merge_partials(*ps[0], *ref.merge_partials(*ps[1], *ps[2]))
+        for x, y in zip(left, right):
+            np.testing.assert_allclose(np.array(x), np.array(y), rtol=1e-5, atol=1e-6)
+
+    def test_zero_state_is_identity(self):
+        """(0, 0, -inf) is the identity of the merge monoid."""
+        q, k, v = make_qkv(1, 8, 2, 4)
+        p = ref.attention_partial(q, k, v)
+        z = ref.zero_state(1, 8, 2, 4)
+        merged = ref.merge_partials(*z, *p)
+        for x, y in zip(merged, p):
+            np.testing.assert_allclose(np.array(x), np.array(y), rtol=1e-6)
+        merged = ref.merge_partials(*p, *z)
+        for x, y in zip(merged, p):
+            np.testing.assert_allclose(np.array(x), np.array(y), rtol=1e-6)
+
+    def test_no_nan_from_identity_merge(self):
+        """Merging two identity states must not produce NaN (the -inf - -inf
+        guard)."""
+        z1 = ref.zero_state(1, 4, 1, 4)
+        z2 = ref.zero_state(1, 4, 1, 4)
+        o, l, m = ref.merge_partials(*z1, *z2)
+        assert not np.isnan(np.array(o)).any()
+        assert not np.isnan(np.array(l)).any()
+
+    def test_finalize_zero_l_gives_zero_not_nan(self):
+        o, l, m = ref.zero_state(1, 4, 1, 4)
+        out = ref.finalize(o, l)
+        assert np.all(np.array(out) == 0.0)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.integers(1, 2),
+        l=st.sampled_from([8, 16, 24]),
+        h=st.integers(1, 3),
+        d=st.sampled_from([4, 8, 16]),
+        nparts=st.integers(1, 4),
+    )
+    def test_partition_invariance_hypothesis(self, b, l, h, d, nparts):
+        """Random uneven partitions of the KV sequence all fold to the
+        same attention output."""
+        rng = np.random.default_rng(b * 1000 + l * 10 + h + d + nparts)
+        q = jnp.array(rng.standard_normal((b, l, h, d)), jnp.float32)
+        k = jnp.array(rng.standard_normal((b, l, h, d)), jnp.float32)
+        v = jnp.array(rng.standard_normal((b, l, h, d)), jnp.float32)
+        # random cut points
+        cuts = sorted(rng.choice(np.arange(1, l), size=min(nparts - 1, l - 1),
+                                 replace=False).tolist()) if nparts > 1 else []
+        bounds = [0] + cuts + [l]
+        parts = [(k[:, a:bnd], v[:, a:bnd]) for a, bnd in zip(bounds, bounds[1:])]
+        got = ref.attention_multi_kv(q, parts)
+        want = ref.attention(q, k, v)
+        np.testing.assert_allclose(np.array(got), np.array(want), atol=2e-5)
+
+    def test_extreme_scores_stable(self):
+        """Large-magnitude Q/K (score overflow territory) stays finite —
+        the running-max subtraction at work."""
+        q = jnp.full((1, 4, 1, 8), 30.0, jnp.float32)
+        k = jnp.full((1, 8, 1, 8), 30.0, jnp.float32)
+        v = rand(1, 8, 1, 8)
+        parts = [(k[:, :4], v[:, :4]), (k[:, 4:], v[:, 4:])]
+        got = ref.attention_multi_kv(q, parts)
+        assert np.isfinite(np.array(got)).all()

@@ -1,0 +1,46 @@
+//! Figure 10 — ablation: USP → +topology-aware scheduling (TAS) →
+//! +Torus Attention over NCCL → +one-sided (full SwiftFusion), per
+//! workload, one sampling step on 4×8.
+//!
+//! Expected shape (paper Appendix B): TAS alone gives ~1.27x; Torus adds
+//! most for the long-sequence video workloads (comm volume large enough
+//! to matter); one-sided adds most for the image workloads (where the
+//! sync/SM overheads dominate the smaller transfers).
+//!
+//! Run: `cargo bench --bench fig10_ablation`
+
+use swiftfusion::bench::{print_table, Series};
+use swiftfusion::config::ClusterSpec;
+use swiftfusion::coordinator::engine::SimService;
+use swiftfusion::sp::SpAlgo;
+use swiftfusion::workload::Workload;
+
+fn main() {
+    let cluster = ClusterSpec::paper_testbed();
+    let variants = [
+        ("usp", SpAlgo::Usp),
+        ("+tas", SpAlgo::Tas),
+        ("+torus(nccl)", SpAlgo::TorusNccl),
+        ("+one-sided (sfu)", SpAlgo::SwiftFusion),
+    ];
+    let mut series: Vec<Series> = variants
+        .iter()
+        .map(|(name, _)| Series::new(*name))
+        .collect();
+    for w in Workload::paper_suite() {
+        for (i, (_, algo)) in variants.iter().enumerate() {
+            let svc = SimService::new(cluster.clone(), *algo);
+            let step = svc.layer_time(&w, 1) * w.layers as f64;
+            series[i].push(w.name.to_string(), step);
+        }
+    }
+    print_table(
+        "Fig 10: ablation — one sampling step on 4x8, per workload",
+        &series,
+        Some("usp"),
+    );
+    println!(
+        "\nreading: every row should order usp >= +tas >= +torus(nccl) >= sfu;\n\
+         torus helps most on cogvideox (long L), one-sided most on flux."
+    );
+}

@@ -1,0 +1,97 @@
+//! Figure 3 — motivation.
+//!
+//! (a) Intra- vs inter-machine aggregated bandwidth across machine
+//!     generations (the widening gap the design targets).
+//! (b) USP latency breakdown (compute vs exposed communication) as the
+//!     machine count grows: USP becomes communication-bound at 4
+//!     machines — regenerated from the executable schedules, not from
+//!     the closed forms.
+//!
+//! Run: `cargo bench --bench fig3_motivation`
+
+use swiftfusion::cluster::exec::{run_cluster, ExecMode};
+use swiftfusion::comm::Buf;
+use swiftfusion::config::{ClusterSpec, NetSpec, SpDegrees};
+use swiftfusion::sp::{SpAlgo, SpParams};
+use swiftfusion::util::stats::{fmt_bytes, fmt_time};
+use swiftfusion::workload::Workload;
+
+fn main() {
+    fig3a();
+    fig3b();
+}
+
+fn fig3a() {
+    println!("=== Fig 3a: intra vs inter machine aggregated bandwidth ===");
+    println!(
+        "{:<28}{:>18}{:>18}{:>8}",
+        "machine generation", "intra (GB/s/GPU)", "inter (GB/s/mach)", "ratio"
+    );
+    // (name, intra per-GPU one-direction, inter per machine) — public
+    // specs for the generations Fig. 3a spans.
+    let gens: &[(&str, f64, f64)] = &[
+        ("DGX-1V (2017, 100G IB)", 150e9, 12.5e9),
+        ("DGX-A100 (2020, 8x200G)", 300e9, 200e9 / 8.0 * 1.0),
+        ("p4de+EFA (2022, 400G)", 300e9, 50e9),
+        ("DGX-H100 (2023, 8x400G)", 450e9, 400e9 / 8.0 * 1.0),
+    ];
+    for (name, intra, inter) in gens {
+        println!(
+            "{:<28}{:>18}{:>18}{:>8.1}",
+            name,
+            format!("{}", fmt_bytes(*intra) + "/s"),
+            format!("{}", fmt_bytes(*inter) + "/s"),
+            intra / inter
+        );
+    }
+    let net = NetSpec::p4de_efa();
+    println!(
+        "\n(model constants used everywhere else: intra {}/s, inter {}/s per machine)",
+        fmt_bytes(net.intra_bw),
+        fmt_bytes(net.inter_bw)
+    );
+}
+
+fn fig3b() {
+    println!("\n=== Fig 3b: USP latency breakdown vs machine count ===");
+    let w = Workload::cogvideo_20s();
+    println!(
+        "one {} attention layer, M machines x 8 GPUs  (USP at its optimal U8R*)",
+        w.name
+    );
+    println!(
+        "{:<6}{:>12}{:>12}{:>12}{:>12}{:>10}",
+        "M", "total", "compute", "comm", "sync", "comm%"
+    );
+    for m in [1usize, 2, 4] {
+        let cluster = ClusterSpec::new(m, 8);
+        let p = cluster.total_gpus();
+        let pu = swiftfusion::config::gcd(8, w.shape.h);
+        let shape = {
+            let mut s = w.aligned_to(p * 64).shape;
+            s.b = 1;
+            s
+        };
+        let params = SpParams {
+            shape,
+            chunk: shape.l / p,
+            mesh: SpAlgo::Usp.mesh(&cluster, SpDegrees::new(pu, p / pu)),
+        };
+        let run = run_cluster(&cluster, &ExecMode::Timing, |ctx| {
+            let s = Buf::Shape(vec![shape.b, shape.l / p, shape.h, shape.d]);
+            SpAlgo::Usp.run(ctx, &params, s.clone(), s.clone(), s);
+        });
+        let (c, wt, sy, _o) = run.mean_breakdown();
+        let total = run.makespan();
+        println!(
+            "{:<6}{:>12}{:>12}{:>12}{:>12}{:>9.0}%",
+            m,
+            fmt_time(total),
+            fmt_time(c),
+            fmt_time(wt),
+            fmt_time(sy),
+            (wt + sy) / total * 100.0
+        );
+    }
+    println!("(paper: USP becomes communication-bound by M=4 — the comm% column)");
+}

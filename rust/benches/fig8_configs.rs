@@ -1,0 +1,63 @@
+//! Figure 8 — performance across distributed configurations UxRy on 4
+//! and 3 GPU machines (×8), CogVideoX workloads.
+//!
+//! Expected shape (paper §5.2): TAS and SFU beat USP at every config
+//! (avg ~1.5x/1.6x, up to 2.5x/3.1x); larger U is better, except TAS at
+//! U24R1 vs U12R2 where the non-overlapped all-to-all bites.
+//!
+//! Run: `cargo bench --bench fig8_configs`
+
+use swiftfusion::cluster::exec::{run_cluster, ExecMode};
+use swiftfusion::comm::Buf;
+use swiftfusion::config::{ClusterSpec, SpDegrees};
+use swiftfusion::bench::{print_table, Series};
+use swiftfusion::sp::{SpAlgo, SpParams};
+use swiftfusion::workload::Workload;
+
+fn layer_time(cluster: &ClusterSpec, algo: SpAlgo, deg: SpDegrees, w: &Workload) -> f64 {
+    let p = cluster.total_gpus();
+    let shape = w.aligned_to(p * 64).shape;
+    let params = SpParams {
+        shape,
+        chunk: shape.l / p,
+        mesh: algo.mesh(cluster, deg),
+    };
+    let run = run_cluster(cluster, &ExecMode::Timing, |ctx| {
+        let s = Buf::Shape(vec![shape.b, shape.l / p, shape.h, shape.d]);
+        algo.run(ctx, &params, s.clone(), s.clone(), s);
+    });
+    run.makespan()
+}
+
+fn sweep(machines: usize, w: &Workload) {
+    let cluster = ClusterSpec::new(machines, 8);
+    let p = cluster.total_gpus();
+    let h = w.shape.h;
+    // all UxRy with U | H and U*R = P
+    let configs: Vec<SpDegrees> = (1..=p)
+        .filter(|u| p % u == 0 && h % u == 0 && *u >= p / 8)
+        .map(|u| SpDegrees::new(u, p / u))
+        .collect();
+    let mut usp = Series::new("usp");
+    let mut tas = Series::new("tas");
+    let mut sfu = Series::new("swiftfusion");
+    for deg in configs {
+        let label = format!("U{}R{}", deg.pu, deg.pr);
+        usp.push(label.clone(), layer_time(&cluster, SpAlgo::Usp, deg, w));
+        tas.push(label.clone(), layer_time(&cluster, SpAlgo::Tas, deg, w));
+        sfu.push(label, layer_time(&cluster, SpAlgo::SwiftFusion, deg, w));
+    }
+    print_table(
+        &format!(
+            "Fig 8: {} on {} machines x 8 — per-layer latency across UxRy",
+            w.name, machines
+        ),
+        &[usp, tas, sfu],
+        Some("usp"),
+    );
+}
+
+fn main() {
+    sweep(4, &Workload::cogvideo_20s());
+    sweep(3, &Workload::cogvideo_40s());
+}

@@ -1,0 +1,74 @@
+//! Figure 9 — layerwise microbenchmarks: normalized single-attention-layer
+//! latency of SwiftFusion vs USP across (a) sequence length × head dim
+//! and (b) batch size × head dim, on 4×8.
+//!
+//! Expected shape (paper §5.3): SFU wins everywhere but the margin
+//! *shrinks* with L (compute grows quadratically, comm linearly) and
+//! *grows* with D (bigger tiles saturate the GPU better); no strong
+//! batch-size trend.
+//!
+//! Run: `cargo bench --bench fig9_layerwise`
+
+use swiftfusion::cluster::exec::{run_cluster, ExecMode};
+use swiftfusion::comm::Buf;
+use swiftfusion::config::{AttnShape, ClusterSpec, SpDegrees};
+use swiftfusion::sp::{SpAlgo, SpParams};
+use swiftfusion::bench::{print_table, Series};
+
+const H: usize = 24;
+
+fn layer_time(cluster: &ClusterSpec, algo: SpAlgo, shape: AttnShape) -> f64 {
+    let p = cluster.total_gpus();
+    let deg = match algo {
+        SpAlgo::Usp => {
+            let pu = swiftfusion::config::gcd(cluster.gpus_per_machine, shape.h);
+            SpDegrees::new(pu, p / pu)
+        }
+        _ => SpDegrees::swiftfusion_default(cluster, shape.h),
+    };
+    let params = SpParams { shape, chunk: shape.l / p, mesh: algo.mesh(cluster, deg) };
+    run_cluster(cluster, &ExecMode::Timing, |ctx| {
+        let s = Buf::Shape(vec![shape.b, shape.l / p, shape.h, shape.d]);
+        algo.run(ctx, &params, s.clone(), s.clone(), s);
+    })
+    .makespan()
+}
+
+fn main() {
+    let cluster = ClusterSpec::paper_testbed();
+
+    // ---- Fig 9a: sequence length sweep per head dim ----
+    for d in [32usize, 64, 128] {
+        let mut usp = Series::new("usp");
+        let mut sfu = Series::new("swiftfusion");
+        for l_k in [96usize, 128, 160, 192] {
+            let l = l_k * 1024;
+            let shape = AttnShape::new(1, l, H, d);
+            let label = format!("L={l_k}k");
+            usp.push(label.clone(), layer_time(&cluster, SpAlgo::Usp, shape));
+            sfu.push(label, layer_time(&cluster, SpAlgo::SwiftFusion, shape));
+        }
+        print_table(
+            &format!("Fig 9a: attention layer latency vs sequence length (D={d})"),
+            &[usp, sfu],
+            Some("usp"),
+        );
+    }
+
+    // ---- Fig 9b: batch sweep per head dim ----
+    for d in [32usize, 64, 128] {
+        let mut usp = Series::new("usp");
+        let mut sfu = Series::new("swiftfusion");
+        for b in [1usize, 2, 4] {
+            let shape = AttnShape::new(b, 96 * 1024, H, d);
+            let label = format!("B={b}");
+            usp.push(label.clone(), layer_time(&cluster, SpAlgo::Usp, shape));
+            sfu.push(label, layer_time(&cluster, SpAlgo::SwiftFusion, shape));
+        }
+        print_table(
+            &format!("Fig 9b: attention layer latency vs batch size (D={d})"),
+            &[usp, sfu],
+            Some("usp"),
+        );
+    }
+}

@@ -1,0 +1,161 @@
+//! Bench harness (criterion is unavailable offline).
+//!
+//! Provides warmup + timed iterations with summary statistics, plus table
+//! printers used by the per-figure bench binaries (`rust/benches/fig*.rs`)
+//! so their output mirrors the rows/series of the paper's tables and
+//! figures. `cargo bench` runs these binaries with `harness = false`.
+
+use std::time::Instant;
+
+use crate::util::stats::{fmt_time, Summary};
+
+/// Measured wall-clock runner for real code paths (PJRT execution, the
+/// coordinator hot loop). For *simulated* latencies (paper-scale figures)
+/// use [`Series`] directly with model outputs.
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self { warmup_iters: 3, iters: 10 }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup_iters: usize, iters: usize) -> Self {
+        Self { warmup_iters, iters }
+    }
+
+    /// Time `f`, returning per-iteration seconds.
+    pub fn run<F: FnMut()>(&self, mut f: F) -> Summary {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut s = Summary::new();
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            s.add(t0.elapsed().as_secs_f64());
+        }
+        s
+    }
+}
+
+/// Prevent the optimizer from discarding a value (std::hint::black_box
+/// wrapper kept here so benches don't import std::hint everywhere).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// One labelled series of (x-label, value) points — a figure line.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(String, f64)>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { name: name.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: impl Into<String>, y: f64) {
+        self.points.push((x.into(), y));
+    }
+}
+
+/// Print a figure-style table: rows = x-labels, one column per series,
+/// with optional normalization against a baseline series (the paper plots
+/// latency normalized to USP).
+pub fn print_table(title: &str, series: &[Series], normalize_to: Option<&str>) {
+    println!("\n=== {title} ===");
+    if series.is_empty() {
+        return;
+    }
+    let base = normalize_to.and_then(|n| series.iter().find(|s| s.name == n));
+    // header
+    print!("{:<22}", "x");
+    for s in series {
+        print!("{:>16}", s.name);
+    }
+    if base.is_some() {
+        for s in series {
+            print!("{:>14}", format!("{}/base", s.name));
+        }
+    }
+    println!();
+    let nrows = series.iter().map(|s| s.points.len()).max().unwrap_or(0);
+    for row in 0..nrows {
+        let label = series
+            .iter()
+            .find_map(|s| s.points.get(row).map(|(x, _)| x.clone()))
+            .unwrap_or_default();
+        print!("{label:<22}");
+        for s in series {
+            match s.points.get(row) {
+                Some((_, y)) => print!("{:>16}", fmt_time(*y)),
+                None => print!("{:>16}", "-"),
+            }
+        }
+        if let Some(b) = base {
+            let by = b.points.get(row).map(|(_, y)| *y);
+            for s in series {
+                let ratio = match (s.points.get(row), by) {
+                    (Some((_, y)), Some(by)) if *y > 0.0 => {
+                        format!("{:.2}x", by / y)
+                    }
+                    _ => "-".into(),
+                };
+                print!("{ratio:>14}");
+            }
+        }
+        println!();
+    }
+}
+
+/// Print a Summary as a one-line bench result.
+pub fn report(name: &str, s: &mut Summary) {
+    println!(
+        "{name:<48} mean {:>12}  p50 {:>12}  min {:>12}  max {:>12}  (n={})",
+        fmt_time(s.mean()),
+        fmt_time(s.p50()),
+        fmt_time(s.min()),
+        fmt_time(s.max()),
+        s.len()
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_counts_iterations() {
+        let mut n = 0;
+        let b = Bencher::new(2, 5);
+        let s = b.run(|| n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(s.len(), 5);
+    }
+
+    #[test]
+    fn series_accumulates() {
+        let mut s = Series::new("usp");
+        s.push("M=2", 1.0);
+        s.push("M=4", 2.0);
+        assert_eq!(s.points.len(), 2);
+    }
+
+    #[test]
+    fn table_prints_without_panic() {
+        let mut a = Series::new("usp");
+        a.push("M=2", 2.0e-3);
+        a.push("M=4", 4.0e-3);
+        let mut b = Series::new("sfu");
+        b.push("M=2", 1.5e-3);
+        b.push("M=4", 2.0e-3);
+        print_table("test", &[a, b], Some("usp"));
+    }
+}

@@ -1,0 +1,306 @@
+//! Rank executor: run a per-rank closure on one thread per simulated GPU.
+//!
+//! Each closure receives a [`RankCtx`] bundling the rank id, the shared
+//! [`CommWorld`], the rank's virtual [`RankClock`], and the execution
+//! mode: **Numeric** (real tensors through the PJRT artifacts) or
+//! **Timing** (shape-only buffers at paper scale). The SP algorithms in
+//! [`crate::sp`] are written once against this context and run unchanged
+//! in both modes.
+
+use std::sync::Arc;
+
+use crate::cluster::clock::{RankClock, TimeKind};
+use crate::comm::{Buf, CommWorld, Event, GetHandle, SendHandle};
+use crate::config::ClusterSpec;
+use crate::runtime::{ConfigMeta, RuntimeHandle};
+
+/// Execution mode for a cluster run.
+#[derive(Clone)]
+pub enum ExecMode {
+    /// Real numerics via the AOT artifacts of `cfg`.
+    Numeric { rt: RuntimeHandle, cfg: Arc<ConfigMeta> },
+    /// Shape-only buffers; only the virtual clocks matter.
+    Timing,
+}
+
+impl ExecMode {
+    pub fn is_numeric(&self) -> bool {
+        matches!(self, ExecMode::Numeric { .. })
+    }
+}
+
+/// Per-rank execution context handed to SP algorithms.
+pub struct RankCtx<'w> {
+    pub rank: usize,
+    pub world: &'w CommWorld,
+    pub clock: RankClock,
+    pub mode: ExecMode,
+    /// One-sided window epoch. Every expose/put/get slot is silently
+    /// prefixed with the epoch, so successive collectives (e.g. the
+    /// attention of consecutive DiT blocks) can never read a stale
+    /// window from an earlier layer. Bump with [`Self::next_epoch`]
+    /// between collectives that reuse slot names.
+    pub epoch: u64,
+}
+
+impl<'w> RankCtx<'w> {
+    pub fn cluster(&self) -> &ClusterSpec {
+        &self.world.cluster
+    }
+
+    /// Advance the clock by a compute span. (SM contention from kernel-
+    /// based two-sided transfers is charged on the *transfer* side — see
+    /// `CommWorld::wait_recv` — since it scales with transfer activity.)
+    pub fn compute(&mut self, seconds: f64) {
+        self.clock.advance(seconds, TimeKind::Compute);
+    }
+
+    /// Cost model for one attention tile `[B, lq, g, D] x [B, lk, g, D]`.
+    pub fn attn_tile_time(&self, b: usize, lq: usize, lk: usize, g: usize, d: usize) -> f64 {
+        let flops = 4.0 * b as f64 * lq as f64 * lk as f64 * g as f64 * d as f64;
+        // bytes: read q, k, v tiles + state, write state (f32)
+        let bytes = (b * g * d * (lq + 2 * lk) + 2 * b * g * lq) as f64 * 4.0 * 2.0;
+        self.cluster().gpu.tile_time(flops, bytes)
+    }
+
+    /// Execute an AOT artifact (numeric mode only) — used by the model
+    /// stage driver; SP algorithms go through [`crate::sp::tiles`].
+    pub fn call_artifact(&mut self, name: &str, inputs: &[Buf]) -> anyhow::Result<Vec<Buf>> {
+        match &self.mode {
+            ExecMode::Numeric { rt, .. } => {
+                let tensors: Vec<_> = inputs.iter().map(|b| b.tensor().clone()).collect();
+                let out = rt.call(name, &tensors)?;
+                Ok(out.into_iter().map(Buf::Real).collect())
+            }
+            ExecMode::Timing => anyhow::bail!("call_artifact in timing mode"),
+        }
+    }
+
+    // ---- comm sugar (delegates to CommWorld with this rank's clock) ----
+
+    pub fn isend(&mut self, dst: usize, tag: &str, buf: Buf) -> SendHandle {
+        self.world.isend(&mut self.clock, self.rank, dst, tag, buf)
+    }
+
+    pub fn wait_recv(&mut self, src: usize, tag: &str, flows: usize) -> Buf {
+        self.world
+            .wait_recv(&mut self.clock, src, self.rank, tag, flows)
+    }
+
+    /// Post a receive early (NCCL irecv): the transfer progresses in the
+    /// background; `wait_get` the handle after overlapped compute.
+    pub fn irecv(&mut self, src: usize, tag: &str, flows: usize) -> GetHandle {
+        self.world
+            .irecv(&mut self.clock, src, self.rank, tag, flows)
+    }
+
+    pub fn wait_send(&mut self, h: SendHandle) {
+        self.world.wait_send(&mut self.clock, h)
+    }
+
+    /// Advance the window epoch (call between collectives; all ranks
+    /// must do so in lockstep, which the layer structure guarantees).
+    pub fn next_epoch(&mut self) {
+        self.epoch += 1;
+    }
+
+    fn scoped(&self, slot: &str) -> String {
+        format!("e{}.{slot}", self.epoch)
+    }
+
+    pub fn expose(&mut self, slot: &str, buf: Buf) {
+        let s = self.scoped(slot);
+        self.world.expose(&self.clock, self.rank, &s, buf)
+    }
+
+    pub fn put(&mut self, dst: usize, slot: &str, buf: Buf, flows: usize) -> Event {
+        let s = self.scoped(slot);
+        self.world
+            .put(&mut self.clock, self.rank, dst, &s, buf, flows)
+    }
+
+    pub fn get(&mut self, src: usize, slot: &str, flows: usize) -> GetHandle {
+        let s = self.scoped(slot);
+        self.world.get(&mut self.clock, self.rank, src, &s, flows)
+    }
+
+    pub fn wait_get(&mut self, h: GetHandle) -> Buf {
+        self.world.wait_get(&mut self.clock, h)
+    }
+
+    pub fn wait_event(&mut self, ev: Event) {
+        self.world.wait_event(&mut self.clock, ev)
+    }
+
+    pub fn barrier(&mut self, group: &[usize]) {
+        self.world.barrier(&mut self.clock, group)
+    }
+
+    pub fn barrier_all(&mut self) {
+        let all: Vec<usize> = (0..self.cluster().total_gpus()).collect();
+        self.world.barrier(&mut self.clock, &all)
+    }
+}
+
+/// Result of one cluster run: per-rank outputs and final clocks.
+pub struct ClusterRun<R> {
+    pub outputs: Vec<R>,
+    pub clocks: Vec<RankClock>,
+}
+
+impl<R> ClusterRun<R> {
+    /// Makespan: the max of all rank clocks (end-to-end latency of the
+    /// collective operation — what the paper's figures plot).
+    pub fn makespan(&self) -> f64 {
+        self.clocks.iter().map(|c| c.now).fold(0.0, f64::max)
+    }
+
+    /// Aggregated (compute, comm_wait, sync, overhead) across ranks,
+    /// averaged — the Fig. 3b breakdown.
+    pub fn mean_breakdown(&self) -> (f64, f64, f64, f64) {
+        let n = self.clocks.len().max(1) as f64;
+        let mut acc = (0.0, 0.0, 0.0, 0.0);
+        for c in &self.clocks {
+            let b = c.breakdown();
+            acc.0 += b.0 / n;
+            acc.1 += b.1 / n;
+            acc.2 += b.2 / n;
+            acc.3 += b.3 / n;
+        }
+        acc
+    }
+}
+
+/// Run `f` once per rank on its own thread against a fresh [`CommWorld`].
+pub fn run_cluster<R, F>(cluster: &ClusterSpec, mode: &ExecMode, f: F) -> ClusterRun<R>
+where
+    R: Send,
+    F: Fn(&mut RankCtx) -> R + Sync,
+{
+    let world = CommWorld::new(cluster.clone());
+    run_in_world(&world, mode, f)
+}
+
+/// Run against an existing world (lets callers inspect window memory or
+/// chain multiple collectives in one world).
+pub fn run_in_world<R, F>(world: &CommWorld, mode: &ExecMode, f: F) -> ClusterRun<R>
+where
+    R: Send,
+    F: Fn(&mut RankCtx) -> R + Sync,
+{
+    let n = world.cluster.total_gpus();
+    let fref = &f;
+    let results = crate::util::pool::scoped_run(
+        (0..n)
+            .map(|rank| {
+                let mode = mode.clone();
+                move || {
+                    let mut ctx =
+                        RankCtx { rank, world, clock: RankClock::new(), mode, epoch: 0 };
+                    let out = fref(&mut ctx);
+                    (out, ctx.clock)
+                }
+            })
+            .collect::<Vec<_>>(),
+    );
+    let mut outputs = Vec::with_capacity(n);
+    let mut clocks = Vec::with_capacity(n);
+    for (o, c) in results {
+        outputs.push(o);
+        clocks.push(c);
+    }
+    ClusterRun { outputs, clocks }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterSpec;
+
+    #[test]
+    fn run_cluster_all_ranks_execute() {
+        let c = ClusterSpec::new(2, 2);
+        let run = run_cluster(&c, &ExecMode::Timing, |ctx| ctx.rank * 10);
+        assert_eq!(run.outputs, vec![0, 10, 20, 30]);
+        assert_eq!(run.clocks.len(), 4);
+    }
+
+    #[test]
+    fn makespan_is_max_clock() {
+        let c = ClusterSpec::new(1, 3);
+        let run = run_cluster(&c, &ExecMode::Timing, |ctx| {
+            ctx.compute(ctx.rank as f64 * 0.5);
+        });
+        assert!((run.makespan() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn two_sided_transfer_pays_sm_tax() {
+        // Same bytes, same link: the two-sided (NCCL-kernel) transfer
+        // must be slower than the one-sided (driver-copy) pull by the SM
+        // tax plus the rendezvous penalty.
+        let c = ClusterSpec::new(1, 2);
+        let bytes = 64.0 * 1024.0 * 1024.0;
+        let base = c.net.intra_lat + bytes / c.net.intra_bw;
+        let two = run_cluster(&c, &ExecMode::Timing, |ctx| {
+            if ctx.rank == 0 {
+                let h = ctx.isend(1, "x", Buf::Shape(vec![16 * 1024 * 1024]));
+                ctx.wait_send(h);
+                0.0
+            } else {
+                ctx.wait_recv(0, "x", 1);
+                ctx.clock.now
+            }
+        })
+        .outputs[1];
+        let one = run_cluster(&c, &ExecMode::Timing, |ctx| {
+            if ctx.rank == 0 {
+                ctx.expose("x", Buf::Shape(vec![16 * 1024 * 1024]));
+                0.0
+            } else {
+                let h = ctx.get(0, "x", 1);
+                ctx.wait_get(h);
+                ctx.clock.now
+            }
+        })
+        .outputs[1];
+        assert!(two > one, "two-sided {two} must exceed one-sided {one}");
+        assert!(two >= base * (1.0 + c.net.sm_tax), "{two} vs base {base}");
+    }
+
+    #[test]
+    fn ring_exchange_through_ctx() {
+        // Each rank pushes a token to its ring successor's window, then
+        // reads its own window to find its predecessor's token.
+        let c = ClusterSpec::new(2, 2);
+        let run = run_cluster(&c, &ExecMode::Timing, |ctx| {
+            let n = ctx.cluster().total_gpus();
+            let next = (ctx.rank + 1) % n;
+            let prev = (ctx.rank + n - 1) % n;
+            ctx.put(next, "tok", Buf::Shape(vec![ctx.rank + 1]), 1);
+            let h = ctx.get(ctx.rank, "tok", 1);
+            let got = ctx.wait_get(h);
+            assert_eq!(got.shape(), &[prev + 1]);
+            got.shape()[0]
+        });
+        assert_eq!(run.outputs, vec![4, 1, 2, 3]);
+    }
+
+    #[test]
+    fn attn_tile_time_monotone() {
+        let c = ClusterSpec::new(1, 1);
+        let w = CommWorld::new(c);
+        let ctx = RankCtx {
+            rank: 0,
+            world: &w,
+            clock: RankClock::new(),
+            mode: ExecMode::Timing,
+            epoch: 0,
+        };
+        let small = ctx.attn_tile_time(1, 128, 128, 1, 64);
+        let big = ctx.attn_tile_time(1, 4096, 4096, 1, 64);
+        assert!(big > small);
+        // launch overhead is a floor
+        assert!(small >= ctx.cluster().gpu.launch_overhead);
+    }
+}

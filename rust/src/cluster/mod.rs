@@ -1,0 +1,246 @@
+//! Simulated GPU cluster: topology, 2D device mesh, per-rank clocks, and
+//! the rank executor that runs SP algorithms as one thread per GPU.
+//!
+//! Ranks are numbered `machine * M + gpu` (M = GPUs per machine). The 2D
+//! mesh assigns each rank an `(u, r)` coordinate — Ulysses × Ring process
+//! groups (§4.2) — under one of two placements:
+//!
+//! * [`Placement::UlyssesIntra`] — USP: Ulysses groups are contiguous
+//!   ranks (intra-machine when `P_u ≤ M`), Ring groups stride across
+//!   machines. `rank = r * P_u + u`.
+//! * [`Placement::UlyssesInter`] — SwiftFusion/TAS: Ring groups are
+//!   contiguous ranks (intra-machine when `P_r ≤ M`), Ulysses groups
+//!   stride across machines. `rank = u * P_r + r`.
+
+pub mod clock;
+pub mod exec;
+
+use crate::config::{ClusterSpec, SpDegrees};
+
+/// How the `P_u × P_r` mesh is laid onto physical ranks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// USP (§2.2): Ulysses intra-machine, Ring inter-machine.
+    UlyssesIntra,
+    /// SwiftFusion/TAS (§4.2): Ulysses inter-machine, Ring intra-machine.
+    UlyssesInter,
+}
+
+/// A concrete 2D device mesh over a cluster.
+#[derive(Debug, Clone)]
+pub struct Mesh2D {
+    pub cluster: ClusterSpec,
+    pub degrees: SpDegrees,
+    pub placement: Placement,
+}
+
+impl Mesh2D {
+    pub fn new(cluster: ClusterSpec, degrees: SpDegrees, placement: Placement) -> Self {
+        assert_eq!(
+            degrees.total(),
+            cluster.total_gpus(),
+            "mesh degrees must cover the cluster"
+        );
+        Self { cluster, degrees, placement }
+    }
+
+    pub fn total(&self) -> usize {
+        self.degrees.total()
+    }
+
+    /// (u, r) coordinate of a rank.
+    pub fn coords(&self, rank: usize) -> (usize, usize) {
+        match self.placement {
+            Placement::UlyssesIntra => (rank % self.degrees.pu, rank / self.degrees.pu),
+            Placement::UlyssesInter => (rank / self.degrees.pr, rank % self.degrees.pr),
+        }
+    }
+
+    /// Rank at (u, r).
+    pub fn rank_at(&self, u: usize, r: usize) -> usize {
+        debug_assert!(u < self.degrees.pu && r < self.degrees.pr);
+        match self.placement {
+            Placement::UlyssesIntra => r * self.degrees.pu + u,
+            Placement::UlyssesInter => u * self.degrees.pr + r,
+        }
+    }
+
+    /// All ranks sharing this rank's Ulysses group (varying u, fixed r).
+    pub fn ulysses_group(&self, rank: usize) -> Vec<usize> {
+        let (_, r) = self.coords(rank);
+        (0..self.degrees.pu).map(|u| self.rank_at(u, r)).collect()
+    }
+
+    /// All ranks sharing this rank's Ring group (fixed u, varying r).
+    pub fn ring_group(&self, rank: usize) -> Vec<usize> {
+        let (u, _) = self.coords(rank);
+        (0..self.degrees.pr).map(|r| self.rank_at(u, r)).collect()
+    }
+
+    /// Fraction of a group's pairwise links that cross machines — used by
+    /// tests to assert the topology-awareness claims.
+    pub fn inter_machine_fraction(&self, group: &[usize]) -> f64 {
+        let mut inter = 0usize;
+        let mut total = 0usize;
+        for (i, &a) in group.iter().enumerate() {
+            for &b in &group[i + 1..] {
+                total += 1;
+                if !self.cluster.same_machine(a, b) {
+                    inter += 1;
+                }
+            }
+        }
+        if total == 0 {
+            0.0
+        } else {
+            inter as f64 / total as f64
+        }
+    }
+
+    /// Torus factorization of the Ulysses group (§4.3): the group is split
+    /// into `N` *torus* stages across machines × `P_u / N` intra-machine
+    /// Ulysses sub-groups. Returns (torus index t, intra index u') for
+    /// `rank` given `n` torus stages. Requires `n | P_u`.
+    pub fn torus_coords(&self, rank: usize, n: usize) -> (usize, usize) {
+        assert_eq!(self.degrees.pu % n, 0, "N must divide P_u");
+        let (u, _) = self.coords(rank);
+        let pu_prime = self.degrees.pu / n;
+        match self.placement {
+            // UlyssesInter: u strides across machines; consecutive u's with
+            // the same u / (P_u/N) share a machine block.
+            Placement::UlyssesInter => (u / pu_prime, u % pu_prime),
+            Placement::UlyssesIntra => (u % n, u / n),
+        }
+    }
+
+    /// Ranks in this rank's torus group (fixed u', r; varying torus index).
+    pub fn torus_group(&self, rank: usize, n: usize) -> Vec<usize> {
+        let (_, r) = self.coords(rank);
+        let (_, uprime) = self.torus_coords(rank, n);
+        let pu_prime = self.degrees.pu / n;
+        (0..n)
+            .map(|t| {
+                let u = match self.placement {
+                    Placement::UlyssesInter => t * pu_prime + uprime,
+                    Placement::UlyssesIntra => uprime * n + t,
+                };
+                self.rank_at(u, r)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterSpec;
+    use crate::util::prop;
+
+    fn mesh(n: usize, m: usize, pu: usize, pr: usize, p: Placement) -> Mesh2D {
+        Mesh2D::new(ClusterSpec::new(n, m), SpDegrees::new(pu, pr), p)
+    }
+
+    #[test]
+    fn coords_roundtrip_both_placements() {
+        for placement in [Placement::UlyssesIntra, Placement::UlyssesInter] {
+            let me = mesh(2, 4, 4, 2, placement);
+            for rank in 0..8 {
+                let (u, r) = me.coords(rank);
+                assert_eq!(me.rank_at(u, r), rank, "{placement:?} rank {rank}");
+            }
+        }
+    }
+
+    #[test]
+    fn usp_ulysses_groups_are_intra_machine() {
+        // USP on 2 machines x 4 GPUs with P_u=4: every Ulysses group must
+        // live inside one machine (uses NVSwitch), Ring spans machines.
+        let me = mesh(2, 4, 4, 2, Placement::UlyssesIntra);
+        for rank in 0..8 {
+            let ug = me.ulysses_group(rank);
+            assert_eq!(me.inter_machine_fraction(&ug), 0.0, "ulysses {ug:?}");
+            let rg = me.ring_group(rank);
+            assert!(me.inter_machine_fraction(&rg) > 0.0, "ring {rg:?}");
+        }
+    }
+
+    #[test]
+    fn swiftfusion_ring_groups_are_intra_machine() {
+        // SwiftFusion inverts the mapping (§4.2): Ring intra, Ulysses inter.
+        let me = mesh(2, 4, 2, 4, Placement::UlyssesInter);
+        for rank in 0..8 {
+            let rg = me.ring_group(rank);
+            assert_eq!(me.inter_machine_fraction(&rg), 0.0, "ring {rg:?}");
+            let ug = me.ulysses_group(rank);
+            assert!(me.inter_machine_fraction(&ug) > 0.0, "ulysses {ug:?}");
+        }
+    }
+
+    #[test]
+    fn groups_contain_self_and_are_consistent() {
+        let me = mesh(2, 2, 2, 2, Placement::UlyssesInter);
+        for rank in 0..4 {
+            assert!(me.ulysses_group(rank).contains(&rank));
+            assert!(me.ring_group(rank).contains(&rank));
+            // group membership is symmetric
+            for &peer in &me.ulysses_group(rank) {
+                assert_eq!(me.ulysses_group(peer), me.ulysses_group(rank));
+            }
+        }
+    }
+
+    #[test]
+    fn torus_coords_partition_ulysses_group() {
+        // P_u = 4 over N = 2 machines: torus degree 2, intra-ulysses 2.
+        let me = mesh(2, 4, 4, 2, Placement::UlyssesInter);
+        for rank in 0..8 {
+            let (t, up) = me.torus_coords(rank, 2);
+            assert!(t < 2 && up < 2);
+            let tg = me.torus_group(rank, 2);
+            assert_eq!(tg.len(), 2);
+            assert!(tg.contains(&rank));
+            // each torus step crosses a machine boundary in UlyssesInter
+            assert!(me.inter_machine_fraction(&tg) > 0.0, "{tg:?}");
+        }
+    }
+
+    #[test]
+    fn torus_groups_cover_ulysses_group() {
+        let me = mesh(2, 4, 4, 2, Placement::UlyssesInter);
+        let ug = me.ulysses_group(0);
+        for &r in &ug {
+            let tg = me.torus_group(r, 2);
+            for t in tg {
+                assert!(ug.contains(&t), "torus member {t} outside ulysses group {ug:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_mesh_bijection() {
+        prop::run(40, |g| {
+            let n = g.int(1, 4);
+            let m = *g.choose(&[1usize, 2, 4]);
+            let total = n * m;
+            let divs: Vec<usize> = (1..=total).filter(|d| total % d == 0).collect();
+            let pu = *g.choose(&divs);
+            let pr = total / pu;
+            let placement = if g.bool() {
+                Placement::UlyssesIntra
+            } else {
+                Placement::UlyssesInter
+            };
+            let me = mesh(n, m, pu, pr, placement);
+            let mut seen = vec![false; total];
+            for u in 0..pu {
+                for r in 0..pr {
+                    let rank = me.rank_at(u, r);
+                    assert!(!seen[rank], "rank {rank} assigned twice");
+                    seen[rank] = true;
+                    assert_eq!(me.coords(rank), (u, r));
+                }
+            }
+            assert!(seen.iter().all(|&s| s));
+        });
+    }
+}

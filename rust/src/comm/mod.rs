@@ -1,0 +1,725 @@
+//! Inter-rank communication: two-sided (NCCL analog) and one-sided
+//! (NVSHMEM analog) primitives over real shared-memory channels, with
+//! virtual-time cost accounting.
+//!
+//! The data plane is *real*: tensors actually move between rank threads,
+//! so numerics are exact. The time plane is *simulated*: every transfer
+//! charges the α–β link model ([`crate::config::NetSpec`]) onto the
+//! participating ranks' [`RankClock`]s. The two libraries differ exactly
+//! as the paper's Challenge 3 describes:
+//!
+//! * **two-sided** ([`CommWorld::wait_recv`]): the receiver cannot start
+//!   until the sender has arrived (rendezvous, Fig. 4) — both sides pay a
+//!   sync penalty and the *sender is blocked until the transfer completes*;
+//!   in-flight two-sided transfers also tax overlapping compute (SM
+//!   contention, tracked via `RankClock::two_sided_inflight`).
+//! * **one-sided** ([`CommWorld::put`] / [`CommWorld::get`]): transfers
+//!   are asynchronous against windows (exposed buffers); only explicit
+//!   waits and barriers synchronize. No rendezvous, no SM tax (the
+//!   NVSHMEM-on-stream / driver-copy path of Appendix A).
+//!
+//! Determinism: completion times depend only on (sender issue time,
+//! receiver issue time, link model, per-rank egress/ingress queues) — not
+//! on wall-clock thread interleaving.
+
+use std::collections::HashMap;
+use std::sync::{Condvar, Mutex};
+
+use crate::cluster::clock::{RankClock, TimeKind};
+use crate::config::{ClusterSpec, NetSpec};
+use crate::tensor::Tensor;
+
+/// A buffer that is a real tensor (numeric mode) or shape-only stub
+/// (timing mode, for paper-scale simulations where materializing tensors
+/// is impossible). All structural ops work in both modes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Buf {
+    Real(Tensor),
+    Shape(Vec<usize>),
+}
+
+impl Buf {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Buf::Real(t) => t.shape(),
+            Buf::Shape(s) => s,
+        }
+    }
+
+    pub fn bytes(&self) -> f64 {
+        self.shape().iter().product::<usize>() as f64 * 4.0
+    }
+
+    pub fn is_real(&self) -> bool {
+        matches!(self, Buf::Real(_))
+    }
+
+    pub fn tensor(&self) -> &Tensor {
+        match self {
+            Buf::Real(t) => t,
+            Buf::Shape(s) => panic!("timing-mode Buf{s:?} has no tensor data"),
+        }
+    }
+
+    pub fn into_tensor(self) -> Tensor {
+        match self {
+            Buf::Real(t) => t,
+            Buf::Shape(s) => panic!("timing-mode Buf{s:?} has no tensor data"),
+        }
+    }
+
+    pub fn slice(&self, axis: usize, start: usize, end: usize) -> Buf {
+        match self {
+            Buf::Real(t) => Buf::Real(t.slice(axis, start, end).expect("slice")),
+            Buf::Shape(s) => {
+                let mut s = s.clone();
+                s[axis] = end - start;
+                Buf::Shape(s)
+            }
+        }
+    }
+
+    pub fn split(&self, axis: usize, parts: usize) -> Vec<Buf> {
+        match self {
+            Buf::Real(t) => t
+                .split(axis, parts)
+                .expect("split")
+                .into_iter()
+                .map(Buf::Real)
+                .collect(),
+            Buf::Shape(s) => {
+                assert_eq!(s[axis] % parts, 0, "split {s:?} axis {axis} by {parts}");
+                let mut out = s.clone();
+                out[axis] /= parts;
+                vec![Buf::Shape(out); parts]
+            }
+        }
+    }
+
+    pub fn concat(bufs: &[Buf], axis: usize) -> Buf {
+        assert!(!bufs.is_empty());
+        if bufs.iter().all(|b| b.is_real()) {
+            let ts: Vec<&Tensor> = bufs.iter().map(|b| b.tensor()).collect();
+            Buf::Real(Tensor::concat(&ts, axis).expect("concat"))
+        } else {
+            let mut s = bufs[0].shape().to_vec();
+            s[axis] = bufs.iter().map(|b| b.shape()[axis]).sum();
+            Buf::Shape(s)
+        }
+    }
+}
+
+/// Completion handle for an async operation; `done` is virtual time.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub done: f64,
+}
+
+/// Handle for a pending one-sided get (pull): data + completion time.
+#[derive(Debug)]
+pub struct GetHandle {
+    pub buf: Buf,
+    pub done: f64,
+}
+
+/// Handle for a pending two-sided send: resolved by the receiver.
+#[derive(Debug)]
+pub struct SendHandle {
+    key: MsgKey,
+    seq: u64,
+}
+
+type MsgKey = (usize, usize, String); // (src, dst, tag)
+
+struct TwoSidedMsg {
+    buf: Buf,
+    sender_ready: f64,
+    seq: u64,
+    /// set by the receiver once the rendezvous completes
+    done: Option<f64>,
+}
+
+struct WindowEntry {
+    buf: Buf,
+    publish_time: f64,
+}
+
+#[derive(Default)]
+struct BarrierState {
+    generation: u64,
+    arrived: usize,
+    max_time: f64,
+    release_time: f64,
+}
+
+/// Per-rank transfer-volume counters (bytes), split by link class and
+/// direction. The Appendix-D analysis tests compare these *measured*
+/// volumes against the paper's closed-form formulas.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Traffic {
+    pub intra_in: f64,
+    pub intra_out: f64,
+    pub inter_in: f64,
+    pub inter_out: f64,
+}
+
+struct Shared {
+    mailbox: HashMap<MsgKey, Vec<TwoSidedMsg>>,
+    windows: HashMap<(usize, String), WindowEntry>,
+    barriers: HashMap<Vec<usize>, BarrierState>,
+    /// every completed barrier's (sorted) group — the Algorithm-1
+    /// synchronization-count tests read this
+    barrier_history: Vec<Vec<usize>>,
+    /// resident window bytes per rank + high-water mark (Fig. 7 memory)
+    window_bytes: Vec<f64>,
+    peak_window_bytes: Vec<f64>,
+    traffic: Vec<Traffic>,
+    next_seq: u64,
+}
+
+impl Shared {
+    fn record_transfer(&mut self, src: usize, dst: usize, bytes: f64, inter: bool) {
+        if inter {
+            self.traffic[src].inter_out += bytes;
+            self.traffic[dst].inter_in += bytes;
+        } else {
+            self.traffic[src].intra_out += bytes;
+            self.traffic[dst].intra_in += bytes;
+        }
+    }
+}
+
+/// The communication world shared by all ranks of one cluster run.
+pub struct CommWorld {
+    pub cluster: ClusterSpec,
+    state: Mutex<Shared>,
+    cond: Condvar,
+}
+
+impl CommWorld {
+    pub fn new(cluster: ClusterSpec) -> Self {
+        let n = cluster.total_gpus();
+        Self {
+            cluster,
+            state: Mutex::new(Shared {
+                mailbox: HashMap::new(),
+                windows: HashMap::new(),
+                barriers: HashMap::new(),
+                barrier_history: Vec::new(),
+                window_bytes: vec![0.0; n],
+                peak_window_bytes: vec![0.0; n],
+                traffic: vec![Traffic::default(); n],
+                next_seq: 0,
+            }),
+            cond: Condvar::new(),
+        }
+    }
+
+    fn net(&self) -> &NetSpec {
+        &self.cluster.net
+    }
+
+    /// α–β transfer duration between two ranks; `flows` = concurrent flows
+    /// sharing the NIC for inter-machine transfers (from the algorithm's
+    /// communication structure; see DESIGN.md §2 on static fair-share).
+    pub fn transfer_time(&self, src: usize, dst: usize, bytes: f64, flows: usize) -> f64 {
+        let n = self.net();
+        if self.cluster.same_machine(src, dst) {
+            n.intra_lat + bytes / n.intra_bw
+        } else {
+            n.inter_lat + bytes / n.inter_bw_per_flow(flows)
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // Two-sided (NCCL analog)
+    // -----------------------------------------------------------------
+
+    /// Non-blocking send. The message is deposited with the sender's
+    /// current virtual time; the *receiver* resolves the rendezvous.
+    /// The sender must later `wait_send` (NCCL's implicit completion).
+    pub fn isend(
+        &self,
+        clock: &mut RankClock,
+        src: usize,
+        dst: usize,
+        tag: &str,
+        buf: Buf,
+    ) -> SendHandle {
+        let key = (src, dst, tag.to_string());
+        let mut st = self.state.lock().unwrap();
+        let seq = st.next_seq;
+        st.next_seq += 1;
+        st.mailbox.entry(key.clone()).or_default().push(TwoSidedMsg {
+            buf,
+            sender_ready: clock.now,
+            seq,
+            done: None,
+        });
+        clock.advance(1e-6, TimeKind::Overhead); // issue cost
+        clock.two_sided_inflight += 1;
+        self.cond.notify_all();
+        SendHandle { key, seq }
+    }
+
+    /// Post a receive (NCCL irecv analog): rendezvous with the matching
+    /// send, compute the completion time (respecting this rank's ingress
+    /// queue), and return a handle — the transfer then progresses "in the
+    /// background" so posting early and computing before the wait gives
+    /// real overlap, exactly like NCCL on a comm stream. Blocks (wall)
+    /// until the matching send was posted.
+    pub fn irecv(
+        &self,
+        clock: &mut RankClock,
+        src: usize,
+        dst: usize,
+        tag: &str,
+        flows: usize,
+    ) -> GetHandle {
+        let key = (src, dst, tag.to_string());
+        let mut st = self.state.lock().unwrap();
+        loop {
+            let msgs = st.mailbox.entry(key.clone()).or_default();
+            if let Some(pos) = msgs.iter().position(|m| m.done.is_none()) {
+                let sender_ready = msgs[pos].sender_ready;
+                let bytes = msgs[pos].buf.bytes();
+                // rendezvous: transfer starts when BOTH sides are ready,
+                // plus the two-sided sync penalty (Fig. 4).
+                let earliest = sender_ready.max(clock.now) + self.net().two_sided_sync;
+                // kernel-based two-sided transfers burn SMs (Challenge 3):
+                // modelled as an effective-bandwidth loss on the transfer
+                // (contention scales with transfer activity).
+                let dur = self.transfer_time(src, dst, bytes, flows)
+                    * (1.0 + self.net().sm_tax);
+                let (_, done) = clock.reserve_ingress(earliest, dur);
+                let msg = &mut msgs[pos];
+                msg.done = Some(done);
+                let buf = msg.buf.clone();
+                let inter = !self.cluster.same_machine(src, dst);
+                st.record_transfer(src, dst, bytes, inter);
+                // the NCCL kernel occupies stream slots: a fraction of
+                // the transfer blocks the issuing rank outright
+                clock.advance(
+                    dur * self.net().two_sided_stream_block,
+                    TimeKind::Sync,
+                );
+                clock.advance(1e-6, TimeKind::Overhead);
+                self.cond.notify_all();
+                return GetHandle { buf, done };
+            }
+            st = self.cond.wait(st).unwrap();
+        }
+    }
+
+    /// Blocking receive: `irecv` + wait fused.
+    pub fn wait_recv(
+        &self,
+        clock: &mut RankClock,
+        src: usize,
+        dst: usize,
+        tag: &str,
+        flows: usize,
+    ) -> Buf {
+        let h = self.irecv(clock, src, dst, tag, flows);
+        self.wait_get(clock, h)
+    }
+
+    /// Complete a send: blocks (wall) until the receiver resolved it, then
+    /// advances the sender to the completion time (the sender-side
+    /// synchronization the paper's Challenge 3 complains about).
+    pub fn wait_send(&self, clock: &mut RankClock, handle: SendHandle) {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            let msgs = st.mailbox.entry(handle.key.clone()).or_default();
+            if let Some(pos) = msgs.iter().position(|m| m.seq == handle.seq) {
+                if let Some(done) = msgs[pos].done {
+                    msgs.remove(pos);
+                    clock.advance_to(done, TimeKind::Sync);
+                    clock.two_sided_inflight = clock.two_sided_inflight.saturating_sub(1);
+                    return;
+                }
+            } else {
+                panic!("wait_send: message vanished (double wait?)");
+            }
+            st = self.cond.wait(st).unwrap();
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // One-sided (NVSHMEM analog)
+    // -----------------------------------------------------------------
+
+    /// Publish a buffer into this rank's own window (symmetric-heap
+    /// registration): remote ranks may `get` it from `publish_time` on.
+    pub fn expose(&self, clock: &RankClock, owner: usize, slot: &str, buf: Buf) {
+        let mut st = self.state.lock().unwrap();
+        let bytes = buf.bytes();
+        st.windows
+            .insert((owner, slot.to_string()), WindowEntry { buf, publish_time: clock.now });
+        st.window_bytes[owner] += bytes;
+        st.peak_window_bytes[owner] = st.peak_window_bytes[owner].max(st.window_bytes[owner]);
+        self.cond.notify_all();
+    }
+
+    /// One-sided push (`nvshmemx_putmem_on_stream`): write into `dst`'s
+    /// window slot. Asynchronous: the sender pays only the issue overhead;
+    /// the data becomes visible at the computed arrival time. Returns the
+    /// completion event (for quiet/fence semantics).
+    pub fn put(
+        &self,
+        clock: &mut RankClock,
+        src: usize,
+        dst: usize,
+        slot: &str,
+        buf: Buf,
+        flows: usize,
+    ) -> Event {
+        let bytes = buf.bytes();
+        let dur = self.transfer_time(src, dst, bytes, flows);
+        let (_, done) = clock.reserve_egress(clock.now, dur);
+        let mut st = self.state.lock().unwrap();
+        st.record_transfer(src, dst, bytes, !self.cluster.same_machine(src, dst));
+        st.windows
+            .insert((dst, slot.to_string()), WindowEntry { buf, publish_time: done });
+        st.window_bytes[dst] += bytes;
+        st.peak_window_bytes[dst] = st.peak_window_bytes[dst].max(st.window_bytes[dst]);
+        clock.advance(1e-6, TimeKind::Overhead);
+        self.cond.notify_all();
+        Event { done }
+    }
+
+    /// One-sided pull (`nvshmemx_getmem_on_stream`): read `src`'s window
+    /// slot into a local buffer. Blocks (wall) until the slot is published;
+    /// virtual-time completion respects publish time, this rank's ingress
+    /// queue, and the link model. Local (src == self) reads are free.
+    pub fn get(
+        &self,
+        clock: &mut RankClock,
+        me: usize,
+        src: usize,
+        slot: &str,
+        flows: usize,
+    ) -> GetHandle {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(entry) = st.windows.get(&(src, slot.to_string())) {
+                let buf = entry.buf.clone();
+                let publish = entry.publish_time;
+                drop(st);
+                if src == me {
+                    return GetHandle { buf, done: publish.max(clock.now) };
+                }
+                let bytes = buf.bytes();
+                let dur = self.transfer_time(src, me, bytes, flows);
+                let (_, done) = clock.reserve_ingress(publish.max(clock.now), dur);
+                clock.advance(1e-6, TimeKind::Overhead);
+                self.state
+                    .lock()
+                    .unwrap()
+                    .record_transfer(src, me, bytes, !self.cluster.same_machine(src, me));
+                return GetHandle { buf, done };
+            }
+            st = self.cond.wait(st).unwrap();
+        }
+    }
+
+    /// Wait for a one-sided completion event.
+    pub fn wait_event(&self, clock: &mut RankClock, ev: Event) {
+        clock.advance_to(ev.done, TimeKind::CommWait);
+    }
+
+    /// Wait for a pull and take the data.
+    pub fn wait_get(&self, clock: &mut RankClock, h: GetHandle) -> Buf {
+        clock.advance_to(h.done, TimeKind::CommWait);
+        h.buf
+    }
+
+    /// Barrier over `group` (`nvshmemx_barrier_on_stream` analog): all
+    /// members advance to max(arrival times) + barrier latency.
+    pub fn barrier(&self, clock: &mut RankClock, group: &[usize]) {
+        let mut key: Vec<usize> = group.to_vec();
+        key.sort_unstable();
+        let n = key.len();
+        if n <= 1 {
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        let my_gen = {
+            let b = st.barriers.entry(key.clone()).or_default();
+            b.arrived += 1;
+            b.max_time = b.max_time.max(clock.now);
+            if b.arrived == n {
+                b.release_time = b.max_time + self.net().barrier_lat;
+                b.generation += 1;
+                b.arrived = 0;
+                b.max_time = 0.0;
+                let release = b.release_time;
+                st.barrier_history.push(key.clone());
+                self.cond.notify_all();
+                drop(st);
+                clock.advance_to(release, TimeKind::Sync);
+                return;
+            }
+            b.generation
+        };
+        loop {
+            st = self.cond.wait(st).unwrap();
+            let b = st.barriers.get(&key).unwrap();
+            if b.generation > my_gen {
+                let release = b.release_time;
+                drop(st);
+                clock.advance_to(release, TimeKind::Sync);
+                return;
+            }
+        }
+    }
+
+    /// Drop all window entries (between layers) and return current
+    /// resident bytes to zero. Peak is preserved.
+    pub fn clear_windows(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.windows.clear();
+        for b in st.window_bytes.iter_mut() {
+            *b = 0.0;
+        }
+    }
+
+    /// Peak bytes resident in a rank's windows (communication buffers) —
+    /// the Fig. 7 memory-overhead metric.
+    pub fn peak_window_bytes(&self, rank: usize) -> f64 {
+        self.state.lock().unwrap().peak_window_bytes[rank]
+    }
+
+    /// Measured transfer volume for `rank` (see [`Traffic`]).
+    pub fn traffic(&self, rank: usize) -> Traffic {
+        self.state.lock().unwrap().traffic[rank]
+    }
+
+    /// Every completed barrier's (sorted) rank group, in completion order —
+    /// used by the Algorithm-1 sync-count tests (§4.4: intra-machine
+    /// barriers plus exactly two global barriers per layer).
+    pub fn barrier_history(&self) -> Vec<Vec<usize>> {
+        self.state.lock().unwrap().barrier_history.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterSpec;
+
+    fn world(n: usize, m: usize) -> CommWorld {
+        CommWorld::new(ClusterSpec::new(n, m))
+    }
+
+    fn buf(elems: usize) -> Buf {
+        Buf::Real(Tensor::zeros(&[elems]))
+    }
+
+    #[test]
+    fn buf_structural_ops_match_modes() {
+        let real = Buf::Real(Tensor::random(&[2, 8, 4], 3));
+        let shape = Buf::Shape(vec![2, 8, 4]);
+        assert_eq!(real.bytes(), shape.bytes());
+        let rs = real.split(1, 4);
+        let ss = shape.split(1, 4);
+        assert_eq!(rs[0].shape(), ss[0].shape());
+        let rc = Buf::concat(&rs, 1);
+        assert_eq!(rc.shape(), &[2, 8, 4]);
+        assert_eq!(rc.tensor(), real.tensor());
+        let sc = Buf::concat(&ss, 1);
+        assert_eq!(sc.shape(), &[2, 8, 4]);
+        assert_eq!(real.slice(1, 2, 6).shape(), shape.slice(1, 2, 6).shape());
+    }
+
+    #[test]
+    #[should_panic(expected = "no tensor data")]
+    fn shape_buf_tensor_panics() {
+        Buf::Shape(vec![2]).tensor();
+    }
+
+    #[test]
+    fn transfer_time_respects_topology() {
+        let w = world(2, 2);
+        let intra = w.transfer_time(0, 1, 1e6, 1);
+        let inter = w.transfer_time(0, 2, 1e6, 1);
+        assert!(inter > intra);
+        // NIC fair share slows inter transfers
+        assert!(w.transfer_time(0, 2, 1e6, 8) > inter);
+        // but not intra ones
+        assert_eq!(w.transfer_time(0, 1, 1e6, 8), intra);
+    }
+
+    #[test]
+    fn two_sided_rendezvous_sets_both_clocks() {
+        let w = world(1, 2);
+        let mut c0 = RankClock::new();
+        let mut c1 = RankClock::new();
+        // receiver is late: sender must wait for it
+        c1.advance(1.0, TimeKind::Compute);
+        let h = w.isend(&mut c0, 0, 1, "x", buf(1024));
+        let got = w.wait_recv(&mut c1, 0, 1, "x", 1);
+        assert_eq!(got.shape(), &[1024]);
+        w.wait_send(&mut c0, h);
+        // both sides end at the same completion time >= 1.0 + sync + transfer
+        assert!((c0.now - c1.now).abs() < 1e-12);
+        assert!(c0.now > 1.0);
+        assert_eq!(c0.two_sided_inflight, 0);
+    }
+
+    #[test]
+    fn two_sided_sender_blocks_until_late_receiver() {
+        let w = world(1, 2);
+        let mut c0 = RankClock::new();
+        let mut c1 = RankClock::new();
+        c1.advance(5.0, TimeKind::Compute);
+        let h = w.isend(&mut c0, 0, 1, "t", buf(16));
+        let _ = w.wait_recv(&mut c1, 0, 1, "t", 1);
+        w.wait_send(&mut c0, h);
+        assert!(c0.now >= 5.0, "sender dragged to receiver's time (Fig 4)");
+        assert!(c0.time_in(TimeKind::Sync) >= 4.9);
+    }
+
+    #[test]
+    fn one_sided_put_does_not_block_sender() {
+        let w = world(1, 2);
+        let mut c0 = RankClock::new();
+        let mut c1 = RankClock::new();
+        c1.advance(5.0, TimeKind::Compute); // receiver late — sender doesn't care
+        let ev = w.put(&mut c0, 0, 1, "slot", buf(1024), 1);
+        assert!(c0.now < 1e-3, "put is async; sender only pays issue cost");
+        let h = w.get(&mut c1, 1, 1, "slot", 1);
+        let got = w.wait_get(&mut c1, h);
+        assert_eq!(got.shape(), &[1024]);
+        assert!(ev.done > 0.0);
+    }
+
+    #[test]
+    fn get_waits_for_publish_time() {
+        let w = world(1, 2);
+        let mut owner = RankClock::new();
+        owner.advance(2.0, TimeKind::Compute);
+        w.expose(&owner, 0, "q", buf(1 << 20));
+        let mut puller = RankClock::new();
+        let h = w.get(&mut puller, 1, 0, "q", 1);
+        let _ = w.wait_get(&mut puller, h);
+        // puller can't have the data before publish(2.0) + transfer
+        assert!(puller.now > 2.0);
+    }
+
+    #[test]
+    fn local_get_is_free() {
+        let w = world(1, 2);
+        let mut c = RankClock::new();
+        w.expose(&c, 0, "q", buf(1 << 20));
+        let h = w.get(&mut c, 0, 0, "q", 1);
+        let before = c.now;
+        let _ = w.wait_get(&mut c, h);
+        assert!(c.now - before < 1e-9, "local window read costs nothing");
+    }
+
+    #[test]
+    fn successive_gets_serialize_on_ingress() {
+        let w = world(1, 2);
+        let c0 = RankClock::new();
+        w.expose(&c0, 0, "a", buf(1 << 22));
+        w.expose(&c0, 0, "b", buf(1 << 22));
+        let mut c1 = RankClock::new();
+        let ha = w.get(&mut c1, 1, 0, "a", 1);
+        let hb = w.get(&mut c1, 1, 0, "b", 1);
+        assert!(hb.done >= ha.done + (ha.done - 0.0) * 0.5, "second pull queues");
+        let _ = w.wait_get(&mut c1, ha);
+        let _ = w.wait_get(&mut c1, hb);
+    }
+
+    #[test]
+    fn barrier_aligns_group_to_max() {
+        let w = world(1, 3);
+        let clocks: Vec<_> = (0..3)
+            .map(|i| {
+                let mut c = RankClock::new();
+                c.advance(i as f64, TimeKind::Compute);
+                c
+            })
+            .collect();
+        let out = crate::util::pool::scoped_run(
+            clocks
+                .into_iter()
+                .enumerate()
+                .map(|(i, mut c)| {
+                    let w = &w;
+                    move || {
+                        w.barrier(&mut c, &[0, 1, 2]);
+                        (i, c.now)
+                    }
+                })
+                .collect::<Vec<_>>(),
+        );
+        let expect = 2.0 + w.net().barrier_lat;
+        for (i, now) in out {
+            assert!((now - expect).abs() < 1e-9, "rank {i}: {now} != {expect}");
+        }
+    }
+
+    #[test]
+    fn barrier_is_reusable() {
+        let w = world(1, 2);
+        for round in 0..3 {
+            let out = crate::util::pool::scoped_run(
+                (0..2)
+                    .map(|i| {
+                        let w = &w;
+                        move || {
+                            let mut c = RankClock::new();
+                            c.advance(round as f64 + i as f64, TimeKind::Compute);
+                            w.barrier(&mut c, &[0, 1]);
+                            c.now
+                        }
+                    })
+                    .collect::<Vec<_>>(),
+            );
+            assert!((out[0] - out[1]).abs() < 1e-12, "round {round}");
+        }
+    }
+
+    #[test]
+    fn window_memory_accounting() {
+        let w = world(1, 2);
+        let c = RankClock::new();
+        w.expose(&c, 0, "a", buf(256)); // 1024 bytes
+        w.expose(&c, 0, "b", buf(256));
+        assert_eq!(w.peak_window_bytes(0), 2048.0);
+        w.clear_windows();
+        assert_eq!(w.peak_window_bytes(0), 2048.0, "peak survives clear");
+        let c2 = RankClock::new();
+        w.expose(&c2, 0, "c", buf(64));
+        assert_eq!(w.peak_window_bytes(0), 2048.0);
+    }
+
+    #[test]
+    fn cross_thread_send_recv_delivers_data() {
+        let w = world(1, 2);
+        let payload = Tensor::random(&[32], 5);
+        let p2 = payload.clone();
+        let out = crate::util::pool::scoped_run(vec![
+            Box::new({
+                let w = &w;
+                let payload = payload.clone();
+                move || {
+                    let mut c = RankClock::new();
+                    let h = w.isend(&mut c, 0, 1, "d", Buf::Real(payload));
+                    w.wait_send(&mut c, h);
+                    None
+                }
+            }) as Box<dyn FnOnce() -> Option<Tensor> + Send>,
+            Box::new({
+                let w = &w;
+                move || {
+                    let mut c = RankClock::new();
+                    Some(w.wait_recv(&mut c, 0, 1, "d", 1).into_tensor())
+                }
+            }),
+        ]);
+        assert_eq!(out[1].as_ref().unwrap(), &p2);
+    }
+}

@@ -1,0 +1,311 @@
+//! Configuration system: cluster topology, hardware constants, attention
+//! workload shapes, and engine settings.
+//!
+//! Hardware presets encode the paper's testbed (§5.1: 4× AWS p4de.24xlarge,
+//! 8× A100-40GB per machine, NVSwitch intra-machine, 400 Gbps EFA
+//! inter-machine) so the analysis model and the netsim share one source of
+//! truth. All bandwidths are *per direction* in bytes/second.
+
+use anyhow::{bail, Result};
+
+/// Per-GPU compute model (used to convert attention FLOPs to seconds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GpuSpec {
+    /// Dense bf16/fp16 tensor-core throughput actually achievable for
+    /// flash-attention-like kernels (fraction of peak).
+    pub flops: f64,
+    /// HBM bandwidth in bytes/s (roofline for memory-bound shapes).
+    pub mem_bw: f64,
+    /// GPU memory capacity in bytes (activation-fit checks, Fig. 7 memory).
+    pub mem_capacity: f64,
+    /// Fixed per-kernel launch overhead, seconds. The paper's Fig. 8
+    /// discussion: small Ring degrees fragment attention into many kernel
+    /// launches, and this constant is what makes that visible.
+    pub launch_overhead: f64,
+}
+
+impl GpuSpec {
+    /// NVIDIA A100-SXM 40 GiB (paper's GPU): 312 TFLOPS bf16 peak; flash
+    /// attention sustains ~60% of peak on long sequences.
+    pub fn a100_40g() -> Self {
+        Self {
+            flops: 312e12 * 0.6,
+            mem_bw: 1.555e12,
+            mem_capacity: 40.0 * (1u64 << 30) as f64,
+            launch_overhead: 4e-6,
+        }
+    }
+
+    /// Seconds to run an attention tile of `flops` touching `bytes` of
+    /// HBM: roofline max of compute and memory time plus launch overhead.
+    pub fn tile_time(&self, flops: f64, bytes: f64) -> f64 {
+        (flops / self.flops).max(bytes / self.mem_bw) + self.launch_overhead
+    }
+}
+
+/// Network link model: classic α–β (latency + inverse bandwidth) with an
+/// SM-contention tax for kernel-based (two-sided) transfers — the three
+/// effects Challenge 1–3 of the paper are about.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetSpec {
+    /// Intra-machine (NVSwitch) per-GPU bandwidth, bytes/s per direction.
+    pub intra_bw: f64,
+    /// Intra-machine per-transfer latency, seconds.
+    pub intra_lat: f64,
+    /// Inter-machine NIC bandwidth *per machine*, bytes/s per direction
+    /// (shared by all GPUs of the machine — the EFA aggregation of Fig 3a).
+    pub inter_bw: f64,
+    /// Inter-machine per-transfer latency, seconds.
+    pub inter_lat: f64,
+    /// Per-transfer rendezvous penalty of two-sided libraries (sender and
+    /// receiver synchronize before data moves; Fig. 4), seconds.
+    pub two_sided_sync: f64,
+    /// Effective-bandwidth loss of kernel-based two-sided transfers (the
+    /// copy kernels steal SMs — Challenge 3); one-sided driver-level
+    /// copies don't pay it.
+    pub sm_tax: f64,
+    /// Fraction of a two-sided transfer that *blocks* the issuing rank
+    /// (NCCL send/recv kernels occupy stream slots and SMs, so posted
+    /// transfers only partially progress behind compute — Fig. 4 / the
+    /// Fig. 3b comm-bound breakdown). One-sided puts/gets are fully
+    /// asynchronous (driver-level copies).
+    pub two_sided_stream_block: f64,
+    /// Cost of a barrier across a process group, seconds (scales ~log P,
+    /// applied per barrier call by the models).
+    pub barrier_lat: f64,
+}
+
+impl NetSpec {
+    /// Paper's testbed: NVSwitch (A100 gen: 600 GB/s/GPU total, ~300 GB/s
+    /// per direction) + 400 Gbps EFA per machine. `inter_bw` is the
+    /// *effective* collective bandwidth: EFA's 50 GB/s line rate delivers
+    /// ~25 GB/s of NCCL busbw on p4d-class instances (public nccl-tests
+    /// numbers) — using line rate would make USP's ring fully hideable,
+    /// contradicting the paper's measured Fig. 3b breakdown.
+    pub fn p4de_efa() -> Self {
+        Self {
+            intra_bw: 300e9,
+            intra_lat: 3e-6,
+            inter_bw: 25e9,
+            inter_lat: 15e-6,
+            two_sided_sync: 10e-6,
+            sm_tax: 0.12,
+            two_sided_stream_block: 0.85,
+            barrier_lat: 20e-6,
+        }
+    }
+
+    /// A slower "commodity ethernet" variant (wider intra/inter gap) used
+    /// by the topology_explorer example and sensitivity tests.
+    pub fn commodity_100g() -> Self {
+        Self {
+            inter_bw: 100e9 / 8.0,
+            inter_lat: 30e-6,
+            ..Self::p4de_efa()
+        }
+    }
+
+    /// Effective per-GPU inter-machine bandwidth when `flows` GPUs of a
+    /// machine communicate off-machine concurrently (NIC fair share).
+    pub fn inter_bw_per_flow(&self, flows: usize) -> f64 {
+        self.inter_bw / flows.max(1) as f64
+    }
+}
+
+/// The cluster: N machines × M GPUs + hardware constants.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterSpec {
+    pub machines: usize,
+    pub gpus_per_machine: usize,
+    pub gpu: GpuSpec,
+    pub net: NetSpec,
+}
+
+impl ClusterSpec {
+    pub fn new(machines: usize, gpus_per_machine: usize) -> Self {
+        Self {
+            machines,
+            gpus_per_machine,
+            gpu: GpuSpec::a100_40g(),
+            net: NetSpec::p4de_efa(),
+        }
+    }
+
+    /// The paper's evaluation cluster: 4 × 8 A100.
+    pub fn paper_testbed() -> Self {
+        Self::new(4, 8)
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.machines * self.gpus_per_machine
+    }
+
+    pub fn machine_of(&self, rank: usize) -> usize {
+        rank / self.gpus_per_machine
+    }
+
+    pub fn same_machine(&self, a: usize, b: usize) -> bool {
+        self.machine_of(a) == self.machine_of(b)
+    }
+}
+
+/// Attention workload shape, paper notation (§2.2): Q/K/V are [B, L, H, D].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AttnShape {
+    pub b: usize,
+    pub l: usize,
+    pub h: usize,
+    pub d: usize,
+}
+
+impl AttnShape {
+    pub fn new(b: usize, l: usize, h: usize, d: usize) -> Self {
+        Self { b, l, h, d }
+    }
+
+    /// Elements of one of Q/K/V (the paper's BLHD product).
+    pub fn blhd(&self) -> usize {
+        self.b * self.l * self.h * self.d
+    }
+
+    pub fn bytes_per_tensor(&self) -> f64 {
+        self.blhd() as f64 * 4.0 // f32 on this testbed (paper uses bf16: x0.5)
+    }
+
+    /// Total attention FLOPs: 2 matmuls (QK^T and PV), 2*B*H*L^2*D each.
+    pub fn attention_flops(&self) -> f64 {
+        4.0 * self.b as f64 * self.h as f64 * (self.l as f64) * (self.l as f64) * self.d as f64
+    }
+}
+
+/// The 2D parallelization degrees: `pu` for Ulysses, `pr` for Ring
+/// (`P_u × P_r` mesh, §4.2). The paper's UxRy notation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpDegrees {
+    pub pu: usize,
+    pub pr: usize,
+}
+
+impl SpDegrees {
+    pub fn new(pu: usize, pr: usize) -> Self {
+        Self { pu, pr }
+    }
+
+    pub fn total(&self) -> usize {
+        self.pu * self.pr
+    }
+
+    /// The paper's placement rule (§4.2): `P_u = gcd(N·M, H)`, maximizing
+    /// Ulysses usage, `P_r = N·M / P_u`.
+    pub fn swiftfusion_default(cluster: &ClusterSpec, heads: usize) -> Self {
+        let p = cluster.total_gpus();
+        let pu = gcd(p, heads);
+        Self { pu, pr: p / pu }
+    }
+
+    /// Validate against a cluster + workload (divisibility constraints the
+    /// paper states: H % P_u == 0, L % P == 0).
+    pub fn validate(&self, cluster: &ClusterSpec, shape: &AttnShape) -> Result<()> {
+        if self.total() != cluster.total_gpus() {
+            bail!(
+                "degrees {}x{} != cluster {} GPUs",
+                self.pu,
+                self.pr,
+                cluster.total_gpus()
+            );
+        }
+        if shape.h % self.pu != 0 {
+            bail!("H={} not divisible by P_u={}", shape.h, self.pu);
+        }
+        if shape.l % self.total() != 0 {
+            bail!("L={} not divisible by P={}", shape.l, self.total());
+        }
+        Ok(())
+    }
+}
+
+pub fn gcd(a: usize, b: usize) -> usize {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_testbed_shape() {
+        let c = ClusterSpec::paper_testbed();
+        assert_eq!(c.total_gpus(), 32);
+        assert_eq!(c.machine_of(0), 0);
+        assert_eq!(c.machine_of(7), 0);
+        assert_eq!(c.machine_of(8), 1);
+        assert!(c.same_machine(9, 15));
+        assert!(!c.same_machine(7, 8));
+    }
+
+    #[test]
+    fn gcd_basics() {
+        assert_eq!(gcd(32, 24), 8);
+        assert_eq!(gcd(24, 32), 8);
+        assert_eq!(gcd(7, 3), 1);
+        assert_eq!(gcd(8, 8), 8);
+    }
+
+    #[test]
+    fn swiftfusion_default_is_gcd_rule() {
+        // paper §4.2: H=24, N*M=32 -> P_u = gcd(32,24) = 8, P_r = 4
+        let c = ClusterSpec::paper_testbed();
+        let d = SpDegrees::swiftfusion_default(&c, 24);
+        assert_eq!(d, SpDegrees::new(8, 4));
+        // H = 32 -> full Ulysses
+        let d = SpDegrees::swiftfusion_default(&c, 32);
+        assert_eq!(d, SpDegrees::new(32, 1));
+    }
+
+    #[test]
+    fn degrees_validation() {
+        let c = ClusterSpec::new(2, 2);
+        let s = AttnShape::new(1, 128, 4, 16);
+        assert!(SpDegrees::new(2, 2).validate(&c, &s).is_ok());
+        assert!(SpDegrees::new(4, 2).validate(&c, &s).is_err()); // != 4 gpus
+        assert!(SpDegrees::new(1, 4).validate(&c, &s).is_ok());
+        let odd = AttnShape::new(1, 130, 4, 16);
+        assert!(SpDegrees::new(2, 2).validate(&c, &odd).is_err()); // L % P
+        let h3 = AttnShape::new(1, 128, 3, 16);
+        assert!(SpDegrees::new(2, 2).validate(&c, &h3).is_err()); // H % Pu
+    }
+
+    #[test]
+    fn attn_shape_arithmetic() {
+        let s = AttnShape::new(2, 1024, 24, 64);
+        assert_eq!(s.blhd(), 2 * 1024 * 24 * 64);
+        assert_eq!(s.bytes_per_tensor(), (2 * 1024 * 24 * 64) as f64 * 4.0);
+        // 4*B*H*L^2*D
+        assert_eq!(
+            s.attention_flops(),
+            4.0 * 2.0 * 24.0 * 1024.0 * 1024.0 * 64.0
+        );
+    }
+
+    #[test]
+    fn nic_fair_share() {
+        let n = NetSpec::p4de_efa();
+        assert_eq!(n.inter_bw_per_flow(1), n.inter_bw);
+        assert_eq!(n.inter_bw_per_flow(8), n.inter_bw / 8.0);
+        assert_eq!(n.inter_bw_per_flow(0), n.inter_bw);
+    }
+
+    #[test]
+    fn presets_sane() {
+        let n = NetSpec::p4de_efa();
+        // the whole paper premise: intra >> inter
+        assert!(n.intra_bw > 4.0 * n.inter_bw);
+        assert!(n.inter_lat > n.intra_lat);
+        let g = GpuSpec::a100_40g();
+        assert!(g.flops > 1e14);
+    }
+}

@@ -1,0 +1,211 @@
+//! Request batcher: groups compatible (same-workload) requests.
+//!
+//! Diffusion serving differs from LLM serving: every request of a given
+//! workload runs the *same* number of uniform steps, so batching is a
+//! pure B-dimension stack with no continuous batching / eviction. Policy:
+//! FIFO per workload; a batch closes when it reaches `max_batch` or the
+//! oldest member has waited `window` seconds.
+
+use std::collections::VecDeque;
+
+use crate::workload::Request;
+
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    /// Max time the head request may wait for co-batching (seconds).
+    pub window: f64,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 4, window: 2.0 }
+    }
+}
+
+/// A closed batch ready for service.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub requests: Vec<Request>,
+}
+
+impl Batch {
+    pub fn workload_name(&self) -> &str {
+        self.requests[0].workload.name
+    }
+
+    pub fn size(&self) -> usize {
+        self.requests.len()
+    }
+
+    /// A batch is ready at max(arrivals) (all members must have arrived).
+    pub fn ready_at(&self) -> f64 {
+        self.requests
+            .iter()
+            .map(|r| r.arrival)
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+}
+
+/// FIFO batcher over a time-ordered request stream.
+#[derive(Debug, Default)]
+pub struct Batcher {
+    queues: Vec<(String, VecDeque<Request>)>,
+    policy: BatchPolicy,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Self { queues: Vec::new(), policy }
+    }
+
+    pub fn push(&mut self, r: Request) {
+        let name = r.workload.name.to_string();
+        if let Some((_, q)) = self.queues.iter_mut().find(|(n, _)| *n == name) {
+            q.push_back(r);
+        } else {
+            let mut q = VecDeque::new();
+            q.push_back(r);
+            self.queues.push((name, q));
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queues.iter().map(|(_, q)| q.len()).sum()
+    }
+
+    /// Next batch that is closeable at virtual time `now`: either a full
+    /// batch, or a queue whose head has waited past the window. Returns
+    /// the earliest-deadline batch first (fairness across workloads).
+    pub fn pop_ready(&mut self, now: f64) -> Option<Batch> {
+        let policy = self.policy.clone();
+        let mut best: Option<(f64, usize)> = None; // (head arrival, queue idx)
+        for (i, (_, q)) in self.queues.iter().enumerate() {
+            if q.is_empty() {
+                continue;
+            }
+            let head = q.front().unwrap().arrival;
+            let full = q.len() >= policy.max_batch;
+            let expired = now - head >= policy.window;
+            if full || expired {
+                match best {
+                    Some((h, _)) if h <= head => {}
+                    _ => best = Some((head, i)),
+                }
+            }
+        }
+        let (_, idx) = best?;
+        let q = &mut self.queues[idx].1;
+        let n = q.len().min(policy.max_batch);
+        let requests: Vec<Request> = q.drain(..n).collect();
+        Some(Batch { requests })
+    }
+
+    /// Force-close the oldest non-empty queue (drain at end of trace).
+    pub fn pop_any(&mut self) -> Option<Batch> {
+        let policy = self.policy.clone();
+        let mut best: Option<(f64, usize)> = None;
+        for (i, (_, q)) in self.queues.iter().enumerate() {
+            if let Some(head) = q.front() {
+                match best {
+                    Some((h, _)) if h <= head.arrival => {}
+                    _ => best = Some((head.arrival, i)),
+                }
+            }
+        }
+        let (_, idx) = best?;
+        let q = &mut self.queues[idx].1;
+        let n = q.len().min(policy.max_batch);
+        Some(Batch { requests: q.drain(..n).collect() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Workload;
+
+    fn req(id: u64, w: Workload, arrival: f64) -> Request {
+        Request { id, workload: w, arrival, seed: id }
+    }
+
+    #[test]
+    fn full_batch_closes_immediately() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 2, window: 100.0 });
+        b.push(req(0, Workload::flux_3072(), 0.0));
+        assert!(b.pop_ready(0.0).is_none(), "not full, window open");
+        b.push(req(1, Workload::flux_3072(), 0.1));
+        let batch = b.pop_ready(0.1).expect("full batch");
+        assert_eq!(batch.size(), 2);
+        assert_eq!(batch.workload_name(), "flux-3072");
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn window_expiry_closes_partial_batch() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 8, window: 1.0 });
+        b.push(req(0, Workload::flux_3072(), 0.0));
+        assert!(b.pop_ready(0.5).is_none());
+        let batch = b.pop_ready(1.5).expect("window expired");
+        assert_eq!(batch.size(), 1);
+    }
+
+    #[test]
+    fn workloads_never_mix() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 4, window: 0.0 });
+        b.push(req(0, Workload::flux_3072(), 0.0));
+        b.push(req(1, Workload::cogvideo_20s(), 0.0));
+        let first = b.pop_ready(10.0).unwrap();
+        let second = b.pop_ready(10.0).unwrap();
+        assert_ne!(first.workload_name(), second.workload_name());
+        assert_eq!(first.size() + second.size(), 2);
+    }
+
+    #[test]
+    fn fifo_order_within_workload() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 2, window: 0.0 });
+        for i in 0..4 {
+            b.push(req(i, Workload::flux_3072(), i as f64));
+        }
+        let b1 = b.pop_ready(100.0).unwrap();
+        let b2 = b.pop_ready(100.0).unwrap();
+        assert_eq!(b1.requests[0].id, 0);
+        assert_eq!(b1.requests[1].id, 1);
+        assert_eq!(b2.requests[0].id, 2);
+        assert_eq!(b2.requests[1].id, 3);
+    }
+
+    #[test]
+    fn oldest_queue_wins() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 1, window: 0.0 });
+        b.push(req(1, Workload::cogvideo_20s(), 5.0));
+        b.push(req(0, Workload::flux_3072(), 1.0));
+        let first = b.pop_ready(10.0).unwrap();
+        assert_eq!(first.requests[0].id, 0, "older head goes first");
+    }
+
+    #[test]
+    fn pop_any_drains_everything() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 3, window: 1e9 });
+        for i in 0..5 {
+            b.push(req(i, Workload::flux_3072(), 0.0));
+        }
+        let mut total = 0;
+        while let Some(batch) = b.pop_any() {
+            total += batch.size();
+        }
+        assert_eq!(total, 5);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn batch_ready_at_is_max_arrival() {
+        let batch = Batch {
+            requests: vec![
+                req(0, Workload::flux_3072(), 1.0),
+                req(1, Workload::flux_3072(), 3.0),
+            ],
+        };
+        assert_eq!(batch.ready_at(), 3.0);
+    }
+}

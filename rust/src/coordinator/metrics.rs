@@ -1,0 +1,105 @@
+//! Serving metrics: per-workload latency distributions + throughput.
+
+use std::collections::BTreeMap;
+
+use crate::util::stats::{fmt_time, Summary};
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    per_workload: BTreeMap<String, Summary>,
+    completed: usize,
+    /// Virtual (or wall) time of the last completion.
+    pub horizon: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, workload: &str, latency: f64, completion: f64) {
+        self.per_workload
+            .entry(workload.to_string())
+            .or_default()
+            .add(latency);
+        self.completed += 1;
+        self.horizon = self.horizon.max(completion);
+    }
+
+    pub fn completed(&self) -> usize {
+        self.completed
+    }
+
+    /// Requests per second over the serving horizon.
+    pub fn throughput(&self) -> f64 {
+        if self.horizon > 0.0 {
+            self.completed as f64 / self.horizon
+        } else {
+            0.0
+        }
+    }
+
+    pub fn latency(&mut self, workload: &str) -> Option<&mut Summary> {
+        self.per_workload.get_mut(workload)
+    }
+
+    pub fn workloads(&self) -> Vec<String> {
+        self.per_workload.keys().cloned().collect()
+    }
+
+    /// Human-readable report table.
+    pub fn report(&mut self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "completed {} requests in {} ({:.3} req/s)\n",
+            self.completed,
+            fmt_time(self.horizon),
+            self.throughput()
+        ));
+        out.push_str(&format!(
+            "{:<16}{:>6}{:>14}{:>14}{:>14}{:>14}\n",
+            "workload", "n", "mean", "p50", "p95", "max"
+        ));
+        let keys = self.workloads();
+        for k in keys {
+            let s = self.per_workload.get_mut(&k).unwrap();
+            out.push_str(&format!(
+                "{:<16}{:>6}{:>14}{:>14}{:>14}{:>14}\n",
+                k,
+                s.len(),
+                fmt_time(s.mean()),
+                fmt_time(s.p50()),
+                fmt_time(s.p95()),
+                fmt_time(s.max()),
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_reports() {
+        let mut m = Metrics::new();
+        m.record("flux", 1.0, 10.0);
+        m.record("flux", 3.0, 12.0);
+        m.record("video", 5.0, 20.0);
+        assert_eq!(m.completed(), 3);
+        assert_eq!(m.horizon, 20.0);
+        assert!((m.throughput() - 0.15).abs() < 1e-12);
+        assert!((m.latency("flux").unwrap().mean() - 2.0).abs() < 1e-12);
+        let rep = m.report();
+        assert!(rep.contains("flux") && rep.contains("video"));
+    }
+
+    #[test]
+    fn empty_metrics() {
+        let mut m = Metrics::new();
+        assert_eq!(m.throughput(), 0.0);
+        assert!(m.latency("x").is_none());
+        assert!(m.report().contains("completed 0"));
+    }
+}

@@ -1,0 +1,29 @@
+//! The serving engine: SwiftFusion as a *system*, not just an attention
+//! algorithm. Mirrors the shape of production DiT serving stacks
+//! (vLLM-style router → batcher → engine workers):
+//!
+//! * [`router`] — partitions the cluster into pods (one 2D mesh each) and
+//!   routes requests to the least-loaded compatible pod;
+//! * [`batcher`] — groups same-workload requests within a batching
+//!   window up to a max batch size (diffusion requests are uniform-length
+//!   per workload, so batching is along B);
+//! * [`engine`] — virtual-time serving loop over a [`ServiceModel`]
+//!   (simulated paper-scale service times, or measured numeric sampling
+//!   as in `examples/serve_images.rs`);
+//! * [`metrics`] — per-workload latency/throughput summaries.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod router;
+
+use crate::workload::Workload;
+
+/// Abstraction over "how long does one batched generation take": the
+/// simulated engine plugs in the timing-mode cluster model; the numeric
+/// engine plugs in real measured sampling.
+pub trait ServiceModel: Sync {
+    /// End-to-end service time (seconds) for a batch of `batch` requests
+    /// of `workload` on one pod.
+    fn service_time(&self, workload: &Workload, batch: usize) -> f64;
+}

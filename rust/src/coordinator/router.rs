@@ -1,0 +1,126 @@
+//! Pod router: carves the cluster into serving pods and picks where each
+//! batch runs.
+//!
+//! A *pod* is a set of machines operated as one 2D SP mesh. The router
+//! implements the paper's placement rule per workload (P_u = gcd(P, H),
+//! §4.2) and least-loaded dispatch (earliest-free pod, ties by index —
+//! deterministic).
+
+use crate::config::{ClusterSpec, SpDegrees};
+use crate::sp::SpAlgo;
+
+/// One serving pod: a sub-cluster running a fixed algorithm.
+#[derive(Debug, Clone)]
+pub struct Pod {
+    pub id: usize,
+    pub cluster: ClusterSpec,
+    pub algo: SpAlgo,
+    /// Virtual time at which the pod becomes free.
+    pub free_at: f64,
+}
+
+impl Pod {
+    /// Degrees for a workload with `heads` heads on this pod (gcd rule
+    /// for the SwiftFusion family; max-intra-Ulysses for USP).
+    pub fn degrees_for(&self, heads: usize) -> SpDegrees {
+        match self.algo {
+            SpAlgo::Usp => {
+                let m = self.cluster.gpus_per_machine;
+                let pu = crate::config::gcd(m, heads);
+                SpDegrees::new(pu, self.cluster.total_gpus() / pu)
+            }
+            _ => SpDegrees::swiftfusion_default(&self.cluster, heads),
+        }
+    }
+}
+
+/// The router: owns the pods, assigns batches.
+#[derive(Debug)]
+pub struct Router {
+    pub pods: Vec<Pod>,
+}
+
+impl Router {
+    /// Split `machines` total machines into `num_pods` equal pods of
+    /// `gpus_per_machine`-GPU machines.
+    pub fn new(machines: usize, gpus_per_machine: usize, num_pods: usize, algo: SpAlgo) -> Self {
+        assert!(num_pods > 0 && machines % num_pods == 0);
+        let per_pod = machines / num_pods;
+        let pods = (0..num_pods)
+            .map(|id| Pod {
+                id,
+                cluster: ClusterSpec::new(per_pod, gpus_per_machine),
+                algo,
+                free_at: 0.0,
+            })
+            .collect();
+        Self { pods }
+    }
+
+    /// Earliest-free pod (ties broken by lowest id — deterministic).
+    pub fn pick(&self) -> usize {
+        self.pods
+            .iter()
+            .enumerate()
+            .min_by(|(ia, a), (ib, b)| {
+                a.free_at
+                    .partial_cmp(&b.free_at)
+                    .unwrap()
+                    .then(ia.cmp(ib))
+            })
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+
+    /// Commit a batch to `pod`: service starts when both the pod is free
+    /// and the batch is ready; returns (start, completion).
+    pub fn dispatch(&mut self, pod: usize, ready_at: f64, service: f64) -> (f64, f64) {
+        let p = &mut self.pods[pod];
+        let start = p.free_at.max(ready_at);
+        let done = start + service;
+        p.free_at = done;
+        (start, done)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pods_partition_the_cluster() {
+        let r = Router::new(4, 8, 2, SpAlgo::SwiftFusion);
+        assert_eq!(r.pods.len(), 2);
+        assert_eq!(r.pods[0].cluster.total_gpus(), 16);
+    }
+
+    #[test]
+    fn gcd_rule_degrees() {
+        let r = Router::new(4, 8, 1, SpAlgo::SwiftFusion);
+        // P=32, H=24 -> Pu=8, Pr=4 (§4.2's example)
+        assert_eq!(r.pods[0].degrees_for(24), SpDegrees::new(8, 4));
+        // USP maxes intra-machine Ulysses: Pu = gcd(M=8, 24) = 8
+        let r2 = Router::new(4, 8, 1, SpAlgo::Usp);
+        assert_eq!(r2.pods[0].degrees_for(24), SpDegrees::new(8, 4));
+    }
+
+    #[test]
+    fn least_loaded_dispatch() {
+        let mut r = Router::new(2, 2, 2, SpAlgo::SwiftFusion);
+        assert_eq!(r.pick(), 0);
+        let (s0, d0) = r.dispatch(0, 0.0, 10.0);
+        assert_eq!((s0, d0), (0.0, 10.0));
+        assert_eq!(r.pick(), 1, "pod 0 busy until 10");
+        r.dispatch(1, 0.0, 3.0);
+        assert_eq!(r.pick(), 1, "pod 1 free sooner");
+        // batch not ready until t=20: idles the pod
+        let (s, d) = r.dispatch(1, 20.0, 1.0);
+        assert_eq!((s, d), (20.0, 21.0));
+    }
+
+    #[test]
+    fn deterministic_tiebreak() {
+        let r = Router::new(2, 2, 2, SpAlgo::SwiftFusion);
+        assert_eq!(r.pick(), 0, "equal free_at -> lowest id");
+    }
+}

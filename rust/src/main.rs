@@ -1,0 +1,299 @@
+//! SwiftFusion CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   info                       manifest + config inventory
+//!   validate [--config NAME]   distributed-vs-oracle numeric check
+//!   bench-layer [...]          single-attention-layer latency (timing sim)
+//!   serve [...]                virtual-time serving run on a trace
+//!   volumes [...]              Appendix-D inter-machine volume table
+//!
+//! Examples:
+//!   swiftfusion validate --config small4
+//!   swiftfusion bench-layer --machines 4 --gpus 8 --workload cogvideox-40s
+//!   swiftfusion serve --machines 4 --gpus 8 --pods 2 --requests 64 --rate 0.05
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use swiftfusion::cluster::exec::{run_cluster, ExecMode};
+use swiftfusion::comm::Buf;
+use swiftfusion::config::{AttnShape, ClusterSpec, SpDegrees};
+use swiftfusion::coordinator::batcher::BatchPolicy;
+use swiftfusion::coordinator::engine::{serve, SimService};
+use swiftfusion::coordinator::router::Router;
+use swiftfusion::runtime::Runtime;
+use swiftfusion::sp::{SpAlgo, SpParams};
+use swiftfusion::tensor::Tensor;
+use swiftfusion::util::cli::Args;
+use swiftfusion::util::stats::{fmt_bytes, fmt_time};
+use swiftfusion::workload::{TraceGen, Workload};
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
+    let result = match cmd {
+        "info" => cmd_info(),
+        "validate" => cmd_validate(&args),
+        "bench-layer" => cmd_bench_layer(&args),
+        "serve" => cmd_serve(&args),
+        "volumes" => cmd_volumes(&args),
+        "trace" => cmd_trace(&args),
+        "help" | "--help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand '{other}'\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const HELP: &str = "\
+swiftfusion — scalable sequence parallelism for distributed DiT inference
+
+USAGE: swiftfusion <info|validate|bench-layer|serve|volumes> [flags]
+
+  info                                  artifact + config inventory
+  validate  --config small4             numeric check: all SP algos vs oracle
+  bench-layer --machines N --gpus M --workload NAME [--algo NAME]
+  serve     --machines N --gpus M --pods K --requests R --rate Q [--algo NAME]
+  volumes   --machines N --gpus M --heads H
+  trace     --machines N --gpus M --workload NAME [--algo NAME] [--out FILE]
+            (per-rank timeline of one attention layer, chrome://tracing JSON)
+";
+
+fn workload_by_name(name: &str) -> Result<Workload> {
+    Workload::paper_suite()
+        .into_iter()
+        .find(|w| w.name == name)
+        .ok_or_else(|| anyhow::anyhow!("unknown workload '{name}'"))
+}
+
+fn cmd_info() -> Result<()> {
+    let rt = Runtime::load_default()?;
+    let m = rt.manifest();
+    println!("artifacts dir: {}", m.dir.display());
+    println!("configs:");
+    for c in &m.configs {
+        println!(
+            "  {:<8} B={} L={} H={} D={} hidden={} depth={} mesh={} chunk={}",
+            c.name, c.b, c.l, c.h, c.d, c.hidden, c.depth, c.mesh, c.chunk
+        );
+    }
+    println!("artifacts: {}", m.artifacts.len());
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    let cfg_name = args.str_or("config", "small4");
+    let rt = Runtime::load_default()?;
+    let cfg = Arc::new(rt.manifest().config(cfg_name)?.clone());
+    let mesh = cfg.mesh;
+    // pick a 2-machine split of the mesh
+    let (n, m) = (2, mesh / 2);
+    let cluster = ClusterSpec::new(n, m);
+    let q = Tensor::random(&[cfg.b, cfg.l, cfg.h, cfg.d], 1);
+    let k = Tensor::random(&[cfg.b, cfg.l, cfg.h, cfg.d], 2);
+    let v = Tensor::random(&[cfg.b, cfg.l, cfg.h, cfg.d], 3);
+    let oracle = rt
+        .handle()
+        .call(&format!("attn_full_{cfg_name}"), &[q.clone(), k.clone(), v.clone()])?
+        .remove(0);
+    let ls = cfg.l / mesh;
+    println!("validating {mesh}-rank distributed attention vs oracle ({cfg_name})");
+    for algo in SpAlgo::ALL {
+        let pu = match algo {
+            SpAlgo::Ring => 1,
+            SpAlgo::Ulysses => mesh,
+            _ => swiftfusion::config::gcd(mesh, cfg.h),
+        };
+        let params = SpParams {
+            shape: AttnShape::new(cfg.b, cfg.l, cfg.h, cfg.d),
+            chunk: cfg.chunk,
+            mesh: algo.mesh(&cluster, SpDegrees::new(pu, mesh / pu)),
+        };
+        let mode = ExecMode::Numeric { rt: rt.handle(), cfg: Arc::clone(&cfg) };
+        let run = run_cluster(&cluster, &mode, |ctx| {
+            let r = ctx.rank;
+            let qs = Buf::Real(q.slice(1, r * ls, (r + 1) * ls).unwrap());
+            let ks = Buf::Real(k.slice(1, r * ls, (r + 1) * ls).unwrap());
+            let vs = Buf::Real(v.slice(1, r * ls, (r + 1) * ls).unwrap());
+            algo.run(ctx, &params, qs, ks, vs).into_tensor()
+        });
+        let mut max_diff = 0f32;
+        for (rank, got) in run.outputs.iter().enumerate() {
+            let want = oracle.slice(1, rank * ls, (rank + 1) * ls)?;
+            max_diff = max_diff.max(got.max_abs_diff(&want));
+        }
+        let status = if max_diff < 1e-4 { "OK " } else { "FAIL" };
+        println!(
+            "  {status} {:<12} (U{}R{})  max|Δ| = {max_diff:.2e}  sim {}",
+            algo.name(),
+            pu,
+            mesh / pu,
+            fmt_time(run.makespan())
+        );
+        if max_diff >= 1e-4 {
+            bail!("{} diverged from oracle", algo.name());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_bench_layer(args: &Args) -> Result<()> {
+    let n = args.usize_or("machines", 4)?;
+    let m = args.usize_or("gpus", 8)?;
+    let wname = args.str_or("workload", "cogvideox-20s");
+    let w = workload_by_name(wname)?.aligned_to(n * m * 64);
+    let cluster = ClusterSpec::new(n, m);
+    println!(
+        "single attention layer, {wname} (L={} H={} D={}) on {n}x{m}:",
+        w.shape.l, w.shape.h, w.shape.d
+    );
+    let algos: Vec<SpAlgo> = match args.get("algo") {
+        Some(a) => vec![SpAlgo::from_name(a).ok_or_else(|| anyhow::anyhow!("bad algo"))?],
+        None => SpAlgo::ALL.to_vec(),
+    };
+    let mut baseline = None;
+    for algo in algos {
+        let svc = SimService::new(cluster.clone(), algo);
+        let t = svc.layer_time(&w, w.shape.b);
+        if algo == SpAlgo::Usp {
+            baseline = Some(t);
+        }
+        let speedup = baseline
+            .map(|b| format!("{:.2}x vs USP", b / t))
+            .unwrap_or_default();
+        println!("  {:<12} {:>12}  {speedup}", algo.name(), fmt_time(t));
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let n = args.usize_or("machines", 4)?;
+    let m = args.usize_or("gpus", 8)?;
+    let pods = args.usize_or("pods", 1)?;
+    let nreq = args.usize_or("requests", 32)?;
+    let rate = args.f64_or("rate", 0.05)?;
+    let algo = SpAlgo::from_name(args.str_or("algo", "swiftfusion"))
+        .ok_or_else(|| anyhow::anyhow!("bad algo"))?;
+    let max_batch = args.usize_or("max-batch", 2)?;
+
+    let mut router = Router::new(n, m, pods, algo);
+    let svc = SimService::new(router.pods[0].cluster.clone(), algo);
+    let reqs = TraceGen::new(42, rate, Workload::paper_suite()).take(nreq);
+    let report = serve(
+        &mut router,
+        BatchPolicy { max_batch, window: 30.0 },
+        reqs,
+        &svc,
+    );
+    let mut metrics = report.metrics;
+    println!(
+        "serving {nreq} requests on {n}x{m} ({pods} pod(s), {})",
+        algo.name()
+    );
+    print!("{}", metrics.report());
+    Ok(())
+}
+
+/// Export the per-rank virtual timeline of one attention layer as a
+/// chrome://tracing JSON file (load in chrome://tracing or Perfetto).
+fn cmd_trace(args: &Args) -> Result<()> {
+    use swiftfusion::cluster::clock::TimeKind;
+    use swiftfusion::util::json::{to_string, Json};
+    use std::collections::BTreeMap;
+
+    let n = args.usize_or("machines", 4)?;
+    let m = args.usize_or("gpus", 8)?;
+    let algo = SpAlgo::from_name(args.str_or("algo", "swiftfusion"))
+        .ok_or_else(|| anyhow::anyhow!("bad algo"))?;
+    let wname = args.str_or("workload", "cogvideox-20s");
+    let out_path = args.str_or("out", "/tmp/swiftfusion_trace.json").to_string();
+    let w = workload_by_name(wname)?.aligned_to(n * m * 64);
+    let cluster = ClusterSpec::new(n, m);
+    let p = cluster.total_gpus();
+    let pu = match algo {
+        SpAlgo::Ring => 1,
+        SpAlgo::Usp => swiftfusion::config::gcd(m, w.shape.h),
+        _ => swiftfusion::config::gcd(p, w.shape.h),
+    };
+    let params = SpParams {
+        shape: w.shape,
+        chunk: w.shape.l / p,
+        mesh: algo.mesh(&cluster, SpDegrees::new(pu, p / pu)),
+    };
+    let shape = w.shape;
+    let run = run_cluster(&cluster, &ExecMode::Timing, |ctx| {
+        let s = Buf::Shape(vec![shape.b, shape.l / p, shape.h, shape.d]);
+        algo.run(ctx, &params, s.clone(), s.clone(), s);
+    });
+
+    let mut events = Vec::new();
+    for (rank, clock) in run.clocks.iter().enumerate() {
+        for &(start, end, kind) in clock.spans() {
+            let name = match kind {
+                TimeKind::Compute => "compute",
+                TimeKind::CommWait => "comm-wait",
+                TimeKind::Sync => "sync",
+                TimeKind::Overhead => "overhead",
+            };
+            let mut ev = BTreeMap::new();
+            ev.insert("name".into(), Json::Str(name.into()));
+            ev.insert("ph".into(), Json::Str("X".into()));
+            ev.insert("ts".into(), Json::Num(start * 1e6)); // µs
+            ev.insert("dur".into(), Json::Num((end - start) * 1e6));
+            ev.insert("pid".into(), Json::Num(cluster.machine_of(rank) as f64));
+            ev.insert("tid".into(), Json::Num(rank as f64));
+            events.push(Json::Obj(ev));
+        }
+    }
+    let mut root = BTreeMap::new();
+    root.insert("traceEvents".into(), Json::Arr(events));
+    root.insert(
+        "displayTimeUnit".into(),
+        Json::Str("ms".into()),
+    );
+    std::fs::write(&out_path, to_string(&Json::Obj(root)))?;
+    println!(
+        "traced {} ({}) on {n}x{m}: makespan {}, {} spans -> {out_path}",
+        w.name,
+        algo.name(),
+        fmt_time(run.makespan()),
+        run.clocks.iter().map(|c| c.spans().len()).sum::<usize>()
+    );
+    Ok(())
+}
+
+fn cmd_volumes(args: &Args) -> Result<()> {
+    let n = args.usize_or("machines", 4)?;
+    let m = args.usize_or("gpus", 8)?;
+    let h = args.usize_or("heads", 24)?;
+    let shape = AttnShape::new(1, 96_000, h, 64);
+    println!("inter-machine volume per GPU (Appendix D), N={n} M={m} H={h}:");
+    let p = n * m;
+    for algo in SpAlgo::ALL {
+        let pu = match algo {
+            SpAlgo::Ring => 1,
+            SpAlgo::Ulysses => p,
+            SpAlgo::Usp => swiftfusion::config::gcd(m, h),
+            _ => swiftfusion::config::gcd(p, h),
+        };
+        let deg = SpDegrees::new(pu, p / pu);
+        let v = swiftfusion::analysis::inter_volume(algo, &shape, n, m, deg);
+        println!(
+            "  {:<12} (U{:<2}R{:<2}) {:>12}",
+            algo.name(),
+            deg.pu,
+            deg.pr,
+            fmt_bytes(v * 4.0)
+        );
+    }
+    Ok(())
+}

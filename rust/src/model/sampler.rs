@@ -1,0 +1,80 @@
+//! DDIM sampling schedule — mirrors `python/compile/model.py::ddim_alphas`
+//! (cosine alpha-bar, evenly spaced timesteps, deterministic sampler).
+//! Keep the two implementations in sync; `python/tests/test_model.py`
+//! and the tests below pin the same values.
+
+/// Cosine ᾱ(t) (Nichol & Dhariwal), `total`-step convention.
+pub fn alpha_bar(t: f64, total: f64) -> f64 {
+    let x = (t / total + 0.008) / 1.008 * std::f64::consts::FRAC_PI_2;
+    x.cos().powi(2)
+}
+
+/// The sampling schedule: `(t, abar_t, abar_prev)` triples from high t to
+/// low. `abar_prev` of the last step is 1.0 (full reconstruction).
+pub fn schedule(steps: usize) -> Vec<(i64, f64, f64)> {
+    let total = 1000.0;
+    let ts: Vec<i64> = (0..steps)
+        .map(|i| 999 - (i * (1000 / steps)) as i64)
+        .collect();
+    let mut out = Vec::with_capacity(steps);
+    for (i, &t) in ts.iter().enumerate() {
+        let abar_t = alpha_bar(t as f64, total);
+        let abar_prev = if i + 1 < ts.len() {
+            alpha_bar(ts[i + 1] as f64, total)
+        } else {
+            1.0
+        };
+        out.push((t, abar_t, abar_prev));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alpha_bar_bounds_and_monotonicity() {
+        assert!((alpha_bar(0.0, 1000.0) - 1.0).abs() < 1e-3);
+        assert!(alpha_bar(999.0, 1000.0) < 0.01);
+        let mut prev = 2.0;
+        for t in 0..1000 {
+            let a = alpha_bar(t as f64, 1000.0);
+            assert!(a <= prev + 1e-12, "abar must be non-increasing in t");
+            assert!((0.0..=1.0).contains(&a));
+            prev = a;
+        }
+    }
+
+    #[test]
+    fn schedule_descends_and_ends_at_one() {
+        let s = schedule(10);
+        assert_eq!(s.len(), 10);
+        assert!(s.windows(2).all(|w| w[0].0 > w[1].0), "t descends");
+        assert_eq!(s.last().unwrap().2, 1.0);
+        // abar_prev of step i == abar_t of step i+1
+        for w in s.windows(2) {
+            assert!((w[0].2 - w[1].1).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn matches_python_reference_values() {
+        // pinned against python: model.ddim_alphas(10) first entry
+        // t=999 -> abar ~ cos((0.999+0.008)/1.008 * pi/2)^2
+        let (t, abar_t, _) = schedule(10)[0];
+        assert_eq!(t, 999);
+        let expect = ((999.0 / 1000.0 + 0.008) / 1.008 * std::f64::consts::FRAC_PI_2)
+            .cos()
+            .powi(2);
+        assert!((abar_t - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_step_schedule() {
+        let s = schedule(1);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0].0, 999);
+        assert_eq!(s[0].2, 1.0);
+    }
+}

@@ -1,0 +1,234 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust engine. Parsed from `artifacts/manifest.json` with the in-tree JSON
+//! parser; every entry records exact input/output shapes so calls are
+//! shape-checked at the API boundary instead of failing inside XLA.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One AOT-lowered HLO artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+}
+
+/// One validation config (mirrors `model.VALIDATION_CONFIGS` in python).
+#[derive(Debug, Clone)]
+pub struct ConfigMeta {
+    pub name: String,
+    pub b: usize,
+    pub l: usize,
+    pub h: usize,
+    pub d: usize,
+    pub depth: usize,
+    pub c_in: usize,
+    pub mesh: usize,
+    pub hidden: usize,
+    pub chunk: usize,
+    pub head_groups: Vec<usize>,
+    pub seed: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub configs: Vec<ConfigMeta>,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+fn shape_list(v: &Json, what: &str) -> Result<Vec<Vec<usize>>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("{what}: expected array of shapes"))?
+        .iter()
+        .map(|s| {
+            s.as_arr()
+                .ok_or_else(|| anyhow!("{what}: expected shape array"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("{what}: bad dim")))
+                .collect()
+        })
+        .collect()
+}
+
+fn req_usize(v: &Json, key: &str) -> Result<usize> {
+    v.get(key)
+        .as_usize()
+        .ok_or_else(|| anyhow!("config missing usize field '{key}'"))
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`?)", path.display()))?;
+        let root = Json::parse(&text).context("parsing manifest.json")?;
+        let version = root.get("version").as_usize().unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+
+        let mut configs = Vec::new();
+        for c in root.get("configs").as_arr().unwrap_or(&[]) {
+            configs.push(ConfigMeta {
+                name: c
+                    .get("name")
+                    .as_str()
+                    .ok_or_else(|| anyhow!("config missing name"))?
+                    .to_string(),
+                b: req_usize(c, "b")?,
+                l: req_usize(c, "l")?,
+                h: req_usize(c, "h")?,
+                d: req_usize(c, "d")?,
+                depth: req_usize(c, "depth")?,
+                c_in: req_usize(c, "c_in")?,
+                mesh: req_usize(c, "mesh")?,
+                hidden: req_usize(c, "hidden")?,
+                chunk: req_usize(c, "chunk")?,
+                head_groups: c
+                    .get("head_groups")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|g| g.as_usize())
+                    .collect(),
+                seed: c.get("seed").as_i64().unwrap_or(0) as u64,
+            });
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for a in root.get("artifacts").as_arr().unwrap_or(&[]) {
+            let name = a
+                .get("name")
+                .as_str()
+                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .to_string();
+            let meta = ArtifactMeta {
+                name: name.clone(),
+                file: dir.join(
+                    a.get("file")
+                        .as_str()
+                        .ok_or_else(|| anyhow!("artifact {name} missing file"))?,
+                ),
+                inputs: shape_list(a.get("inputs"), &name)?,
+                outputs: shape_list(a.get("outputs"), &name)?,
+            };
+            artifacts.insert(name, meta);
+        }
+        if artifacts.is_empty() {
+            bail!("manifest has no artifacts");
+        }
+        Ok(Self { dir, configs, artifacts })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ConfigMeta> {
+        self.configs
+            .iter()
+            .find(|c| c.name == name)
+            .ok_or_else(|| anyhow!("config '{name}' not in manifest"))
+    }
+
+    /// Default artifacts directory: `$SWIFTFUSION_ARTIFACTS` or `artifacts/`
+    /// relative to the workspace root.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(p) = std::env::var("SWIFTFUSION_ARTIFACTS") {
+            return PathBuf::from(p);
+        }
+        // Walk up from CWD looking for artifacts/manifest.json (tests run
+        // from the crate root; binaries may run elsewhere).
+        let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+        loop {
+            let cand = cur.join("artifacts");
+            if cand.join("manifest.json").exists() {
+                return cand;
+            }
+            if !cur.pop() {
+                return PathBuf::from("artifacts");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("sfu_manifest_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    const GOOD: &str = r#"{
+      "version": 1,
+      "configs": [{"name":"small4","b":1,"l":128,"h":4,"d":16,"depth":2,
+                   "c_in":16,"mesh":4,"hidden":64,"chunk":32,
+                   "head_groups":[1,2,4],"seed":1}],
+      "artifacts": [{"name":"attn_full_small4","file":"attn_full_small4.hlo.txt",
+                     "inputs":[[1,128,4,16],[1,128,4,16],[1,128,4,16]],
+                     "outputs":[[1,128,4,16]]}]
+    }"#;
+
+    #[test]
+    fn loads_good_manifest() {
+        let d = tmpdir("good");
+        write_manifest(&d, GOOD);
+        let m = Manifest::load(&d).unwrap();
+        assert_eq!(m.configs.len(), 1);
+        let c = m.config("small4").unwrap();
+        assert_eq!(c.chunk, 32);
+        assert_eq!(c.head_groups, vec![1, 2, 4]);
+        let a = m.artifact("attn_full_small4").unwrap();
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.outputs[0], vec![1, 128, 4, 16]);
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let d = tmpdir("missing");
+        write_manifest(&d, GOOD);
+        let m = Manifest::load(&d).unwrap();
+        assert!(m.artifact("nope").is_err());
+        assert!(m.config("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let d = tmpdir("badver");
+        write_manifest(&d, r#"{"version": 2, "artifacts": [{"name":"x","file":"x","inputs":[],"outputs":[]}]}"#);
+        assert!(Manifest::load(&d).is_err());
+    }
+
+    #[test]
+    fn rejects_empty() {
+        let d = tmpdir("empty");
+        write_manifest(&d, r#"{"version": 1, "configs": [], "artifacts": []}"#);
+        assert!(Manifest::load(&d).is_err());
+    }
+
+    #[test]
+    fn missing_file_is_context_error() {
+        let d = tmpdir("nofile");
+        let err = Manifest::load(&d).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,473 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), while the
+//! simulated cluster runs one thread per GPU rank. The runtime therefore
+//! owns the client on a dedicated **service thread**; [`RuntimeHandle`] is
+//! a cheap `Clone + Send` handle that ships [`Tensor`] inputs over a
+//! channel and receives outputs back. Executables are compiled lazily on
+//! first call and cached (one compiled executable per artifact, as the
+//! paper's engine keeps one CUDA graph per model variant).
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax ≥0.5
+//! emits 64-bit instruction ids in serialized protos that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids (see aot.py docstring).
+
+pub mod manifest;
+
+pub use manifest::{ArtifactMeta, ConfigMeta, Manifest};
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+/// Aggregate execution counters (perf accounting; see EXPERIMENTS.md §Perf).
+#[derive(Debug, Default)]
+pub struct RuntimeStats {
+    pub calls: AtomicU64,
+    pub compile_ns: AtomicU64,
+    pub execute_ns: AtomicU64,
+}
+
+enum Req {
+    Call {
+        name: String,
+        inputs: Vec<Tensor>,
+        resp: mpsc::Sender<Result<Vec<Tensor>>>,
+    },
+    /// Hot-path fusion (§Perf): run a whole softmax-carry chain — one q
+    /// tile against many KV tiles — on the service thread, keeping the
+    /// (O', l, m) state as XLA literals between steps instead of paying
+    /// a channel roundtrip + tensor conversion per tile.
+    AttnChain {
+        partial: String,
+        q: Tensor,
+        kvs: Vec<(Tensor, Tensor)>,
+        state: Box<(Tensor, Tensor, Tensor)>,
+        resp: mpsc::Sender<Result<Vec<Tensor>>>,
+    },
+    Precompile {
+        names: Vec<String>,
+        resp: mpsc::Sender<Result<()>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, Send-able handle used by rank threads and the coordinator.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: mpsc::Sender<Req>,
+    manifest: Arc<Manifest>,
+    stats: Arc<RuntimeStats>,
+}
+
+/// Owns the service thread; dropping shuts it down.
+pub struct Runtime {
+    handle: RuntimeHandle,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Runtime {
+    /// Load the manifest from `dir` and start the PJRT service thread.
+    pub fn load(dir: impl Into<std::path::PathBuf>) -> Result<Self> {
+        let manifest = Arc::new(Manifest::load(dir.into())?);
+        let stats = Arc::new(RuntimeStats::default());
+        let (tx, rx) = mpsc::channel::<Req>();
+        let m2 = Arc::clone(&manifest);
+        let s2 = Arc::clone(&stats);
+        let join = std::thread::Builder::new()
+            .name("pjrt-service".into())
+            .spawn(move || service_main(rx, m2, s2))
+            .context("spawning pjrt service thread")?;
+        Ok(Self {
+            handle: RuntimeHandle { tx, manifest, stats },
+            join: Some(join),
+        })
+    }
+
+    /// Load from the default artifacts directory.
+    pub fn load_default() -> Result<Self> {
+        Self::load(Manifest::default_dir())
+    }
+
+    pub fn handle(&self) -> RuntimeHandle {
+        self.handle.clone()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.handle.manifest
+    }
+
+    pub fn stats(&self) -> &RuntimeStats {
+        &self.handle.stats
+    }
+}
+
+impl Drop for Runtime {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.send(Req::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl RuntimeHandle {
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute artifact `name` on `inputs`; shape-checked against the
+    /// manifest before dispatch.
+    pub fn call(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.call_owned(name, inputs.to_vec())
+    }
+
+    /// Like [`Self::call`] but takes ownership — the hot tile path uses
+    /// this to avoid re-cloning the (large) carry-state tensors
+    /// (§Perf L3-3).
+    pub fn call_owned(&self, name: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let meta = self.manifest.artifact(name)?;
+        if inputs.len() != meta.inputs.len() {
+            bail!(
+                "artifact '{name}' expects {} inputs, got {}",
+                meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, want)) in inputs.iter().zip(&meta.inputs).enumerate() {
+            if t.shape() != want.as_slice() {
+                bail!(
+                    "artifact '{name}' input {i}: shape {:?} != manifest {:?}",
+                    t.shape(),
+                    want
+                );
+            }
+        }
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Req::Call { name: name.to_string(), inputs, resp: rtx })
+            .map_err(|_| anyhow!("pjrt service thread is gone"))?;
+        rrx.recv().map_err(|_| anyhow!("pjrt service dropped response"))?
+    }
+
+    /// Execute a softmax-carry chain: `q` against each KV tile in turn,
+    /// threading the (O', l, m) state through `partial` without
+    /// round-tripping it to the caller (see `Req::AttnChain`). Returns
+    /// the final [o, l, m].
+    pub fn call_attn_chain(
+        &self,
+        partial: &str,
+        q: &Tensor,
+        kvs: Vec<(Tensor, Tensor)>,
+        state: (Tensor, Tensor, Tensor),
+    ) -> Result<Vec<Tensor>> {
+        let meta = self.manifest.artifact(partial)?;
+        if meta.inputs.len() != 6 {
+            bail!("'{partial}' is not a carry-chain artifact");
+        }
+        for (k, v) in &kvs {
+            if k.shape() != meta.inputs[1].as_slice() || v.shape() != meta.inputs[2].as_slice() {
+                bail!(
+                    "chain kv tile shape {:?}/{:?} != manifest {:?}",
+                    k.shape(),
+                    v.shape(),
+                    meta.inputs[1]
+                );
+            }
+        }
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Req::AttnChain {
+                partial: partial.to_string(),
+                q: q.clone(),
+                kvs,
+                state: Box::new(state),
+                resp: rtx,
+            })
+            .map_err(|_| anyhow!("pjrt service thread is gone"))?;
+        rrx.recv().map_err(|_| anyhow!("pjrt service dropped response"))?
+    }
+
+    /// Compile a set of artifacts ahead of the hot path.
+    pub fn precompile(&self, names: &[&str]) -> Result<()> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Req::Precompile {
+                names: names.iter().map(|s| s.to_string()).collect(),
+                resp: rtx,
+            })
+            .map_err(|_| anyhow!("pjrt service thread is gone"))?;
+        rrx.recv().map_err(|_| anyhow!("pjrt service dropped response"))?
+    }
+
+    pub fn stats(&self) -> &RuntimeStats {
+        &self.stats
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Service thread
+// ---------------------------------------------------------------------------
+
+struct Service {
+    client: xla::PjRtClient,
+    manifest: Arc<Manifest>,
+    stats: Arc<RuntimeStats>,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+fn service_main(rx: mpsc::Receiver<Req>, manifest: Arc<Manifest>, stats: Arc<RuntimeStats>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            // Fail every request with the creation error.
+            while let Ok(req) = rx.recv() {
+                match req {
+                    Req::Call { resp, .. } | Req::AttnChain { resp, .. } => {
+                        let _ = resp.send(Err(anyhow!("pjrt cpu client failed: {e:?}")));
+                    }
+                    Req::Precompile { resp, .. } => {
+                        let _ = resp.send(Err(anyhow!("pjrt cpu client failed: {e:?}")));
+                    }
+                    Req::Shutdown => break,
+                }
+            }
+            return;
+        }
+    };
+    let mut svc = Service { client, manifest, stats, cache: HashMap::new() };
+    while let Ok(req) = rx.recv() {
+        match req {
+            Req::Call { name, inputs, resp } => {
+                let _ = resp.send(svc.call(&name, &inputs));
+            }
+            Req::AttnChain { partial, q, kvs, state, resp } => {
+                let _ = resp.send(svc.attn_chain(&partial, &q, &kvs, *state));
+            }
+            Req::Precompile { names, resp } => {
+                let mut result = Ok(());
+                for n in &names {
+                    if let Err(e) = svc.ensure_compiled(n) {
+                        result = Err(e);
+                        break;
+                    }
+                }
+                let _ = resp.send(result);
+            }
+            Req::Shutdown => break,
+        }
+    }
+}
+
+impl Service {
+    fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let meta = self.manifest.artifact(name)?.clone();
+        let t0 = Instant::now();
+        // Guard against elided weight constants: jax's as_hlo_text()
+        // prints `constant({...})` unless print_large_constants=True, and
+        // the text parser would silently zero them (model "runs", wrong).
+        let text = std::fs::read_to_string(&meta.file)
+            .map_err(|e| anyhow!("reading {}: {e}", meta.file.display()))?;
+        if text.contains("constant({...})") {
+            bail!(
+                "artifact '{name}' has elided constants — regenerate with \
+                 `make artifacts` (aot.py must print_large_constants)"
+            );
+        }
+        let proto = xla::HloModuleProto::from_text_file(&meta.file)
+            .map_err(|e| anyhow!("loading {}: {e:?}", meta.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling '{name}': {e:?}"))?;
+        self.stats
+            .compile_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    fn call(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.ensure_compiled(name)?;
+        let meta = self.manifest.artifact(name)?.clone();
+        let exe = self.cache.get(name).expect("just compiled");
+
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(tensor_to_literal)
+            .collect::<Result<_>>()?;
+
+        let t0 = Instant::now();
+        let bufs = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("executing '{name}': {e:?}"))?;
+        let out_lit = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching output of '{name}': {e:?}"))?;
+        self.stats
+            .execute_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.stats.calls.fetch_add(1, Ordering::Relaxed);
+
+        // aot.py lowers with return_tuple=True: output is always a tuple.
+        let parts = out_lit
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling output of '{name}': {e:?}"))?;
+        if parts.len() != meta.outputs.len() {
+            bail!(
+                "artifact '{name}' returned {} outputs, manifest says {}",
+                parts.len(),
+                meta.outputs.len()
+            );
+        }
+        parts
+            .into_iter()
+            .zip(&meta.outputs)
+            .map(|(lit, shape)| {
+                let data = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("reading output of '{name}': {e:?}"))?;
+                Tensor::new(shape.clone(), data)
+                    .map_err(|e| anyhow!("output of '{name}': {e}"))
+            })
+            .collect()
+    }
+}
+
+impl Service {
+    /// The carry-chain fast path: state stays as XLA literals across KV
+    /// tiles; only the final (o, l, m) is converted back to tensors.
+    fn attn_chain(
+        &mut self,
+        partial: &str,
+        q: &Tensor,
+        kvs: &[(Tensor, Tensor)],
+        state: (Tensor, Tensor, Tensor),
+    ) -> Result<Vec<Tensor>> {
+        self.ensure_compiled(partial)?;
+        let meta = self.manifest.artifact(partial)?.clone();
+        let exe = self.cache.get(partial).expect("just compiled");
+
+        let q_lit = tensor_to_literal(q)?;
+        let mut o = tensor_to_literal(&state.0)?;
+        let mut l = tensor_to_literal(&state.1)?;
+        let mut m = tensor_to_literal(&state.2)?;
+        let t0 = Instant::now();
+        for (k, v) in kvs {
+            let k_lit = tensor_to_literal(k)?;
+            let v_lit = tensor_to_literal(v)?;
+            let bufs = exe
+                .execute::<&xla::Literal>(&[&q_lit, &k_lit, &v_lit, &o, &l, &m])
+                .map_err(|e| anyhow!("chain step '{partial}': {e:?}"))?;
+            let out = bufs[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("chain fetch '{partial}': {e:?}"))?;
+            let mut parts = out
+                .to_tuple()
+                .map_err(|e| anyhow!("chain untuple '{partial}': {e:?}"))?;
+            anyhow::ensure!(parts.len() == 3, "carry chain expects 3 outputs");
+            m = parts.pop().unwrap();
+            l = parts.pop().unwrap();
+            o = parts.pop().unwrap();
+            self.stats.calls.fetch_add(1, Ordering::Relaxed);
+        }
+        self.stats
+            .execute_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        let shapes = &meta.outputs;
+        let mut out = Vec::with_capacity(3);
+        for (lit, shape) in [o, l, m].into_iter().zip(shapes) {
+            let data = lit
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("chain output of '{partial}': {e:?}"))?;
+            out.push(Tensor::new(shape.clone(), data)?);
+        }
+        Ok(out)
+    }
+}
+
+fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    if t.rank() == 0 {
+        return Ok(xla::Literal::scalar(t.data()[0]));
+    }
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(t.data())
+        .reshape(&dims)
+        .map_err(|e| anyhow!("building literal {:?}: {e:?}", t.shape()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full runtime tests (against real artifacts) live in
+    // rust/tests/runtime_artifacts.rs; here we cover the handle-side
+    // validation logic which needs no artifacts on disk.
+
+    fn fake_manifest() -> Arc<Manifest> {
+        use std::collections::BTreeMap;
+        let mut artifacts = BTreeMap::new();
+        artifacts.insert(
+            "f".to_string(),
+            ArtifactMeta {
+                name: "f".into(),
+                file: "/nonexistent".into(),
+                inputs: vec![vec![2, 2]],
+                outputs: vec![vec![2, 2]],
+            },
+        );
+        Arc::new(Manifest { dir: "/nonexistent".into(), configs: vec![], artifacts })
+    }
+
+    fn handle_with_dead_service() -> (RuntimeHandle, mpsc::Receiver<Req>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            RuntimeHandle {
+                tx,
+                manifest: fake_manifest(),
+                stats: Arc::new(RuntimeStats::default()),
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn call_rejects_wrong_arity() {
+        let (h, _rx) = handle_with_dead_service();
+        let err = h.call("f", &[]).unwrap_err();
+        assert!(err.to_string().contains("expects 1 inputs"));
+    }
+
+    #[test]
+    fn call_rejects_wrong_shape() {
+        let (h, _rx) = handle_with_dead_service();
+        let t = Tensor::zeros(&[3, 3]);
+        let err = h.call("f", &[t]).unwrap_err();
+        assert!(err.to_string().contains("shape"));
+    }
+
+    #[test]
+    fn call_rejects_unknown_artifact() {
+        let (h, _rx) = handle_with_dead_service();
+        let err = h.call("nope", &[]).unwrap_err();
+        assert!(err.to_string().contains("not in manifest"));
+    }
+
+    #[test]
+    fn dead_service_is_reported() {
+        let (h, rx) = handle_with_dead_service();
+        drop(rx);
+        let t = Tensor::zeros(&[2, 2]);
+        let err = h.call("f", &[t]).unwrap_err();
+        assert!(err.to_string().contains("service thread is gone"));
+    }
+}

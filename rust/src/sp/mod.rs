@@ -1,0 +1,200 @@
+//! Sequence-parallel attention algorithms — the paper's subject matter.
+//!
+//! Six algorithms over the same per-rank contract: each rank holds the
+//! sequence shard `[B, L/P, H, D]` of Q, K, V and must return the
+//! *attention output for its own shard*, `[B, L/P, H, D]`, numerically
+//! equal to single-device attention (validated in `rust/tests/`):
+//!
+//! | algorithm  | module      | communication structure                      |
+//! |------------|-------------|----------------------------------------------|
+//! | Ring       | [`ring`]    | ring KV exchange over all P ranks (§2.2)     |
+//! | Ulysses    | [`ulysses`] | 4 all-to-alls over all P ranks (§2.2)        |
+//! | USP        | [`unified`] | Ulysses intra-machine + Ring inter (§2.2)    |
+//! | TAS        | [`unified`] | Ulysses inter-machine + Ring intra (§4.2)    |
+//! | Torus      | [`torus`]   | chunked all-to-all overlap (§4.3)            |
+//! | SwiftFusion| [`swiftfusion`] | Algorithm 1: one-sided Torus+Ulysses+Ring |
+//!
+//! All algorithms decompose attention into *tile* operations
+//! ([`tiles`]) on `[B, chunk, g, D]` blocks — the same universal
+//! decomposition the paper's Algorithm 2 kernel provides (multiple
+//! Q/KV tensors with carried softmax state), so numeric mode maps 1:1
+//! onto the AOT Pallas artifacts.
+
+pub mod ring;
+pub mod swiftfusion;
+pub mod tiles;
+pub mod torus;
+pub mod ulysses;
+pub mod unified;
+
+use crate::cluster::exec::RankCtx;
+use crate::cluster::{Mesh2D, Placement};
+use crate::comm::Buf;
+use crate::config::{AttnShape, ClusterSpec, SpDegrees};
+
+/// Parameters shared by every SP run.
+#[derive(Debug, Clone)]
+pub struct SpParams {
+    /// Global attention shape (the full [B, L, H, D], before sharding).
+    pub shape: AttnShape,
+    /// Sequence tile granularity. Numeric mode: must equal the manifest
+    /// config's `chunk` (= L / mesh). Timing mode: free.
+    pub chunk: usize,
+    /// The device mesh (degrees + placement).
+    pub mesh: Mesh2D,
+}
+
+impl SpParams {
+    pub fn total_ranks(&self) -> usize {
+        self.mesh.total()
+    }
+
+    /// Local sequence length per rank.
+    pub fn shard_len(&self) -> usize {
+        self.shape.l / self.total_ranks()
+    }
+}
+
+/// The algorithm selector used by benches, the CLI, and the coordinator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SpAlgo {
+    Ring,
+    Ulysses,
+    /// USP [5]: Ulysses intra-machine, Ring inter-machine.
+    Usp,
+    /// Topology-aware scheduling only (SwiftFusion idea 1, two-sided).
+    Tas,
+    /// TAS + Torus overlap, still two-sided NCCL-style (ablation point).
+    TorusNccl,
+    /// Full SwiftFusion: TAS + Torus + one-sided (Algorithm 1).
+    SwiftFusion,
+}
+
+impl SpAlgo {
+    pub const ALL: [SpAlgo; 6] = [
+        SpAlgo::Ring,
+        SpAlgo::Ulysses,
+        SpAlgo::Usp,
+        SpAlgo::Tas,
+        SpAlgo::TorusNccl,
+        SpAlgo::SwiftFusion,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpAlgo::Ring => "ring",
+            SpAlgo::Ulysses => "ulysses",
+            SpAlgo::Usp => "usp",
+            SpAlgo::Tas => "tas",
+            SpAlgo::TorusNccl => "torus-nccl",
+            SpAlgo::SwiftFusion => "swiftfusion",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        Self::ALL.iter().copied().find(|a| a.name() == s)
+    }
+
+    /// Mesh placement this algorithm assumes (§4.2): USP puts Ulysses
+    /// intra-machine; the SwiftFusion family puts Ring intra-machine.
+    pub fn placement(&self) -> Placement {
+        match self {
+            SpAlgo::Usp => Placement::UlyssesIntra,
+            // pure Ring/Ulysses have only one group; placement is moot but
+            // UlyssesInter keeps ring groups contiguous.
+            _ => Placement::UlyssesInter,
+        }
+    }
+
+    /// Build the mesh this algorithm would use on `cluster` for `degrees`.
+    pub fn mesh(&self, cluster: &ClusterSpec, degrees: SpDegrees) -> Mesh2D {
+        Mesh2D::new(cluster.clone(), degrees, self.placement())
+    }
+
+    /// Run one distributed attention layer on this rank. `q`,`k`,`v` are
+    /// the rank's sequence shards `[B, L/P, H, D]`; returns the rank's
+    /// output shard `[B, L/P, H, D]`.
+    pub fn run(&self, ctx: &mut RankCtx, p: &SpParams, q: Buf, k: Buf, v: Buf) -> Buf {
+        match self {
+            SpAlgo::Ring => ring::ring_attention_full(ctx, p, q, k, v),
+            SpAlgo::Ulysses => ulysses::ulysses_attention(ctx, p, q, k, v),
+            SpAlgo::Usp | SpAlgo::Tas => unified::usp_like(ctx, p, q, k, v),
+            SpAlgo::TorusNccl => torus::torus_attention(ctx, p, q, k, v, torus::CommStyle::TwoSided),
+            SpAlgo::SwiftFusion => swiftfusion::swiftfusion_attention(ctx, p, q, k, v),
+        }
+    }
+}
+
+/// Carried softmax state for one q-tile: (O', l, m) (Appendix C).
+#[derive(Debug, Clone)]
+pub struct AttnState {
+    /// Unnormalized output O' = O · l, `[B, lq, g, D]`.
+    pub o: Buf,
+    /// Running softmax sum, `[B, g, lq]`.
+    pub l: Buf,
+    /// Running softmax max, `[B, g, lq]`.
+    pub m: Buf,
+}
+
+impl AttnState {
+    /// The merge monoid's identity: O'=0, l=0, m=-inf.
+    pub fn zero(b: usize, lq: usize, g: usize, d: usize, numeric: bool) -> Self {
+        if numeric {
+            Self {
+                o: Buf::Real(crate::tensor::Tensor::zeros(&[b, lq, g, d])),
+                l: Buf::Real(crate::tensor::Tensor::zeros(&[b, g, lq])),
+                m: Buf::Real(crate::tensor::Tensor::neg_inf(&[b, g, lq])),
+            }
+        } else {
+            Self {
+                o: Buf::Shape(vec![b, lq, g, d]),
+                l: Buf::Shape(vec![b, g, lq]),
+                m: Buf::Shape(vec![b, g, lq]),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn algo_names_roundtrip() {
+        for a in SpAlgo::ALL {
+            assert_eq!(SpAlgo::from_name(a.name()), Some(a));
+        }
+        assert_eq!(SpAlgo::from_name("nope"), None);
+    }
+
+    #[test]
+    fn placements_match_paper() {
+        assert_eq!(SpAlgo::Usp.placement(), Placement::UlyssesIntra);
+        assert_eq!(SpAlgo::SwiftFusion.placement(), Placement::UlyssesInter);
+        assert_eq!(SpAlgo::Tas.placement(), Placement::UlyssesInter);
+    }
+
+    #[test]
+    fn params_shard_len() {
+        let cluster = ClusterSpec::new(2, 2);
+        let p = SpParams {
+            shape: AttnShape::new(1, 128, 4, 16),
+            chunk: 32,
+            mesh: SpAlgo::Usp.mesh(&cluster, SpDegrees::new(2, 2)),
+        };
+        assert_eq!(p.shard_len(), 32);
+        assert_eq!(p.total_ranks(), 4);
+    }
+
+    #[test]
+    fn zero_state_shapes() {
+        let s = AttnState::zero(2, 32, 4, 16, true);
+        assert_eq!(s.o.shape(), &[2, 32, 4, 16]);
+        assert_eq!(s.l.shape(), &[2, 4, 32]);
+        assert_eq!(s.m.shape(), &[2, 4, 32]);
+        assert!(s.m.tensor().data().iter().all(|&x| x == f32::NEG_INFINITY));
+        let t = AttnState::zero(2, 32, 4, 16, false);
+        assert_eq!(t.o.shape(), s.o.shape());
+        assert!(!t.o.is_real());
+    }
+}

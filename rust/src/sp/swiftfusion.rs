@@ -1,0 +1,350 @@
+//! SwiftFusion (Algorithm 1): the unified **one-sided** implementation of
+//! Torus + Ulysses + Ring Attention.
+//!
+//! Synchronization structure is the paper's headline claim (§4.4): one
+//! global barrier after the initial intra-machine ScatterPush, one global
+//! barrier at the end after the final Push-O — and otherwise only
+//! *intra-machine* barriers (the Ring group's per-stage `Barrier(R)`,
+//! line 29). The sync-count integration test
+//! (`rust/tests/sp_numerics.rs::alg1_sync_structure`) asserts exactly
+//! this against the comm layer's barrier history.
+//!
+//! Phases (mirroring Algorithm 1's line numbers):
+//! 1. **ScatterPush QKV** (line 15) — one-sided intra-machine Ulysses
+//!    all-to-all: parts are `put` into peers' windows.
+//! 2. **BarrierAll** (line 16) with quiet semantics (outstanding puts
+//!    complete first, as `nvshmem_barrier_all_on_stream` guarantees).
+//! 3. **Pull Q / Pull KV / Push O torus stages** (lines 18–35) via
+//!    [`super::torus::torus_one_sided`]-equivalent scheduling, with the
+//!    one-sided RINGATTN (line 1–7) inside each stage.
+//! 4. **ScatterPush O + BarrierAll** (lines 35–36) — inverse intra
+//!    all-to-all, one-sided.
+
+use crate::cluster::exec::RankCtx;
+use crate::comm::{Buf, Event};
+
+use super::torus::{CommStyle, TorusGeometry};
+use super::tiles::AttnAccum;
+use super::SpParams;
+
+/// One-sided scatter of `buf` along `axis_split` to `group` (keeps own
+/// part). Returns (own part, put events).
+fn scatter_push(
+    ctx: &mut RankCtx,
+    group: &[usize],
+    buf: &Buf,
+    axis_split: usize,
+    tag: &str,
+    flows: usize,
+) -> (Buf, Vec<Event>) {
+    let u = group.len();
+    let me = group.iter().position(|&x| x == ctx.rank).unwrap();
+    if u == 1 {
+        return (buf.clone(), Vec::new());
+    }
+    let parts = buf.split(axis_split, u);
+    let mut events = Vec::new();
+    for (j, part) in parts.iter().enumerate() {
+        if j != me {
+            events.push(ctx.put(group[j], &format!("sp.{tag}.{me}"), part.clone(), flows));
+        }
+    }
+    (parts[me].clone(), events)
+}
+
+/// Assemble the gathered tensor from our window after a scatter_push
+/// round: own part + peers' parts, concatenated along `axis_cat` in group
+/// order.
+fn gather_window(
+    ctx: &mut RankCtx,
+    group: &[usize],
+    own: Buf,
+    axis_cat: usize,
+    tag: &str,
+    flows: usize,
+) -> Buf {
+    let u = group.len();
+    if u == 1 {
+        return own;
+    }
+    let me = group.iter().position(|&x| x == ctx.rank).unwrap();
+    let mut parts: Vec<Option<Buf>> = vec![None; u];
+    parts[me] = Some(own);
+    for j in 0..u {
+        if j != me {
+            let h = ctx.get(ctx.rank, &format!("sp.{tag}.{j}"), flows);
+            parts[j] = Some(ctx.wait_get(h));
+        }
+    }
+    let bufs: Vec<Buf> = parts.into_iter().map(|b| b.unwrap()).collect();
+    Buf::concat(&bufs, axis_cat)
+}
+
+/// Algorithm 1. Input/output: this rank's sequence shard `[B, L/P, H, D]`.
+pub fn swiftfusion_attention(ctx: &mut RankCtx, p: &SpParams, q: Buf, k: Buf, v: Buf) -> Buf {
+    let geo = TorusGeometry::new(p, ctx.rank);
+    let t_deg = geo.t_degree();
+    let t = geo.t;
+    let flows = ctx.cluster().gpus_per_machine;
+
+    // ---- Phase 1: ScatterPush QKV within the intra-machine Ulysses
+    // subgroup (line 15) + BarrierAll with quiet (line 16).
+    let (q_own, eq) = scatter_push(ctx, &geo.intra_u, &q, 2, "q", flows);
+    let (k_own, ek) = scatter_push(ctx, &geo.intra_u, &k, 2, "k", flows);
+    let (v_own, ev) = scatter_push(ctx, &geo.intra_u, &v, 2, "v", flows);
+    for e in eq.into_iter().chain(ek).chain(ev) {
+        ctx.wait_event(e); // quiet
+    }
+    ctx.barrier_all(); // global barrier #1
+    let q1 = gather_window(ctx, &geo.intra_u, q_own, 1, "q", flows);
+    let k1 = gather_window(ctx, &geo.intra_u, k_own, 1, "k", flows);
+    let v1 = gather_window(ctx, &geo.intra_u, v_own, 1, "v", flows);
+
+    // ---- Phase 2: torus stages (lines 18-35) ---------------------------
+    let o2 = if t_deg == 1 {
+        // Single machine: degrade to (one-sided) Ring over the ring group.
+        let mut accum = AttnAccum::new(ctx, &q1, p.chunk);
+        one_sided_stage_ring(ctx, p, &geo, &mut accum, &k1, &v1, None, "sfu.r0", flows);
+        accum.finish(ctx)
+    } else {
+        torus_stages_one_sided(ctx, p, &geo, q1, k1, v1, flows)
+    };
+    let _ = t;
+
+    // ---- Phase 3: ScatterPush O (line 35) + BarrierAll (line 36) ------
+    let (o_own, eo) = scatter_push(ctx, &geo.intra_u, &o2, 1, "o", flows);
+    for e in eo {
+        ctx.wait_event(e);
+    }
+    ctx.barrier_all(); // global barrier #2
+    gather_window(ctx, &geo.intra_u, o_own, 2, "o", flows)
+}
+
+/// The one-sided RINGATTN (Algorithm 1 lines 1-7) restricted to q tiles
+/// `idx` (None = all): expose the KV chunk, Barrier(R) (line 29's
+/// intra-machine sync), pull peers' chunks directly by rank.
+fn one_sided_stage_ring(
+    ctx: &mut RankCtx,
+    _p: &SpParams,
+    geo: &TorusGeometry,
+    accum: &mut AttnAccum,
+    k: &Buf,
+    v: &Buf,
+    idx: Option<&[usize]>,
+    stage_tag: &str,
+    flows: usize,
+) {
+    let all: Vec<usize> = (0..accum.num_tiles()).collect();
+    let idx: Vec<usize> = idx.map(|s| s.to_vec()).unwrap_or(all);
+    if geo.rgroup.len() == 1 {
+        accum.absorb(ctx, k, v, Some(&idx));
+        return;
+    }
+    ctx.expose(&format!("{stage_tag}.k"), k.clone());
+    ctx.expose(&format!("{stage_tag}.v"), v.clone());
+    ctx.barrier(&geo.rgroup);
+    let group = &geo.rgroup;
+    let r = group.len();
+    let me = group.iter().position(|&x| x == ctx.rank).unwrap();
+    let mut pending = Vec::new();
+    for i in 1..r {
+        let peer = group[(me + i) % r];
+        let hk = ctx.get(peer, &format!("{stage_tag}.k"), flows);
+        let hv = ctx.get(peer, &format!("{stage_tag}.v"), flows);
+        pending.push((hk, hv));
+    }
+    accum.absorb(ctx, k, v, Some(&idx));
+    for (hk, hv) in pending {
+        let kk = ctx.wait_get(hk);
+        let vv = ctx.wait_get(hv);
+        accum.absorb(ctx, &kk, &vv, Some(&idx));
+    }
+}
+
+/// Lines 18-35: Pull Q (T stages), Pull KV (T-1 stages), Push O.
+fn torus_stages_one_sided(
+    ctx: &mut RankCtx,
+    p: &SpParams,
+    geo: &TorusGeometry,
+    q1: Buf,
+    k1: Buf,
+    v1: Buf,
+    flows: usize,
+) -> Buf {
+    let t_deg = geo.t_degree();
+    let t = geo.t;
+
+    // Expose head slices for the torus peers' pulls.
+    let q_sl = q1.split(2, t_deg);
+    let k_sl = k1.split(2, t_deg);
+    let v_sl = v1.split(2, t_deg);
+    for i in 0..t_deg {
+        ctx.expose(&format!("tq.{i}"), q_sl[i].clone());
+        ctx.expose(&format!("tk.{i}"), k_sl[i].clone());
+        ctx.expose(&format!("tv.{i}"), v_sl[i].clone());
+    }
+
+    // Issue ALL pulls up front, Q before KV (lines 18-21). No barrier:
+    // `get` naturally respects the publishers' expose times.
+    let mut q_pulls = Vec::new();
+    for kk in 1..t_deg {
+        let peer = geo.tgroup[(t + t_deg - kk) % t_deg];
+        q_pulls.push(ctx.get(peer, &format!("tq.{t}"), flows));
+    }
+    let mut kv_pulls = Vec::new();
+    for kk in 1..t_deg {
+        let peer = geo.tgroup[(t + t_deg - kk) % t_deg];
+        let hk = ctx.get(peer, &format!("tk.{t}"), flows);
+        let hv = ctx.get(peer, &format!("tv.{t}"), flows);
+        kv_pulls.push((hk, hv));
+    }
+
+    let mut accum = AttnAccum::new(ctx, &q_sl[t], p.chunk);
+    let tiles_per_chunk = accum.num_tiles();
+    let own_idx: Vec<usize> = (0..tiles_per_chunk).collect();
+
+    // Pull Q stage 1 (line 22): local Q_t x K_t via one-sided ring.
+    one_sided_stage_ring(ctx, p, geo, &mut accum, &k_sl[t], &v_sl[t],
+                         Some(&own_idx), "sq0", flows);
+
+    // Pull Q stages 2..T (lines 23-26).
+    let mut pulled_idx: Vec<usize> = Vec::new();
+    for (kk, hq) in q_pulls.into_iter().enumerate() {
+        let qc = ctx.wait_get(hq);
+        let before = accum.num_tiles();
+        accum.push_q(ctx, &qc);
+        let idx: Vec<usize> = (before..accum.num_tiles()).collect();
+        pulled_idx.extend(&idx);
+        one_sided_stage_ring(ctx, p, geo, &mut accum, &k_sl[t], &v_sl[t],
+                             Some(&idx), &format!("sq{}", kk + 1), flows);
+    }
+
+    // Pull KV stages (lines 27-30): pulled KV x all pulled Q.
+    let mut pulled_kv = Vec::new();
+    for (kk, (hk, hv)) in kv_pulls.into_iter().enumerate() {
+        let kc = ctx.wait_get(hk);
+        let vc = ctx.wait_get(hv);
+        one_sided_stage_ring(ctx, p, geo, &mut accum, &kc, &vc,
+                             Some(&pulled_idx), &format!("skv{kk}"), flows);
+        pulled_kv.push((kc, vc));
+    }
+
+    // Push O (lines 31-34): pushed while the deferred local compute runs.
+    let pulled_out = accum.finish_tiles(ctx, &pulled_idx);
+    let mut push_events = Vec::new();
+    for kk in 0..t_deg - 1 {
+        let peer = geo.tgroup[(t + t_deg - 1 - kk) % t_deg];
+        let tiles: Vec<Buf> =
+            pulled_out[kk * tiles_per_chunk..(kk + 1) * tiles_per_chunk].to_vec();
+        push_events.push(ctx.put(peer, &format!("to.{t}"), Buf::concat(&tiles, 1), flows));
+    }
+    for (kk, (kc, vc)) in pulled_kv.iter().enumerate() {
+        one_sided_stage_ring(ctx, p, geo, &mut accum, kc, vc,
+                             Some(&own_idx), &format!("so{kk}"), flows);
+    }
+    let own_out = Buf::concat(&accum.finish_tiles(ctx, &own_idx), 1);
+    for e in push_events {
+        ctx.wait_event(e); // quiet before the caller's final barrier
+    }
+
+    // Assemble: head slice i comes from torus peer i (slot "to.{i}").
+    let mut slices: Vec<Option<Buf>> = vec![None; t_deg];
+    slices[t] = Some(own_out);
+    for (i, s) in slices.iter_mut().enumerate() {
+        if i != t {
+            let h = ctx.get(ctx.rank, &format!("to.{i}"), flows);
+            *s = Some(ctx.wait_get(h));
+        }
+    }
+    let out: Vec<Buf> = slices.into_iter().map(|b| b.unwrap()).collect();
+    Buf::concat(&out, 2)
+}
+
+/// Re-export for the ablation bench: the two-sided torus is in
+/// [`super::torus`]; this marker ties the ablation naming together.
+pub const COMM_STYLE: CommStyle = CommStyle::OneSided;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::exec::{run_cluster, run_in_world, ExecMode};
+    use crate::comm::CommWorld;
+    use crate::config::{AttnShape, ClusterSpec, SpDegrees};
+    use crate::sp::SpAlgo;
+
+    fn params(n: usize, m: usize, pu: usize) -> SpParams {
+        let cluster = ClusterSpec::new(n, m);
+        let total = n * m;
+        SpParams {
+            shape: AttnShape::new(1, 65536, 8, 64),
+            chunk: 65536 / total,
+            mesh: SpAlgo::SwiftFusion.mesh(&cluster, SpDegrees::new(pu, total / pu)),
+        }
+    }
+
+    fn shard(p: &SpParams) -> Buf {
+        Buf::Shape(vec![1, p.shard_len(), p.shape.h, p.shape.d])
+    }
+
+    #[test]
+    fn shapes_roundtrip() {
+        for (n, m, pu) in [(2, 2, 2), (2, 4, 4), (4, 2, 4), (1, 4, 4)] {
+            let p = params(n, m, pu);
+            let run = run_cluster(&p.mesh.cluster.clone(), &ExecMode::Timing, |ctx| {
+                let out =
+                    swiftfusion_attention(ctx, &p, shard(&p), shard(&p), shard(&p));
+                assert_eq!(out.shape(), shard(&p).shape(), "n={n} m={m} pu={pu}");
+            });
+            assert!(run.makespan() > 0.0);
+        }
+    }
+
+    #[test]
+    fn exactly_two_global_barriers() {
+        // §4.4: only intra-machine synchronizations plus two global
+        // barriers per layer.
+        let p = params(2, 2, 2);
+        let world = CommWorld::new(p.mesh.cluster.clone());
+        run_in_world(&world, &ExecMode::Timing, |ctx| {
+            swiftfusion_attention(ctx, &p, shard(&p), shard(&p), shard(&p));
+        });
+        let history = world.barrier_history();
+        let total = p.mesh.cluster.total_gpus();
+        let global: Vec<_> = history.iter().filter(|g| g.len() == total).collect();
+        assert_eq!(global.len(), 2, "exactly two global barriers: {history:?}");
+        for g in &history {
+            if g.len() < total {
+                // every other barrier is intra-machine (ring groups)
+                let frac = p.mesh.inter_machine_fraction(g);
+                assert_eq!(frac, 0.0, "non-global barrier crosses machines: {g:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn swiftfusion_beats_tas_with_multiple_machines() {
+        // Ablation claim: overlap + one-sided beats plain TAS.
+        let p = params(4, 2, 4);
+        let sfu = run_cluster(&p.mesh.cluster.clone(), &ExecMode::Timing, |ctx| {
+            swiftfusion_attention(ctx, &p, shard(&p), shard(&p), shard(&p));
+        })
+        .makespan();
+        let tas = run_cluster(&p.mesh.cluster.clone(), &ExecMode::Timing, |ctx| {
+            SpAlgo::Tas.run(ctx, &p, shard(&p), shard(&p), shard(&p));
+        })
+        .makespan();
+        assert!(sfu < tas, "SFU {sfu} must beat TAS {tas}");
+    }
+
+    #[test]
+    fn no_two_sided_traffic() {
+        // Algorithm 1 is pure one-sided: no rank should ever hold
+        // in-flight two-sided transfers (no SM tax anywhere).
+        let p = params(2, 2, 2);
+        let run = run_cluster(&p.mesh.cluster.clone(), &ExecMode::Timing, |ctx| {
+            swiftfusion_attention(ctx, &p, shard(&p), shard(&p), shard(&p));
+            ctx.clock.two_sided_inflight
+        });
+        assert!(run.outputs.iter().all(|&x| x == 0));
+    }
+}

@@ -1,0 +1,380 @@
+//! Tile-level attention operations + the per-rank accumulator.
+//!
+//! Every SP algorithm reduces distributed attention to three tile ops on
+//! `[B, chunk, g, D]` blocks — exactly the contract of the L1 Pallas
+//! kernel (Algorithm 2: multiple Q/KV tensors, carried (O', l, m) state,
+//! finalize-on-last):
+//!
+//! * [`attn_partial`] — one KV tile merged into a q-tile's carried state;
+//! * [`merge_states`] — combine two states (Appendix C Eq. 3);
+//! * [`finalize`]     — O = O' / l.
+//!
+//! In numeric mode these dispatch to the AOT artifacts
+//! `attn_{partial,merge,finalize}_{cfg}_h{g}`; in timing mode they only
+//! advance the virtual clock by the roofline cost model. [`AttnAccum`]
+//! wraps a rank's q tiles + states and is the workspace all algorithms
+//! share.
+
+use crate::cluster::exec::{ExecMode, RankCtx};
+use crate::comm::Buf;
+
+use super::AttnState;
+
+fn dims4(b: &Buf) -> (usize, usize, usize, usize) {
+    let s = b.shape();
+    assert_eq!(s.len(), 4, "expected [B, l, g, D], got {s:?}");
+    (s[0], s[1], s[2], s[3])
+}
+
+/// Merge one KV tile into the carried state of a q tile.
+///
+/// `q: [B, lq, g, D]`, `k`/`v`: `[B, lk, g, D]`. Numeric mode requires
+/// `lq == lk == cfg.chunk` and `g ∈ cfg.head_groups` (the lowered tile
+/// set); timing mode takes any shape.
+pub fn attn_partial(ctx: &mut RankCtx, q: &Buf, k: &Buf, v: &Buf, st: AttnState) -> AttnState {
+    let (b, lq, g, d) = dims4(q);
+    let (_, lk, _, _) = dims4(k);
+    ctx.compute(ctx.attn_tile_time(b, lq, lk, g, d));
+    match &ctx.mode {
+        ExecMode::Timing => st,
+        ExecMode::Numeric { rt, cfg } => {
+            let name = format!("attn_partial_{}_h{}", cfg.name, g);
+            let out = rt
+                .call_owned(
+                    &name,
+                    vec![
+                        q.tensor().clone(),
+                        k.tensor().clone(),
+                        v.tensor().clone(),
+                        st.o.into_tensor(),
+                        st.l.into_tensor(),
+                        st.m.into_tensor(),
+                    ],
+                )
+                .unwrap_or_else(|e| panic!("attn_partial tile failed: {e}"));
+            let mut it = out.into_iter();
+            AttnState {
+                o: Buf::Real(it.next().unwrap()),
+                l: Buf::Real(it.next().unwrap()),
+                m: Buf::Real(it.next().unwrap()),
+            }
+        }
+    }
+}
+
+/// Span variant (§Perf optimization L3-2): absorb `span` chunk tiles of
+/// KV in ONE fused artifact call (`attn_partial_*_s{span}`) — the
+/// Algorithm-2 fusion. `k`/`v`: `[B, span·chunk, g, D]`.
+pub fn attn_partial_span(
+    ctx: &mut RankCtx,
+    q: &Buf,
+    k: &Buf,
+    v: &Buf,
+    st: AttnState,
+    span: usize,
+) -> AttnState {
+    let (b, lq, g, d) = dims4(q);
+    let (_, lk, _, _) = dims4(k);
+    ctx.compute(ctx.attn_tile_time(b, lq, lk, g, d));
+    match &ctx.mode {
+        ExecMode::Timing => st,
+        ExecMode::Numeric { rt, cfg } => {
+            let name = format!("attn_partial_{}_h{}_s{}", cfg.name, g, span);
+            let out = rt
+                .call_owned(
+                    &name,
+                    vec![
+                        q.tensor().clone(),
+                        k.tensor().clone(),
+                        v.tensor().clone(),
+                        st.o.into_tensor(),
+                        st.l.into_tensor(),
+                        st.m.into_tensor(),
+                    ],
+                )
+                .unwrap_or_else(|e| panic!("attn span tile failed: {e}"));
+            let mut it = out.into_iter();
+            AttnState {
+                o: Buf::Real(it.next().unwrap()),
+                l: Buf::Real(it.next().unwrap()),
+                m: Buf::Real(it.next().unwrap()),
+            }
+        }
+    }
+}
+
+/// Is the `s{span}` artifact available for head group `g`? (Timing mode:
+/// always — the modelled GPU kernel fuses arbitrarily, like Algorithm 2.)
+fn span_available(ctx: &RankCtx, g: usize, span: usize) -> bool {
+    match &ctx.mode {
+        ExecMode::Timing => true,
+        ExecMode::Numeric { rt, cfg } => rt
+            .manifest()
+            .artifacts
+            .contains_key(&format!("attn_partial_{}_h{}_s{}", cfg.name, g, span)),
+    }
+}
+
+/// Carry-chain variant (§Perf optimization L3-1): merge a *sequence* of
+/// KV tiles into one q tile's state with a single runtime roundtrip —
+/// the (O', l, m) state stays on the PJRT service thread as XLA literals
+/// between tiles. Numerically identical to folding [`attn_partial`].
+pub fn attn_partial_chain(
+    ctx: &mut RankCtx,
+    q: &Buf,
+    kvs: &[(Buf, Buf)],
+    st: AttnState,
+) -> AttnState {
+    let (b, lq, g, d) = dims4(q);
+    for (k, _) in kvs {
+        let (_, lk, _, _) = dims4(k);
+        ctx.compute(ctx.attn_tile_time(b, lq, lk, g, d));
+    }
+    match &ctx.mode {
+        ExecMode::Timing => st,
+        ExecMode::Numeric { rt, cfg } => {
+            let name = format!("attn_partial_{}_h{}", cfg.name, g);
+            let kv_tensors: Vec<(crate::tensor::Tensor, crate::tensor::Tensor)> = kvs
+                .iter()
+                .map(|(k, v)| (k.tensor().clone(), v.tensor().clone()))
+                .collect();
+            let out = rt
+                .call_attn_chain(
+                    &name,
+                    q.tensor(),
+                    kv_tensors,
+                    (st.o.into_tensor(), st.l.into_tensor(), st.m.into_tensor()),
+                )
+                .unwrap_or_else(|e| panic!("attn chain failed: {e}"));
+            let mut it = out.into_iter();
+            AttnState {
+                o: Buf::Real(it.next().unwrap()),
+                l: Buf::Real(it.next().unwrap()),
+                m: Buf::Real(it.next().unwrap()),
+            }
+        }
+    }
+}
+
+/// Combine two carried states over the same q tile (Appendix C Eq. 3).
+pub fn merge_states(ctx: &mut RankCtx, a: AttnState, b2: AttnState) -> AttnState {
+    let (b, lq, g, d) = dims4(&a.o);
+    // merge is memory-bound: touches ~4 state tensors
+    let bytes = (2 * (b * lq * g * d) + 4 * (b * g * lq)) as f64 * 4.0;
+    let t = ctx.cluster().gpu.tile_time(0.0, bytes);
+    ctx.compute(t);
+    match &ctx.mode {
+        ExecMode::Timing => a,
+        ExecMode::Numeric { rt, cfg } => {
+            let name = format!("attn_merge_{}_h{}", cfg.name, g);
+            let out = rt
+                .call_owned(
+                    &name,
+                    vec![
+                        a.o.into_tensor(),
+                        a.l.into_tensor(),
+                        a.m.into_tensor(),
+                        b2.o.into_tensor(),
+                        b2.l.into_tensor(),
+                        b2.m.into_tensor(),
+                    ],
+                )
+                .unwrap_or_else(|e| panic!("attn_merge tile failed: {e}"));
+            let mut it = out.into_iter();
+            AttnState {
+                o: Buf::Real(it.next().unwrap()),
+                l: Buf::Real(it.next().unwrap()),
+                m: Buf::Real(it.next().unwrap()),
+            }
+        }
+    }
+}
+
+/// Normalize a carried state: O = O' / l.
+pub fn finalize(ctx: &mut RankCtx, st: AttnState) -> Buf {
+    let (b, lq, g, d) = dims4(&st.o);
+    let bytes = (2 * (b * lq * g * d) + b * g * lq) as f64 * 4.0;
+    let t = ctx.cluster().gpu.tile_time(0.0, bytes);
+    ctx.compute(t);
+    match &ctx.mode {
+        ExecMode::Timing => st.o,
+        ExecMode::Numeric { rt, cfg } => {
+            let name = format!("attn_finalize_{}_h{}", cfg.name, g);
+            let out = rt
+                .call_owned(&name, vec![st.o.into_tensor(), st.l.into_tensor()])
+                .unwrap_or_else(|e| panic!("attn_finalize tile failed: {e}"));
+            Buf::Real(out.into_iter().next().unwrap())
+        }
+    }
+}
+
+/// Per-rank attention workspace: a list of q tiles (each `[B, chunk, g,
+/// D]`) with their carried states. KV tiles are absorbed as they arrive
+/// (from the ring, the torus stages, or local chunking); `finish`
+/// finalizes and reassembles the output in q order.
+pub struct AttnAccum {
+    pub chunk: usize,
+    q_tiles: Vec<Buf>,
+    states: Vec<AttnState>,
+}
+
+impl AttnAccum {
+    /// Split `q` (`[B, Ls, g, D]`, `chunk | Ls`) into tiles with zeroed
+    /// states.
+    pub fn new(ctx: &RankCtx, q: &Buf, chunk: usize) -> Self {
+        let (b, ls, g, d) = dims4(q);
+        assert_eq!(ls % chunk, 0, "q len {ls} not a multiple of chunk {chunk}");
+        let numeric = ctx.mode.is_numeric();
+        let parts = q.split(1, ls / chunk);
+        let states = parts
+            .iter()
+            .map(|_| AttnState::zero(b, chunk, g, d, numeric))
+            .collect();
+        Self { chunk, q_tiles: parts, states }
+    }
+
+    /// Append more q tiles (Torus: pulled Q chunks join the workspace).
+    pub fn push_q(&mut self, ctx: &RankCtx, q: &Buf) {
+        let (b, ls, g, d) = dims4(q);
+        assert_eq!(ls % self.chunk, 0);
+        let numeric = ctx.mode.is_numeric();
+        for t in q.split(1, ls / self.chunk) {
+            self.q_tiles.push(t);
+            self.states.push(AttnState::zero(b, self.chunk, g, d, numeric));
+        }
+    }
+
+    pub fn num_tiles(&self) -> usize {
+        self.q_tiles.len()
+    }
+
+    /// Absorb a KV block (`[B, Lk, g, D]`, `chunk | Lk`) into the states
+    /// of q tiles `idx` (all tiles if `None`). Multi-tile blocks go
+    /// through the carry-chain fast path (one runtime roundtrip per q
+    /// tile instead of one per KV tile).
+    pub fn absorb(&mut self, ctx: &mut RankCtx, k: &Buf, v: &Buf, idx: Option<&[usize]>) {
+        let (_, lk, g, _) = dims4(k);
+        assert_eq!(lk % self.chunk, 0, "kv len {lk} not a multiple of chunk");
+        let nt = lk / self.chunk;
+        let all: Vec<usize> = (0..self.q_tiles.len()).collect();
+        let targets = idx.unwrap_or(&all);
+        // Greedy span decomposition (§Perf L3-2): absorb the block in as
+        // few fused calls as possible — largest power-of-two span
+        // artifacts first, chunk-sized calls for leftovers.
+        let mut plan: Vec<(usize, usize)> = Vec::new(); // (tile offset, span)
+        let mut off = 0;
+        while off < nt {
+            let mut span = 1usize;
+            while span * 2 <= nt - off && span_available(ctx, g, span * 2) {
+                span *= 2;
+            }
+            plan.push((off, span));
+            off += span;
+        }
+        for &i in targets {
+            let mut st = std::mem::replace(
+                &mut self.states[i],
+                AttnState::zero(1, 1, 1, 1, false),
+            );
+            for &(o, span) in &plan {
+                let kb = k.slice(1, o * self.chunk, (o + span) * self.chunk);
+                let vb = v.slice(1, o * self.chunk, (o + span) * self.chunk);
+                if span == 1 {
+                    st = attn_partial(ctx, &self.q_tiles[i], &kb, &vb, st);
+                } else {
+                    st = attn_partial_span(ctx, &self.q_tiles[i], &kb, &vb, st, span);
+                }
+            }
+            self.states[i] = st;
+        }
+    }
+
+    /// Finalize tiles `idx` (or all) and return their outputs in order.
+    pub fn finish_tiles(&mut self, ctx: &mut RankCtx, idx: &[usize]) -> Vec<Buf> {
+        idx.iter()
+            .map(|&i| {
+                let st = std::mem::replace(
+                    &mut self.states[i],
+                    AttnState::zero(1, 1, 1, 1, false),
+                );
+                finalize(ctx, st)
+            })
+            .collect()
+    }
+
+    /// Finalize everything and concatenate along the sequence axis.
+    pub fn finish(mut self, ctx: &mut RankCtx) -> Buf {
+        let n = self.q_tiles.len();
+        let idx: Vec<usize> = (0..n).collect();
+        let outs = self.finish_tiles(ctx, &idx);
+        Buf::concat(&outs, 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::exec::{run_cluster, ExecMode};
+    use crate::config::ClusterSpec;
+
+    // Numeric-mode tile tests live in rust/tests/ (need artifacts);
+    // here: timing-mode structure + cost accounting.
+
+    #[test]
+    fn accum_splits_and_reassembles() {
+        let c = ClusterSpec::new(1, 1);
+        let run = run_cluster(&c, &ExecMode::Timing, |ctx| {
+            let q = Buf::Shape(vec![1, 64, 2, 16]);
+            let k = Buf::Shape(vec![1, 64, 2, 16]);
+            let v = k.clone();
+            let mut acc = AttnAccum::new(ctx, &q, 16);
+            assert_eq!(acc.num_tiles(), 4);
+            acc.absorb(ctx, &k, &v, None);
+            let out = acc.finish(ctx);
+            assert_eq!(out.shape(), &[1, 64, 2, 16]);
+            ctx.clock.now
+        });
+        assert!(run.outputs[0] > 0.0, "tile ops must cost time");
+    }
+
+    #[test]
+    fn absorb_subset_only_charges_subset() {
+        let c = ClusterSpec::new(1, 1);
+        let run = run_cluster(&c, &ExecMode::Timing, |ctx| {
+            let q = Buf::Shape(vec![1, 64, 2, 16]);
+            let kv = Buf::Shape(vec![1, 16, 2, 16]);
+            let mut acc = AttnAccum::new(ctx, &q, 16);
+            let t0 = ctx.clock.now;
+            acc.absorb(ctx, &kv, &kv, Some(&[0]));
+            let one = ctx.clock.now - t0;
+            let t1 = ctx.clock.now;
+            acc.absorb(ctx, &kv, &kv, None);
+            let all = ctx.clock.now - t1;
+            (one, all)
+        });
+        let (one, all) = run.outputs[0];
+        assert!(all > 3.0 * one, "4 tiles should cost ~4x one tile");
+    }
+
+    #[test]
+    fn push_q_extends_workspace() {
+        let c = ClusterSpec::new(1, 1);
+        run_cluster(&c, &ExecMode::Timing, |ctx| {
+            let q = Buf::Shape(vec![1, 32, 1, 8]);
+            let mut acc = AttnAccum::new(ctx, &q, 32);
+            assert_eq!(acc.num_tiles(), 1);
+            acc.push_q(ctx, &Buf::Shape(vec![1, 64, 1, 8]));
+            assert_eq!(acc.num_tiles(), 3);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "worker thread panicked")]
+    fn accum_rejects_ragged_q() {
+        let c = ClusterSpec::new(1, 1);
+        run_cluster(&c, &ExecMode::Timing, |ctx| {
+            let q = Buf::Shape(vec![1, 30, 1, 8]);
+            AttnAccum::new(ctx, &q, 16);
+        });
+    }
+}

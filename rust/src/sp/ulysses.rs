@@ -1,0 +1,199 @@
+//! Ulysses Attention (DeepSpeed-Ulysses, paper §2.2), two-sided.
+//!
+//! Exploits head-independence: three all-to-alls turn sequence-sharded
+//! Q/K/V `[B, L/P, H, D]` into head-sharded `[B, L, H/P, D]`; attention is
+//! then fully local; a fourth all-to-all restores the output layout.
+//! Communication volume per rank is `4·(P-1)/P²·BLHD ≈ 4·BLHD/P` — it
+//! *shrinks* with P (unlike Ring), but the all-to-alls are atomic and not
+//! overlapped with compute (Challenge 2), and `P` must divide `H`.
+
+use crate::cluster::exec::RankCtx;
+use crate::comm::Buf;
+
+use super::tiles::AttnAccum;
+use super::SpParams;
+
+/// Two-sided all-to-all over `group`: scatter `axis_split` of the local
+/// buffer to peers, gather peers' pieces concatenated along `axis_cat`.
+/// This is the seq↔head redistribution both directions need:
+///  * QKV forward: split heads (axis 2), gather sequence (axis 1);
+///  * O backward:  split sequence (axis 1), gather heads (axis 2).
+///
+/// The whole exchange is atomic — compute cannot start until every piece
+/// has arrived (what Torus Attention later breaks up).
+pub fn all_to_all(
+    ctx: &mut RankCtx,
+    group: &[usize],
+    buf: &Buf,
+    axis_split: usize,
+    axis_cat: usize,
+    tag: &str,
+    flows: usize,
+) -> Buf {
+    let u = group.len();
+    let me = group
+        .iter()
+        .position(|&x| x == ctx.rank)
+        .expect("rank not in group");
+    if u == 1 {
+        return buf.clone();
+    }
+    let parts = buf.split(axis_split, u);
+
+    // Launch all sends, then receive everything, then complete sends:
+    // the NCCL grouped-call pattern.
+    let mut sends = Vec::new();
+    for (j, part) in parts.iter().enumerate() {
+        if j != me {
+            sends.push(ctx.isend(group[j], &format!("a2a.{tag}.{j}"), part.clone()));
+        }
+    }
+    let mut gathered: Vec<Option<Buf>> = vec![None; u];
+    gathered[me] = Some(parts[me].clone());
+    for (j, &peer) in group.iter().enumerate() {
+        if j != me {
+            gathered[j] = Some(ctx.wait_recv(peer, &format!("a2a.{tag}.{me}"), flows));
+        }
+    }
+    for h in sends {
+        ctx.wait_send(h);
+    }
+    let pieces: Vec<Buf> = gathered.into_iter().map(|b| b.unwrap()).collect();
+    Buf::concat(&pieces, axis_cat)
+}
+
+/// Local attention after the QKV all-to-alls: q/k/v are `[B, Lg, g, D]`;
+/// chunked through the tile kernel (multiple KV tiles, carried state) —
+/// identical numerics to one big attention call.
+pub fn local_attention(ctx: &mut RankCtx, p: &SpParams, q: &Buf, k: &Buf, v: &Buf) -> Buf {
+    let mut accum = AttnAccum::new(ctx, q, p.chunk);
+    accum.absorb(ctx, k, v, None);
+    accum.finish(ctx)
+}
+
+/// Full Ulysses Attention over an explicit group (increasing-rank order).
+pub fn ulysses_attention_group(
+    ctx: &mut RankCtx,
+    p: &SpParams,
+    group: &[usize],
+    q: Buf,
+    k: Buf,
+    v: Buf,
+    tag: &str,
+) -> Buf {
+    let flows = ctx.cluster().gpus_per_machine;
+    let qg = all_to_all(ctx, group, &q, 2, 1, &format!("{tag}.q"), flows);
+    let kg = all_to_all(ctx, group, &k, 2, 1, &format!("{tag}.k"), flows);
+    let vg = all_to_all(ctx, group, &v, 2, 1, &format!("{tag}.v"), flows);
+    let o = local_attention(ctx, p, &qg, &kg, &vg);
+    all_to_all(ctx, group, &o, 1, 2, &format!("{tag}.o"), flows)
+}
+
+/// Mesh-wide Ulysses (the paper's single-machine baseline and the M=1
+/// degenerate case of every method).
+pub fn ulysses_attention(ctx: &mut RankCtx, p: &SpParams, q: Buf, k: Buf, v: Buf) -> Buf {
+    let group: Vec<usize> = (0..p.total_ranks()).collect();
+    assert_eq!(
+        p.shape.h % group.len(),
+        0,
+        "Ulysses requires P | H (paper §2.2)"
+    );
+    ulysses_attention_group(ctx, p, &group, q, k, v, "ul")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::exec::{run_cluster, ExecMode};
+    use crate::config::{AttnShape, ClusterSpec, SpDegrees};
+    use crate::sp::SpAlgo;
+    use crate::tensor::Tensor;
+
+    fn params(n: usize, m: usize) -> SpParams {
+        let cluster = ClusterSpec::new(n, m);
+        let p = n * m;
+        SpParams {
+            // paper-regime shape: long sequence so bandwidth terms, not
+            // latency constants, dominate (timing mode: tensors are stubs)
+            shape: AttnShape::new(1, 65536, 4, 64),
+            chunk: 65536 / p,
+            mesh: SpAlgo::Ulysses.mesh(&cluster, SpDegrees::new(p, 1)),
+        }
+    }
+
+    #[test]
+    fn all_to_all_shapes() {
+        let p = params(2, 2);
+        let run = run_cluster(&p.mesh.cluster.clone(), &ExecMode::Timing, |ctx| {
+            let local = Buf::Shape(vec![1, 16384, 4, 64]);
+            let group: Vec<usize> = (0..4).collect();
+            let g = all_to_all(ctx, &group, &local, 2, 1, "t", 2);
+            assert_eq!(g.shape(), &[1, 65536, 1, 64]);
+            let back = all_to_all(ctx, &group, &g, 1, 2, "t2", 2);
+            assert_eq!(back.shape(), &[1, 16384, 4, 64]);
+        });
+        assert!(run.makespan() > 0.0);
+    }
+
+    #[test]
+    fn all_to_all_permutes_real_data_losslessly() {
+        // 2 ranks, real tensors: verify scatter/gather is a permutation
+        // (no element lost or duplicated) and the roundtrip is identity.
+        let cluster = ClusterSpec::new(1, 2);
+        let run = run_cluster(&cluster, &ExecMode::Timing, |ctx| {
+            let t = Tensor::random(&[1, 4, 2, 2], 100 + ctx.rank as u64);
+            let local = Buf::Real(t.clone());
+            let group = vec![0, 1];
+            let g = all_to_all(ctx, &group, &local, 2, 1, "x", 1);
+            let back = all_to_all(ctx, &group, &g, 1, 2, "y", 1);
+            (t, back.into_tensor())
+        });
+        for (orig, back) in &run.outputs {
+            assert_eq!(orig, back, "a2a roundtrip must be identity");
+        }
+    }
+
+    #[test]
+    fn singleton_group_is_identity() {
+        let cluster = ClusterSpec::new(1, 1);
+        run_cluster(&cluster, &ExecMode::Timing, |ctx| {
+            let b = Buf::Shape(vec![1, 8, 2, 4]);
+            let out = all_to_all(ctx, &[0], &b, 2, 1, "s", 1);
+            assert_eq!(out.shape(), b.shape());
+        });
+    }
+
+    #[test]
+    fn ulysses_comm_shrinks_with_p() {
+        // Ulysses volume ~ 4·BLHD/P: the non-compute part of the makespan
+        // should shrink as P grows (contrast with ring_volume test).
+        let comm_frac = |n: usize| {
+            let p = params(n, 1);
+            let run = run_cluster(&p.mesh.cluster.clone(), &ExecMode::Timing, |ctx| {
+                let s = Buf::Shape(vec![1, p.shard_len(), 4, 64]);
+                ulysses_attention(ctx, &p, s.clone(), s.clone(), s);
+            });
+            let (_c, w, s, _o) = run.mean_breakdown();
+            w + s
+        };
+        let w2 = comm_frac(2);
+        let w4 = comm_frac(4);
+        assert!(w4 < w2, "ulysses comm wait must shrink with P: {w2} -> {w4}");
+    }
+
+    #[test]
+    #[should_panic(expected = "worker thread panicked")]
+    fn ulysses_requires_p_divides_h() {
+        // H=4 but P=8
+        let cluster = ClusterSpec::new(4, 2);
+        let p = SpParams {
+            shape: AttnShape::new(1, 128, 4, 16),
+            chunk: 16,
+            mesh: SpAlgo::Ulysses.mesh(&cluster, SpDegrees::new(8, 1)),
+        };
+        run_cluster(&cluster, &ExecMode::Timing, |ctx| {
+            let s = Buf::Shape(vec![1, 16, 4, 16]);
+            ulysses_attention(ctx, &p, s.clone(), s.clone(), s);
+        });
+    }
+}

@@ -1,0 +1,117 @@
+//! USP and TAS: the 2D Ulysses × Ring compositions.
+//!
+//! Both run the *same* dataflow — all-to-all QKV inside the Ulysses
+//! group, Ring Attention across the Ring group, all-to-all O back — and
+//! differ **only** in mesh placement (the paper's §4.2 insight):
+//!
+//! * **USP** (`Placement::UlyssesIntra`): Ulysses groups sit inside a
+//!   machine (cheap all-to-alls) but the Ring crosses machines, and Ring
+//!   volume does not shrink with more machines → Challenge 1.
+//! * **TAS** (`Placement::UlyssesInter`): Ulysses groups span machines
+//!   (volume ~4·BLHD/P_u, shrinking), the Ring stays on NVSwitch. The
+//!   inter-machine all-to-all is *not overlapped* — that residual cost is
+//!   what Torus Attention removes.
+
+use crate::cluster::exec::RankCtx;
+use crate::comm::Buf;
+
+use super::ring::ring_attention_group;
+use super::tiles::AttnAccum;
+use super::ulysses::all_to_all;
+use super::SpParams;
+
+/// Shared USP/TAS driver; behaviour is fully determined by
+/// `p.mesh.placement`.
+pub fn usp_like(ctx: &mut RankCtx, p: &SpParams, q: Buf, k: Buf, v: Buf) -> Buf {
+    let ugroup = p.mesh.ulysses_group(ctx.rank);
+    let rgroup = p.mesh.ring_group(ctx.rank);
+    let flows = ctx.cluster().gpus_per_machine;
+
+    // Phase 1: Ulysses all-to-alls gather sequence / scatter heads within
+    // the Ulysses group.
+    let qg = all_to_all(ctx, &ugroup, &q, 2, 1, "u.q", flows);
+    let kg = all_to_all(ctx, &ugroup, &k, 2, 1, "u.k", flows);
+    let vg = all_to_all(ctx, &ugroup, &v, 2, 1, "u.v", flows);
+
+    // Phase 2: Ring Attention across the Ring group on the gathered
+    // shards (KV blocks circulate; Q stays).
+    let mut accum = AttnAccum::new(ctx, &qg, p.chunk);
+    ring_attention_group(ctx, &mut accum, &rgroup, kg, vg, flows);
+    let o = accum.finish(ctx);
+
+    // Phase 3: restore the original [B, L/P, H, D] layout.
+    all_to_all(ctx, &ugroup, &o, 1, 2, "u.o", flows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::exec::{run_cluster, ExecMode};
+    use crate::config::{AttnShape, ClusterSpec, SpDegrees};
+    use crate::sp::SpAlgo;
+
+    fn run_one(algo: SpAlgo, n: usize, m: usize, pu: usize) -> f64 {
+        let cluster = ClusterSpec::new(n, m);
+        let total = n * m;
+        let p = SpParams {
+            shape: AttnShape::new(1, 65536, 8, 64),
+            chunk: 65536 / total,
+            mesh: algo.mesh(&cluster, SpDegrees::new(pu, total / pu)),
+        };
+        let run = run_cluster(&cluster, &ExecMode::Timing, |ctx| {
+            let s = Buf::Shape(vec![1, p.shard_len(), 8, 64]);
+            let out = algo.run(ctx, &p, s.clone(), s.clone(), s);
+            assert_eq!(out.shape(), &[1, p.shard_len(), 8, 64]);
+        });
+        run.makespan()
+    }
+
+    #[test]
+    fn usp_and_tas_run_and_preserve_shapes() {
+        let t_usp = run_one(SpAlgo::Usp, 2, 2, 2);
+        let t_tas = run_one(SpAlgo::Tas, 2, 2, 2);
+        assert!(t_usp > 0.0 && t_tas > 0.0);
+    }
+
+    #[test]
+    fn tas_beats_usp_on_many_machines() {
+        // Paper Fig. 7 at the paper's geometry (4 machines x 8 GPUs, the
+        // NIC shared 8 ways): USP's constant-volume inter-machine ring
+        // can't hide behind the per-rank compute slice anymore, while
+        // TAS's inter volume shrinks with P_u. On friendlier meshes
+        // (fewer GPUs per NIC) USP's overlapped ring can win — that's
+        // the `appendix_d_equal_volume_case_is_a_wash` test below.
+        let t_usp = run_one(SpAlgo::Usp, 4, 8, 8);
+        let t_tas = run_one(SpAlgo::Tas, 4, 8, 8);
+        assert!(
+            t_tas < t_usp,
+            "TAS ({t_tas}) must beat USP ({t_usp}) at 4x8"
+        );
+    }
+
+    #[test]
+    fn appendix_d_equal_volume_case_is_a_wash() {
+        // With P_u = 2 < N = 4 the Appendix-D volumes of USP and TAS are
+        // comparable (both ~1.5·BLHD/N per GPU) — neither should win big.
+        let t_usp = run_one(SpAlgo::Usp, 4, 2, 2);
+        let t_tas = run_one(SpAlgo::Tas, 4, 2, 2);
+        let ratio = t_tas / t_usp;
+        assert!(
+            (0.6..1.7).contains(&ratio),
+            "expected a wash, got TAS/USP = {ratio}"
+        );
+    }
+
+    #[test]
+    fn usp_competitive_at_two_machines() {
+        // Paper §5.2 observation 1: at M=2 machines TAS has no volume
+        // advantage and its all-to-all is not overlapped, so it should
+        // NOT be dramatically better (and can be worse).
+        let t_usp = run_one(SpAlgo::Usp, 2, 4, 4);
+        let t_tas = run_one(SpAlgo::Tas, 2, 4, 4);
+        assert!(
+            t_tas > 0.8 * t_usp,
+            "at N=2, TAS ({t_tas}) shouldn't crush USP ({t_usp})"
+        );
+    }
+}

@@ -1,0 +1,371 @@
+//! Host tensor type for the L3 engine.
+//!
+//! All request-path data is f32 (matching the AOT artifacts); tensors are
+//! dense, row-major, and cheap to slice along the sequence (axis 1) and
+//! head (axis 2) dimensions — the two axes sequence parallelism shards
+//! (`[B, L, H, D]` layout throughout, as in the paper's Section 2.2).
+
+use std::fmt;
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}[{} elems]", self.shape, self.data.len())
+    }
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum TensorError {
+    #[error("shape {shape:?} implies {expected} elements, got {got}")]
+    ShapeMismatch { shape: Vec<usize>, expected: usize, got: usize },
+    #[error("axis {axis} out of range for rank-{rank} tensor")]
+    BadAxis { axis: usize, rank: usize },
+    #[error("cannot split axis of length {len} into {parts} equal parts")]
+    BadSplit { len: usize, parts: usize },
+    #[error("range {start}..{end} out of bounds for axis of length {len}")]
+    BadRange { start: usize, end: usize, len: usize },
+    #[error("concat shapes incompatible at axis {axis}: {a:?} vs {b:?}")]
+    BadConcat { axis: usize, a: Vec<usize>, b: Vec<usize> },
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self, TensorError> {
+        let expected: usize = shape.iter().product();
+        if expected != data.len() {
+            return Err(TensorError::ShapeMismatch { shape, expected, got: data.len() });
+        }
+        Ok(Self { shape, data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn full(shape: &[usize], value: f32) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![value; n] }
+    }
+
+    /// Identity of the softmax-merge monoid wants m = -inf.
+    pub fn neg_inf(shape: &[usize]) -> Self {
+        Self::full(shape, f32::NEG_INFINITY)
+    }
+
+    /// Deterministic pseudo-random tensor in [-1, 1) (for synthetic inputs).
+    pub fn random(shape: &[usize], seed: u64) -> Self {
+        let mut rng = crate::util::rng::SplitMix64::new(seed);
+        let n: usize = shape.iter().product();
+        let data = (0..n).map(|_| rng.f32_sym()).collect();
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar(value: f32) -> Self {
+        Self { shape: vec![], data: vec![value] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Size of the tensor in bytes (f32) — what the network model charges.
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn reshape(mut self, shape: Vec<usize>) -> Result<Self, TensorError> {
+        let expected: usize = shape.iter().product();
+        if expected != self.data.len() {
+            return Err(TensorError::ShapeMismatch {
+                shape,
+                expected,
+                got: self.data.len(),
+            });
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+
+    fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1usize; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape[i + 1];
+        }
+        s
+    }
+
+    /// Slice `start..end` along `axis` (copying).
+    pub fn slice(&self, axis: usize, start: usize, end: usize) -> Result<Self, TensorError> {
+        if axis >= self.shape.len() {
+            return Err(TensorError::BadAxis { axis, rank: self.shape.len() });
+        }
+        let len = self.shape[axis];
+        if start > end || end > len {
+            return Err(TensorError::BadRange { start, end, len });
+        }
+        let outer: usize = self.shape[..axis].iter().product();
+        let inner: usize = self.shape[axis + 1..].iter().product();
+        let new_len = end - start;
+        let mut out = Vec::with_capacity(outer * new_len * inner);
+        for o in 0..outer {
+            let base = o * len * inner;
+            out.extend_from_slice(&self.data[base + start * inner..base + end * inner]);
+        }
+        let mut shape = self.shape.clone();
+        shape[axis] = new_len;
+        Ok(Self { shape, data: out })
+    }
+
+    /// Split into `parts` equal chunks along `axis`.
+    pub fn split(&self, axis: usize, parts: usize) -> Result<Vec<Self>, TensorError> {
+        if axis >= self.shape.len() {
+            return Err(TensorError::BadAxis { axis, rank: self.shape.len() });
+        }
+        let len = self.shape[axis];
+        if parts == 0 || len % parts != 0 {
+            return Err(TensorError::BadSplit { len, parts });
+        }
+        let step = len / parts;
+        (0..parts)
+            .map(|i| self.slice(axis, i * step, (i + 1) * step))
+            .collect()
+    }
+
+    /// Concatenate along `axis`.
+    pub fn concat(tensors: &[&Tensor], axis: usize) -> Result<Self, TensorError> {
+        assert!(!tensors.is_empty(), "concat of zero tensors");
+        let first = tensors[0];
+        if axis >= first.shape.len() {
+            return Err(TensorError::BadAxis { axis, rank: first.shape.len() });
+        }
+        let mut total_axis = 0;
+        for t in tensors {
+            if t.shape.len() != first.shape.len()
+                || t.shape
+                    .iter()
+                    .zip(&first.shape)
+                    .enumerate()
+                    .any(|(i, (a, b))| i != axis && a != b)
+            {
+                return Err(TensorError::BadConcat {
+                    axis,
+                    a: first.shape.clone(),
+                    b: t.shape.clone(),
+                });
+            }
+            total_axis += t.shape[axis];
+        }
+        let outer: usize = first.shape[..axis].iter().product();
+        let inner: usize = first.shape[axis + 1..].iter().product();
+        let mut shape = first.shape.clone();
+        shape[axis] = total_axis;
+        let mut out = Vec::with_capacity(outer * total_axis * inner);
+        for o in 0..outer {
+            for t in tensors {
+                let alen = t.shape[axis];
+                let base = o * alen * inner;
+                out.extend_from_slice(&t.data[base..base + alen * inner]);
+            }
+        }
+        Ok(Self { shape, data: out })
+    }
+
+    /// Element access by multi-index (debug/test helper; row-major).
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let strides = self.strides();
+        let flat: usize = idx.iter().zip(&strides).map(|(i, s)| i * s).sum();
+        self.data[flat]
+    }
+
+    /// Max absolute difference; shapes must match.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape, "max_abs_diff shape mismatch");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// True if all elements within `atol + rtol*|b|` of `other`.
+    pub fn allclose(&self, other: &Tensor, atol: f32, rtol: f32) -> bool {
+        if self.shape != other.shape {
+            return false;
+        }
+        self.data
+            .iter()
+            .zip(&other.data)
+            .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs())
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn seq(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::new(shape.to_vec(), (0..n).map(|i| i as f32).collect()).unwrap()
+    }
+
+    #[test]
+    fn new_validates_shape() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(matches!(
+            Tensor::new(vec![2, 3], vec![0.0; 5]),
+            Err(TensorError::ShapeMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn slice_axis1() {
+        // [1, 4, 2]: seq values 0..8
+        let t = seq(&[1, 4, 2]);
+        let s = t.slice(1, 1, 3).unwrap();
+        assert_eq!(s.shape(), &[1, 2, 2]);
+        assert_eq!(s.data(), &[2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn slice_axis2_strided() {
+        // [1, 2, 3]: slicing the inner-but-one axis exercises strides
+        let t = seq(&[1, 2, 3]);
+        let s = t.slice(2, 0, 1).unwrap();
+        assert_eq!(s.shape(), &[1, 2, 1]);
+        assert_eq!(s.data(), &[0.0, 3.0]);
+    }
+
+    #[test]
+    fn split_concat_roundtrip() {
+        let t = seq(&[2, 8, 3]);
+        let parts = t.split(1, 4).unwrap();
+        assert_eq!(parts.len(), 4);
+        let refs: Vec<&Tensor> = parts.iter().collect();
+        let back = Tensor::concat(&refs, 1).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn concat_axis0() {
+        let a = seq(&[1, 2]);
+        let b = seq(&[2, 2]);
+        let c = Tensor::concat(&[&a, &b], 0).unwrap();
+        assert_eq!(c.shape(), &[3, 2]);
+        assert_eq!(c.data(), &[0.0, 1.0, 0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn errors_are_typed() {
+        let t = seq(&[2, 4]);
+        assert!(matches!(t.slice(5, 0, 1), Err(TensorError::BadAxis { .. })));
+        assert!(matches!(t.slice(1, 3, 2), Err(TensorError::BadRange { .. })));
+        assert!(matches!(t.split(1, 3), Err(TensorError::BadSplit { .. })));
+        let u = seq(&[3, 4]);
+        assert!(matches!(
+            Tensor::concat(&[&t, &u], 1),
+            Err(TensorError::BadConcat { .. })
+        ));
+    }
+
+    #[test]
+    fn at_multiindex() {
+        let t = seq(&[2, 3, 4]);
+        assert_eq!(t.at(&[0, 0, 0]), 0.0);
+        assert_eq!(t.at(&[1, 2, 3]), 23.0);
+        assert_eq!(t.at(&[1, 0, 2]), 14.0);
+    }
+
+    #[test]
+    fn allclose_and_diff() {
+        let a = Tensor::full(&[2, 2], 1.0);
+        let mut b = a.clone();
+        b.data[3] = 1.0005;
+        assert!(a.allclose(&b, 1e-3, 0.0));
+        assert!(!a.allclose(&b, 1e-5, 0.0));
+        assert!((a.max_abs_diff(&b) - 0.0005).abs() < 1e-6);
+    }
+
+    #[test]
+    fn random_is_deterministic() {
+        let a = Tensor::random(&[4, 4], 9);
+        let b = Tensor::random(&[4, 4], 9);
+        let c = Tensor::random(&[4, 4], 10);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert!(a.data().iter().all(|x| (-1.0..1.0).contains(x)));
+    }
+
+    #[test]
+    fn scalar_shape() {
+        let s = Tensor::scalar(3.5);
+        assert_eq!(s.rank(), 0);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.bytes(), 4);
+    }
+
+    #[test]
+    fn prop_split_concat_any_axis() {
+        prop::run(40, |g| {
+            let shape = vec![g.int(1, 3), g.int(2, 8), g.int(1, 4)];
+            let t = Tensor::random(&shape, g.seed);
+            let axis = g.int(0, 2);
+            let parts_opts: Vec<usize> =
+                (1..=shape[axis]).filter(|p| shape[axis] % p == 0).collect();
+            let parts = *g.choose(&parts_opts);
+            let split = t.split(axis, parts).unwrap();
+            let refs: Vec<&Tensor> = split.iter().collect();
+            let back = Tensor::concat(&refs, axis).unwrap();
+            assert_eq!(back, t, "axis={axis} parts={parts}");
+        });
+    }
+
+    #[test]
+    fn prop_slice_matches_at() {
+        prop::run(40, |g| {
+            let shape = vec![g.int(1, 2), g.int(2, 6), g.int(1, 3)];
+            let t = Tensor::random(&shape, g.seed ^ 1);
+            let start = g.int(0, shape[1] - 1);
+            let end = g.int(start + 1, shape[1]);
+            let s = t.slice(1, start, end).unwrap();
+            for b in 0..shape[0] {
+                for l in 0..end - start {
+                    for c in 0..shape[2] {
+                        assert_eq!(s.at(&[b, l, c]), t.at(&[b, l + start, c]));
+                    }
+                }
+            }
+        });
+    }
+}

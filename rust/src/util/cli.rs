@@ -1,0 +1,145 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments, with typed accessors and a generated usage string.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("missing required argument --{0}")]
+    Missing(String),
+    #[error("argument --{0} has invalid value '{1}': expected {2}")]
+    Invalid(String, String, &'static str),
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Self {
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    flags.insert(body.to_string(), v);
+                } else {
+                    flags.insert(body.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(a);
+            }
+        }
+        Self { flags, positional }
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::Invalid(key.into(), v.into(), "usize")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::Invalid(key.into(), v.into(), "f64")),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => Err(CliError::Invalid(key.into(), v.into(), "bool")),
+        }
+    }
+
+    pub fn required(&self, key: &str) -> Result<&str, CliError> {
+        self.get(key).ok_or_else(|| CliError::Missing(key.into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = parse("--alpha 3 --beta=4 --gamma");
+        assert_eq!(a.get("alpha"), Some("3"));
+        assert_eq!(a.get("beta"), Some("4"));
+        assert_eq!(a.bool_or("gamma", false).unwrap(), true);
+    }
+
+    #[test]
+    fn positional_mix() {
+        let a = parse("serve --port 8080 trace.txt");
+        assert_eq!(a.positional(), &["serve", "trace.txt"]);
+        assert_eq!(a.usize_or("port", 0).unwrap(), 8080);
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = parse("--x 1");
+        assert_eq!(a.usize_or("y", 9).unwrap(), 9);
+        assert!(a.required("z").is_err());
+        assert_eq!(a.required("x").unwrap(), "1");
+    }
+
+    #[test]
+    fn invalid_types_error() {
+        let a = parse("--n abc");
+        assert!(a.usize_or("n", 0).is_err());
+        assert!(a.f64_or("n", 0.0).is_err());
+        assert!(a.bool_or("n", false).is_err());
+    }
+
+    #[test]
+    fn trailing_flag_is_boolean() {
+        let a = parse("--verbose");
+        assert!(a.bool_or("verbose", false).unwrap());
+    }
+}

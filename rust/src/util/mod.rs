@@ -1,0 +1,12 @@
+//! In-tree substrates replacing crates unavailable in this offline
+//! environment (see Cargo.toml note): a JSON parser ([`json`]), a CLI
+//! argument parser ([`cli`]), a deterministic PRNG + property-testing
+//! harness ([`rng`], [`prop`]), summary statistics ([`stats`]), and a
+//! scoped thread pool ([`pool`]).
+
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;

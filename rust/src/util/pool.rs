@@ -1,0 +1,169 @@
+//! Small thread-pool + parallel-map helpers (tokio/rayon unavailable).
+//!
+//! The coordinator's engine loop and the rank executor use plain threads;
+//! this module provides the shared helpers: `scoped_run` spawns one thread
+//! per closure and joins them (propagating panics), and [`WorkQueue`] is a
+//! simple MPMC queue for the serving engine's worker pool.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Run one closure per element on its own scoped thread; returns outputs in
+/// order. Panics from workers are re-raised on the caller thread.
+pub fn scoped_run<T, F>(jobs: Vec<F>) -> Vec<T>
+where
+    T: Send,
+    F: FnOnce() -> T + Send,
+{
+    std::thread::scope(|s| {
+        let handles: Vec<_> = jobs
+            .into_iter()
+            .map(|job| s.spawn(job))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("worker thread panicked"))
+            .collect()
+    })
+}
+
+/// Blocking MPMC queue with shutdown. Used by the serving engine to feed
+/// request batches to worker threads.
+pub struct WorkQueue<T> {
+    inner: Arc<QueueInner<T>>,
+}
+
+struct QueueInner<T> {
+    queue: Mutex<QueueState<T>>,
+    cond: Condvar,
+}
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> Clone for WorkQueue<T> {
+    fn clone(&self) -> Self {
+        Self { inner: Arc::clone(&self.inner) }
+    }
+}
+
+impl<T> Default for WorkQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> WorkQueue<T> {
+    pub fn new() -> Self {
+        Self {
+            inner: Arc::new(QueueInner {
+                queue: Mutex::new(QueueState { items: VecDeque::new(), closed: false }),
+                cond: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Push an item; returns false if the queue is closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut q = self.inner.queue.lock().unwrap();
+        if q.closed {
+            return false;
+        }
+        q.items.push_back(item);
+        self.inner.cond.notify_one();
+        true
+    }
+
+    /// Pop, blocking until an item is available or the queue is closed and
+    /// drained (then `None`).
+    pub fn pop(&self) -> Option<T> {
+        let mut q = self.inner.queue.lock().unwrap();
+        loop {
+            if let Some(item) = q.items.pop_front() {
+                return Some(item);
+            }
+            if q.closed {
+                return None;
+            }
+            q = self.inner.cond.wait(q).unwrap();
+        }
+    }
+
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Option<T> {
+        self.inner.queue.lock().unwrap().items.pop_front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.queue.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close the queue; blocked `pop`s drain remaining items then get None.
+    pub fn close(&self) {
+        self.inner.queue.lock().unwrap().closed = true;
+        self.inner.cond.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scoped_run_preserves_order() {
+        let jobs: Vec<_> = (0..8)
+            .map(|i| move || i * 10)
+            .collect();
+        assert_eq!(scoped_run(jobs), vec![0, 10, 20, 30, 40, 50, 60, 70]);
+    }
+
+    #[test]
+    #[should_panic(expected = "worker thread panicked")]
+    fn scoped_run_propagates_panics() {
+        scoped_run(vec![|| panic!("boom")]);
+    }
+
+    #[test]
+    fn queue_fifo() {
+        let q = WorkQueue::new();
+        q.push(1);
+        q.push(2);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn queue_close_drains_then_none() {
+        let q = WorkQueue::new();
+        q.push(7);
+        q.close();
+        assert!(!q.push(8));
+        assert_eq!(q.pop(), Some(7));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn queue_cross_thread() {
+        let q = WorkQueue::new();
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || {
+            let mut got = Vec::new();
+            while let Some(x) = q2.pop() {
+                got.push(x);
+            }
+            got
+        });
+        for i in 0..100 {
+            q.push(i);
+        }
+        q.close();
+        let got = h.join().unwrap();
+        assert_eq!(got, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,142 @@
+//! Tiny property-testing harness (proptest is unavailable offline).
+//!
+//! `run(cases, |g| { ... })` calls the closure `cases` times with a
+//! [`Gen`] handle seeded deterministically per case; assertion failures
+//! report the failing case's seed so it can be replayed with
+//! [`run_seed`]. No shrinking — cases are kept small instead.
+
+use super::rng::SplitMix64;
+
+/// Per-case generator handle.
+pub struct Gen {
+    pub rng: SplitMix64,
+    pub seed: u64,
+}
+
+impl Gen {
+    /// usize uniform in `[lo, hi]` inclusive.
+    pub fn int(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    /// Choose one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.int(0, xs.len() - 1)]
+    }
+
+    /// f64 in `[lo, hi)`.
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Vec of f32 in [-1, 1), length n.
+    pub fn vec_f32(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.rng.f32_sym()).collect()
+    }
+
+    /// A divisor of `n`, uniformly among divisors.
+    pub fn divisor(&mut self, n: usize) -> usize {
+        let divs: Vec<usize> = (1..=n).filter(|d| n % d == 0).collect();
+        *self.choose(&divs)
+    }
+
+    /// A random permutation of 0..n.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut p: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            let j = self.int(0, i);
+            p.swap(i, j);
+        }
+        p
+    }
+}
+
+/// Run `f` for `cases` deterministic cases. Panics (with the case seed in
+/// the message) on the first failing case.
+pub fn run<F: FnMut(&mut Gen)>(cases: u64, mut f: F) {
+    for case in 0..cases {
+        let seed = 0x5eed_0000u64.wrapping_add(case.wrapping_mul(0x9e3779b9));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut g = Gen { rng: SplitMix64::new(seed), seed };
+            f(&mut g);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed at case {case} (replay: run_seed({seed:#x})): {msg}");
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn run_seed<F: FnOnce(&mut Gen)>(seed: u64, f: F) {
+    let mut g = Gen { rng: SplitMix64::new(seed), seed };
+    f(&mut g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let mut count = 0;
+        run(25, |_| count += 1);
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        run(10, |g| a.push(g.int(0, 1000)));
+        run(10, |g| b.push(g.int(0, 1000)));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failure_with_seed() {
+        run(10, |g| {
+            let x = g.int(0, 100);
+            assert!(x < 101); // always true
+            if g.seed != 0 {
+                panic!("intentional");
+            }
+        });
+    }
+
+    #[test]
+    fn int_bounds_inclusive() {
+        run(50, |g| {
+            let x = g.int(3, 5);
+            assert!((3..=5).contains(&x));
+        });
+    }
+
+    #[test]
+    fn divisor_divides() {
+        run(50, |g| {
+            let n = g.int(1, 48);
+            let d = g.divisor(n);
+            assert_eq!(n % d, 0);
+        });
+    }
+
+    #[test]
+    fn permutation_is_permutation() {
+        run(30, |g| {
+            let n = g.int(1, 20);
+            let mut p = g.permutation(n);
+            p.sort_unstable();
+            assert_eq!(p, (0..n).collect::<Vec<_>>());
+        });
+    }
+}

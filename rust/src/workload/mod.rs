@@ -1,0 +1,192 @@
+//! Workloads: the paper's four evaluation targets (§5.1) plus the
+//! patchify arithmetic that turns image/video requests into sequence
+//! lengths, and a Poisson request-trace generator for the serving
+//! benchmarks.
+
+use crate::config::AttnShape;
+use crate::util::rng::SplitMix64;
+
+/// Latent patchification arithmetic: pixels → VAE latents (8× spatial
+/// downsample) → transformer tokens (patch×patch latent pixels each).
+pub fn image_tokens(width: usize, height: usize, patch: usize) -> usize {
+    let (lw, lh) = (width / 8, height / 8);
+    (lw / patch) * (lh / patch)
+}
+
+/// Video: temporal 4× compression at `fps`, then per-frame image tokens.
+pub fn video_tokens(width: usize, height: usize, seconds: usize, fps: usize, patch: usize) -> usize {
+    let frames = (seconds * fps).div_ceil(4);
+    frames * image_tokens(width, height, patch)
+}
+
+/// One of the paper's evaluation workloads.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Workload {
+    pub name: &'static str,
+    /// Attention shape of one DiT layer at this workload.
+    pub shape: AttnShape,
+    /// Number of transformer layers (end-to-end = layers × per-layer).
+    pub layers: usize,
+    /// Sampling steps for a full generation.
+    pub steps: usize,
+}
+
+impl Workload {
+    /// Flux-12B (§5.1): 24 heads, D=128. 3072×3072 with patch 2 on the
+    /// 8×-downsampled latent → (3072/8/2)² = 36 864 tokens.
+    pub fn flux_3072() -> Self {
+        Self {
+            name: "flux-3072",
+            shape: AttnShape::new(1, image_tokens(3072, 3072, 2), 24, 128),
+            layers: 19,
+            steps: 28,
+        }
+    }
+
+    /// Flux-12B at 4096×4096 → 65 536 tokens.
+    pub fn flux_4096() -> Self {
+        Self {
+            name: "flux-4096",
+            shape: AttnShape::new(1, image_tokens(4096, 4096, 2), 24, 128),
+            layers: 19,
+            steps: 28,
+        }
+    }
+
+    /// CogVideoX-5B (§5.1): 24 heads, D=64, 768×1360 video at the
+    /// model's 8 fps with 4× temporal VAE compression, patch 2 →
+    /// 40 latent frames × 4080 tokens ≈ 163k tokens at 20 s.
+    pub fn cogvideo_20s() -> Self {
+        Self {
+            name: "cogvideox-20s",
+            shape: AttnShape::new(1, video_tokens(1360, 768, 20, 8, 2), 24, 64),
+            layers: 30,
+            steps: 50,
+        }
+    }
+
+    /// CogVideoX-5B, 40 s → ~326k tokens (the paper's longest workload;
+    /// its Fig. 9 microbench sweeps 96k-192k separately).
+    pub fn cogvideo_40s() -> Self {
+        Self {
+            name: "cogvideox-40s",
+            shape: AttnShape::new(1, video_tokens(1360, 768, 40, 8, 2), 24, 64),
+            layers: 30,
+            steps: 50,
+        }
+    }
+
+    /// All four paper workloads (Fig. 7 / Fig. 10 x-axis).
+    pub fn paper_suite() -> Vec<Workload> {
+        vec![
+            Self::flux_3072(),
+            Self::flux_4096(),
+            Self::cogvideo_20s(),
+            Self::cogvideo_40s(),
+        ]
+    }
+
+    /// Round the sequence length down to a multiple of `p` (SP divisibility;
+    /// the paper pads/crops workloads the same way).
+    pub fn aligned_to(&self, p: usize) -> Workload {
+        let mut w = self.clone();
+        w.shape.l -= w.shape.l % p;
+        w
+    }
+}
+
+/// One serving request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub workload: Workload,
+    /// Arrival time (seconds, virtual).
+    pub arrival: f64,
+    pub seed: u64,
+}
+
+/// Poisson-arrival trace over a workload mix.
+pub struct TraceGen {
+    rng: SplitMix64,
+    rate: f64,
+    mix: Vec<Workload>,
+    now: f64,
+    next_id: u64,
+}
+
+impl TraceGen {
+    pub fn new(seed: u64, rate_per_sec: f64, mix: Vec<Workload>) -> Self {
+        assert!(!mix.is_empty());
+        Self { rng: SplitMix64::new(seed), rate: rate_per_sec, mix, now: 0.0, next_id: 0 }
+    }
+
+    pub fn next_request(&mut self) -> Request {
+        self.now += self.rng.exp(self.rate);
+        let w = self.mix[self.rng.below(self.mix.len() as u64) as usize].clone();
+        let r = Request {
+            id: self.next_id,
+            workload: w,
+            arrival: self.now,
+            seed: self.rng.next_u64(),
+        };
+        self.next_id += 1;
+        r
+    }
+
+    pub fn take(&mut self, n: usize) -> Vec<Request> {
+        (0..n).map(|_| self.next_request()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn patchify_arithmetic() {
+        assert_eq!(image_tokens(3072, 3072, 2), 36_864);
+        assert_eq!(image_tokens(4096, 4096, 2), 65_536);
+        // 20s * 8fps / 4 = 40 frames, each (1360/8/2)*(768/8/2)=85*48=4080
+        assert_eq!(video_tokens(1360, 768, 20, 8, 2), 40 * 4080);
+    }
+
+    #[test]
+    fn paper_suite_matches_section_5() {
+        let suite = Workload::paper_suite();
+        assert_eq!(suite.len(), 4);
+        for w in &suite {
+            assert_eq!(w.shape.h, 24, "both models use 24 heads");
+        }
+        assert_eq!(suite[0].shape.d, 128); // Flux
+        assert_eq!(suite[2].shape.d, 64); // CogVideoX
+        // long-sequence regime: 40s is ~2x the 20s workload
+        let l20 = Workload::cogvideo_20s().shape.l;
+        let l40 = Workload::cogvideo_40s().shape.l;
+        assert_eq!(l40, 2 * l20);
+        assert!(l20 > 100_000, "{l20}");
+    }
+
+    #[test]
+    fn alignment_preserves_divisibility() {
+        let w = Workload::cogvideo_20s().aligned_to(32);
+        assert_eq!(w.shape.l % 32, 0);
+        assert!(w.shape.l <= Workload::cogvideo_20s().shape.l);
+    }
+
+    #[test]
+    fn trace_is_deterministic_and_ordered() {
+        let mk = || TraceGen::new(7, 0.5, Workload::paper_suite()).take(50);
+        let a = mk();
+        let b = mk();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.workload.name, y.workload.name);
+        }
+        assert!(a.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+        // mean inter-arrival ~ 1/rate = 2s
+        let mean = a.last().unwrap().arrival / 50.0;
+        assert!((1.0..4.0).contains(&mean), "{mean}");
+    }
+}

@@ -1,0 +1,242 @@
+//! Integration: the PJRT runtime against the real AOT artifacts.
+//!
+//! Requires `make artifacts`. Verifies the full python→HLO-text→rust
+//! bridge: artifact loading, compilation, execution, shape checking, and
+//! the numeric semantics of the attention tile kernels (partial / merge /
+//! finalize compose to exact softmax attention).
+
+use swiftfusion::runtime::Runtime;
+use swiftfusion::tensor::Tensor;
+
+fn runtime() -> Runtime {
+    Runtime::load_default().expect("run `make artifacts` first")
+}
+
+/// Software oracle: plain f32 softmax attention on the host, the same
+/// math as python's kernels.ref (independent reimplementation).
+fn host_attention(q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
+    let (b, lq, h, d) = (q.shape()[0], q.shape()[1], q.shape()[2], q.shape()[3]);
+    let lk = k.shape()[1];
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut out = vec![0f32; b * lq * h * d];
+    let at = |t: &Tensor, bi: usize, li: usize, hi: usize, di: usize| {
+        t.data()[((bi * t.shape()[1] + li) * h + hi) * d + di]
+    };
+    for bi in 0..b {
+        for hi in 0..h {
+            for qi in 0..lq {
+                let mut scores = vec![0f32; lk];
+                for ki in 0..lk {
+                    let mut s = 0f32;
+                    for di in 0..d {
+                        s += at(q, bi, qi, hi, di) * at(k, bi, ki, hi, di);
+                    }
+                    scores[ki] = s * scale;
+                }
+                let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let mut z = 0f32;
+                for s in scores.iter_mut() {
+                    *s = (*s - m).exp();
+                    z += *s;
+                }
+                for di in 0..d {
+                    let mut acc = 0f32;
+                    for ki in 0..lk {
+                        acc += scores[ki] * at(v, bi, ki, hi, di);
+                    }
+                    out[((bi * lq + qi) * h + hi) * d + di] = acc / z;
+                }
+            }
+        }
+    }
+    Tensor::new(vec![b, lq, h, d], out).unwrap()
+}
+
+#[test]
+fn manifest_has_expected_configs() {
+    let rt = runtime();
+    let m = rt.manifest();
+    assert!(m.config("small4").is_ok());
+    assert!(m.config("small8").is_ok());
+    let c4 = m.config("small4").unwrap();
+    assert_eq!((c4.b, c4.l, c4.h, c4.d), (1, 128, 4, 16));
+    assert_eq!(c4.chunk * c4.mesh, c4.l);
+}
+
+#[test]
+fn attn_full_matches_host_oracle() {
+    let rt = runtime();
+    let c = rt.manifest().config("small4").unwrap().clone();
+    let q = Tensor::random(&[c.b, c.l, c.h, c.d], 11);
+    let k = Tensor::random(&[c.b, c.l, c.h, c.d], 12);
+    let v = Tensor::random(&[c.b, c.l, c.h, c.d], 13);
+    let got = rt
+        .handle()
+        .call("attn_full_small4", &[q.clone(), k.clone(), v.clone()])
+        .unwrap();
+    let want = host_attention(&q, &k, &v);
+    let diff = got[0].max_abs_diff(&want);
+    assert!(diff < 1e-4, "pallas kernel vs host oracle: {diff}");
+}
+
+#[test]
+fn partial_chain_plus_finalize_equals_full() {
+    // The tile contract every SP algorithm relies on: absorbing KV chunks
+    // via the carry kernel then finalizing == full attention.
+    let rt = runtime();
+    let h = rt.handle();
+    let c = rt.manifest().config("small4").unwrap().clone();
+    let (b, lc, hh, d) = (c.b, c.chunk, c.h, c.d);
+    let lk = c.l;
+
+    let q = Tensor::random(&[b, lc, hh, d], 21);
+    let k = Tensor::random(&[b, lk, hh, d], 22);
+    let v = Tensor::random(&[b, lk, hh, d], 23);
+
+    let mut o = Tensor::zeros(&[b, lc, hh, d]);
+    let mut l = Tensor::zeros(&[b, hh, lc]);
+    let mut m = Tensor::neg_inf(&[b, hh, lc]);
+    for i in 0..(lk / lc) {
+        let ks = k.slice(1, i * lc, (i + 1) * lc).unwrap();
+        let vs = v.slice(1, i * lc, (i + 1) * lc).unwrap();
+        let out = h
+            .call(
+                &format!("attn_partial_small4_h{hh}"),
+                &[q.clone(), ks, vs, o, l, m],
+            )
+            .unwrap();
+        let mut it = out.into_iter();
+        o = it.next().unwrap();
+        l = it.next().unwrap();
+        m = it.next().unwrap();
+    }
+    let fin = h
+        .call(&format!("attn_finalize_small4_h{hh}"), &[o, l])
+        .unwrap();
+    let want = host_attention(&q, &k, &v);
+    let diff = fin[0].max_abs_diff(&want);
+    assert!(diff < 1e-4, "partial chain vs oracle: {diff}");
+}
+
+#[test]
+fn merge_is_order_insensitive() {
+    let rt = runtime();
+    let h = rt.handle();
+    let c = rt.manifest().config("small4").unwrap().clone();
+    let (b, lc, g, d) = (c.b, c.chunk, 2usize, c.d);
+
+    let q = Tensor::random(&[b, lc, g, d], 31);
+    let mk = |seed| {
+        (
+            Tensor::random(&[b, lc, g, d], seed),
+            Tensor::random(&[b, lc, g, d], seed + 1),
+        )
+    };
+    let (k1, v1) = mk(32);
+    let (k2, v2) = mk(40);
+
+    let partial = |k: &Tensor, v: &Tensor| {
+        let out = h
+            .call(
+                &format!("attn_partial_small4_h{g}"),
+                &[
+                    q.clone(),
+                    k.clone(),
+                    v.clone(),
+                    Tensor::zeros(&[b, lc, g, d]),
+                    Tensor::zeros(&[b, g, lc]),
+                    Tensor::neg_inf(&[b, g, lc]),
+                ],
+            )
+            .unwrap();
+        (out[0].clone(), out[1].clone(), out[2].clone())
+    };
+    let a = partial(&k1, &v1);
+    let bb = partial(&k2, &v2);
+    let merge = |x: &(Tensor, Tensor, Tensor), y: &(Tensor, Tensor, Tensor)| {
+        h.call(
+            &format!("attn_merge_small4_h{g}"),
+            &[
+                x.0.clone(),
+                x.1.clone(),
+                x.2.clone(),
+                y.0.clone(),
+                y.1.clone(),
+                y.2.clone(),
+            ],
+        )
+        .unwrap()
+    };
+    let ab = merge(&a, &bb);
+    let ba = merge(&bb, &a);
+    for (x, y) in ab.iter().zip(&ba) {
+        assert!(x.max_abs_diff(y) < 1e-5, "merge must commute");
+    }
+}
+
+#[test]
+fn dit_forward_is_deterministic_and_finite() {
+    let rt = runtime();
+    let h = rt.handle();
+    let c = rt.manifest().config("small4").unwrap().clone();
+    let x = Tensor::random(&[c.b, c.l, c.c_in], 55);
+    let t = Tensor::new(vec![c.b], vec![500.0; c.b]).unwrap();
+    let e1 = h.call("dit_forward_small4", &[x.clone(), t.clone()]).unwrap();
+    let e2 = h.call("dit_forward_small4", &[x, t]).unwrap();
+    assert!(e1[0].is_finite());
+    assert_eq!(e1[0], e2[0], "same inputs, same outputs");
+    assert_eq!(e1[0].shape(), &[c.b, c.l, c.c_in]);
+}
+
+#[test]
+fn ddim_step_preserves_shape_and_identity() {
+    let rt = runtime();
+    let h = rt.handle();
+    let c = rt.manifest().config("small4").unwrap().clone();
+    let x = Tensor::random(&[c.b, c.l, c.c_in], 60);
+    let eps = Tensor::random(&[c.b, c.l, c.c_in], 61);
+    // abar_t == abar_prev => x unchanged
+    let out = h
+        .call(
+            "ddim_step_small4",
+            &[x.clone(), eps, Tensor::scalar(0.5), Tensor::scalar(0.5)],
+        )
+        .unwrap();
+    assert!(out[0].max_abs_diff(&x) < 1e-5);
+}
+
+#[test]
+fn vae_decode_in_unit_range() {
+    let rt = runtime();
+    let h = rt.handle();
+    let c = rt.manifest().config("small4").unwrap().clone();
+    let x = Tensor::random(&[c.b, c.l, c.c_in], 70);
+    let img = h.call("vae_decode_small4", &[x]).unwrap();
+    assert_eq!(img[0].shape(), &[c.b, c.l, 12]);
+    assert!(img[0].data().iter().all(|&p| (0.0..=1.0).contains(&p)));
+}
+
+#[test]
+fn shape_mismatch_is_rejected_before_xla() {
+    let rt = runtime();
+    let h = rt.handle();
+    let bad = Tensor::zeros(&[1, 64, 4, 16]); // wrong L
+    let err = h
+        .call("attn_full_small4", &[bad.clone(), bad.clone(), bad])
+        .unwrap_err();
+    assert!(err.to_string().contains("shape"));
+}
+
+#[test]
+fn precompile_then_call_works() {
+    let rt = runtime();
+    let h = rt.handle();
+    h.precompile(&["attn_full_small4"]).unwrap();
+    let c = rt.manifest().config("small4").unwrap().clone();
+    let q = Tensor::random(&[c.b, c.l, c.h, c.d], 80);
+    let out = h
+        .call("attn_full_small4", &[q.clone(), q.clone(), q])
+        .unwrap();
+    assert!(out[0].is_finite());
+    assert!(rt.stats().calls.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+}
