@@ -42,7 +42,13 @@ impl ServiceModel for NumericService {
         for i in 0..batch {
             let (img, sim) = self
                 .model
-                .sample_distributed(&self.cluster, self.algo, self.degrees, 7 + i as u64, self.steps)
+                .sample_distributed(
+                    &self.cluster,
+                    self.algo,
+                    self.degrees,
+                    7 + i as u64,
+                    self.steps,
+                )
                 .expect("sampling failed");
             self.images.lock().unwrap().push(img);
             sim_total += sim;
@@ -79,6 +85,7 @@ fn main() -> anyhow::Result<()> {
         shape: AttnShape::new(model.cfg.b, model.cfg.l, model.cfg.h, model.cfg.d),
         layers: model.cfg.depth,
         steps,
+        cfg_evals: 1,
     };
     // bursty arrivals: all requests in the first second
     let requests: Vec<Request> = (0..nreq)

@@ -14,7 +14,10 @@ use swiftfusion::runtime::Runtime;
 use swiftfusion::tensor::Tensor;
 
 fn main() {
-    let rt = Runtime::load_default().expect("run `make artifacts` first");
+    let Some(rt) = Runtime::load_default_if_available() else {
+        println!("fig12_kernel: PJRT/artifacts unavailable — nothing to measure");
+        return;
+    };
     let h = rt.handle();
     println!("=== Fig 12: multi-QKV kernel vs single-QKV flash attention ===");
     let bencher = Bencher::new(3, 15);

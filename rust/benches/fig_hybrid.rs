@@ -1,0 +1,100 @@
+//! Hybrid CFG×SP plan sweep on fixed hardware: modeled per-generation
+//! latency and saturated throughput of distinct `ParallelSpec`s for each
+//! paper workload on the 4×8-A100 testbed.
+//!
+//! Latency is the *executable* timing-mode makespan of one attention
+//! layer under the plan (group-scoped schedules on carved sub-meshes),
+//! scaled to a full generation; throughput assumes every replica group
+//! is kept busy. Expected shape: CFG workloads (CogVideoX) gain from
+//! `cfg_degree=2` because the branch groups never touch the
+//! inter-machine fabric for each other; distilled workloads (Flux) have
+//! nothing to branch-split, so replicas or the full mesh win depending
+//! on sequence length. The closed-form chooser (`analysis::choose_spec`)
+//! is printed alongside so its ranking can be compared with the
+//! executable model's.
+//!
+//! Run: `cargo bench --bench fig_hybrid`
+
+use swiftfusion::analysis;
+use swiftfusion::bench::{print_table, Series};
+use swiftfusion::config::{ClusterSpec, ParallelSpec};
+use swiftfusion::coordinator::engine::SimService;
+use swiftfusion::sp::SpAlgo;
+use swiftfusion::util::stats::fmt_time;
+use swiftfusion::workload::Workload;
+
+/// The plans under comparison: (label, cfg_degree, batch_replicas).
+/// Group SP degrees follow the gcd placement rule on the group size.
+const PLANS: [(&str, usize, usize); 4] = [
+    ("cfg1 rep1 sp32", 1, 1),
+    ("cfg2 rep1 sp16", 2, 1),
+    ("cfg2 rep2 sp8", 2, 2),
+    ("cfg1 rep4 sp8", 1, 4),
+];
+
+fn spec_for(cluster: &ClusterSpec, cfg: usize, reps: usize, heads: usize) -> ParallelSpec {
+    ParallelSpec::with_gcd_placement(cfg, reps, cluster.total_gpus() / (cfg * reps), heads)
+}
+
+fn main() {
+    let cluster = ClusterSpec::paper_testbed();
+    let algo = SpAlgo::SwiftFusion;
+    println!("hybrid CFG x SP plan sweep on 4x8 A100 ({})", algo.name());
+
+    // One series per plan; rows are workloads (matches print_table).
+    let mut lat_series: Vec<Series> = PLANS.iter().map(|(l, _, _)| Series::new(*l)).collect();
+    let mut thr_rows: Vec<(String, Vec<f64>)> = Vec::new();
+
+    for w in Workload::paper_suite() {
+        let mut thr = Vec::new();
+        for (i, (label, cfg, reps)) in PLANS.iter().enumerate() {
+            let spec = spec_for(&cluster, *cfg, *reps, w.shape.h);
+            assert!(spec.validate(&cluster).is_ok(), "{label} invalid on 4x8");
+            let svc =
+                SimService::with_plan(cluster.clone(), algo, spec).expect("validated spec");
+            // one full generation at batch 1 under this plan
+            let gen =
+                svc.plan_layer_time(&spec, &w, 1) * w.layers as f64 * w.steps as f64;
+            lat_series[i].push(w.name, gen);
+            thr.push(spec.batch_replicas as f64 / gen);
+        }
+        thr_rows.push((w.name.to_string(), thr));
+
+        let picked = analysis::choose_spec(&cluster, algo, &w.shape, w.cfg_evals, 1);
+        println!(
+            "  {:<16} chooser (latency): cfg{} x rep{} x U{}R{}",
+            w.name, picked.cfg_degree, picked.batch_replicas, picked.sp.pu, picked.sp.pr
+        );
+    }
+
+    print_table(
+        "fig_hybrid: one full generation (batch 1), per plan",
+        &lat_series,
+        Some(PLANS[0].0),
+    );
+
+    println!("\n=== fig_hybrid: saturated throughput (req/s, all replica groups busy) ===");
+    print!("{:<18}", "workload");
+    for (label, _, _) in PLANS {
+        print!("{label:>18}");
+    }
+    println!();
+    for (name, thr) in &thr_rows {
+        print!("{name:<18}");
+        for t in thr {
+            print!("{:>18}", format!("{t:.4}"));
+        }
+        println!();
+    }
+
+    // sanity lines the acceptance criterion reads off this bench
+    for (i, (label, _, _)) in PLANS.iter().enumerate() {
+        let video = lat_series[i]
+            .points
+            .iter()
+            .find(|(x, _)| x == "cogvideox-20s")
+            .map(|(_, y)| *y)
+            .unwrap();
+        println!("plan {label}: cogvideox-20s generation {}", fmt_time(video));
+    }
+}

@@ -8,7 +8,7 @@
 //! threaded simulator ([`crate::comm::CommWorld::traffic`]) — the
 //! formulas and the executable schedules must agree.
 
-use crate::config::{AttnShape, ClusterSpec, SpDegrees};
+use crate::config::{AttnShape, ClusterSpec, ParallelSpec, SpDegrees};
 use crate::sp::SpAlgo;
 
 /// Inter-machine communication volume **per GPU, in elements**, for USP
@@ -106,6 +106,100 @@ pub fn compute_time(shape: &AttnShape, cluster: &ClusterSpec, total_ranks: usize
     let flops = shape.attention_flops() / total_ranks as f64;
     let bytes = 4.0 * shape.bytes_per_tensor() / total_ranks as f64;
     cluster.gpu.tile_time(flops, bytes)
+}
+
+// ---------------------------------------------------------------------------
+// Hybrid CFG×SP plan cost model
+// ---------------------------------------------------------------------------
+
+/// Closed-form per-step attention latency estimate (seconds) of a hybrid
+/// plan: `evals × (compute + inter-comm + intra-comm)` where
+/// `evals = ceil(cfg_evals / cfg_degree)` is how many guidance branches
+/// each group runs sequentially. `shape` is the *per-branch* shape with
+/// the per-replica batch; `batch_replicas` does not change this latency
+/// (it adds independent groups), only throughput — see
+/// [`choose_spec`]. The terms reuse the Appendix-D volume formulas on the
+/// group's sub-geometry, so the model and the executable schedules agree
+/// in ordering (cross-checked by `rust/tests/sp_property.rs`).
+pub fn plan_step_cost(
+    cluster: &ClusterSpec,
+    algo: SpAlgo,
+    shape: &AttnShape,
+    spec: &ParallelSpec,
+    cfg_evals: usize,
+) -> f64 {
+    let group = spec.ranks_per_group();
+    let m = cluster.gpus_per_machine;
+    // group sub-geometry: whole machines per group, or a machine slice
+    let (n_g, m_g) = if group >= m { (group / m, m) } else { (1, group) };
+    let evals = cfg_evals.div_ceil(spec.cfg_degree.max(1)) as f64;
+
+    let comp = compute_time(shape, cluster, group);
+    let inter_elems = inter_volume(algo, shape, n_g, m_g, spec.sp);
+    let inter = if n_g > 1 {
+        cluster.net.inter_lat + inter_elems * 4.0 / cluster.net.inter_bw_per_flow(m_g)
+    } else {
+        0.0
+    };
+    // intra term: the group moves ~4 shard-sized tensors over NVSwitch
+    // (Q/K/V in, O out) regardless of algorithm
+    let intra = cluster.net.intra_lat
+        + 4.0 * shape.bytes_per_tensor() / group as f64 / cluster.net.intra_bw;
+    evals * (comp + inter + intra)
+}
+
+/// All structurally valid hybrid specs for a cluster/head count, each
+/// group's SP degrees set by the paper's gcd placement rule. Covers
+/// `cfg_degree ∈ {1, 2}` × every machine-aligned replica count.
+pub fn enumerate_specs(cluster: &ClusterSpec, heads: usize) -> Vec<ParallelSpec> {
+    let total = cluster.total_gpus();
+    let mut out = Vec::new();
+    for cfg in [1usize, 2] {
+        if total % cfg != 0 {
+            continue;
+        }
+        let per_branch = total / cfg;
+        for reps in 1..=per_branch {
+            if per_branch % reps != 0 {
+                continue;
+            }
+            let group = per_branch / reps;
+            let spec = ParallelSpec::with_gcd_placement(cfg, reps, group, heads);
+            if spec.validate(cluster).is_ok() {
+                out.push(spec);
+            }
+        }
+    }
+    out
+}
+
+/// Pick the spec minimizing modeled *service* cost for a request of
+/// `shape` when `queue_depth` same-sized requests are waiting: batch
+/// replicas beyond the queue depth idle (no work to fill them), so the
+/// effective cost is `step latency / min(batch_replicas, queue_depth)`.
+/// `queue_depth = 1` therefore optimizes pure latency. Deterministic:
+/// ties break toward fewer groups (larger SP meshes).
+pub fn choose_spec(
+    cluster: &ClusterSpec,
+    algo: SpAlgo,
+    shape: &AttnShape,
+    cfg_evals: usize,
+    queue_depth: usize,
+) -> ParallelSpec {
+    let mut specs = enumerate_specs(cluster, shape.h);
+    // stable order: fewest groups first so equal costs prefer big meshes
+    specs.sort_by_key(|s| (s.groups(), s.cfg_degree));
+    let mut best: Option<(f64, ParallelSpec)> = None;
+    for spec in specs {
+        let useful = spec.batch_replicas.min(queue_depth.max(1)) as f64;
+        let cost = plan_step_cost(cluster, algo, shape, &spec, cfg_evals) / useful;
+        match best {
+            Some((b, _)) if b <= cost => {}
+            _ => best = Some((cost, spec)),
+        }
+    }
+    best.map(|(_, s)| s)
+        .unwrap_or_else(|| ParallelSpec::single(cluster, shape.h))
 }
 
 #[cfg(test)]
@@ -221,5 +315,66 @@ mod tests {
         let t8 = compute_time(&s, &c, 8);
         let t32 = compute_time(&s, &c, 32);
         assert!(t32 < t8 / 3.0);
+    }
+
+    #[test]
+    fn enumerate_specs_are_valid_and_cover_cfg_modes() {
+        let c = ClusterSpec::paper_testbed();
+        let specs = enumerate_specs(&c, 24);
+        assert!(!specs.is_empty());
+        for s in &specs {
+            assert!(s.validate(&c).is_ok(), "{s:?}");
+        }
+        assert!(specs.iter().any(|s| s.cfg_degree == 1));
+        assert!(specs.iter().any(|s| s.cfg_degree == 2));
+        assert!(specs.iter().any(|s| s.batch_replicas > 1));
+    }
+
+    #[test]
+    fn cfg_parallel_wins_for_guided_long_sequences() {
+        // CFG workloads (2 evals) on comm-bound shapes: running branches
+        // concurrently on halves must model cheaper than sequentially on
+        // the full mesh.
+        let c = ClusterSpec::paper_testbed();
+        let s = shape();
+        let full = ParallelSpec::new(1, 1, SpDegrees::new(8, 4));
+        let halves = ParallelSpec::new(2, 1, SpDegrees::new(8, 2));
+        let t_full = plan_step_cost(&c, SpAlgo::SwiftFusion, &s, &full, 2);
+        let t_half = plan_step_cost(&c, SpAlgo::SwiftFusion, &s, &halves, 2);
+        assert!(t_half < t_full, "cfg2 {t_half} vs cfg1 {t_full}");
+        // ...and the auto-chooser finds a CFG-parallel plan
+        let picked = choose_spec(&c, SpAlgo::SwiftFusion, &s, 2, 1);
+        assert_eq!(picked.cfg_degree, 2, "{picked:?}");
+    }
+
+    #[test]
+    fn non_guided_workloads_keep_the_full_mesh() {
+        // With a single eval there is no branch to parallelize: halving
+        // the mesh only halves the compute power.
+        let c = ClusterSpec::paper_testbed();
+        let s = shape();
+        let picked = choose_spec(&c, SpAlgo::SwiftFusion, &s, 1, 1);
+        assert_eq!(picked.cfg_degree, 1, "{picked:?}");
+        assert_eq!(picked.batch_replicas, 1, "{picked:?}");
+    }
+
+    #[test]
+    fn deep_queues_favor_batch_replicas() {
+        // Short sequences under heavy load: replicating beats sharding
+        // one small request over 32 GPUs.
+        let c = ClusterSpec::paper_testbed();
+        let small = AttnShape::new(1, 4096, 24, 64);
+        let picked = choose_spec(&c, SpAlgo::SwiftFusion, &small, 1, 32);
+        assert!(
+            picked.batch_replicas > 1,
+            "deep queue should replicate: {picked:?}"
+        );
+        // and a short request should never be sharded across machines —
+        // the inter-machine volume dwarfs its compute
+        let shallow = choose_spec(&c, SpAlgo::SwiftFusion, &small, 1, 1);
+        assert!(
+            shallow.ranks_per_group() <= c.gpus_per_machine,
+            "small request stays on one machine: {shallow:?}"
+        );
     }
 }

@@ -19,13 +19,21 @@ use crate::runtime::{ConfigMeta, RuntimeHandle};
 pub enum ExecMode {
     /// Real numerics via the AOT artifacts of `cfg`.
     Numeric { rt: RuntimeHandle, cfg: Arc<ConfigMeta> },
+    /// Real numerics via the in-process host tile kernels
+    /// (`crate::sp::tiles::host`): exact f32 flash-attention math with no
+    /// PJRT dependency. Same dataflow and clock accounting as `Numeric`;
+    /// only the tile backend differs. This is what the property suite
+    /// (`rust/tests/sp_property.rs`) runs, so numeric validation works in
+    /// hermetic/offline environments.
+    HostNumeric,
     /// Shape-only buffers; only the virtual clocks matter.
     Timing,
 }
 
 impl ExecMode {
+    /// True when buffers carry real tensor data (either tile backend).
     pub fn is_numeric(&self) -> bool {
-        matches!(self, ExecMode::Numeric { .. })
+        matches!(self, ExecMode::Numeric { .. } | ExecMode::HostNumeric)
     }
 }
 
@@ -71,6 +79,10 @@ impl<'w> RankCtx<'w> {
                 let tensors: Vec<_> = inputs.iter().map(|b| b.tensor().clone()).collect();
                 let out = rt.call(name, &tensors)?;
                 Ok(out.into_iter().map(Buf::Real).collect())
+            }
+            ExecMode::HostNumeric => {
+                anyhow::bail!("call_artifact('{name}') in host-numeric mode: model-stage \
+                               artifacts need the PJRT runtime")
             }
             ExecMode::Timing => anyhow::bail!("call_artifact in timing mode"),
         }

@@ -14,6 +14,7 @@
 
 pub mod clock;
 pub mod exec;
+pub mod plan;
 
 use crate::config::{ClusterSpec, SpDegrees};
 
@@ -26,12 +27,20 @@ pub enum Placement {
     UlyssesInter,
 }
 
-/// A concrete 2D device mesh over a cluster.
+/// A concrete 2D device mesh over a cluster — either the whole cluster
+/// ([`Mesh2D::new`], `base == 0`) or a *carved sub-mesh*: a contiguous
+/// rank range `[base, base + P_u·P_r)` operated as its own 2D mesh
+/// ([`Mesh2D::carved`]). Carved meshes are how the hybrid CFG×SP planner
+/// ([`plan`]) gives each replica group a private communicator: every
+/// group method below returns absolute cluster ranks inside the carve,
+/// so collectives built from them can never cross a partition boundary.
 #[derive(Debug, Clone)]
 pub struct Mesh2D {
     pub cluster: ClusterSpec,
     pub degrees: SpDegrees,
     pub placement: Placement,
+    /// First absolute rank of this mesh (0 for a full-cluster mesh).
+    pub base: usize,
 }
 
 impl Mesh2D {
@@ -41,28 +50,57 @@ impl Mesh2D {
             cluster.total_gpus(),
             "mesh degrees must cover the cluster"
         );
-        Self { cluster, degrees, placement }
+        Self { cluster, degrees, placement, base: 0 }
+    }
+
+    /// A sub-mesh over ranks `[base, base + degrees.total())` of `cluster`.
+    pub fn carved(
+        cluster: ClusterSpec,
+        degrees: SpDegrees,
+        placement: Placement,
+        base: usize,
+    ) -> Self {
+        assert!(
+            base + degrees.total() <= cluster.total_gpus(),
+            "carve [{base}, {}) exceeds cluster of {} GPUs",
+            base + degrees.total(),
+            cluster.total_gpus()
+        );
+        Self { cluster, degrees, placement, base }
     }
 
     pub fn total(&self) -> usize {
         self.degrees.total()
     }
 
-    /// (u, r) coordinate of a rank.
+    /// All absolute ranks of this mesh, ascending.
+    pub fn ranks(&self) -> Vec<usize> {
+        (self.base..self.base + self.total()).collect()
+    }
+
+    /// Does this mesh contain the absolute rank?
+    pub fn contains(&self, rank: usize) -> bool {
+        (self.base..self.base + self.total()).contains(&rank)
+    }
+
+    /// (u, r) coordinate of an absolute rank.
     pub fn coords(&self, rank: usize) -> (usize, usize) {
+        debug_assert!(self.contains(rank), "rank {rank} outside mesh");
+        let local = rank - self.base;
         match self.placement {
-            Placement::UlyssesIntra => (rank % self.degrees.pu, rank / self.degrees.pu),
-            Placement::UlyssesInter => (rank / self.degrees.pr, rank % self.degrees.pr),
+            Placement::UlyssesIntra => (local % self.degrees.pu, local / self.degrees.pu),
+            Placement::UlyssesInter => (local / self.degrees.pr, local % self.degrees.pr),
         }
     }
 
-    /// Rank at (u, r).
+    /// Absolute rank at (u, r).
     pub fn rank_at(&self, u: usize, r: usize) -> usize {
         debug_assert!(u < self.degrees.pu && r < self.degrees.pr);
-        match self.placement {
-            Placement::UlyssesIntra => r * self.degrees.pu + u,
-            Placement::UlyssesInter => u * self.degrees.pr + r,
-        }
+        self.base
+            + match self.placement {
+                Placement::UlyssesIntra => r * self.degrees.pu + u,
+                Placement::UlyssesInter => u * self.degrees.pr + r,
+            }
     }
 
     /// All ranks sharing this rank's Ulysses group (varying u, fixed r).
@@ -214,6 +252,46 @@ mod tests {
                 assert!(ug.contains(&t), "torus member {t} outside ulysses group {ug:?}");
             }
         }
+    }
+
+    #[test]
+    fn carved_mesh_is_group_scoped() {
+        // 2x4 cluster carved into two 2x2 sub-meshes at base 0 and 4: all
+        // groups must stay inside their carve.
+        let cluster = ClusterSpec::new(2, 4);
+        for base in [0usize, 4] {
+            let me = Mesh2D::carved(
+                cluster.clone(),
+                SpDegrees::new(2, 2),
+                Placement::UlyssesInter,
+                base,
+            );
+            assert_eq!(me.ranks(), (base..base + 4).collect::<Vec<_>>());
+            for rank in me.ranks() {
+                assert!(me.contains(rank));
+                let (u, r) = me.coords(rank);
+                assert_eq!(me.rank_at(u, r), rank, "base {base} rank {rank}");
+                for peer in me.ulysses_group(rank).into_iter().chain(me.ring_group(rank)) {
+                    assert!(
+                        (base..base + 4).contains(&peer),
+                        "group member {peer} escaped carve at base {base}"
+                    );
+                }
+            }
+        }
+        // the two carves are disjoint and cover the cluster
+        let a = Mesh2D::carved(cluster.clone(), SpDegrees::new(2, 2), Placement::UlyssesInter, 0);
+        let b = Mesh2D::carved(cluster, SpDegrees::new(2, 2), Placement::UlyssesInter, 4);
+        for r in a.ranks() {
+            assert!(!b.contains(r));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds cluster")]
+    fn carve_past_cluster_end_panics() {
+        let cluster = ClusterSpec::new(1, 4);
+        Mesh2D::carved(cluster, SpDegrees::new(2, 1), Placement::UlyssesInter, 3);
     }
 
     #[test]

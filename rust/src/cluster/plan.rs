@@ -1,0 +1,220 @@
+//! Hybrid parallel plans: carve a cluster into CFG-branch / batch-replica
+//! groups, each running a group-scoped 2D SP mesh.
+//!
+//! The paper scales a *single* attention pass across one mesh; a serving
+//! engine composes parallelism dimensions. A [`ParallelPlan`] partitions
+//! the cluster's ranks into `cfg_degree × batch_replicas` contiguous,
+//! machine-aligned groups and gives each a carved [`Mesh2D`]
+//! communicator, so any [`crate::sp::SpAlgo`] runs unchanged *inside* its
+//! group — collectives (rings, all-to-alls, barriers) are built from the
+//! mesh's rank set and therefore never cross a partition boundary.
+//!
+//! With `cfg_degree == 2`, the conditional and unconditional guidance
+//! branches of classifier-free-guidance sampling run concurrently on the
+//! two halves (xDiT's CFG parallelism); their outputs are merged by the
+//! guidance combine step (`crate::sp::hybrid`). `batch_replicas` adds
+//! plain data parallelism over requests beyond that.
+
+use crate::cluster::Mesh2D;
+use crate::config::{ClusterSpec, ParallelSpec, ParallelSpecError};
+use crate::sp::SpAlgo;
+
+/// Which guidance branch(es) a group computes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BranchRole {
+    /// `cfg_degree == 1`: the group runs both branches (sequentially).
+    Both,
+    /// The conditional (prompted) branch.
+    Conditional,
+    /// The unconditional (null-prompt) branch.
+    Unconditional,
+}
+
+/// One carved replica group: a contiguous rank range with a private mesh.
+#[derive(Debug, Clone)]
+pub struct ParallelGroup {
+    /// Group index in `[0, cfg_degree · batch_replicas)`, branch-major.
+    pub index: usize,
+    pub role: BranchRole,
+    /// Batch-replica index within the branch.
+    pub replica: usize,
+    /// Group-scoped communicator (carved sub-mesh).
+    pub mesh: Mesh2D,
+}
+
+impl ParallelGroup {
+    /// First absolute rank of the group.
+    pub fn base(&self) -> usize {
+        self.mesh.base
+    }
+
+    /// Absolute ranks of the group, ascending.
+    pub fn ranks(&self) -> Vec<usize> {
+        self.mesh.ranks()
+    }
+
+    /// Group-relative index of an absolute rank.
+    pub fn local_rank(&self, rank: usize) -> usize {
+        debug_assert!(self.mesh.contains(rank), "rank {rank} outside group");
+        rank - self.mesh.base
+    }
+}
+
+/// A validated partitioning of a cluster into SP groups.
+#[derive(Debug, Clone)]
+pub struct ParallelPlan {
+    pub cluster: ClusterSpec,
+    pub spec: ParallelSpec,
+    pub algo: SpAlgo,
+    pub groups: Vec<ParallelGroup>,
+}
+
+impl ParallelPlan {
+    /// Validate `spec` against `cluster` and carve the groups. Groups are
+    /// laid out branch-major: all conditional replicas first, then the
+    /// unconditional ones (when `cfg_degree == 2`).
+    pub fn build(
+        cluster: &ClusterSpec,
+        spec: ParallelSpec,
+        algo: SpAlgo,
+    ) -> Result<Self, ParallelSpecError> {
+        spec.validate(cluster)?;
+        let size = spec.ranks_per_group();
+        let groups = (0..spec.groups())
+            .map(|g| {
+                let role = if spec.cfg_degree == 1 {
+                    BranchRole::Both
+                } else if g / spec.batch_replicas == 0 {
+                    BranchRole::Conditional
+                } else {
+                    BranchRole::Unconditional
+                };
+                ParallelGroup {
+                    index: g,
+                    role,
+                    replica: g % spec.batch_replicas,
+                    mesh: Mesh2D::carved(cluster.clone(), spec.sp, algo.placement(), g * size),
+                }
+            })
+            .collect();
+        Ok(Self { cluster: cluster.clone(), spec, algo, groups })
+    }
+
+    /// The group owning an absolute rank (groups are contiguous and
+    /// equal-sized, so this is a division).
+    pub fn group_of(&self, rank: usize) -> &ParallelGroup {
+        &self.groups[rank / self.spec.ranks_per_group()]
+    }
+
+    /// The group serving `(role, replica)`; for `cfg_degree == 1` pass
+    /// the replica's `BranchRole::Both` group via either branch role.
+    pub fn group_for(&self, role: BranchRole, replica: usize) -> &ParallelGroup {
+        let branch = match (self.spec.cfg_degree, role) {
+            (1, _) => 0,
+            (_, BranchRole::Conditional | BranchRole::Both) => 0,
+            (_, BranchRole::Unconditional) => 1,
+        };
+        &self.groups[branch * self.spec.batch_replicas + replica]
+    }
+
+    /// Groups computing the conditional branch (all groups at cfg 1).
+    pub fn conditional_groups(&self) -> impl Iterator<Item = &ParallelGroup> {
+        self.groups
+            .iter()
+            .filter(|g| matches!(g.role, BranchRole::Conditional | BranchRole::Both))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SpDegrees;
+
+    #[test]
+    fn plan_partitions_every_rank_once() {
+        let cluster = ClusterSpec::new(4, 8);
+        let plan = ParallelPlan::build(
+            &cluster,
+            ParallelSpec::new(2, 2, SpDegrees::new(8, 1)),
+            SpAlgo::SwiftFusion,
+        )
+        .unwrap();
+        assert_eq!(plan.groups.len(), 4);
+        let mut seen = vec![false; 32];
+        for g in &plan.groups {
+            for r in g.ranks() {
+                assert!(!seen[r], "rank {r} in two groups");
+                seen[r] = true;
+                assert_eq!(plan.group_of(r).index, g.index);
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn branch_major_layout_and_roles() {
+        let cluster = ClusterSpec::new(2, 4);
+        let plan = ParallelPlan::build(
+            &cluster,
+            ParallelSpec::new(2, 2, SpDegrees::new(2, 1)),
+            SpAlgo::Ulysses,
+        )
+        .unwrap();
+        assert_eq!(plan.groups[0].role, BranchRole::Conditional);
+        assert_eq!(plan.groups[1].role, BranchRole::Conditional);
+        assert_eq!(plan.groups[2].role, BranchRole::Unconditional);
+        assert_eq!(plan.groups[3].role, BranchRole::Unconditional);
+        assert_eq!(plan.groups[1].replica, 1);
+        assert_eq!(plan.group_for(BranchRole::Unconditional, 1).index, 3);
+        assert_eq!(plan.group_for(BranchRole::Conditional, 0).base(), 0);
+        assert_eq!(plan.conditional_groups().count(), 2);
+    }
+
+    #[test]
+    fn single_group_plan_covers_cluster() {
+        let cluster = ClusterSpec::new(2, 2);
+        let plan = ParallelPlan::build(
+            &cluster,
+            ParallelSpec::new(1, 1, SpDegrees::new(2, 2)),
+            SpAlgo::SwiftFusion,
+        )
+        .unwrap();
+        assert_eq!(plan.groups.len(), 1);
+        assert_eq!(plan.groups[0].role, BranchRole::Both);
+        assert_eq!(plan.groups[0].ranks(), vec![0, 1, 2, 3]);
+        // cfg 1: either role resolves to the only group
+        assert_eq!(plan.group_for(BranchRole::Unconditional, 0).index, 0);
+    }
+
+    #[test]
+    fn invalid_spec_propagates_typed_error() {
+        let cluster = ClusterSpec::new(2, 2);
+        let err = ParallelPlan::build(
+            &cluster,
+            ParallelSpec::new(2, 2, SpDegrees::new(2, 2)),
+            SpAlgo::SwiftFusion,
+        )
+        .unwrap_err();
+        assert!(matches!(err, ParallelSpecError::SizeMismatch { .. }));
+    }
+
+    #[test]
+    fn group_meshes_never_share_ranks_with_neighbors() {
+        let cluster = ClusterSpec::new(2, 4);
+        let plan = ParallelPlan::build(
+            &cluster,
+            ParallelSpec::new(2, 1, SpDegrees::new(4, 1)),
+            SpAlgo::Tas,
+        )
+        .unwrap();
+        // each branch is exactly one machine here
+        for g in &plan.groups {
+            assert_eq!(g.mesh.inter_machine_fraction(&g.ranks()), 0.0);
+            for r in g.ranks() {
+                for peer in g.mesh.ulysses_group(r).into_iter().chain(g.mesh.ring_group(r)) {
+                    assert!(g.mesh.contains(peer), "collective escaped the carve");
+                }
+            }
+        }
+    }
+}

@@ -232,6 +232,181 @@ pub fn gcd(a: usize, b: usize) -> usize {
     }
 }
 
+/// Full parallelization recipe for a cluster: how many CFG branch groups
+/// and batch replica groups to carve, and the 2D SP degrees *inside each
+/// group*. The hybrid planner (`cluster::plan`) turns a validated spec
+/// into carved sub-meshes; `cfg_degree × batch_replicas × P_u × P_r`
+/// must exactly tile the cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ParallelSpec {
+    /// CFG-parallel degree: 1 = both guidance branches run on one mesh
+    /// (sequentially), 2 = conditional/unconditional branches run
+    /// concurrently on disjoint device groups (xDiT-style CFG parallel).
+    pub cfg_degree: usize,
+    /// Independent batch-replica groups beyond the CFG split (data
+    /// parallelism over requests).
+    pub batch_replicas: usize,
+    /// Sequence-parallel degrees inside each group.
+    pub sp: SpDegrees,
+}
+
+/// Why a [`ParallelSpec`] cannot run on a cluster/workload. Every variant
+/// renders an actionable message (what was asked, what the constraint is,
+/// and how to fix it).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ParallelSpecError {
+    /// `cfg_degree` must be 1 or 2 — guidance has two branches.
+    BadCfgDegree { got: usize },
+    /// `batch_replicas` must be at least 1.
+    ZeroReplicas,
+    /// The product of all degrees must equal the cluster size.
+    SizeMismatch {
+        cfg_degree: usize,
+        batch_replicas: usize,
+        sp_total: usize,
+        cluster_gpus: usize,
+    },
+    /// Groups must align with machine boundaries: the group size must be
+    /// a multiple of GPUs-per-machine (whole machines per group) or
+    /// divide it (several groups per machine).
+    MisalignedGroups { group_ranks: usize, gpus_per_machine: usize },
+    /// Ulysses needs `P_u | H`.
+    HeadsNotDivisible { heads: usize, pu: usize },
+    /// SP needs `(P_u · P_r) | L`.
+    SeqNotDivisible { l: usize, sp_ranks: usize },
+}
+
+impl std::fmt::Display for ParallelSpecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ParallelSpecError::BadCfgDegree { got } => write!(
+                f,
+                "cfg_degree must be 1 (sequential guidance) or 2 (branch-parallel), got {got}"
+            ),
+            ParallelSpecError::ZeroReplicas => {
+                write!(f, "batch_replicas must be >= 1 (use 1 for no batch replication)")
+            }
+            ParallelSpecError::SizeMismatch {
+                cfg_degree,
+                batch_replicas,
+                sp_total,
+                cluster_gpus,
+            } => write!(
+                f,
+                "cfg_degree({cfg_degree}) x batch_replicas({batch_replicas}) x sp_ranks({sp_total}) \
+                 = {} but the cluster has {cluster_gpus} GPUs; pick degrees whose product is \
+                 exactly {cluster_gpus}",
+                cfg_degree * batch_replicas * sp_total
+            ),
+            ParallelSpecError::MisalignedGroups { group_ranks, gpus_per_machine } => write!(
+                f,
+                "group size {group_ranks} straddles machine boundaries (machines have \
+                 {gpus_per_machine} GPUs); use a group size that divides {gpus_per_machine} \
+                 or is a multiple of it"
+            ),
+            ParallelSpecError::HeadsNotDivisible { heads, pu } => write!(
+                f,
+                "H={heads} attention heads not divisible by P_u={pu}; lower P_u to a divisor \
+                 of {heads} (the paper's rule: P_u = gcd(group size, H))"
+            ),
+            ParallelSpecError::SeqNotDivisible { l, sp_ranks } => write!(
+                f,
+                "sequence length L={l} not divisible by the group's {sp_ranks} SP ranks; \
+                 align the workload (Workload::aligned_to) or change the SP degrees"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ParallelSpecError {}
+
+impl ParallelSpec {
+    pub fn new(cfg_degree: usize, batch_replicas: usize, sp: SpDegrees) -> Self {
+        Self { cfg_degree, batch_replicas, sp }
+    }
+
+    /// The trivial plan: one group spanning the whole cluster with the
+    /// paper's §4.2 placement rule for the SP degrees.
+    pub fn single(cluster: &ClusterSpec, heads: usize) -> Self {
+        Self::new(1, 1, SpDegrees::swiftfusion_default(cluster, heads))
+    }
+
+    /// A spec whose per-group SP degrees follow the paper's gcd
+    /// placement rule (`P_u = gcd(group, H)`) — the one way to build
+    /// hybrid specs from (cfg, replicas, group size, heads), shared by
+    /// the CLI, the plan enumerator, and the benches.
+    pub fn with_gcd_placement(
+        cfg_degree: usize,
+        batch_replicas: usize,
+        group_ranks: usize,
+        heads: usize,
+    ) -> Self {
+        let pu = gcd(group_ranks, heads);
+        Self::new(cfg_degree, batch_replicas, SpDegrees::new(pu, group_ranks / pu))
+    }
+
+    /// Number of replica groups (CFG branches × batch replicas).
+    pub fn groups(&self) -> usize {
+        self.cfg_degree * self.batch_replicas
+    }
+
+    /// Ranks inside each group.
+    pub fn ranks_per_group(&self) -> usize {
+        self.sp.total()
+    }
+
+    /// Total ranks the spec occupies.
+    pub fn total_ranks(&self) -> usize {
+        self.groups() * self.ranks_per_group()
+    }
+
+    /// Structural validation against a cluster: degree product and
+    /// machine alignment. Workload divisibility is checked separately by
+    /// [`Self::validate_workload`] (the same spec serves many shapes).
+    pub fn validate(&self, cluster: &ClusterSpec) -> Result<(), ParallelSpecError> {
+        if self.cfg_degree == 0 || self.cfg_degree > 2 {
+            return Err(ParallelSpecError::BadCfgDegree { got: self.cfg_degree });
+        }
+        if self.batch_replicas == 0 {
+            return Err(ParallelSpecError::ZeroReplicas);
+        }
+        if self.total_ranks() != cluster.total_gpus() {
+            return Err(ParallelSpecError::SizeMismatch {
+                cfg_degree: self.cfg_degree,
+                batch_replicas: self.batch_replicas,
+                sp_total: self.sp.total(),
+                cluster_gpus: cluster.total_gpus(),
+            });
+        }
+        let group = self.ranks_per_group();
+        let m = cluster.gpus_per_machine;
+        if group % m != 0 && m % group != 0 {
+            return Err(ParallelSpecError::MisalignedGroups {
+                group_ranks: group,
+                gpus_per_machine: m,
+            });
+        }
+        Ok(())
+    }
+
+    /// Per-workload divisibility: `P_u | H` and `(P_u·P_r) | L`.
+    pub fn validate_workload(&self, shape: &AttnShape) -> Result<(), ParallelSpecError> {
+        if shape.h % self.sp.pu != 0 {
+            return Err(ParallelSpecError::HeadsNotDivisible {
+                heads: shape.h,
+                pu: self.sp.pu,
+            });
+        }
+        if shape.l % self.sp.total() != 0 {
+            return Err(ParallelSpecError::SeqNotDivisible {
+                l: shape.l,
+                sp_ranks: self.sp.total(),
+            });
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -277,6 +452,68 @@ mod tests {
         assert!(SpDegrees::new(2, 2).validate(&c, &odd).is_err()); // L % P
         let h3 = AttnShape::new(1, 128, 3, 16);
         assert!(SpDegrees::new(2, 2).validate(&c, &h3).is_err()); // H % Pu
+    }
+
+    #[test]
+    fn parallel_spec_valid_combinations() {
+        let c = ClusterSpec::new(4, 8); // 32 GPUs
+        // cfg 2 x rep 1 x sp 16 (2 machines per branch)
+        assert!(ParallelSpec::new(2, 1, SpDegrees::new(8, 2)).validate(&c).is_ok());
+        // cfg 2 x rep 2 x sp 8 (1 machine per group)
+        assert!(ParallelSpec::new(2, 2, SpDegrees::new(8, 1)).validate(&c).is_ok());
+        // cfg 1 x rep 4 x sp 8
+        assert!(ParallelSpec::new(1, 4, SpDegrees::new(4, 2)).validate(&c).is_ok());
+        // single-group plan
+        let s = ParallelSpec::single(&c, 24);
+        assert_eq!(s.total_ranks(), 32);
+        assert!(s.validate(&c).is_ok());
+        // sub-machine groups: 8 groups of 4 on 4x8
+        assert!(ParallelSpec::new(2, 4, SpDegrees::new(4, 1)).validate(&c).is_ok());
+    }
+
+    #[test]
+    fn parallel_spec_size_mismatch_is_actionable() {
+        let c = ClusterSpec::new(4, 8);
+        let err = ParallelSpec::new(2, 1, SpDegrees::new(8, 1)).validate(&c).unwrap_err();
+        assert!(matches!(err, ParallelSpecError::SizeMismatch { .. }));
+        let msg = err.to_string();
+        assert!(msg.contains("16"), "states the product: {msg}");
+        assert!(msg.contains("32"), "states the cluster size: {msg}");
+        assert!(msg.contains("exactly 32"), "tells the fix: {msg}");
+    }
+
+    #[test]
+    fn parallel_spec_rejects_bad_degrees() {
+        let c = ClusterSpec::new(2, 2);
+        let e = ParallelSpec::new(3, 1, SpDegrees::new(1, 1)).validate(&c).unwrap_err();
+        assert!(matches!(e, ParallelSpecError::BadCfgDegree { got: 3 }));
+        assert!(e.to_string().contains("1") && e.to_string().contains("2"));
+        let e = ParallelSpec::new(1, 0, SpDegrees::new(2, 2)).validate(&c).unwrap_err();
+        assert!(matches!(e, ParallelSpecError::ZeroReplicas));
+        let e = ParallelSpec::new(0, 1, SpDegrees::new(2, 2)).validate(&c).unwrap_err();
+        assert!(matches!(e, ParallelSpecError::BadCfgDegree { got: 0 }));
+    }
+
+    #[test]
+    fn parallel_spec_rejects_straddling_groups() {
+        // 2 machines x 3 GPUs, groups of 2: 2 does not divide 3 and is
+        // not a multiple of 3 -> a group would straddle machines.
+        let c = ClusterSpec::new(2, 3);
+        let err = ParallelSpec::new(1, 3, SpDegrees::new(2, 1)).validate(&c).unwrap_err();
+        assert!(matches!(err, ParallelSpecError::MisalignedGroups { .. }));
+        assert!(err.to_string().contains("straddles"));
+    }
+
+    #[test]
+    fn parallel_spec_workload_divisibility() {
+        let spec = ParallelSpec::new(2, 1, SpDegrees::new(4, 2));
+        assert!(spec.validate_workload(&AttnShape::new(1, 128, 8, 16)).is_ok());
+        let e = spec.validate_workload(&AttnShape::new(1, 128, 6, 16)).unwrap_err();
+        assert!(matches!(e, ParallelSpecError::HeadsNotDivisible { heads: 6, pu: 4 }));
+        assert!(e.to_string().contains("gcd"), "suggests the rule: {e}");
+        let e = spec.validate_workload(&AttnShape::new(1, 130, 8, 16)).unwrap_err();
+        assert!(matches!(e, ParallelSpecError::SeqNotDivisible { l: 130, sp_ranks: 8 }));
+        assert!(e.to_string().contains("aligned_to"), "suggests the fix: {e}");
     }
 
     #[test]

@@ -55,7 +55,11 @@ pub struct Batcher {
 }
 
 impl Batcher {
-    pub fn new(policy: BatchPolicy) -> Self {
+    pub fn new(mut policy: BatchPolicy) -> Self {
+        // max_batch == 0 would close empty batches forever; clamp to 1
+        // (a zero-capacity batcher is a misconfiguration, not a request
+        // error — serve every request individually instead of hanging).
+        policy.max_batch = policy.max_batch.max(1);
         Self { queues: Vec::new(), policy }
     }
 
@@ -196,6 +200,52 @@ mod tests {
         }
         assert_eq!(total, 5);
         assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn empty_batcher_flushes_cleanly() {
+        // Popping an empty batcher — fresh, and again after a drain —
+        // must return None, never an empty batch (which would make the
+        // serving loop spin or panic on requests[0]).
+        let mut b = Batcher::new(BatchPolicy::default());
+        assert!(b.pop_ready(0.0).is_none());
+        assert!(b.pop_ready(f64::MAX).is_none());
+        assert!(b.pop_any().is_none());
+        b.push(req(0, Workload::flux_3072(), 0.0));
+        assert_eq!(b.pop_any().unwrap().size(), 1);
+        // drained: queues exist but are empty
+        assert_eq!(b.pending(), 0);
+        assert!(b.pop_ready(f64::MAX).is_none());
+        assert!(b.pop_any().is_none());
+    }
+
+    #[test]
+    fn capacity_overflow_splits_into_full_batches() {
+        // 10 requests into max_batch=3: batches of 3/3/3/1, FIFO order
+        // preserved, nothing lost or duplicated.
+        let mut b = Batcher::new(BatchPolicy { max_batch: 3, window: 1e9 });
+        for i in 0..10 {
+            b.push(req(i, Workload::flux_3072(), i as f64 * 0.01));
+        }
+        assert_eq!(b.pending(), 10);
+        let mut sizes = Vec::new();
+        let mut ids = Vec::new();
+        while let Some(batch) = b.pop_ready(0.0).or_else(|| b.pop_any()) {
+            sizes.push(batch.size());
+            ids.extend(batch.requests.iter().map(|r| r.id));
+        }
+        assert_eq!(sizes, vec![3, 3, 3, 1]);
+        assert_eq!(ids, (0..10).collect::<Vec<_>>());
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn zero_max_batch_is_clamped_not_livelocked() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 0, window: 0.0 });
+        b.push(req(0, Workload::flux_3072(), 0.0));
+        let batch = b.pop_ready(1.0).expect("clamped to singleton batches");
+        assert_eq!(batch.size(), 1);
+        assert!(b.pop_ready(1.0).is_none());
     }
 
     #[test]

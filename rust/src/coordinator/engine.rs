@@ -11,28 +11,73 @@ use std::collections::HashMap;
 use std::sync::Mutex;
 
 use crate::cluster::exec::{run_cluster, ExecMode};
+use crate::cluster::plan::ParallelPlan;
 use crate::comm::Buf;
-use crate::config::{ClusterSpec, SpDegrees};
+use crate::config::{ClusterSpec, ParallelSpec, ParallelSpecError, SpDegrees};
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::router::Router;
 use crate::coordinator::ServiceModel;
-use crate::sp::{SpAlgo, SpParams};
+use crate::sp::{hybrid, SpAlgo, SpParams};
 use crate::workload::{Request, Workload};
 
+/// How the engine maps requests to hybrid CFG×SP plans.
+#[derive(Debug, Clone)]
+pub enum PlanPolicy {
+    /// Seed behaviour: the whole pod is one SP mesh and guidance
+    /// branches are folded into the per-layer constant. Kept for
+    /// baseline comparisons against the hybrid plans.
+    SingleMesh,
+    /// One fixed spec for every request. Strict: requests whose sequence
+    /// length does not divide over the spec's SP ranks are *rejected* at
+    /// admission (no silent cropping).
+    Fixed(ParallelSpec),
+    /// Per-workload choice via [`crate::analysis::choose_spec`];
+    /// workloads are aligned to the chosen group size.
+    Auto,
+}
+
 /// Timing-mode service model: one full generation = steps × layers ×
-/// (per-layer distributed attention + pointwise stages).
+/// (per-layer distributed attention + pointwise stages), with the
+/// per-layer attention makespan taken from the executable schedule of
+/// the policy's plan.
 pub struct SimService {
     pub cluster: ClusterSpec,
     pub algo: SpAlgo,
     /// Per-generation fixed overhead (VAE decode, host sync), seconds.
     pub fixed_overhead: f64,
+    pub plan: PlanPolicy,
     cache: Mutex<HashMap<(String, usize), f64>>,
 }
 
 impl SimService {
     pub fn new(cluster: ClusterSpec, algo: SpAlgo) -> Self {
-        Self { cluster, algo, fixed_overhead: 0.05, cache: Mutex::new(HashMap::new()) }
+        Self {
+            cluster,
+            algo,
+            fixed_overhead: 0.05,
+            plan: PlanPolicy::SingleMesh,
+            cache: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// A service bound to one fixed hybrid spec (validated here).
+    pub fn with_plan(
+        cluster: ClusterSpec,
+        algo: SpAlgo,
+        spec: ParallelSpec,
+    ) -> Result<Self, ParallelSpecError> {
+        spec.validate(&cluster)?;
+        let mut s = Self::new(cluster, algo);
+        s.plan = PlanPolicy::Fixed(spec);
+        Ok(s)
+    }
+
+    /// A service that picks a plan per workload via the cost model.
+    pub fn auto_plan(cluster: ClusterSpec, algo: SpAlgo) -> Self {
+        let mut s = Self::new(cluster, algo);
+        s.plan = PlanPolicy::Auto;
+        s
     }
 
     /// One attention layer's simulated makespan for `workload` at batch b.
@@ -47,7 +92,10 @@ impl SimService {
                 SpDegrees::new(pu, p / pu)
             }
             SpAlgo::Ring => SpDegrees::new(1, p),
-            SpAlgo::Ulysses => SpDegrees::new(crate::config::gcd(p, shape.h), p / crate::config::gcd(p, shape.h)),
+            SpAlgo::Ulysses => {
+                let pu = crate::config::gcd(p, shape.h);
+                SpDegrees::new(pu, p / pu)
+            }
             _ => SpDegrees::swiftfusion_default(&self.cluster, shape.h),
         };
         let params = SpParams {
@@ -61,14 +109,54 @@ impl SimService {
             let s = Buf::Shape(vec![shape.b, ls, shape.h, shape.d]);
             algo.run(ctx, &params, s.clone(), s.clone(), s);
         });
-        // pointwise stages: qkv proj (2·3·hid²) + out proj (2·hid²) +
-        // MLP at 4x ratio (2·2·4·hid²) = 24·hid² MACs per token
+        run.makespan() + self.pointwise_time(&shape, ls)
+    }
+
+    /// Pointwise (non-attention) stage cost on one rank's `ls`-token
+    /// shard: qkv proj (2·3·hid²) + out proj (2·hid²) + MLP at 4x ratio
+    /// (2·2·4·hid²) = 24·hid² MACs per token. Shared by the single-mesh
+    /// and hybrid-plan models so their comparisons stay consistent.
+    fn pointwise_time(&self, shape: &crate::config::AttnShape, ls: usize) -> f64 {
         let hidden = (shape.h * shape.d) as f64;
-        let mlp = self.cluster.gpu.tile_time(
+        self.cluster.gpu.tile_time(
             24.0 * shape.b as f64 * ls as f64 * hidden * hidden,
             10.0 * (shape.b * ls * shape.h * shape.d) as f64 * 4.0,
-        );
-        run.makespan() + mlp
+        )
+    }
+
+    /// One attention layer's makespan under a hybrid spec: the group-
+    /// scoped schedule on the carved meshes, plus the pointwise stages on
+    /// each group's shard (paid once per guidance eval the group runs).
+    /// Alignment is to the SP rank count only — a request admitted by a
+    /// fixed plan (`L % sp_ranks == 0`) is modeled at its full length,
+    /// never cropped.
+    pub fn plan_layer_time(&self, spec: &ParallelSpec, workload: &Workload, batch: usize) -> f64 {
+        let sp_ranks = spec.ranks_per_group();
+        let w = workload.aligned_to(sp_ranks);
+        let mut shape = w.shape;
+        shape.b = batch;
+        let plan = ParallelPlan::build(&self.cluster, *spec, self.algo)
+            .expect("spec validated at construction");
+        let ls = shape.l / sp_ranks;
+        let attn = hybrid::hybrid_layer_makespan(&plan, shape, ls, workload.cfg_evals);
+        let evals = workload.cfg_evals.div_ceil(spec.cfg_degree) as f64;
+        attn + evals * self.pointwise_time(&shape, ls)
+    }
+
+    /// The spec the policy resolves to for one workload (None for the
+    /// legacy single-mesh path).
+    pub fn resolve_spec(&self, workload: &Workload) -> Option<ParallelSpec> {
+        match &self.plan {
+            PlanPolicy::SingleMesh => None,
+            PlanPolicy::Fixed(spec) => Some(*spec),
+            PlanPolicy::Auto => Some(crate::analysis::choose_spec(
+                &self.cluster,
+                self.algo,
+                &workload.shape,
+                workload.cfg_evals,
+                1,
+            )),
+        }
     }
 }
 
@@ -78,10 +166,23 @@ impl ServiceModel for SimService {
         if let Some(&t) = self.cache.lock().unwrap().get(&key) {
             return t;
         }
-        let layer = self.layer_time(workload, batch);
+        let layer = match self.resolve_spec(workload) {
+            None => self.layer_time(workload, batch),
+            Some(spec) => self.plan_layer_time(&spec, workload, batch),
+        };
         let total = layer * workload.layers as f64 * workload.steps as f64 + self.fixed_overhead;
         self.cache.lock().unwrap().insert(key, total);
         total
+    }
+
+    fn admit(&self, workload: &Workload) -> Result<(), String> {
+        match &self.plan {
+            // legacy + auto paths align the workload themselves
+            PlanPolicy::SingleMesh | PlanPolicy::Auto => Ok(()),
+            PlanPolicy::Fixed(spec) => {
+                spec.validate_workload(&workload.shape).map_err(|e| e.to_string())
+            }
+        }
     }
 }
 
@@ -90,10 +191,17 @@ pub struct ServeReport {
     pub metrics: Metrics,
     /// (request id, arrival, completion) per request.
     pub completions: Vec<(u64, f64, f64)>,
+    /// Requests refused at admission: (request id, reason). A request is
+    /// rejected — never panicked on — when the service's plan cannot run
+    /// its workload (e.g. sequence length not divisible by the plan's SP
+    /// ranks).
+    pub rejected: Vec<(u64, String)>,
 }
 
 /// Deterministic virtual-time serving loop: requests (time-ordered) flow
 /// through the batcher; closed batches dispatch to the least-loaded pod.
+/// Requests failing the service's admission check are recorded in
+/// [`ServeReport::rejected`] and never reach a batch.
 pub fn serve(
     router: &mut Router,
     policy: BatchPolicy,
@@ -103,6 +211,7 @@ pub fn serve(
     let mut batcher = Batcher::new(policy);
     let mut metrics = Metrics::new();
     let mut completions = Vec::new();
+    let mut rejected = Vec::new();
 
     let serve_batch = |router: &mut Router,
                            batch: crate::coordinator::batcher::Batch,
@@ -120,6 +229,10 @@ pub fn serve(
 
     for r in requests {
         let now = r.arrival;
+        if let Err(reason) = service.admit(&r.workload) {
+            rejected.push((r.id, reason));
+            continue;
+        }
         batcher.push(r);
         while let Some(batch) = batcher.pop_ready(now) {
             serve_batch(router, batch, &mut metrics, &mut completions);
@@ -129,7 +242,7 @@ pub fn serve(
     while let Some(batch) = batcher.pop_any() {
         serve_batch(router, batch, &mut metrics, &mut completions);
     }
-    ServeReport { metrics, completions }
+    ServeReport { metrics, completions, rejected }
 }
 
 #[cfg(test)]
@@ -223,5 +336,73 @@ mod tests {
         let w40 = Workload::cogvideo_40s();
         let t40 = svc.service_time(&w40, 1);
         assert!(t40 > t1, "40s video must cost more than 20s");
+    }
+
+    #[test]
+    fn fixed_plan_rejects_indivisible_requests_cleanly() {
+        use crate::config::{ParallelSpec, SpDegrees};
+        // Plan with 8 SP ranks per group on 2x8; a workload whose L is
+        // not divisible by 8 must be rejected, not panicked on.
+        let cluster = ClusterSpec::new(2, 8);
+        let spec = ParallelSpec::new(2, 1, SpDegrees::new(8, 1));
+        let svc = SimService::with_plan(cluster, SpAlgo::SwiftFusion, spec).unwrap();
+        let mut odd = Workload::flux_3072();
+        odd.shape.l = 36_001; // not divisible by 8
+        let ok = Workload::flux_3072();
+        let reqs = vec![
+            crate::workload::Request { id: 0, workload: odd, arrival: 0.0, seed: 0 },
+            crate::workload::Request { id: 1, workload: ok, arrival: 0.1, seed: 1 },
+        ];
+        let mut router = Router::new(2, 8, 1, SpAlgo::SwiftFusion);
+        let report = serve(
+            &mut router,
+            BatchPolicy { max_batch: 1, window: 0.0 },
+            reqs,
+            &svc,
+        );
+        assert_eq!(report.metrics.completed(), 1, "valid request served");
+        assert_eq!(report.rejected.len(), 1, "invalid request rejected");
+        assert_eq!(report.rejected[0].0, 0);
+        assert!(
+            report.rejected[0].1.contains("not divisible"),
+            "actionable reason: {}",
+            report.rejected[0].1
+        );
+    }
+
+    #[test]
+    fn cfg_parallel_plan_serves_guided_video_faster() {
+        // The tentpole's serving-level claim: for CFG workloads the auto
+        // hybrid plan (branches on disjoint groups) beats the fixed
+        // single-mesh plan that pays both branches sequentially.
+        let cluster = ClusterSpec::new(4, 8);
+        let w = Workload::cogvideo_20s();
+        let single = {
+            let svc = SimService::with_plan(
+                cluster.clone(),
+                SpAlgo::SwiftFusion,
+                crate::config::ParallelSpec::new(1, 1, SpDegrees::new(8, 4)),
+            )
+            .unwrap();
+            svc.service_time(&w, 1)
+        };
+        let hybrid = {
+            let svc = SimService::auto_plan(cluster, SpAlgo::SwiftFusion);
+            svc.service_time(&w, 1)
+        };
+        assert!(
+            hybrid < single,
+            "auto hybrid plan {hybrid} must beat single mesh {single}"
+        );
+    }
+
+    #[test]
+    fn auto_plan_admits_and_serves_the_paper_suite() {
+        let mut router = Router::new(4, 8, 1, SpAlgo::SwiftFusion);
+        let svc = SimService::auto_plan(router.pods[0].cluster.clone(), SpAlgo::SwiftFusion);
+        let reqs = TraceGen::new(17, 0.02, Workload::paper_suite()).take(12);
+        let report = serve(&mut router, BatchPolicy::default(), reqs, &svc);
+        assert_eq!(report.metrics.completed(), 12);
+        assert!(report.rejected.is_empty());
     }
 }

@@ -26,4 +26,12 @@ pub trait ServiceModel: Sync {
     /// End-to-end service time (seconds) for a batch of `batch` requests
     /// of `workload` on one pod.
     fn service_time(&self, workload: &Workload, batch: usize) -> f64;
+
+    /// Admission check: can this workload run under the engine's plan at
+    /// all? `Err` carries an actionable reason; the serving loop rejects
+    /// such requests cleanly instead of batching them (see
+    /// [`engine::ServeReport::rejected`]). Default: admit everything.
+    fn admit(&self, _workload: &Workload) -> Result<(), String> {
+        Ok(())
+    }
 }

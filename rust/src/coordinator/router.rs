@@ -6,8 +6,10 @@
 //! §4.2) and least-loaded dispatch (earliest-free pod, ties by index —
 //! deterministic).
 
-use crate::config::{ClusterSpec, SpDegrees};
+use crate::analysis;
+use crate::config::{ClusterSpec, ParallelSpec, SpDegrees};
 use crate::sp::SpAlgo;
+use crate::workload::Workload;
 
 /// One serving pod: a sub-cluster running a fixed algorithm.
 #[derive(Debug, Clone)]
@@ -31,6 +33,20 @@ impl Pod {
             }
             _ => SpDegrees::swiftfusion_default(&self.cluster, heads),
         }
+    }
+
+    /// Hybrid CFG×SP plan for one request of `workload` on this pod,
+    /// given how many similar requests are queued behind it — the
+    /// analysis cost model trades SP degree against CFG-branch groups
+    /// and batch replicas.
+    pub fn plan_for(&self, workload: &Workload, queue_depth: usize) -> ParallelSpec {
+        analysis::choose_spec(
+            &self.cluster,
+            self.algo,
+            &workload.shape,
+            workload.cfg_evals,
+            queue_depth,
+        )
     }
 }
 
@@ -122,5 +138,21 @@ mod tests {
     fn deterministic_tiebreak() {
         let r = Router::new(2, 2, 2, SpAlgo::SwiftFusion);
         assert_eq!(r.pick(), 0, "equal free_at -> lowest id");
+    }
+
+    #[test]
+    fn pod_plans_follow_workload_guidance() {
+        use crate::workload::Workload;
+        let r = Router::new(4, 8, 1, SpAlgo::SwiftFusion);
+        let pod = &r.pods[0];
+        // CFG video workload: the long sequence is comm-bound, so the
+        // cost model splits the guidance branches across groups
+        let video = pod.plan_for(&Workload::cogvideo_20s(), 1);
+        assert!(video.validate(&pod.cluster).is_ok());
+        assert_eq!(video.cfg_degree, 2, "{video:?}");
+        // distilled Flux has one branch: nothing to CFG-split
+        let flux = pod.plan_for(&Workload::flux_3072(), 1);
+        assert!(flux.validate(&pod.cluster).is_ok());
+        assert_eq!(flux.cfg_degree, 1, "{flux:?}");
     }
 }

@@ -18,6 +18,50 @@
 //! Python never runs on the request path: after `make artifacts`, the
 //! engine is a self-contained binary.
 //!
+//! ## Hybrid parallelism: the CFG×SP planner
+//!
+//! The paper scales one attention pass across one mesh. The serving
+//! engine composes parallelism dimensions on top of that via
+//! [`config::ParallelSpec`] / [`cluster::plan::ParallelPlan`]:
+//!
+//! ```text
+//!             ClusterSpec (N machines × M GPUs)
+//!                          │
+//!            ParallelPlan::build(spec, algo)           spec = {cfg_degree,
+//!                          │                                   batch_replicas,
+//!          ┌───────────────┼────────────────┐                  sp: P_u × P_r}
+//!          ▼               ▼                ▼
+//!    group 0 (cond)   group 1 (cond,    group k (uncond)   cfg_degree × batch_replicas
+//!    Mesh2D::carved    replica 1) …      …                  contiguous, machine-aligned
+//!    [base, base+G)                                         carves; G = P_u·P_r ranks
+//!          │               │                │
+//!     any SpAlgo      any SpAlgo       any SpAlgo           group-scoped: rings,
+//!    (ring/ulysses/   on its carve     on its carve         all-to-alls and barriers
+//!     torus/swift-                                          are built from the carved
+//!     fusion …)                                             mesh's rank set and never
+//!          │               │                │               cross a partition
+//!          └───────────────┴───────┬────────┘
+//!                                  ▼
+//!               guidance combine  ε = ε_u + s·(ε_c − ε_u)
+//!                        (sp::hybrid)
+//! ```
+//!
+//! Inside each carve the paper's §4.2 placement rules apply unchanged —
+//! [`config::SpDegrees::swiftfusion_default`]'s gcd rule just sees the
+//! group as its "cluster" (P_u = gcd(G, H)), and the torus/TAS machine
+//! geometry is derived from the carve's actual machine footprint. The
+//! [`analysis`] cost model ([`analysis::choose_spec`]) trades SP degree
+//! against CFG-branch groups and batch replicas per request size; the
+//! [`coordinator`] resolves a plan per workload (`--plan auto`) or runs
+//! a fixed one (`--cfg-degree`/`--batch-replicas`), rejecting requests
+//! a plan cannot serve with typed, actionable errors.
+//!
+//! Numeric validation of all of this is hermetic: `ExecMode::HostNumeric`
+//! backs the tile contract with in-process Algorithm-2 kernels
+//! ([`sp::tiles::host`]), so `rust/tests/sp_property.rs` proves every
+//! `SpAlgo` — including group-scoped runs on carved sub-meshes — equal to
+//! the single-device guided-sampling oracle without PJRT or artifacts.
+//!
 //! ## Hardware substitution
 //!
 //! The paper evaluates on 4×8 A100s with NVSwitch + EFA. This environment
@@ -26,6 +70,12 @@
 //! the single-device oracle), while elapsed time is tracked by a calibrated
 //! α–β network/compute model ([`cluster::netsim`], [`analysis`]). See
 //! DESIGN.md §2 for the substitution table and why figure *shapes* survive.
+
+// Kernel-plumbing functions (ring/torus stages, tile ops) thread rank
+// context + geometry + buffers + schedule knobs through flat argument
+// lists on purpose — bundling them into structs would only obscure the
+// correspondence with the paper's Algorithm 1/2 pseudocode.
+#![allow(clippy::too_many_arguments)]
 
 pub mod analysis;
 pub mod bench;

@@ -18,7 +18,7 @@ use anyhow::{bail, Result};
 
 use swiftfusion::cluster::exec::{run_cluster, ExecMode};
 use swiftfusion::comm::Buf;
-use swiftfusion::config::{AttnShape, ClusterSpec, SpDegrees};
+use swiftfusion::config::{AttnShape, ClusterSpec, ParallelSpec, SpDegrees};
 use swiftfusion::coordinator::batcher::BatchPolicy;
 use swiftfusion::coordinator::engine::{serve, SimService};
 use swiftfusion::coordinator::router::Router;
@@ -61,11 +61,19 @@ USAGE: swiftfusion <info|validate|bench-layer|serve|volumes> [flags]
 
   info                                  artifact + config inventory
   validate  --config small4             numeric check: all SP algos vs oracle
-  bench-layer --machines N --gpus M --workload NAME [--algo NAME]
+  bench-layer --machines N --gpus M --workload NAME [--algo NAME] [plan flags]
   serve     --machines N --gpus M --pods K --requests R --rate Q [--algo NAME]
+            [plan flags]
   volumes   --machines N --gpus M --heads H
   trace     --machines N --gpus M --workload NAME [--algo NAME] [--out FILE]
             (per-rank timeline of one attention layer, chrome://tracing JSON)
+
+Hybrid plan flags (bench-layer, serve):
+  --plan single|auto|fixed   single = one SP mesh (default); auto = pick a
+                             CFG x SP x replica plan per workload via the
+                             cost model; fixed = use --cfg-degree/--batch-replicas
+  --cfg-degree N             guidance branches on disjoint groups (1 or 2)
+  --batch-replicas R         independent replica groups beyond the CFG split
 ";
 
 fn workload_by_name(name: &str) -> Result<Workload> {
@@ -73,6 +81,43 @@ fn workload_by_name(name: &str) -> Result<Workload> {
         .into_iter()
         .find(|w| w.name == name)
         .ok_or_else(|| anyhow::anyhow!("unknown workload '{name}'"))
+}
+
+/// The plan mode the flags resolve to: `--cfg-degree` or
+/// `--batch-replicas` without `--plan` implies `--plan fixed`.
+fn effective_plan(args: &Args) -> Result<&str> {
+    let cfg_degree = args.usize_or("cfg-degree", 1)?;
+    let reps = args.usize_or("batch-replicas", 1)?;
+    let default_plan = if cfg_degree > 1 || reps > 1 { "fixed" } else { "single" };
+    Ok(args.str_or("plan", default_plan))
+}
+
+/// Build the service model the plan flags ask for. `heads` sets the gcd
+/// placement rule for fixed plans (24 for the whole paper suite).
+fn service_for(
+    args: &Args,
+    cluster: ClusterSpec,
+    algo: SpAlgo,
+    heads: usize,
+) -> Result<SimService> {
+    match effective_plan(args)? {
+        "single" => Ok(SimService::new(cluster, algo)),
+        "auto" => Ok(SimService::auto_plan(cluster, algo)),
+        "fixed" => {
+            let cfg_degree = args.usize_or("cfg-degree", 1)?;
+            let reps = args.usize_or("batch-replicas", 1)?;
+            let total = cluster.total_gpus();
+            let groups = cfg_degree * reps;
+            anyhow::ensure!(
+                groups > 0 && total % groups == 0,
+                "cfg-degree x batch-replicas ({groups}) must divide the pod's {total} GPUs"
+            );
+            let spec =
+                ParallelSpec::with_gcd_placement(cfg_degree, reps, total / groups, heads);
+            Ok(SimService::with_plan(cluster, algo, spec)?)
+        }
+        other => bail!("unknown --plan '{other}' (expected single, auto, or fixed)"),
+    }
 }
 
 fn cmd_info() -> Result<()> {
@@ -162,15 +207,27 @@ fn cmd_bench_layer(args: &Args) -> Result<()> {
     };
     let mut baseline = None;
     for algo in algos {
-        let svc = SimService::new(cluster.clone(), algo);
-        let t = svc.layer_time(&w, w.shape.b);
+        let svc = service_for(args, cluster.clone(), algo, w.shape.h)?;
+        let spec = svc.resolve_spec(&w);
+        let t = match &spec {
+            None => svc.layer_time(&w, w.shape.b),
+            Some(spec) => svc.plan_layer_time(spec, &w, w.shape.b),
+        };
         if algo == SpAlgo::Usp {
             baseline = Some(t);
         }
         let speedup = baseline
             .map(|b| format!("{:.2}x vs USP", b / t))
             .unwrap_or_default();
-        println!("  {:<12} {:>12}  {speedup}", algo.name(), fmt_time(t));
+        let plan_note = spec
+            .map(|s| {
+                format!(
+                    "  [cfg{} x rep{} x U{}R{}]",
+                    s.cfg_degree, s.batch_replicas, s.sp.pu, s.sp.pr
+                )
+            })
+            .unwrap_or_default();
+        println!("  {:<12} {:>12}  {speedup}{plan_note}", algo.name(), fmt_time(t));
     }
     Ok(())
 }
@@ -186,7 +243,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let max_batch = args.usize_or("max-batch", 2)?;
 
     let mut router = Router::new(n, m, pods, algo);
-    let svc = SimService::new(router.pods[0].cluster.clone(), algo);
+    // every paper-suite workload has 24 heads
+    let svc = service_for(args, router.pods[0].cluster.clone(), algo, 24)?;
+    let plan_label = effective_plan(args)?.to_string();
     let reqs = TraceGen::new(42, rate, Workload::paper_suite()).take(nreq);
     let report = serve(
         &mut router,
@@ -196,9 +255,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     let mut metrics = report.metrics;
     println!(
-        "serving {nreq} requests on {n}x{m} ({pods} pod(s), {})",
-        algo.name()
+        "serving {nreq} requests on {n}x{m} ({pods} pod(s), {}, plan {plan_label})",
+        algo.name(),
     );
+    if !report.rejected.is_empty() {
+        println!("rejected {} request(s):", report.rejected.len());
+        for (id, reason) in &report.rejected {
+            println!("  #{id}: {reason}");
+        }
+    }
     print!("{}", metrics.report());
     Ok(())
 }

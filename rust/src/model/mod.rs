@@ -83,7 +83,13 @@ impl DiTModel {
     }
 
     /// One DDIM update through the artifact.
-    pub fn ddim_step(&self, x: &Tensor, eps: &Tensor, abar_t: f64, abar_prev: f64) -> Result<Tensor> {
+    pub fn ddim_step(
+        &self,
+        x: &Tensor,
+        eps: &Tensor,
+        abar_t: f64,
+        abar_prev: f64,
+    ) -> Result<Tensor> {
         Ok(self
             .rt
             .call(

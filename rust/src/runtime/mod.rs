@@ -94,6 +94,33 @@ impl Runtime {
         Self::load(Manifest::default_dir())
     }
 
+    /// Load the default artifacts if a real PJRT backend is linked and
+    /// the manifest exists; `None` (with a stderr note) otherwise. This
+    /// is what lets artifact-dependent integration tests *skip* instead
+    /// of fail in offline builds (the vendored `xla` stub reports
+    /// PJRT unavailable).
+    pub fn load_default_if_available() -> Option<Self> {
+        if !pjrt_available() {
+            eprintln!("skipping: PJRT unavailable (offline xla stub linked)");
+            return None;
+        }
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!(
+                "skipping: no artifacts at {} (run `make artifacts`)",
+                dir.display()
+            );
+            return None;
+        }
+        match Self::load(dir) {
+            Ok(rt) => Some(rt),
+            Err(e) => {
+                eprintln!("skipping: artifact load failed: {e:#}");
+                None
+            }
+        }
+    }
+
     pub fn handle(&self) -> RuntimeHandle {
         self.handle.clone()
     }
@@ -105,6 +132,12 @@ impl Runtime {
     pub fn stats(&self) -> &RuntimeStats {
         &self.handle.stats
     }
+}
+
+/// True when the linked `xla` crate has a real PJRT backend (false with
+/// the offline stub vendored at `rust/vendor/xla`).
+pub fn pjrt_available() -> bool {
+    xla::AVAILABLE
 }
 
 impl Drop for Runtime {

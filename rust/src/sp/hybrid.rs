@@ -1,0 +1,301 @@
+//! Hybrid CFG×SP execution: run guided-diffusion attention under a
+//! [`ParallelPlan`], with each guidance branch on its own group-scoped
+//! sub-mesh, then merge branch outputs with the classifier-free-guidance
+//! combine step.
+//!
+//! Classifier-free guidance evaluates the model twice per step — once
+//! conditioned on the prompt, once unconditioned — and combines
+//! `eps = eps_u + s · (eps_c − eps_u)`. A single-mesh plan
+//! (`cfg_degree == 1`) runs the two branches back to back; a CFG-parallel
+//! plan (`cfg_degree == 2`) runs them *concurrently* on disjoint halves
+//! of the cluster, trading SP degree for branch parallelism (xDiT's
+//! observation: near-linear extra scaling because the halves never
+//! communicate until the cheap combine).
+
+use anyhow::Result;
+
+use crate::cluster::exec::{run_cluster, ExecMode};
+use crate::cluster::plan::{BranchRole, ParallelPlan};
+use crate::comm::Buf;
+use crate::config::AttnShape;
+use crate::tensor::{Tensor, TensorError};
+
+use super::tiles;
+use super::SpParams;
+
+/// The CFG combine: `eps = uncond + scale · (cond − uncond)`.
+pub fn guidance_combine(
+    cond: &Tensor,
+    uncond: &Tensor,
+    scale: f32,
+) -> Result<Tensor, TensorError> {
+    uncond.add(&cond.sub(uncond)?.scale(scale))
+}
+
+/// Q/K/V for one guidance branch, full (unsharded) `[B, L, H, D]`.
+pub type BranchQkv = (Tensor, Tensor, Tensor);
+
+/// Single-device oracle for one guided attention layer: plain softmax
+/// attention per branch + the guidance combine.
+pub fn guided_attention_oracle(
+    cond: &BranchQkv,
+    uncond: &BranchQkv,
+    scale: f32,
+) -> Result<Tensor, TensorError> {
+    let c = tiles::host::attention_oracle(&cond.0, &cond.1, &cond.2);
+    let u = tiles::host::attention_oracle(&uncond.0, &uncond.1, &uncond.2);
+    guidance_combine(&c, &u, scale)
+}
+
+/// Run one guided distributed attention layer under `plan` with real
+/// tensors. Every rank executes only its group's branch on the group's
+/// carved mesh; branch outputs are gathered from replica 0 of each branch
+/// and merged with [`guidance_combine`]. Returns the combined output
+/// `[B, L, H, D]` and the run's virtual-time makespan.
+///
+/// `mode` must carry real tensors (`HostNumeric`, or `Numeric` with
+/// loaded artifacts); `shape` is the *per-branch* attention shape.
+pub fn guided_attention_distributed(
+    plan: &ParallelPlan,
+    shape: AttnShape,
+    chunk: usize,
+    cond: &BranchQkv,
+    uncond: &BranchQkv,
+    scale: f32,
+    mode: &ExecMode,
+) -> Result<(Tensor, f64)> {
+    anyhow::ensure!(mode.is_numeric(), "guided layer needs a numeric ExecMode");
+    plan.spec.validate_workload(&shape)?;
+    let sp_ranks = plan.spec.ranks_per_group();
+    let ls = shape.l / sp_ranks;
+    let algo = plan.algo;
+
+    let shard = |t: &Tensor, local: usize| -> Buf {
+        Buf::Real(
+            t.slice(1, local * ls, (local + 1) * ls)
+                .expect("branch shard slice"),
+        )
+    };
+
+    // One thread per cluster rank; each runs its group's schedule. The
+    // returned pair is (conditional shard, unconditional shard) — a
+    // single-branch group fills only its side.
+    let run = run_cluster(&plan.cluster, mode, |ctx| {
+        let group = plan.group_of(ctx.rank);
+        let local = group.local_rank(ctx.rank);
+        let params = SpParams { shape, chunk, mesh: group.mesh.clone() };
+        let run_branch = |ctx: &mut crate::cluster::exec::RankCtx, qkv: &BranchQkv| {
+            let out = algo.run(
+                ctx,
+                &params,
+                shard(&qkv.0, local),
+                shard(&qkv.1, local),
+                shard(&qkv.2, local),
+            );
+            out.into_tensor()
+        };
+        match group.role {
+            BranchRole::Conditional => (Some(run_branch(ctx, cond)), None),
+            BranchRole::Unconditional => (None, Some(run_branch(ctx, uncond))),
+            BranchRole::Both => {
+                let c = run_branch(ctx, cond);
+                // fresh window epoch so the second branch can never read
+                // the first branch's exposed buffers
+                ctx.next_epoch();
+                let u = run_branch(ctx, uncond);
+                (Some(c), Some(u))
+            }
+        }
+    });
+
+    // Gather each branch from replica 0 of its group, in rank order.
+    let gather = |role: BranchRole| -> Result<Tensor> {
+        let group = plan.group_for(role, 0);
+        let shards: Vec<&Tensor> = group
+            .ranks()
+            .into_iter()
+            .map(|r| {
+                let (c, u) = &run.outputs[r];
+                let side = if matches!(role, BranchRole::Unconditional) { u } else { c };
+                side.as_ref()
+                    .unwrap_or_else(|| panic!("rank {r} missing {role:?} branch output"))
+            })
+            .collect();
+        Ok(Tensor::concat(&shards, 1)?)
+    };
+    let c = gather(BranchRole::Conditional)?;
+    let u = gather(BranchRole::Unconditional)?;
+    let combined = guidance_combine(&c, &u, scale)?;
+    Ok((combined, run.makespan()))
+}
+
+/// Virtual-time makespan of one attention layer under `plan` in timing
+/// mode (shape-only buffers at paper scale): the executable hybrid cost
+/// model `benches/fig_hybrid.rs` ranks plans with. `cfg_evals` is how
+/// many guidance branches the workload needs (1 for distilled models, 2
+/// for CFG): a `cfg_degree == 1` plan pays them sequentially on its
+/// single mesh, a CFG-parallel plan pays them concurrently, and
+/// unconditional groups idle when the workload has no second branch.
+pub fn hybrid_layer_makespan(
+    plan: &ParallelPlan,
+    shape: AttnShape,
+    chunk: usize,
+    cfg_evals: usize,
+) -> f64 {
+    let sp_ranks = plan.spec.ranks_per_group();
+    let ls = shape.l / sp_ranks;
+    let algo = plan.algo;
+    let run = run_cluster(&plan.cluster, &ExecMode::Timing, |ctx| {
+        let group = plan.group_of(ctx.rank);
+        let params = SpParams { shape, chunk, mesh: group.mesh.clone() };
+        let branches = match group.role {
+            BranchRole::Both => cfg_evals,
+            BranchRole::Conditional => 1,
+            BranchRole::Unconditional => usize::from(cfg_evals >= 2),
+        };
+        for _ in 0..branches {
+            let s = Buf::Shape(vec![shape.b, ls, shape.h, shape.d]);
+            algo.run(ctx, &params, s.clone(), s.clone(), s);
+            ctx.next_epoch();
+        }
+    });
+    run.makespan()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::plan::ParallelPlan;
+    use crate::config::{ClusterSpec, ParallelSpec, SpDegrees};
+    use crate::sp::SpAlgo;
+
+    fn qkv(shape: &AttnShape, seed: u64) -> BranchQkv {
+        let dims = [shape.b, shape.l, shape.h, shape.d];
+        (
+            Tensor::random(&dims, seed),
+            Tensor::random(&dims, seed + 1),
+            Tensor::random(&dims, seed + 2),
+        )
+    }
+
+    #[test]
+    fn guidance_combine_endpoints() {
+        let c = Tensor::full(&[2, 2], 3.0);
+        let u = Tensor::full(&[2, 2], 1.0);
+        // scale 0 -> unconditional; scale 1 -> conditional
+        assert_eq!(guidance_combine(&c, &u, 0.0).unwrap(), u);
+        assert_eq!(guidance_combine(&c, &u, 1.0).unwrap(), c);
+        // scale 2 extrapolates past the conditional branch
+        assert_eq!(guidance_combine(&c, &u, 2.0).unwrap().data()[0], 5.0);
+    }
+
+    #[test]
+    fn cfg_parallel_matches_oracle_host_numeric() {
+        // 2x2 cluster, cfg_degree=2: each branch on a 2-rank carved mesh.
+        let cluster = ClusterSpec::new(2, 2);
+        let shape = AttnShape::new(1, 64, 4, 8);
+        let plan = ParallelPlan::build(
+            &cluster,
+            ParallelSpec::new(2, 1, SpDegrees::new(2, 1)),
+            SpAlgo::Ulysses,
+        )
+        .unwrap();
+        let cond = qkv(&shape, 100);
+        let uncond = qkv(&shape, 200);
+        let (got, makespan) = guided_attention_distributed(
+            &plan,
+            shape,
+            32,
+            &cond,
+            &uncond,
+            7.5,
+            &ExecMode::HostNumeric,
+        )
+        .unwrap();
+        let want = guided_attention_oracle(&cond, &uncond, 7.5).unwrap();
+        let diff = got.max_abs_diff(&want);
+        assert!(diff < 1e-4, "cfg-parallel vs oracle: {diff}");
+        assert!(makespan > 0.0);
+    }
+
+    #[test]
+    fn single_mesh_plan_matches_cfg_parallel() {
+        // The same guided layer through a cfg_degree=1 plan (sequential
+        // branches, SP over all 4 ranks) must agree with the oracle too.
+        let cluster = ClusterSpec::new(2, 2);
+        let shape = AttnShape::new(1, 64, 4, 8);
+        let plan = ParallelPlan::build(
+            &cluster,
+            ParallelSpec::new(1, 1, SpDegrees::new(4, 1)),
+            SpAlgo::Ulysses,
+        )
+        .unwrap();
+        let cond = qkv(&shape, 300);
+        let uncond = qkv(&shape, 400);
+        let (got, _) = guided_attention_distributed(
+            &plan,
+            shape,
+            16,
+            &cond,
+            &uncond,
+            3.0,
+            &ExecMode::HostNumeric,
+        )
+        .unwrap();
+        let want = guided_attention_oracle(&cond, &uncond, 3.0).unwrap();
+        assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn timing_mode_cfg_parallel_beats_sequential_branches() {
+        // Same hardware, same workload: running the two branches
+        // concurrently on halves must beat running them sequentially on
+        // the full mesh when the full-mesh SP efficiency is sub-linear.
+        let cluster = ClusterSpec::new(4, 8);
+        let shape = AttnShape::new(1, 65536, 8, 64);
+        let seq = ParallelPlan::build(
+            &cluster,
+            ParallelSpec::new(1, 1, SpDegrees::new(8, 4)),
+            SpAlgo::SwiftFusion,
+        )
+        .unwrap();
+        let par = ParallelPlan::build(
+            &cluster,
+            ParallelSpec::new(2, 1, SpDegrees::new(8, 2)),
+            SpAlgo::SwiftFusion,
+        )
+        .unwrap();
+        let t_seq = hybrid_layer_makespan(&seq, shape, shape.l / 32, 2);
+        let t_par = hybrid_layer_makespan(&par, shape, shape.l / 16, 2);
+        assert!(
+            t_par < t_seq,
+            "cfg-parallel {t_par} must beat sequential branches {t_seq}"
+        );
+    }
+
+    #[test]
+    fn workload_divisibility_rejected_cleanly() {
+        let cluster = ClusterSpec::new(2, 2);
+        let plan = ParallelPlan::build(
+            &cluster,
+            ParallelSpec::new(2, 1, SpDegrees::new(2, 1)),
+            SpAlgo::Ulysses,
+        )
+        .unwrap();
+        // L=65 is not divisible by the plan's 2 SP ranks
+        let bad = AttnShape::new(1, 65, 4, 8);
+        let cond = qkv(&bad, 1);
+        let uncond = qkv(&bad, 2);
+        let err = guided_attention_distributed(
+            &plan,
+            bad,
+            13,
+            &cond,
+            &uncond,
+            1.0,
+            &ExecMode::HostNumeric,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("not divisible"));
+    }
+}

@@ -20,6 +20,7 @@
 //! Q/KV tensors with carried softmax state), so numeric mode maps 1:1
 //! onto the AOT Pallas artifacts.
 
+pub mod hybrid;
 pub mod ring;
 pub mod swiftfusion;
 pub mod tiles;
@@ -119,7 +120,9 @@ impl SpAlgo {
             SpAlgo::Ring => ring::ring_attention_full(ctx, p, q, k, v),
             SpAlgo::Ulysses => ulysses::ulysses_attention(ctx, p, q, k, v),
             SpAlgo::Usp | SpAlgo::Tas => unified::usp_like(ctx, p, q, k, v),
-            SpAlgo::TorusNccl => torus::torus_attention(ctx, p, q, k, v, torus::CommStyle::TwoSided),
+            SpAlgo::TorusNccl => {
+                torus::torus_attention(ctx, p, q, k, v, torus::CommStyle::TwoSided)
+            }
             SpAlgo::SwiftFusion => swiftfusion::swiftfusion_attention(ctx, p, q, k, v),
         }
     }

@@ -109,9 +109,10 @@ pub fn ring_attention_one_sided(
 }
 
 /// Full-mesh Ring Attention: the classic baseline. Each rank keeps all H
-/// heads and its L/P sequence shard.
+/// heads and its L/P sequence shard. "Full mesh" means the rank set of
+/// `p.mesh` — on a carved sub-mesh the ring stays inside the partition.
 pub fn ring_attention_full(ctx: &mut RankCtx, p: &SpParams, q: Buf, k: Buf, v: Buf) -> Buf {
-    let group: Vec<usize> = (0..p.total_ranks()).collect();
+    let group: Vec<usize> = p.mesh.ranks();
     let flows = ctx.cluster().gpus_per_machine;
     let mut accum = AttnAccum::new(ctx, &q, p.chunk);
     ring_attention_group(ctx, &mut accum, &group, k, v, flows);

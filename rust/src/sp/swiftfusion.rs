@@ -95,7 +95,9 @@ pub fn swiftfusion_attention(ctx: &mut RankCtx, p: &SpParams, q: Buf, k: Buf, v:
     for e in eq.into_iter().chain(ek).chain(ev) {
         ctx.wait_event(e); // quiet
     }
-    ctx.barrier_all(); // global barrier #1
+    // mesh-wide barrier #1 ("global" = every rank of this mesh; on a
+    // carved sub-mesh it must not synchronize with other partitions)
+    ctx.barrier(&p.mesh.ranks());
     let q1 = gather_window(ctx, &geo.intra_u, q_own, 1, "q", flows);
     let k1 = gather_window(ctx, &geo.intra_u, k_own, 1, "k", flows);
     let v1 = gather_window(ctx, &geo.intra_u, v_own, 1, "v", flows);
@@ -116,7 +118,7 @@ pub fn swiftfusion_attention(ctx: &mut RankCtx, p: &SpParams, q: Buf, k: Buf, v:
     for e in eo {
         ctx.wait_event(e);
     }
-    ctx.barrier_all(); // global barrier #2
+    ctx.barrier(&p.mesh.ranks()); // mesh-wide barrier #2
     gather_window(ctx, &geo.intra_u, o_own, 2, "o", flows)
 }
 

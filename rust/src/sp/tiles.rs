@@ -26,6 +26,189 @@ fn dims4(b: &Buf) -> (usize, usize, usize, usize) {
     (s[0], s[1], s[2], s[3])
 }
 
+/// In-process tile kernels: the same partial/merge/finalize math as the
+/// AOT Pallas artifacts (Algorithm 2), in plain f32 on the host. Backs
+/// [`ExecMode::HostNumeric`] so exact numeric validation needs no PJRT —
+/// the property suite and hybrid-plan tests run hermetically.
+pub mod host {
+    use crate::comm::Buf;
+    use crate::sp::AttnState;
+    use crate::tensor::Tensor;
+
+    // Layouts match the artifacts: q/k/v/o are [B, l, g, D] row-major;
+    // the softmax stats l/m are [B, g, l].
+    fn qkv_at(
+        data: &[f32],
+        l: usize,
+        g: usize,
+        d: usize,
+        bi: usize,
+        li: usize,
+        gi: usize,
+    ) -> &[f32] {
+        let base = ((bi * l + li) * g + gi) * d;
+        &data[base..base + d]
+    }
+
+    fn stat_idx(g: usize, l: usize, bi: usize, gi: usize, li: usize) -> usize {
+        (bi * g + gi) * l + li
+    }
+
+    /// One KV block merged into a q tile's carried (O', l, m) state —
+    /// numerically identical to `attn_partial_*` (any `lk`, so it also
+    /// covers the `_s{span}` fused variants).
+    pub fn attn_partial(q: &Buf, k: &Buf, v: &Buf, st: AttnState) -> AttnState {
+        let qs = q.shape();
+        let (b, lq, g, d) = (qs[0], qs[1], qs[2], qs[3]);
+        let lk = k.shape()[1];
+        let scale = 1.0 / (d as f32).sqrt();
+
+        let qd = q.tensor().data();
+        let kd = k.tensor().data();
+        let vd = v.tensor().data();
+        let mut od = st.o.tensor().data().to_vec();
+        let mut ld = st.l.tensor().data().to_vec();
+        let mut md = st.m.tensor().data().to_vec();
+
+        let mut scores = vec![0f32; lk];
+        for bi in 0..b {
+            for gi in 0..g {
+                for qi in 0..lq {
+                    let qrow = qkv_at(qd, lq, g, d, bi, qi, gi);
+                    let mut block_max = f32::NEG_INFINITY;
+                    for (ki, s) in scores.iter_mut().enumerate() {
+                        let krow = qkv_at(kd, lk, g, d, bi, ki, gi);
+                        let dot: f32 = qrow.iter().zip(krow).map(|(a, b)| a * b).sum();
+                        *s = dot * scale;
+                        block_max = block_max.max(*s);
+                    }
+                    let si = stat_idx(g, lq, bi, gi, qi);
+                    let m_old = md[si];
+                    let m_new = m_old.max(block_max);
+                    let corr = if m_old == f32::NEG_INFINITY { 0.0 } else { (m_old - m_new).exp() };
+                    let mut l_new = ld[si] * corr;
+                    let obase = ((bi * lq + qi) * g + gi) * d;
+                    for x in &mut od[obase..obase + d] {
+                        *x *= corr;
+                    }
+                    for (ki, &s) in scores.iter().enumerate() {
+                        let p = (s - m_new).exp();
+                        l_new += p;
+                        let vrow = qkv_at(vd, lk, g, d, bi, ki, gi);
+                        for (o, &vv) in od[obase..obase + d].iter_mut().zip(vrow) {
+                            *o += p * vv;
+                        }
+                    }
+                    ld[si] = l_new;
+                    md[si] = m_new;
+                }
+            }
+        }
+        AttnState {
+            o: Buf::Real(Tensor::new(vec![b, lq, g, d], od).expect("o shape")),
+            l: Buf::Real(Tensor::new(vec![b, g, lq], ld).expect("l shape")),
+            m: Buf::Real(Tensor::new(vec![b, g, lq], md).expect("m shape")),
+        }
+    }
+
+    /// Combine two carried states over the same q tile (Appendix C Eq. 3).
+    pub fn merge_states(a: AttnState, b2: AttnState) -> AttnState {
+        let os = a.o.shape();
+        let (b, lq, g, d) = (os[0], os[1], os[2], os[3]);
+        let oa = a.o.tensor().data();
+        let la = a.l.tensor().data();
+        let ma = a.m.tensor().data();
+        let ob = b2.o.tensor().data();
+        let lb = b2.l.tensor().data();
+        let mb = b2.m.tensor().data();
+
+        let mut od = vec![0f32; oa.len()];
+        let mut ld = vec![0f32; la.len()];
+        let mut md = vec![0f32; ma.len()];
+        for bi in 0..b {
+            for gi in 0..g {
+                for qi in 0..lq {
+                    let si = stat_idx(g, lq, bi, gi, qi);
+                    let m_new = ma[si].max(mb[si]);
+                    let ca = if ma[si] == f32::NEG_INFINITY { 0.0 } else { (ma[si] - m_new).exp() };
+                    let cb = if mb[si] == f32::NEG_INFINITY { 0.0 } else { (mb[si] - m_new).exp() };
+                    ld[si] = la[si] * ca + lb[si] * cb;
+                    md[si] = m_new;
+                    let obase = ((bi * lq + qi) * g + gi) * d;
+                    for di in 0..d {
+                        od[obase + di] = oa[obase + di] * ca + ob[obase + di] * cb;
+                    }
+                }
+            }
+        }
+        AttnState {
+            o: Buf::Real(Tensor::new(vec![b, lq, g, d], od).expect("o shape")),
+            l: Buf::Real(Tensor::new(vec![b, g, lq], ld).expect("l shape")),
+            m: Buf::Real(Tensor::new(vec![b, g, lq], md).expect("m shape")),
+        }
+    }
+
+    /// Normalize a carried state: O = O' / l.
+    pub fn finalize(st: AttnState) -> Buf {
+        let os = st.o.shape();
+        let (b, lq, g, d) = (os[0], os[1], os[2], os[3]);
+        let od = st.o.tensor().data();
+        let ld = st.l.tensor().data();
+        let mut out = vec![0f32; od.len()];
+        for bi in 0..b {
+            for gi in 0..g {
+                for qi in 0..lq {
+                    let li = stat_idx(g, lq, bi, gi, qi);
+                    let obase = ((bi * lq + qi) * g + gi) * d;
+                    for di in 0..d {
+                        out[obase + di] = od[obase + di] / ld[li];
+                    }
+                }
+            }
+        }
+        Buf::Real(Tensor::new(vec![b, lq, g, d], out).expect("o shape"))
+    }
+
+    /// Single-device reference: plain (non-flash) softmax attention of
+    /// `[B, L, H, D]` tensors — an independent code path from the tiled
+    /// partial/merge/finalize kernels, so it can serve as the oracle the
+    /// distributed algorithms are validated against.
+    pub fn attention_oracle(q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
+        let s = q.shape();
+        let (b, l, h, d) = (s[0], s[1], s[2], s[3]);
+        let lk = k.shape()[1];
+        let scale = 1.0 / (d as f32).sqrt();
+        let (qd, kd, vd) = (q.data(), k.data(), v.data());
+        let mut out = vec![0f32; b * l * h * d];
+        let mut scores = vec![0f32; lk];
+        for bi in 0..b {
+            for gi in 0..h {
+                for qi in 0..l {
+                    let qrow = qkv_at(qd, l, h, d, bi, qi, gi);
+                    for (ki, s) in scores.iter_mut().enumerate() {
+                        let krow = qkv_at(kd, lk, h, d, bi, ki, gi);
+                        *s = qrow.iter().zip(krow).map(|(a, b)| a * b).sum::<f32>() * scale;
+                    }
+                    let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                    let mut z = 0f32;
+                    for s in scores.iter_mut() {
+                        *s = (*s - m).exp();
+                        z += *s;
+                    }
+                    let obase = ((bi * l + qi) * h + gi) * d;
+                    for (ki, &p) in scores.iter().enumerate() {
+                        let vrow = qkv_at(vd, lk, h, d, bi, ki, gi);
+                        for (o, &vv) in out[obase..obase + d].iter_mut().zip(vrow) {
+                            *o += p * vv / z;
+                        }
+                    }
+                }
+            }
+        }
+        Tensor::new(vec![b, l, h, d], out).expect("oracle shape")
+    }
+}
+
 /// Merge one KV tile into the carried state of a q tile.
 ///
 /// `q: [B, lq, g, D]`, `k`/`v`: `[B, lk, g, D]`. Numeric mode requires
@@ -37,6 +220,7 @@ pub fn attn_partial(ctx: &mut RankCtx, q: &Buf, k: &Buf, v: &Buf, st: AttnState)
     ctx.compute(ctx.attn_tile_time(b, lq, lk, g, d));
     match &ctx.mode {
         ExecMode::Timing => st,
+        ExecMode::HostNumeric => host::attn_partial(q, k, v, st),
         ExecMode::Numeric { rt, cfg } => {
             let name = format!("attn_partial_{}_h{}", cfg.name, g);
             let out = rt
@@ -78,6 +262,8 @@ pub fn attn_partial_span(
     ctx.compute(ctx.attn_tile_time(b, lq, lk, g, d));
     match &ctx.mode {
         ExecMode::Timing => st,
+        // the host kernel fuses arbitrary spans natively (like Algorithm 2)
+        ExecMode::HostNumeric => host::attn_partial(q, k, v, st),
         ExecMode::Numeric { rt, cfg } => {
             let name = format!("attn_partial_{}_h{}_s{}", cfg.name, g, span);
             let out = rt
@@ -107,7 +293,7 @@ pub fn attn_partial_span(
 /// always — the modelled GPU kernel fuses arbitrarily, like Algorithm 2.)
 fn span_available(ctx: &RankCtx, g: usize, span: usize) -> bool {
     match &ctx.mode {
-        ExecMode::Timing => true,
+        ExecMode::Timing | ExecMode::HostNumeric => true,
         ExecMode::Numeric { rt, cfg } => rt
             .manifest()
             .artifacts
@@ -132,6 +318,9 @@ pub fn attn_partial_chain(
     }
     match &ctx.mode {
         ExecMode::Timing => st,
+        ExecMode::HostNumeric => kvs
+            .iter()
+            .fold(st, |acc, (k, v)| host::attn_partial(q, k, v, acc)),
         ExecMode::Numeric { rt, cfg } => {
             let name = format!("attn_partial_{}_h{}", cfg.name, g);
             let kv_tensors: Vec<(crate::tensor::Tensor, crate::tensor::Tensor)> = kvs
@@ -165,6 +354,7 @@ pub fn merge_states(ctx: &mut RankCtx, a: AttnState, b2: AttnState) -> AttnState
     ctx.compute(t);
     match &ctx.mode {
         ExecMode::Timing => a,
+        ExecMode::HostNumeric => host::merge_states(a, b2),
         ExecMode::Numeric { rt, cfg } => {
             let name = format!("attn_merge_{}_h{}", cfg.name, g);
             let out = rt
@@ -198,6 +388,7 @@ pub fn finalize(ctx: &mut RankCtx, st: AttnState) -> Buf {
     ctx.compute(t);
     match &ctx.mode {
         ExecMode::Timing => st.o,
+        ExecMode::HostNumeric => host::finalize(st),
         ExecMode::Numeric { rt, cfg } => {
             let name = format!("attn_finalize_{}_h{}", cfg.name, g);
             let out = rt
@@ -376,5 +567,72 @@ mod tests {
             let q = Buf::Shape(vec![1, 30, 1, 8]);
             AttnAccum::new(ctx, &q, 16);
         });
+    }
+
+    // ---- host tile kernels (ExecMode::HostNumeric backend) ---------------
+
+    use crate::sp::AttnState;
+    use crate::tensor::Tensor;
+
+    fn rand_buf(shape: &[usize], seed: u64) -> Buf {
+        Buf::Real(Tensor::random(shape, seed))
+    }
+
+    #[test]
+    fn host_chunked_partials_match_oracle() {
+        // Absorbing KV in 4 chunks through the carried state must equal
+        // plain softmax attention.
+        let (b, l, h, d) = (2, 32, 3, 8);
+        let q = Tensor::random(&[b, l, h, d], 1);
+        let k = Tensor::random(&[b, l, h, d], 2);
+        let v = Tensor::random(&[b, l, h, d], 3);
+        let mut st = AttnState::zero(b, l, h, d, true);
+        for i in 0..4 {
+            let ks = Buf::Real(k.slice(1, i * 8, (i + 1) * 8).unwrap());
+            let vs = Buf::Real(v.slice(1, i * 8, (i + 1) * 8).unwrap());
+            st = host::attn_partial(&Buf::Real(q.clone()), &ks, &vs, st);
+        }
+        let got = host::finalize(st).into_tensor();
+        let want = host::attention_oracle(&q, &k, &v);
+        let diff = got.max_abs_diff(&want);
+        assert!(diff < 1e-5, "chunked flash vs plain softmax: {diff}");
+    }
+
+    #[test]
+    fn host_merge_commutes_and_matches_sequential() {
+        let (b, l, h, d) = (1, 8, 2, 4);
+        let q = rand_buf(&[b, l, h, d], 10);
+        let mk = |seed| (rand_buf(&[b, l, h, d], seed), rand_buf(&[b, l, h, d], seed + 1));
+        let (k1, v1) = mk(20);
+        let (k2, v2) = mk(30);
+        let zero = || AttnState::zero(b, l, h, d, true);
+        // independent partials then merge, both orders
+        let a = host::attn_partial(&q, &k1, &v1, zero());
+        let bb = host::attn_partial(&q, &k2, &v2, zero());
+        let ab = host::finalize(host::merge_states(a.clone(), bb.clone())).into_tensor();
+        let ba = host::finalize(host::merge_states(bb, a)).into_tensor();
+        assert!(ab.max_abs_diff(&ba) < 1e-5, "merge must commute");
+        // and equal the sequential chain
+        let seq = host::attn_partial(&q, &k2, &v2, host::attn_partial(&q, &k1, &v1, zero()));
+        let seq = host::finalize(seq).into_tensor();
+        assert!(ab.max_abs_diff(&seq) < 1e-5, "merge must equal chaining");
+    }
+
+    #[test]
+    fn host_numeric_accum_matches_oracle() {
+        // The full AttnAccum plumbing under ExecMode::HostNumeric.
+        let c = ClusterSpec::new(1, 1);
+        let (b, l, h, d) = (1, 64, 2, 16);
+        let q = Tensor::random(&[b, l, h, d], 41);
+        let k = Tensor::random(&[b, l, h, d], 42);
+        let v = Tensor::random(&[b, l, h, d], 43);
+        let want = host::attention_oracle(&q, &k, &v);
+        let run = run_cluster(&c, &ExecMode::HostNumeric, |ctx| {
+            let mut acc = AttnAccum::new(ctx, &Buf::Real(q.clone()), 16);
+            acc.absorb(ctx, &Buf::Real(k.clone()), &Buf::Real(v.clone()), None);
+            acc.finish(ctx).into_tensor()
+        });
+        let diff = run.outputs[0].max_abs_diff(&want);
+        assert!(diff < 1e-5, "accum vs oracle: {diff}");
     }
 }

@@ -296,7 +296,17 @@ fn torus_one_sided(
     let own_idx: Vec<usize> = (0..tiles_per_chunk).collect();
 
     // ---- Pull Q stage 1: local Q_t × local K_t (ring over r) ----------
-    stage_ring(ctx, &mut accum, geo, &k_sl[t], &v_sl[t], &own_idx, CommStyle::OneSided, "tsq.0", flows);
+    stage_ring(
+        ctx,
+        &mut accum,
+        geo,
+        &k_sl[t],
+        &v_sl[t],
+        &own_idx,
+        CommStyle::OneSided,
+        "tsq.0",
+        flows,
+    );
 
     // ---- Pull Q stages 2..T: pulled Q × local K_t ----------------------
     let mut pulled_idx: Vec<usize> = Vec::new();
@@ -431,7 +441,17 @@ fn torus_two_sided(
     let tiles_per_chunk = accum.num_tiles();
     let own_idx: Vec<usize> = (0..tiles_per_chunk).collect();
 
-    stage_ring(ctx, &mut accum, geo, &k_sl[t], &v_sl[t], &own_idx, CommStyle::TwoSided, "twsq.0", flows);
+    stage_ring(
+        ctx,
+        &mut accum,
+        geo,
+        &k_sl[t],
+        &v_sl[t],
+        &own_idx,
+        CommStyle::TwoSided,
+        "twsq.0",
+        flows,
+    );
 
     let mut pulled_idx: Vec<usize> = Vec::new();
     for rq in q_recvs {
@@ -440,14 +460,34 @@ fn torus_two_sided(
         accum.push_q(ctx, &qc);
         let idx: Vec<usize> = (before..accum.num_tiles()).collect();
         pulled_idx.extend(&idx);
-        stage_ring(ctx, &mut accum, geo, &k_sl[t], &v_sl[t], &idx, CommStyle::TwoSided, "twsq", flows);
+        stage_ring(
+            ctx,
+            &mut accum,
+            geo,
+            &k_sl[t],
+            &v_sl[t],
+            &idx,
+            CommStyle::TwoSided,
+            "twsq",
+            flows,
+        );
     }
 
     let mut pulled_kv = Vec::new();
     for (rk, rv) in kv_recvs {
         let kc = ctx.wait_get(rk);
         let vc = ctx.wait_get(rv);
-        stage_ring(ctx, &mut accum, geo, &kc, &vc, &pulled_idx, CommStyle::TwoSided, "twskv", flows);
+        stage_ring(
+            ctx,
+            &mut accum,
+            geo,
+            &kc,
+            &vc,
+            &pulled_idx,
+            CommStyle::TwoSided,
+            "twskv",
+            flows,
+        );
         pulled_kv.push((kc, vc));
     }
 

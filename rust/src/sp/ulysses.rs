@@ -90,9 +90,10 @@ pub fn ulysses_attention_group(
 }
 
 /// Mesh-wide Ulysses (the paper's single-machine baseline and the M=1
-/// degenerate case of every method).
+/// degenerate case of every method). On a carved sub-mesh the all-to-alls
+/// stay inside the partition.
 pub fn ulysses_attention(ctx: &mut RankCtx, p: &SpParams, q: Buf, k: Buf, v: Buf) -> Buf {
-    let group: Vec<usize> = (0..p.total_ranks()).collect();
+    let group: Vec<usize> = p.mesh.ranks();
     assert_eq!(
         p.shape.h % group.len(),
         0,

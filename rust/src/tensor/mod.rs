@@ -20,19 +20,42 @@ impl fmt::Debug for Tensor {
     }
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum TensorError {
-    #[error("shape {shape:?} implies {expected} elements, got {got}")]
     ShapeMismatch { shape: Vec<usize>, expected: usize, got: usize },
-    #[error("axis {axis} out of range for rank-{rank} tensor")]
     BadAxis { axis: usize, rank: usize },
-    #[error("cannot split axis of length {len} into {parts} equal parts")]
     BadSplit { len: usize, parts: usize },
-    #[error("range {start}..{end} out of bounds for axis of length {len}")]
     BadRange { start: usize, end: usize, len: usize },
-    #[error("concat shapes incompatible at axis {axis}: {a:?} vs {b:?}")]
     BadConcat { axis: usize, a: Vec<usize>, b: Vec<usize> },
+    BinaryShapeMismatch { a: Vec<usize>, b: Vec<usize> },
 }
+
+impl fmt::Display for TensorError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TensorError::ShapeMismatch { shape, expected, got } => {
+                write!(f, "shape {shape:?} implies {expected} elements, got {got}")
+            }
+            TensorError::BadAxis { axis, rank } => {
+                write!(f, "axis {axis} out of range for rank-{rank} tensor")
+            }
+            TensorError::BadSplit { len, parts } => {
+                write!(f, "cannot split axis of length {len} into {parts} equal parts")
+            }
+            TensorError::BadRange { start, end, len } => {
+                write!(f, "range {start}..{end} out of bounds for axis of length {len}")
+            }
+            TensorError::BadConcat { axis, a, b } => {
+                write!(f, "concat shapes incompatible at axis {axis}: {a:?} vs {b:?}")
+            }
+            TensorError::BinaryShapeMismatch { a, b } => {
+                write!(f, "elementwise op needs equal shapes: {a:?} vs {b:?}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TensorError {}
 
 impl Tensor {
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self, TensorError> {
@@ -228,6 +251,44 @@ impl Tensor {
     pub fn is_finite(&self) -> bool {
         self.data.iter().all(|x| x.is_finite())
     }
+
+    fn zip_with(
+        &self,
+        other: &Tensor,
+        f: impl Fn(f32, f32) -> f32,
+    ) -> Result<Self, TensorError> {
+        if self.shape != other.shape {
+            return Err(TensorError::BinaryShapeMismatch {
+                a: self.shape.clone(),
+                b: other.shape.clone(),
+            });
+        }
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| f(a, b))
+            .collect();
+        Ok(Self { shape: self.shape.clone(), data })
+    }
+
+    /// Elementwise sum (shapes must match).
+    pub fn add(&self, other: &Tensor) -> Result<Self, TensorError> {
+        self.zip_with(other, |a, b| a + b)
+    }
+
+    /// Elementwise difference (shapes must match).
+    pub fn sub(&self, other: &Tensor) -> Result<Self, TensorError> {
+        self.zip_with(other, |a, b| a - b)
+    }
+
+    /// Multiply every element by a scalar.
+    pub fn scale(&self, s: f32) -> Self {
+        Self {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| x * s).collect(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -333,6 +394,17 @@ mod tests {
         assert_eq!(s.rank(), 0);
         assert_eq!(s.len(), 1);
         assert_eq!(s.bytes(), 4);
+    }
+
+    #[test]
+    fn elementwise_ops() {
+        let a = seq(&[2, 2]);
+        let b = Tensor::full(&[2, 2], 1.0);
+        assert_eq!(a.add(&b).unwrap().data(), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(a.sub(&b).unwrap().data(), &[-1.0, 0.0, 1.0, 2.0]);
+        assert_eq!(a.scale(2.0).data(), &[0.0, 2.0, 4.0, 6.0]);
+        let c = seq(&[4]);
+        assert!(a.add(&c).is_err(), "shape mismatch must be rejected");
     }
 
     #[test]

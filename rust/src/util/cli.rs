@@ -11,13 +11,24 @@ pub struct Args {
     positional: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("missing required argument --{0}")]
     Missing(String),
-    #[error("argument --{0} has invalid value '{1}': expected {2}")]
     Invalid(String, String, &'static str),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Missing(k) => write!(f, "missing required argument --{k}"),
+            CliError::Invalid(k, v, want) => {
+                write!(f, "argument --{k} has invalid value '{v}': expected {want}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     /// Parse from an iterator of arguments (excluding argv[0]).

@@ -14,7 +14,13 @@ pub fn image_tokens(width: usize, height: usize, patch: usize) -> usize {
 }
 
 /// Video: temporal 4× compression at `fps`, then per-frame image tokens.
-pub fn video_tokens(width: usize, height: usize, seconds: usize, fps: usize, patch: usize) -> usize {
+pub fn video_tokens(
+    width: usize,
+    height: usize,
+    seconds: usize,
+    fps: usize,
+    patch: usize,
+) -> usize {
     let frames = (seconds * fps).div_ceil(4);
     frames * image_tokens(width, height, patch)
 }
@@ -29,17 +35,24 @@ pub struct Workload {
     pub layers: usize,
     /// Sampling steps for a full generation.
     pub steps: usize,
+    /// Guidance branches per step: 1 for guidance-distilled models, 2 for
+    /// classifier-free guidance (conditional + unconditional). CFG-
+    /// parallel plans (`config::ParallelSpec::cfg_degree == 2`) run the
+    /// two branches concurrently on disjoint device groups.
+    pub cfg_evals: usize,
 }
 
 impl Workload {
     /// Flux-12B (§5.1): 24 heads, D=128. 3072×3072 with patch 2 on the
-    /// 8×-downsampled latent → (3072/8/2)² = 36 864 tokens.
+    /// 8×-downsampled latent → (3072/8/2)² = 36 864 tokens. Flux-dev is
+    /// guidance-distilled: one eval per step.
     pub fn flux_3072() -> Self {
         Self {
             name: "flux-3072",
             shape: AttnShape::new(1, image_tokens(3072, 3072, 2), 24, 128),
             layers: 19,
             steps: 28,
+            cfg_evals: 1,
         }
     }
 
@@ -50,18 +63,21 @@ impl Workload {
             shape: AttnShape::new(1, image_tokens(4096, 4096, 2), 24, 128),
             layers: 19,
             steps: 28,
+            cfg_evals: 1,
         }
     }
 
     /// CogVideoX-5B (§5.1): 24 heads, D=64, 768×1360 video at the
     /// model's 8 fps with 4× temporal VAE compression, patch 2 →
-    /// 40 latent frames × 4080 tokens ≈ 163k tokens at 20 s.
+    /// 40 latent frames × 4080 tokens ≈ 163k tokens at 20 s. Samples
+    /// with classifier-free guidance (two evals per step).
     pub fn cogvideo_20s() -> Self {
         Self {
             name: "cogvideox-20s",
             shape: AttnShape::new(1, video_tokens(1360, 768, 20, 8, 2), 24, 64),
             layers: 30,
             steps: 50,
+            cfg_evals: 2,
         }
     }
 
@@ -73,6 +89,7 @@ impl Workload {
             shape: AttnShape::new(1, video_tokens(1360, 768, 40, 8, 2), 24, 64),
             layers: 30,
             steps: 50,
+            cfg_evals: 2,
         }
     }
 
@@ -164,6 +181,9 @@ mod tests {
         let l40 = Workload::cogvideo_40s().shape.l;
         assert_eq!(l40, 2 * l20);
         assert!(l20 > 100_000, "{l20}");
+        // guidance: Flux is distilled (1 eval), CogVideoX runs CFG (2)
+        assert_eq!(suite[0].cfg_evals, 1);
+        assert_eq!(suite[2].cfg_evals, 2);
     }
 
     #[test]

@@ -1,0 +1,250 @@
+//! Property-based numeric validation of every SP algorithm, hermetically
+//! (no PJRT, no artifacts): random `(B, L, H, D)` shapes and mesh
+//! degrees, real tensors through the threaded cluster in
+//! `ExecMode::HostNumeric` (in-process Algorithm-2 tile kernels), each
+//! rank's output shard compared against the independent plain-softmax
+//! oracle — including the *group-scoped* paths on carved sub-meshes that
+//! the hybrid CFG×SP planner uses.
+//!
+//! Tolerance is 1e-4 in f32: the distributed schedules only reorder the
+//! softmax merge, they never approximate.
+
+use swiftfusion::cluster::exec::{run_cluster, ExecMode};
+use swiftfusion::cluster::plan::ParallelPlan;
+use swiftfusion::comm::Buf;
+use swiftfusion::config::{gcd, AttnShape, ClusterSpec, ParallelSpec, SpDegrees};
+use swiftfusion::sp::hybrid::{guided_attention_distributed, guided_attention_oracle};
+use swiftfusion::sp::tiles::host;
+use swiftfusion::sp::{SpAlgo, SpParams};
+use swiftfusion::tensor::Tensor;
+use swiftfusion::util::prop::{self, Gen};
+
+const TOL: f32 = 1e-4;
+
+fn rand_qkv(shape: &AttnShape, seed: u64) -> (Tensor, Tensor, Tensor) {
+    let dims = [shape.b, shape.l, shape.h, shape.d];
+    (
+        Tensor::random(&dims, seed),
+        Tensor::random(&dims, seed.wrapping_add(1)),
+        Tensor::random(&dims, seed.wrapping_add(2)),
+    )
+}
+
+/// Valid P_u for `algo` on a `ranks`-rank mesh with `h` heads, one picked
+/// per case: Ring has no Ulysses dimension, Ulysses has only one, and
+/// the 2D algorithms accept any divisor of gcd(ranks, h).
+fn pick_pu(g: &mut Gen, algo: SpAlgo, ranks: usize, h: usize) -> usize {
+    match algo {
+        SpAlgo::Ring => 1,
+        SpAlgo::Ulysses => ranks,
+        _ => {
+            let gg = gcd(ranks, h);
+            let divs: Vec<usize> = (1..=gg).filter(|x| gg % x == 0).collect();
+            *g.choose(&divs)
+        }
+    }
+}
+
+/// Run `algo` on the full `cluster` mesh and compare every rank's shard
+/// against the oracle.
+fn check_full_mesh(
+    cluster: &ClusterSpec,
+    algo: SpAlgo,
+    pu: usize,
+    shape: AttnShape,
+    chunk: usize,
+    seed: u64,
+) {
+    let p = cluster.total_gpus();
+    let (q, k, v) = rand_qkv(&shape, seed);
+    let oracle = host::attention_oracle(&q, &k, &v);
+    let params = SpParams {
+        shape,
+        chunk,
+        mesh: algo.mesh(cluster, SpDegrees::new(pu, p / pu)),
+    };
+    let ls = shape.l / p;
+    let run = run_cluster(cluster, &ExecMode::HostNumeric, |ctx| {
+        let r = ctx.rank;
+        let qs = Buf::Real(q.slice(1, r * ls, (r + 1) * ls).unwrap());
+        let ks = Buf::Real(k.slice(1, r * ls, (r + 1) * ls).unwrap());
+        let vs = Buf::Real(v.slice(1, r * ls, (r + 1) * ls).unwrap());
+        algo.run(ctx, &params, qs, ks, vs).into_tensor()
+    });
+    for (rank, got) in run.outputs.iter().enumerate() {
+        let want = oracle.slice(1, rank * ls, (rank + 1) * ls).unwrap();
+        let diff = got.max_abs_diff(&want);
+        assert!(
+            diff < TOL,
+            "{} on {}x{} pu={pu} shape {shape:?}: rank {rank} diff {diff}",
+            algo.name(),
+            cluster.machines,
+            cluster.gpus_per_machine,
+        );
+    }
+    assert!(run.makespan() > 0.0, "virtual time must advance");
+}
+
+#[test]
+fn prop_all_algos_match_oracle_on_random_shapes() {
+    prop::run(12, |g| {
+        let (n, m) = *g.choose(&[(1, 1), (1, 2), (2, 1), (2, 2), (1, 4), (4, 1), (2, 4), (4, 2)]);
+        let cluster = ClusterSpec::new(n, m);
+        let p = n * m;
+        // H a multiple of P so even mesh-wide Ulysses is valid
+        let h = p * g.int(1, if p >= 4 { 1 } else { 2 });
+        let d = *g.choose(&[4usize, 8]);
+        let chunk = *g.choose(&[4usize, 8]);
+        let shape = AttnShape::new(g.int(1, 2), p * chunk, h, d);
+        for algo in SpAlgo::ALL {
+            let pu = pick_pu(g, algo, p, h);
+            check_full_mesh(&cluster, algo, pu, shape, chunk, g.seed ^ 0xA77);
+        }
+    });
+}
+
+#[test]
+fn prop_cfg_parallel_carved_groups_match_guided_oracle() {
+    // Random guided layers under cfg_degree=2 plans: each branch on its
+    // own carved sub-mesh, merged by the guidance combine. Covers carves
+    // whose groups span several machines (base-offset torus paths) and
+    // carves with several groups per machine.
+    prop::run(10, |g| {
+        let (n, m) = *g.choose(&[(2, 1), (2, 2), (4, 1), (2, 4), (4, 2)]);
+        let cluster = ClusterSpec::new(n, m);
+        let group = n * m / 2;
+        let h = group * g.int(1, if group >= 4 { 1 } else { 2 });
+        let d = *g.choose(&[4usize, 8]);
+        let chunk = *g.choose(&[4usize, 8]);
+        let shape = AttnShape::new(1, group * chunk, h, d);
+        let algo = *g.choose(&SpAlgo::ALL);
+        let pu = pick_pu(g, algo, group, h);
+        let spec = ParallelSpec::new(2, 1, SpDegrees::new(pu, group / pu));
+        assert!(spec.validate(&cluster).is_ok(), "{spec:?} on {n}x{m}");
+        let plan = ParallelPlan::build(&cluster, spec, algo).unwrap();
+
+        let cond = rand_qkv(&shape, g.seed ^ 0xC0);
+        let uncond = rand_qkv(&shape, g.seed ^ 0xD0);
+        let scale = g.f64(0.0, 10.0) as f32;
+        let (got, makespan) = guided_attention_distributed(
+            &plan,
+            shape,
+            chunk,
+            &cond,
+            &uncond,
+            scale,
+            &ExecMode::HostNumeric,
+        )
+        .unwrap();
+        let want = guided_attention_oracle(&cond, &uncond, scale).unwrap();
+        let diff = got.max_abs_diff(&want);
+        assert!(
+            diff < TOL,
+            "{} cfg2 on {n}x{m} (group {group}, pu {pu}): diff {diff}",
+            algo.name()
+        );
+        assert!(makespan > 0.0);
+    });
+}
+
+#[test]
+fn cfg_parallel_two_by_two_all_algos_match_guided_oracle() {
+    // The acceptance case, pinned (not randomized): a 2×2 simulated
+    // cluster, cfg_degree=2, each branch on a group-scoped 2-rank SP
+    // sub-mesh — every SpAlgo must reproduce the single-device
+    // guided-sampling oracle within fp tolerance.
+    let cluster = ClusterSpec::new(2, 2);
+    let shape = AttnShape::new(2, 64, 4, 8);
+    let cond = rand_qkv(&shape, 9000);
+    let uncond = rand_qkv(&shape, 9100);
+    let scale = 6.5;
+    let want = guided_attention_oracle(&cond, &uncond, scale).unwrap();
+    for algo in SpAlgo::ALL {
+        let pu = match algo {
+            SpAlgo::Ring => 1,
+            _ => 2,
+        };
+        let spec = ParallelSpec::new(2, 1, SpDegrees::new(pu, 2 / pu));
+        let plan = ParallelPlan::build(&cluster, spec, algo).unwrap();
+        let (got, _) = guided_attention_distributed(
+            &plan,
+            shape,
+            16,
+            &cond,
+            &uncond,
+            scale,
+            &ExecMode::HostNumeric,
+        )
+        .unwrap();
+        let diff = got.max_abs_diff(&want);
+        assert!(diff < TOL, "{} cfg2 on 2x2: diff {diff}", algo.name());
+    }
+}
+
+#[test]
+fn batch_replica_groups_are_independent_and_exact() {
+    // cfg_degree=1 × batch_replicas=2: every replica group runs both
+    // branches on its own carved mesh; numerics still match the oracle.
+    let cluster = ClusterSpec::new(2, 2);
+    let shape = AttnShape::new(1, 32, 4, 8);
+    let spec = ParallelSpec::new(1, 2, SpDegrees::new(2, 1));
+    let plan = ParallelPlan::build(&cluster, spec, SpAlgo::SwiftFusion).unwrap();
+    let cond = rand_qkv(&shape, 777);
+    let uncond = rand_qkv(&shape, 888);
+    let (got, _) = guided_attention_distributed(
+        &plan,
+        shape,
+        16,
+        &cond,
+        &uncond,
+        4.0,
+        &ExecMode::HostNumeric,
+    )
+    .unwrap();
+    let want = guided_attention_oracle(&cond, &uncond, 4.0).unwrap();
+    assert!(got.max_abs_diff(&want) < TOL);
+}
+
+#[test]
+fn prop_host_mode_agrees_across_algorithms() {
+    // Cross-algorithm agreement without any oracle: all six algorithms
+    // are the same mathematical function, so pairwise outputs must agree
+    // even on shapes where we never computed the plain-softmax reference.
+    prop::run(6, |g| {
+        let cluster = ClusterSpec::new(2, 2);
+        let h = *g.choose(&[4usize, 8]);
+        let chunk = *g.choose(&[4usize, 8]);
+        let shape = AttnShape::new(1, 4 * chunk, h, *g.choose(&[4usize, 8]));
+        let (q, k, v) = rand_qkv(&shape, g.seed ^ 0xBEEF);
+        let ls = shape.l / 4;
+        let mut first: Option<(String, Vec<Tensor>)> = None;
+        for algo in SpAlgo::ALL {
+            let pu = pick_pu(g, algo, 4, h);
+            let params = SpParams {
+                shape,
+                chunk,
+                mesh: algo.mesh(&cluster, SpDegrees::new(pu, 4 / pu)),
+            };
+            let run = run_cluster(&cluster, &ExecMode::HostNumeric, |ctx| {
+                let r = ctx.rank;
+                let qs = Buf::Real(q.slice(1, r * ls, (r + 1) * ls).unwrap());
+                let ks = Buf::Real(k.slice(1, r * ls, (r + 1) * ls).unwrap());
+                let vs = Buf::Real(v.slice(1, r * ls, (r + 1) * ls).unwrap());
+                algo.run(ctx, &params, qs, ks, vs).into_tensor()
+            });
+            match &first {
+                None => first = Some((algo.name().to_string(), run.outputs)),
+                Some((base_name, base)) => {
+                    for (rank, (a, b)) in base.iter().zip(&run.outputs).enumerate() {
+                        let diff = a.max_abs_diff(b);
+                        assert!(
+                            diff < TOL,
+                            "{base_name} vs {} rank {rank}: {diff}",
+                            algo.name()
+                        );
+                    }
+                }
+            }
+        }
+    });
+}

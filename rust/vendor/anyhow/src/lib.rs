@@ -1,0 +1,207 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! Implements the subset of the API this workspace uses: [`Error`] (an
+//! opaque, context-carrying error), `Result<T>` with a defaulted error
+//! type, the `anyhow!` / `bail!` / `ensure!` macros, and the [`Context`]
+//! extension trait. Like real anyhow, `Error` deliberately does NOT
+//! implement `std::error::Error`, which is what allows the blanket
+//! `From<E: std::error::Error>` conversion to exist.
+//!
+//! `Display` prints the outermost message only; `{:#}` (alternate) prints
+//! the whole cause chain separated by `: `, matching anyhow's behaviour.
+
+use std::fmt;
+
+/// Opaque error: a message plus an optional cause chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Self { msg: m.to_string(), source: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, c: C) -> Self {
+        Self { msg: c.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// The cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &Error> {
+        let mut cur = Some(self);
+        std::iter::from_fn(move || {
+            let e = cur?;
+            cur = e.source.as_deref();
+            Some(e)
+        })
+    }
+
+    /// The innermost error in the chain.
+    pub fn root_cause(&self) -> &Error {
+        self.chain().last().expect("chain is never empty")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            for (i, e) in self.chain().enumerate() {
+                if i > 0 {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{}", e.msg)?;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut rest = self.source.as_deref();
+        if rest.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = rest {
+            write!(f, "\n    {}", e.msg)?;
+            rest = e.source.as_deref();
+        }
+        Ok(())
+    }
+}
+
+// The blanket conversion that makes `?` work on any std error. Error
+// itself is not a std error, so this cannot conflict with the identity.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut out: Option<Error> = None;
+        for m in msgs.into_iter().rev() {
+            out = Some(match out {
+                None => Error::msg(m),
+                Some(inner) => inner.context(m),
+            });
+        }
+        out.expect("at least one message")
+    }
+}
+
+/// Extension trait adding `.context(...)` / `.with_context(...)` to
+/// `Result`s whose error converts into [`Error`].
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an error built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn display_shows_outermost_context() {
+        let e: Error = io_err().into();
+        let e = e.context("reading manifest.json");
+        assert_eq!(e.to_string(), "reading manifest.json");
+        let alt = format!("{e:#}");
+        assert!(alt.contains("reading manifest.json"));
+        assert!(alt.contains("no such file"));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(inner().unwrap_err().to_string().contains("no such file"));
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("bad value {}", 7);
+        assert_eq!(e.to_string(), "bad value 7");
+        fn f(x: usize) -> Result<usize> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert!(f(3).is_err());
+        assert!(f(11).unwrap_err().to_string().contains("too big"));
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let ok: std::result::Result<u32, std::io::Error> = Ok(5);
+        let mut called = false;
+        let got = ok
+            .with_context(|| {
+                called = true;
+                "never built"
+            })
+            .unwrap();
+        assert_eq!(got, 5);
+        assert!(!called, "context closure must not run on Ok");
+    }
+}

@@ -1,0 +1,183 @@
+//! Offline stub of the `xla` (xla_extension) PJRT bindings.
+//!
+//! This container has no network access and no prebuilt xla_extension, so
+//! this crate mirrors the API surface `swiftfusion::runtime` uses and
+//! reports PJRT as unavailable: [`PjRtClient::cpu`] returns an error, and
+//! the runtime's service thread degrades gracefully (every artifact call
+//! fails with a clear message; artifact-dependent tests skip).
+//!
+//! Swapping this path dependency for the real bindings re-enables the
+//! numeric PJRT path with zero changes to the engine — the types and
+//! signatures below match the subset of xla_extension 0.5.x in use.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+/// `AVAILABLE` lets callers gate artifact-dependent work at compile time:
+/// the real bindings export `true`.
+pub const AVAILABLE: bool = false;
+
+/// Error type mirroring `xla::Error` (only constructed by the stub).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn unavailable(what: &str) -> Self {
+        Self {
+            msg: format!(
+                "{what}: PJRT is unavailable (built with the offline xla stub; \
+                 swap rust/vendor/xla for the real xla_extension bindings)"
+            ),
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "XlaError({})", self.msg)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Host literal (stub carries the data so pure-host round trips work).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+/// Element types a [`Literal`] can be read back as (f32 only here).
+pub trait NativeType: Sized {
+    fn from_f32(x: f32) -> Self;
+}
+
+impl NativeType for f32 {
+    fn from_f32(x: f32) -> Self {
+        x
+    }
+}
+
+impl Literal {
+    pub fn scalar(v: f32) -> Self {
+        Self { data: vec![v], dims: vec![] }
+    }
+
+    pub fn vec1(v: &[f32]) -> Self {
+        Self { data: v.to_vec(), dims: vec![v.len() as i64] }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Self> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error {
+                msg: format!("reshape {:?} on {} elements", dims, self.data.len()),
+            });
+        }
+        Ok(Self { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&x| T::from_f32(x)).collect())
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable("Literal::to_tuple"))
+    }
+}
+
+/// Parsed HLO module (stub: never successfully constructed).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<Self> {
+        Err(Error::unavailable(&format!(
+            "HloModuleProto::from_text_file({})",
+            path.as_ref().display()
+        )))
+    }
+}
+
+/// XLA computation handle.
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        Self { _private: () }
+    }
+}
+
+/// Device buffer returned by an execution.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client. The stub's constructor always fails; the engine's service
+/// thread catches this and fails artifact calls with the message.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{err:?}").contains("offline xla stub"));
+    }
+
+    #[test]
+    fn literal_roundtrip_works_on_host() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(Literal::vec1(&[1.0]).reshape(&[3]).is_err());
+    }
+}
