@@ -61,10 +61,7 @@ fn main() {
         thr_rows.push((w.name.to_string(), thr));
 
         let picked = analysis::choose_spec(&cluster, algo, &w.shape, w.cfg_evals, 1);
-        println!(
-            "  {:<16} chooser (latency): cfg{} x rep{} x U{}R{}",
-            w.name, picked.cfg_degree, picked.batch_replicas, picked.sp.pu, picked.sp.pr
-        );
+        println!("  {:<16} chooser (latency): {}", w.name, picked.label());
     }
 
     print_table(

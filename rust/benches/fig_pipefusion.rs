@@ -1,0 +1,88 @@
+//! PipeFusion sweep on the 4×8-A100 testbed: sp-only vs pp×sp vs
+//! cfg×pp×sp, per paper workload.
+//!
+//! Latency is the *executable* timing-mode makespan of one attention
+//! layer under the plan — group-scoped SP schedules on carved sub-meshes
+//! for the non-pipelined plans, the displaced patch pipeline
+//! (`sp::pipefusion`) for `pp_degree > 1` — scaled to a full generation.
+//! Expected shape: the long CFG video workloads gain most from adding
+//! the pp dimension because a one-machine pipeline stage pays zero
+//! inter-machine all-to-all (the per-patch activation hops are far
+//! smaller and overlap with compute); short distilled workloads are
+//! latency-bound on the hops and stay with plain SP. The closed-form
+//! chooser (`analysis::choose_spec`) is printed alongside so its ranking
+//! can be compared with the executable model's.
+//!
+//! Run: `cargo bench --bench fig_pipefusion`
+
+use swiftfusion::analysis;
+use swiftfusion::bench::{print_table, Series};
+use swiftfusion::config::{ClusterSpec, ParallelSpec};
+use swiftfusion::coordinator::engine::SimService;
+use swiftfusion::sp::SpAlgo;
+use swiftfusion::util::stats::fmt_time;
+use swiftfusion::workload::Workload;
+
+/// The plans under comparison: (label, cfg_degree, pp_degree, replicas).
+/// Stage SP degrees follow the gcd placement rule on the stage size.
+const PLANS: [(&str, usize, usize, usize); 4] = [
+    ("sp-only (cfg1 sp32)", 1, 1, 1),
+    ("pp2 x sp16", 1, 2, 1),
+    ("pp4 x sp8", 1, 4, 1),
+    ("cfg2 x pp2 x sp8", 2, 2, 1),
+];
+
+fn spec_for(
+    cluster: &ClusterSpec,
+    cfg: usize,
+    pp: usize,
+    reps: usize,
+    heads: usize,
+) -> ParallelSpec {
+    let stage = cluster.total_gpus() / (cfg * pp * reps);
+    ParallelSpec::with_gcd_placement_pp(cfg, pp, reps, stage, heads)
+}
+
+fn main() {
+    let cluster = ClusterSpec::paper_testbed();
+    let algo = SpAlgo::SwiftFusion;
+    let patches = analysis::DEFAULT_PATCHES;
+    println!(
+        "PipeFusion plan sweep on 4x8 A100 ({}, {patches} patches)",
+        algo.name()
+    );
+
+    let mut lat_series: Vec<Series> = PLANS.iter().map(|(l, _, _, _)| Series::new(*l)).collect();
+
+    for w in Workload::paper_suite() {
+        for (i, (label, cfg, pp, reps)) in PLANS.iter().enumerate() {
+            let spec = spec_for(&cluster, *cfg, *pp, *reps, w.shape.h);
+            assert!(spec.validate(&cluster).is_ok(), "{label} invalid on 4x8");
+            let svc =
+                SimService::with_plan(cluster.clone(), algo, spec).expect("validated spec");
+            // one full generation at batch 1 under this plan
+            let gen = svc.plan_layer_time(&spec, &w, 1) * w.layers as f64 * w.steps as f64;
+            lat_series[i].push(w.name, gen);
+        }
+        let picked = analysis::choose_spec(&cluster, algo, &w.shape, w.cfg_evals, 1);
+        println!("  {:<16} chooser (latency): {}", w.name, picked.label());
+    }
+
+    print_table(
+        "fig_pipefusion: one full generation (batch 1), per plan",
+        &lat_series,
+        Some(PLANS[0].0),
+    );
+
+    // sanity lines the acceptance criterion reads off this bench: the
+    // pipelined plans must beat sp-only on the long CFG video workloads
+    for (i, (label, _, _, _)) in PLANS.iter().enumerate() {
+        let video = lat_series[i]
+            .points
+            .iter()
+            .find(|(x, _)| x == "cogvideox-20s")
+            .map(|(_, y)| *y)
+            .unwrap();
+        println!("plan {label}: cogvideox-20s generation {}", fmt_time(video));
+    }
+}

@@ -109,18 +109,18 @@ pub fn compute_time(shape: &AttnShape, cluster: &ClusterSpec, total_ranks: usize
 }
 
 // ---------------------------------------------------------------------------
-// Hybrid CFG×SP plan cost model
+// Hybrid CFG×PP×SP plan cost model
 // ---------------------------------------------------------------------------
 
-/// Closed-form per-step attention latency estimate (seconds) of a hybrid
-/// plan: `evals × (compute + inter-comm + intra-comm)` where
-/// `evals = ceil(cfg_evals / cfg_degree)` is how many guidance branches
-/// each group runs sequentially. `shape` is the *per-branch* shape with
-/// the per-replica batch; `batch_replicas` does not change this latency
-/// (it adds independent groups), only throughput — see
-/// [`choose_spec`]. The terms reuse the Appendix-D volume formulas on the
-/// group's sub-geometry, so the model and the executable schedules agree
-/// in ordering (cross-checked by `rust/tests/sp_property.rs`).
+/// Default patch count for the displaced patch pipeline (PipeFusion's
+/// `M`): enough patches to keep the bubble fraction `(pp−1)/(pp·M)`
+/// small without making the per-patch inter-stage transfers
+/// latency-bound.
+pub const DEFAULT_PATCHES: usize = 4;
+
+/// Closed-form per-layer attention latency estimate (seconds) of a
+/// hybrid plan with [`DEFAULT_PATCHES`] pipeline patches; see
+/// [`plan_step_cost_patches`].
 pub fn plan_step_cost(
     cluster: &ClusterSpec,
     algo: SpAlgo,
@@ -128,29 +128,89 @@ pub fn plan_step_cost(
     spec: &ParallelSpec,
     cfg_evals: usize,
 ) -> f64 {
-    let group = spec.ranks_per_group();
+    plan_step_cost_patches(cluster, algo, shape, spec, cfg_evals, DEFAULT_PATCHES)
+}
+
+/// Closed-form per-layer attention latency estimate (seconds) of a
+/// hybrid plan: `evals × stage-layer terms`, where
+/// `evals = ceil(cfg_evals / cfg_degree)` is how many guidance branches
+/// each group runs sequentially and the SP compute/comm terms are taken
+/// on the *stage* sub-geometry (the stage is the SP mesh). `shape` is
+/// the *per-branch* shape with the per-replica batch; `batch_replicas`
+/// does not change this latency (it adds independent groups), only
+/// throughput — see [`choose_spec`].
+///
+/// For `pp_degree > 1` the pipeline terms follow PipeFusion: the layers
+/// are spread over `pp` stages, so the per-layer wall time is the stage
+/// layer time divided by `pp`, inflated by the pipeline-fill bubble —
+/// `(pp−1)/(pp·patches)` of the stage layer time — plus the exposed part
+/// of the per-patch inter-stage α–β activation transfer
+/// (`B·L/M·H·D` elements per patch, independent of the SP degree),
+/// overlapped against one patch's compute. The SP comm terms shrink to
+/// the stage geometry, which is the whole point: a stage that fits in a
+/// machine pays **zero** inter-machine all-to-all.
+pub fn plan_step_cost_patches(
+    cluster: &ClusterSpec,
+    algo: SpAlgo,
+    shape: &AttnShape,
+    spec: &ParallelSpec,
+    cfg_evals: usize,
+    patches: usize,
+) -> f64 {
+    let stage = spec.ranks_per_stage();
     let m = cluster.gpus_per_machine;
-    // group sub-geometry: whole machines per group, or a machine slice
-    let (n_g, m_g) = if group >= m { (group / m, m) } else { (1, group) };
+    // stage sub-geometry: whole machines per stage, or a machine slice
+    let (n_g, m_g) = if stage >= m { (stage / m, m) } else { (1, stage) };
     let evals = cfg_evals.div_ceil(spec.cfg_degree.max(1)) as f64;
 
-    let comp = compute_time(shape, cluster, group);
+    let comp = compute_time(shape, cluster, stage);
     let inter_elems = inter_volume(algo, shape, n_g, m_g, spec.sp);
     let inter = if n_g > 1 {
         cluster.net.inter_lat + inter_elems * 4.0 / cluster.net.inter_bw_per_flow(m_g)
     } else {
         0.0
     };
-    // intra term: the group moves ~4 shard-sized tensors over NVSwitch
+    // intra term: the stage moves ~4 shard-sized tensors over NVSwitch
     // (Q/K/V in, O out) regardless of algorithm
     let intra = cluster.net.intra_lat
-        + 4.0 * shape.bytes_per_tensor() / group as f64 / cluster.net.intra_bw;
-    evals * (comp + inter + intra)
+        + 4.0 * shape.bytes_per_tensor() / stage as f64 / cluster.net.intra_bw;
+    let stage_layer = comp + inter + intra;
+
+    let pp = spec.pp_degree.max(1);
+    if pp == 1 {
+        return evals * stage_layer;
+    }
+
+    // --- pipeline terms -------------------------------------------------
+    let ppf = pp as f64;
+    let mm = patches.max(1) as f64;
+    // per-patch inter-stage activation hop: one [B, L/M, H, D] tensor,
+    // split across the stage's ranks (rank j streams to rank j of the
+    // next stage); inter-machine iff the group spans machines.
+    let per_rank_patch_bytes = shape.bytes_per_tensor() / mm / stage as f64;
+    let hop = if spec.ranks_per_group() > m {
+        cluster.net.inter_lat
+            + per_rank_patch_bytes / cluster.net.inter_bw_per_flow(m_g)
+    } else {
+        cluster.net.intra_lat + per_rank_patch_bytes / cluster.net.intra_bw
+    };
+    // the hop overlaps the next patch's compute on the stage; only the
+    // excess is exposed, once per patch per stage boundary
+    let per_patch_compute = stage_layer / mm;
+    let hop_exposed = (hop - per_patch_compute).max(0.0);
+    // pipelined block of pp one-layer stages over M patches:
+    //   (M + pp − 1) · (stage_layer/M + exposed hop)
+    // divided by pp for the per-layer equivalent; the (pp−1)/(pp·M)
+    // bubble is the first term's inflation over stage_layer/pp.
+    let per_layer =
+        stage_layer / ppf * (1.0 + (ppf - 1.0) / mm) + (mm + ppf - 1.0) * hop_exposed / ppf;
+    evals * per_layer
 }
 
 /// All structurally valid hybrid specs for a cluster/head count, each
-/// group's SP degrees set by the paper's gcd placement rule. Covers
-/// `cfg_degree ∈ {1, 2}` × every machine-aligned replica count.
+/// stage's SP degrees set by the paper's gcd placement rule. Covers
+/// `cfg_degree ∈ {1, 2}` × every machine-aligned pipeline depth ×
+/// replica count.
 pub fn enumerate_specs(cluster: &ClusterSpec, heads: usize) -> Vec<ParallelSpec> {
     let total = cluster.total_gpus();
     let mut out = Vec::new();
@@ -159,26 +219,33 @@ pub fn enumerate_specs(cluster: &ClusterSpec, heads: usize) -> Vec<ParallelSpec>
             continue;
         }
         let per_branch = total / cfg;
-        for reps in 1..=per_branch {
-            if per_branch % reps != 0 {
+        for pp in 1..=per_branch {
+            if per_branch % pp != 0 {
                 continue;
             }
-            let group = per_branch / reps;
-            let spec = ParallelSpec::with_gcd_placement(cfg, reps, group, heads);
-            if spec.validate(cluster).is_ok() {
-                out.push(spec);
+            let per_pipe = per_branch / pp;
+            for reps in 1..=per_pipe {
+                if per_pipe % reps != 0 {
+                    continue;
+                }
+                let stage = per_pipe / reps;
+                let spec = ParallelSpec::with_gcd_placement_pp(cfg, pp, reps, stage, heads);
+                if spec.validate(cluster).is_ok() {
+                    out.push(spec);
+                }
             }
         }
     }
     out
 }
 
-/// Pick the spec minimizing modeled *service* cost for a request of
-/// `shape` when `queue_depth` same-sized requests are waiting: batch
-/// replicas beyond the queue depth idle (no work to fill them), so the
-/// effective cost is `step latency / min(batch_replicas, queue_depth)`.
-/// `queue_depth = 1` therefore optimizes pure latency. Deterministic:
-/// ties break toward fewer groups (larger SP meshes).
+/// The total order used to break cost ties: ascending degrees prefer
+/// fewer groups / shallower pipelines (larger SP meshes).
+fn spec_sort_key(s: &ParallelSpec) -> (usize, usize, usize, usize, usize) {
+    (s.cfg_degree, s.pp_degree, s.batch_replicas, s.sp.pu, s.sp.pr)
+}
+
+/// [`choose_spec_with_patches`] at the [`DEFAULT_PATCHES`] patch count.
 pub fn choose_spec(
     cluster: &ClusterSpec,
     algo: SpAlgo,
@@ -186,19 +253,46 @@ pub fn choose_spec(
     cfg_evals: usize,
     queue_depth: usize,
 ) -> ParallelSpec {
-    let mut specs = enumerate_specs(cluster, shape.h);
-    // stable order: fewest groups first so equal costs prefer big meshes
-    specs.sort_by_key(|s| (s.groups(), s.cfg_degree));
-    let mut best: Option<(f64, ParallelSpec)> = None;
-    for spec in specs {
-        let useful = spec.batch_replicas.min(queue_depth.max(1)) as f64;
-        let cost = plan_step_cost(cluster, algo, shape, &spec, cfg_evals) / useful;
-        match best {
-            Some((b, _)) if b <= cost => {}
-            _ => best = Some((cost, spec)),
-        }
-    }
-    best.map(|(_, s)| s)
+    choose_spec_with_patches(cluster, algo, shape, cfg_evals, queue_depth, DEFAULT_PATCHES)
+}
+
+/// Pick the spec minimizing modeled *service* cost for a request of
+/// `shape` when `queue_depth` same-sized requests are waiting: batch
+/// replicas beyond the queue depth idle (no work to fill them), so the
+/// effective cost is `step latency / min(batch_replicas, queue_depth)`.
+/// `queue_depth = 1` therefore optimizes pure latency.
+///
+/// Deterministic by construction: every candidate is scored, then the
+/// whole list is ordered by `(cost, spec key)` before the argmin — the
+/// choice can never depend on platform float quirks breaking ties or on
+/// container iteration order.
+pub fn choose_spec_with_patches(
+    cluster: &ClusterSpec,
+    algo: SpAlgo,
+    shape: &AttnShape,
+    cfg_evals: usize,
+    queue_depth: usize,
+    patches: usize,
+) -> ParallelSpec {
+    let mut scored: Vec<(f64, ParallelSpec)> = enumerate_specs(cluster, shape.h)
+        .into_iter()
+        .map(|spec| {
+            let useful = spec.batch_replicas.min(queue_depth.max(1)) as f64;
+            let cost =
+                plan_step_cost_patches(cluster, algo, shape, &spec, cfg_evals, patches)
+                    / useful;
+            (cost, spec)
+        })
+        .collect();
+    scored.sort_by(|a, b| {
+        a.0.partial_cmp(&b.0)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| spec_sort_key(&a.1).cmp(&spec_sort_key(&b.1)))
+    });
+    scored
+        .into_iter()
+        .next()
+        .map(|(_, s)| s)
         .unwrap_or_else(|| ParallelSpec::single(cluster, shape.h))
 }
 
@@ -328,6 +422,72 @@ mod tests {
         assert!(specs.iter().any(|s| s.cfg_degree == 1));
         assert!(specs.iter().any(|s| s.cfg_degree == 2));
         assert!(specs.iter().any(|s| s.batch_replicas > 1));
+        // the 3D plan space: pipelined candidates are enumerated too,
+        // including composed cfg x pp x sp plans
+        assert!(specs.iter().any(|s| s.pp_degree > 1));
+        assert!(specs.iter().any(|s| s.cfg_degree == 2 && s.pp_degree == 2));
+    }
+
+    #[test]
+    fn pipeline_chosen_for_long_sequence_multi_machine() {
+        // CFG video on the 4x8 testbed: a pipelined plan keeps each
+        // stage's SP inside one machine (zero inter-machine all-to-all)
+        // and pays only the per-patch activation hops + bubble, so the
+        // model must both rank it above the best non-pipelined plan and
+        // have the chooser pick it.
+        let c = ClusterSpec::paper_testbed();
+        let s = shape(); // 96k tokens, 24 heads
+        let pp_plan = ParallelSpec::with_gcd_placement_pp(2, 2, 1, 8, 24);
+        let sp_plan = ParallelSpec::with_gcd_placement(2, 1, 16, 24);
+        let t_pp = plan_step_cost(&c, SpAlgo::SwiftFusion, &s, &pp_plan, 2);
+        let t_sp = plan_step_cost(&c, SpAlgo::SwiftFusion, &s, &sp_plan, 2);
+        assert!(t_pp < t_sp, "pp2 {t_pp} must beat sp-only {t_sp}");
+        let picked = choose_spec(&c, SpAlgo::SwiftFusion, &s, 2, 1);
+        assert!(picked.pp_degree > 1, "chooser prefers a pipelined plan: {picked:?}");
+        assert_eq!(picked.cfg_degree, 2, "CFG parallelism survives: {picked:?}");
+    }
+
+    #[test]
+    fn short_sequences_do_not_pipeline() {
+        // Small requests are latency-bound on the per-patch hops: the
+        // exposed transfers outweigh the saved all-to-all.
+        let c = ClusterSpec::paper_testbed();
+        let small = AttnShape::new(1, 4096, 24, 64);
+        let picked = choose_spec(&c, SpAlgo::SwiftFusion, &small, 1, 1);
+        assert_eq!(picked.pp_degree, 1, "{picked:?}");
+    }
+
+    #[test]
+    fn choose_spec_is_deterministic_and_minimal() {
+        // Regression for the (cost, key) ordering: the returned spec must
+        // be the argmin of the scored candidate list under the total
+        // order, recomputed independently here — and identical across
+        // repeated calls.
+        let c = ClusterSpec::paper_testbed();
+        for (wshape, evals, queue) in [
+            (shape(), 2, 1),
+            (shape(), 1, 1),
+            (AttnShape::new(1, 4096, 24, 64), 1, 32),
+            (AttnShape::new(1, 163_200, 24, 64), 2, 4),
+        ] {
+            let picked = choose_spec(&c, SpAlgo::SwiftFusion, &wshape, evals, queue);
+            let again = choose_spec(&c, SpAlgo::SwiftFusion, &wshape, evals, queue);
+            assert_eq!(picked, again, "repeated calls must agree");
+            let cost_of = |s: &ParallelSpec| {
+                let useful = s.batch_replicas.min(queue) as f64;
+                plan_step_cost(&c, SpAlgo::SwiftFusion, &wshape, s, evals) / useful
+            };
+            let picked_cost = cost_of(&picked);
+            for cand in enumerate_specs(&c, wshape.h) {
+                let cost = cost_of(&cand);
+                assert!(
+                    picked_cost < cost
+                        || (picked_cost == cost
+                            && spec_sort_key(&picked) <= spec_sort_key(&cand)),
+                    "{picked:?} (cost {picked_cost}) not minimal vs {cand:?} (cost {cost})"
+                );
+            }
+        }
     }
 
     #[test]

@@ -1,19 +1,24 @@
 //! Hybrid parallel plans: carve a cluster into CFG-branch / batch-replica
-//! groups, each running a group-scoped 2D SP mesh.
+//! groups, each split into pipeline stages running group-scoped 2D SP
+//! meshes — the 3D `cfg × pp × sp` plan space.
 //!
 //! The paper scales a *single* attention pass across one mesh; a serving
 //! engine composes parallelism dimensions. A [`ParallelPlan`] partitions
 //! the cluster's ranks into `cfg_degree × batch_replicas` contiguous,
-//! machine-aligned groups and gives each a carved [`Mesh2D`]
+//! machine-aligned groups, carves each group into `pp_degree` contiguous
+//! pipeline *stages*, and gives every stage a carved [`Mesh2D`]
 //! communicator, so any [`crate::sp::SpAlgo`] runs unchanged *inside* its
-//! group — collectives (rings, all-to-alls, barriers) are built from the
+//! stage — collectives (rings, all-to-alls, barriers) are built from the
 //! mesh's rank set and therefore never cross a partition boundary.
 //!
 //! With `cfg_degree == 2`, the conditional and unconditional guidance
 //! branches of classifier-free-guidance sampling run concurrently on the
 //! two halves (xDiT's CFG parallelism); their outputs are merged by the
-//! guidance combine step (`crate::sp::hybrid`). `batch_replicas` adds
-//! plain data parallelism over requests beyond that.
+//! guidance combine step (`crate::sp::hybrid`). With `pp_degree > 1`,
+//! DiT layers are partitioned across the group's stages and the latent
+//! sequence streams between them as patches — PipeFusion's displaced
+//! patch pipeline (`crate::sp::pipefusion`). `batch_replicas` adds plain
+//! data parallelism over requests beyond that.
 
 use crate::cluster::Mesh2D;
 use crate::config::{ClusterSpec, ParallelSpec, ParallelSpecError};
@@ -30,7 +35,8 @@ pub enum BranchRole {
     Unconditional,
 }
 
-/// One carved replica group: a contiguous rank range with a private mesh.
+/// One carved replica group: a contiguous rank range split into
+/// `pp_degree` pipeline stages, each a private SP sub-mesh.
 #[derive(Debug, Clone)]
 pub struct ParallelGroup {
     /// Group index in `[0, cfg_degree · batch_replicas)`, branch-major.
@@ -38,25 +44,64 @@ pub struct ParallelGroup {
     pub role: BranchRole,
     /// Batch-replica index within the branch.
     pub replica: usize,
-    /// Group-scoped communicator (carved sub-mesh).
-    pub mesh: Mesh2D,
+    /// One carved SP sub-mesh per pipeline stage, in stage order.
+    /// Length is the spec's `pp_degree`.
+    pub stages: Vec<Mesh2D>,
 }
 
 impl ParallelGroup {
-    /// First absolute rank of the group.
-    pub fn base(&self) -> usize {
-        self.mesh.base
+    /// The stage-0 communicator — the group's *only* mesh when
+    /// `pp_degree == 1` (the non-pipelined SP paths use this directly).
+    pub fn mesh(&self) -> &Mesh2D {
+        &self.stages[0]
     }
 
-    /// Absolute ranks of the group, ascending.
+    /// First absolute rank of the group.
+    pub fn base(&self) -> usize {
+        self.stages[0].base
+    }
+
+    /// Number of pipeline stages in this group.
+    pub fn pp_degree(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Total ranks of the group (all stages).
+    pub fn len(&self) -> usize {
+        self.stages.len() * self.stages[0].total()
+    }
+
+    /// A group always has at least one stage of at least one rank.
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Does the group (any of its stages) own this absolute rank?
+    pub fn contains(&self, rank: usize) -> bool {
+        (self.base()..self.base() + self.len()).contains(&rank)
+    }
+
+    /// Absolute ranks of the group across all stages, ascending.
     pub fn ranks(&self) -> Vec<usize> {
-        self.mesh.ranks()
+        (self.base()..self.base() + self.len()).collect()
     }
 
     /// Group-relative index of an absolute rank.
     pub fn local_rank(&self, rank: usize) -> usize {
-        debug_assert!(self.mesh.contains(rank), "rank {rank} outside group");
-        rank - self.mesh.base
+        debug_assert!(self.contains(rank), "rank {rank} outside group");
+        rank - self.base()
+    }
+
+    /// Pipeline-stage index of an absolute rank (stages are contiguous
+    /// and equal-sized, so this is a division).
+    pub fn stage_of(&self, rank: usize) -> usize {
+        debug_assert!(self.contains(rank), "rank {rank} outside group");
+        (rank - self.base()) / self.stages[0].total()
+    }
+
+    /// The stage sub-mesh owning an absolute rank.
+    pub fn stage_mesh(&self, rank: usize) -> &Mesh2D {
+        &self.stages[self.stage_of(rank)]
     }
 }
 
@@ -72,14 +117,17 @@ pub struct ParallelPlan {
 impl ParallelPlan {
     /// Validate `spec` against `cluster` and carve the groups. Groups are
     /// laid out branch-major: all conditional replicas first, then the
-    /// unconditional ones (when `cfg_degree == 2`).
+    /// unconditional ones (when `cfg_degree == 2`). Inside a group the
+    /// `pp_degree` pipeline stages are contiguous, machine-aligned
+    /// carves in stage order.
     pub fn build(
         cluster: &ClusterSpec,
         spec: ParallelSpec,
         algo: SpAlgo,
     ) -> Result<Self, ParallelSpecError> {
         spec.validate(cluster)?;
-        let size = spec.ranks_per_group();
+        let group_size = spec.ranks_per_group();
+        let stage_size = spec.ranks_per_stage();
         let groups = (0..spec.groups())
             .map(|g| {
                 let role = if spec.cfg_degree == 1 {
@@ -89,12 +137,18 @@ impl ParallelPlan {
                 } else {
                     BranchRole::Unconditional
                 };
-                ParallelGroup {
-                    index: g,
-                    role,
-                    replica: g % spec.batch_replicas,
-                    mesh: Mesh2D::carved(cluster.clone(), spec.sp, algo.placement(), g * size),
-                }
+                let base = g * group_size;
+                let stages: Vec<Mesh2D> = (0..spec.pp_degree)
+                    .map(|s| {
+                        Mesh2D::carved(
+                            cluster.clone(),
+                            spec.sp,
+                            algo.placement(),
+                            base + s * stage_size,
+                        )
+                    })
+                    .collect();
+                ParallelGroup { index: g, role, replica: g % spec.batch_replicas, stages }
             })
             .collect();
         Ok(Self { cluster: cluster.clone(), spec, algo, groups })
@@ -199,6 +253,67 @@ mod tests {
     }
 
     #[test]
+    fn pipeline_stages_partition_each_group() {
+        // cfg2 x pp2 x sp8 on the 4x8 testbed: two branch groups of 16,
+        // each split into two machine-aligned 8-rank stages.
+        let cluster = ClusterSpec::new(4, 8);
+        let plan = ParallelPlan::build(
+            &cluster,
+            ParallelSpec::with_pp(2, 2, 1, SpDegrees::new(8, 1)),
+            SpAlgo::SwiftFusion,
+        )
+        .unwrap();
+        assert_eq!(plan.groups.len(), 2);
+        let mut seen = vec![false; 32];
+        for g in &plan.groups {
+            assert_eq!(g.pp_degree(), 2);
+            assert_eq!(g.len(), 16);
+            assert_eq!(g.ranks().len(), 16);
+            for (s, mesh) in g.stages.iter().enumerate() {
+                // stages are contiguous, in order, and machine-aligned
+                assert_eq!(mesh.base, g.base() + s * 8);
+                assert_eq!(mesh.inter_machine_fraction(&mesh.ranks()), 0.0);
+                for r in mesh.ranks() {
+                    assert!(!seen[r], "rank {r} in two stages");
+                    seen[r] = true;
+                    assert_eq!(g.stage_of(r), s);
+                    assert_eq!(g.stage_mesh(r).base, mesh.base);
+                    assert_eq!(plan.group_of(r).index, g.index);
+                    // stage collectives stay inside the stage carve
+                    for peer in mesh.ulysses_group(r).into_iter().chain(mesh.ring_group(r)) {
+                        assert!(mesh.contains(peer), "collective escaped the stage");
+                    }
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+        // branch roles survive the pipeline split
+        assert_eq!(plan.groups[0].role, BranchRole::Conditional);
+        assert_eq!(plan.groups[1].role, BranchRole::Unconditional);
+    }
+
+    #[test]
+    fn single_stage_groups_expose_their_mesh() {
+        // pp = 1: stages == [mesh]; the legacy accessors keep working.
+        let cluster = ClusterSpec::new(2, 2);
+        let plan = ParallelPlan::build(
+            &cluster,
+            ParallelSpec::new(2, 1, SpDegrees::new(2, 1)),
+            SpAlgo::Ulysses,
+        )
+        .unwrap();
+        for g in &plan.groups {
+            assert_eq!(g.pp_degree(), 1);
+            assert_eq!(g.stages[0].base, g.mesh().base);
+            assert_eq!(g.ranks(), g.mesh().ranks());
+            for r in g.ranks() {
+                assert_eq!(g.stage_of(r), 0);
+                assert_eq!(g.local_rank(r), r - g.base());
+            }
+        }
+    }
+
+    #[test]
     fn group_meshes_never_share_ranks_with_neighbors() {
         let cluster = ClusterSpec::new(2, 4);
         let plan = ParallelPlan::build(
@@ -209,10 +324,10 @@ mod tests {
         .unwrap();
         // each branch is exactly one machine here
         for g in &plan.groups {
-            assert_eq!(g.mesh.inter_machine_fraction(&g.ranks()), 0.0);
+            assert_eq!(g.mesh().inter_machine_fraction(&g.ranks()), 0.0);
             for r in g.ranks() {
-                for peer in g.mesh.ulysses_group(r).into_iter().chain(g.mesh.ring_group(r)) {
-                    assert!(g.mesh.contains(peer), "collective escaped the carve");
+                for peer in g.mesh().ulysses_group(r).into_iter().chain(g.mesh().ring_group(r)) {
+                    assert!(g.mesh().contains(peer), "collective escaped the carve");
                 }
             }
         }

@@ -79,16 +79,31 @@ impl Buf {
         }
     }
 
+    /// Split along `axis` into `parts` equal pieces. Degenerate inputs
+    /// (zero parts, out-of-range axis, a dimension the parts don't
+    /// divide) fail with a descriptive assertion rather than an index
+    /// panic deep inside the tensor layer.
     pub fn split(&self, axis: usize, parts: usize) -> Vec<Buf> {
+        assert!(parts > 0, "Buf::split of {:?} into zero parts", self.shape());
+        assert!(
+            axis < self.shape().len(),
+            "Buf::split axis {axis} out of bounds for shape {:?}",
+            self.shape()
+        );
+        assert_eq!(
+            self.shape()[axis] % parts,
+            0,
+            "Buf::split axis {axis} of {:?} into {parts} unequal parts",
+            self.shape()
+        );
         match self {
             Buf::Real(t) => t
                 .split(axis, parts)
-                .expect("split")
+                .expect("split checked above")
                 .into_iter()
                 .map(Buf::Real)
                 .collect(),
             Buf::Shape(s) => {
-                assert_eq!(s[axis] % parts, 0, "split {s:?} axis {axis} by {parts}");
                 let mut out = s.clone();
                 out[axis] /= parts;
                 vec![Buf::Shape(out); parts]
@@ -96,13 +111,33 @@ impl Buf {
         }
     }
 
+    /// Concatenate along `axis`. An empty buffer list, an out-of-range
+    /// axis, or mismatched off-axis dimensions fail with a descriptive
+    /// assertion rather than an index panic.
     pub fn concat(bufs: &[Buf], axis: usize) -> Buf {
-        assert!(!bufs.is_empty());
+        assert!(!bufs.is_empty(), "Buf::concat of an empty buffer list");
+        let first = bufs[0].shape();
+        assert!(
+            axis < first.len(),
+            "Buf::concat axis {axis} out of bounds for shape {first:?}"
+        );
+        for b in bufs {
+            let s = b.shape();
+            let compatible = s.len() == first.len()
+                && s.iter()
+                    .zip(first)
+                    .enumerate()
+                    .all(|(i, (a, b))| i == axis || a == b);
+            assert!(
+                compatible,
+                "Buf::concat axis {axis} shape mismatch: {s:?} vs {first:?}"
+            );
+        }
         if bufs.iter().all(|b| b.is_real()) {
             let ts: Vec<&Tensor> = bufs.iter().map(|b| b.tensor()).collect();
-            Buf::Real(Tensor::concat(&ts, axis).expect("concat"))
+            Buf::Real(Tensor::concat(&ts, axis).expect("concat checked above"))
         } else {
-            let mut s = bufs[0].shape().to_vec();
+            let mut s = first.to_vec();
             s[axis] = bufs.iter().map(|b| b.shape()[axis]).sum();
             Buf::Shape(s)
         }
@@ -536,6 +571,54 @@ mod tests {
     #[should_panic(expected = "no tensor data")]
     fn shape_buf_tensor_panics() {
         Buf::Shape(vec![2]).tensor();
+    }
+
+    #[test]
+    #[should_panic(expected = "empty buffer list")]
+    fn concat_empty_panics_with_reason() {
+        Buf::concat(&[], 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "axis 3 out of bounds")]
+    fn concat_axis_out_of_bounds_panics_with_reason() {
+        Buf::concat(&[Buf::Shape(vec![2, 2])], 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn concat_mismatched_off_axis_dims_panics_with_reason() {
+        Buf::concat(&[Buf::Shape(vec![2, 4]), Buf::Shape(vec![3, 4])], 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "zero parts")]
+    fn split_zero_parts_panics_with_reason() {
+        Buf::Shape(vec![8]).split(0, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "unequal parts")]
+    fn split_indivisible_panics_with_reason() {
+        Buf::Real(Tensor::zeros(&[2, 9])).split(1, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "axis 2 out of bounds")]
+    fn split_axis_out_of_bounds_panics_with_reason() {
+        Buf::Shape(vec![4, 4]).split(2, 2);
+    }
+
+    #[test]
+    fn concat_mixed_modes_takes_shape_path() {
+        // one timing-mode buf degrades the whole concat to shape-only,
+        // with the axis dim summed
+        let out = Buf::concat(
+            &[Buf::Real(Tensor::zeros(&[1, 4])), Buf::Shape(vec![1, 2])],
+            1,
+        );
+        assert_eq!(out.shape(), &[1, 6]);
+        assert!(!out.is_real());
     }
 
     #[test]

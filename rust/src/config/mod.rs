@@ -232,21 +232,28 @@ pub fn gcd(a: usize, b: usize) -> usize {
     }
 }
 
-/// Full parallelization recipe for a cluster: how many CFG branch groups
-/// and batch replica groups to carve, and the 2D SP degrees *inside each
-/// group*. The hybrid planner (`cluster::plan`) turns a validated spec
-/// into carved sub-meshes; `cfg_degree × batch_replicas × P_u × P_r`
-/// must exactly tile the cluster.
+/// Full parallelization recipe for a cluster: the 3D plan space
+/// `cfg_degree × pp_degree × batch_replicas` with 2D SP degrees *inside
+/// each pipeline stage*. The hybrid planner (`cluster::plan`) turns a
+/// validated spec into carved sub-meshes;
+/// `cfg_degree × pp_degree × batch_replicas × P_u × P_r` must exactly
+/// tile the cluster.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ParallelSpec {
     /// CFG-parallel degree: 1 = both guidance branches run on one mesh
     /// (sequentially), 2 = conditional/unconditional branches run
     /// concurrently on disjoint device groups (xDiT-style CFG parallel).
     pub cfg_degree: usize,
+    /// Patch-level pipeline-parallel degree (PipeFusion's displaced
+    /// patch pipeline): 1 = no pipelining; k > 1 carves each CFG/replica
+    /// group into k contiguous *stages* of `sp` ranks each. DiT layers
+    /// are partitioned across the stages and the latent sequence streams
+    /// between them as patches (`crate::sp::pipefusion`).
+    pub pp_degree: usize,
     /// Independent batch-replica groups beyond the CFG split (data
     /// parallelism over requests).
     pub batch_replicas: usize,
-    /// Sequence-parallel degrees inside each group.
+    /// Sequence-parallel degrees inside each pipeline stage.
     pub sp: SpDegrees,
 }
 
@@ -257,11 +264,14 @@ pub struct ParallelSpec {
 pub enum ParallelSpecError {
     /// `cfg_degree` must be 1 or 2 — guidance has two branches.
     BadCfgDegree { got: usize },
+    /// `pp_degree` must be at least 1.
+    ZeroPipelineStages,
     /// `batch_replicas` must be at least 1.
     ZeroReplicas,
     /// The product of all degrees must equal the cluster size.
     SizeMismatch {
         cfg_degree: usize,
+        pp_degree: usize,
         batch_replicas: usize,
         sp_total: usize,
         cluster_gpus: usize,
@@ -270,10 +280,16 @@ pub enum ParallelSpecError {
     /// a multiple of GPUs-per-machine (whole machines per group) or
     /// divide it (several groups per machine).
     MisalignedGroups { group_ranks: usize, gpus_per_machine: usize },
+    /// Pipeline stages must align with machine boundaries too (each
+    /// stage is a contiguous SP sub-mesh).
+    MisalignedStages { stage_ranks: usize, gpus_per_machine: usize },
     /// Ulysses needs `P_u | H`.
     HeadsNotDivisible { heads: usize, pu: usize },
     /// SP needs `(P_u · P_r) | L`.
     SeqNotDivisible { l: usize, sp_ranks: usize },
+    /// The patch pipeline needs `(patches · P_u · P_r) | L` so every
+    /// patch SP-shards evenly inside its stage.
+    PatchesNotDivisible { l: usize, patches: usize, stage_ranks: usize },
 }
 
 impl std::fmt::Display for ParallelSpecError {
@@ -283,26 +299,37 @@ impl std::fmt::Display for ParallelSpecError {
                 f,
                 "cfg_degree must be 1 (sequential guidance) or 2 (branch-parallel), got {got}"
             ),
+            ParallelSpecError::ZeroPipelineStages => {
+                write!(f, "pp_degree must be >= 1 (use 1 for no patch pipelining)")
+            }
             ParallelSpecError::ZeroReplicas => {
                 write!(f, "batch_replicas must be >= 1 (use 1 for no batch replication)")
             }
             ParallelSpecError::SizeMismatch {
                 cfg_degree,
+                pp_degree,
                 batch_replicas,
                 sp_total,
                 cluster_gpus,
             } => write!(
                 f,
-                "cfg_degree({cfg_degree}) x batch_replicas({batch_replicas}) x sp_ranks({sp_total}) \
+                "cfg_degree({cfg_degree}) x pp_degree({pp_degree}) x \
+                 batch_replicas({batch_replicas}) x sp_ranks({sp_total}) \
                  = {} but the cluster has {cluster_gpus} GPUs; pick degrees whose product is \
                  exactly {cluster_gpus}",
-                cfg_degree * batch_replicas * sp_total
+                cfg_degree * pp_degree * batch_replicas * sp_total
             ),
             ParallelSpecError::MisalignedGroups { group_ranks, gpus_per_machine } => write!(
                 f,
                 "group size {group_ranks} straddles machine boundaries (machines have \
                  {gpus_per_machine} GPUs); use a group size that divides {gpus_per_machine} \
                  or is a multiple of it"
+            ),
+            ParallelSpecError::MisalignedStages { stage_ranks, gpus_per_machine } => write!(
+                f,
+                "pipeline stage size {stage_ranks} straddles machine boundaries (machines \
+                 have {gpus_per_machine} GPUs); use a stage size that divides \
+                 {gpus_per_machine} or is a multiple of it"
             ),
             ParallelSpecError::HeadsNotDivisible { heads, pu } => write!(
                 f,
@@ -314,6 +341,13 @@ impl std::fmt::Display for ParallelSpecError {
                 "sequence length L={l} not divisible by the group's {sp_ranks} SP ranks; \
                  align the workload (Workload::aligned_to) or change the SP degrees"
             ),
+            ParallelSpecError::PatchesNotDivisible { l, patches, stage_ranks } => write!(
+                f,
+                "sequence length L={l} cannot be split into {patches} patches that \
+                 SP-shard over {stage_ranks} stage ranks; align the workload \
+                 (Workload::aligned_to) so patches x sp_ranks divides L, or change \
+                 --patches"
+            ),
         }
     }
 }
@@ -321,8 +355,19 @@ impl std::fmt::Display for ParallelSpecError {
 impl std::error::Error for ParallelSpecError {}
 
 impl ParallelSpec {
+    /// A non-pipelined spec (`pp_degree == 1`).
     pub fn new(cfg_degree: usize, batch_replicas: usize, sp: SpDegrees) -> Self {
-        Self { cfg_degree, batch_replicas, sp }
+        Self { cfg_degree, pp_degree: 1, batch_replicas, sp }
+    }
+
+    /// A spec with an explicit patch-pipeline degree.
+    pub fn with_pp(
+        cfg_degree: usize,
+        pp_degree: usize,
+        batch_replicas: usize,
+        sp: SpDegrees,
+    ) -> Self {
+        Self { cfg_degree, pp_degree, batch_replicas, sp }
     }
 
     /// The trivial plan: one group spanning the whole cluster with the
@@ -341,8 +386,26 @@ impl ParallelSpec {
         group_ranks: usize,
         heads: usize,
     ) -> Self {
-        let pu = gcd(group_ranks, heads);
-        Self::new(cfg_degree, batch_replicas, SpDegrees::new(pu, group_ranks / pu))
+        Self::with_gcd_placement_pp(cfg_degree, 1, batch_replicas, group_ranks, heads)
+    }
+
+    /// [`Self::with_gcd_placement`] for the 3D plan space: the gcd rule
+    /// is applied to the *stage* size (each pipeline stage is its own SP
+    /// mesh).
+    pub fn with_gcd_placement_pp(
+        cfg_degree: usize,
+        pp_degree: usize,
+        batch_replicas: usize,
+        stage_ranks: usize,
+        heads: usize,
+    ) -> Self {
+        let pu = gcd(stage_ranks, heads);
+        Self::with_pp(
+            cfg_degree,
+            pp_degree,
+            batch_replicas,
+            SpDegrees::new(pu, stage_ranks / pu),
+        )
     }
 
     /// Number of replica groups (CFG branches × batch replicas).
@@ -350,14 +413,29 @@ impl ParallelSpec {
         self.cfg_degree * self.batch_replicas
     }
 
-    /// Ranks inside each group.
-    pub fn ranks_per_group(&self) -> usize {
+    /// Ranks inside one pipeline stage (the SP mesh size).
+    pub fn ranks_per_stage(&self) -> usize {
         self.sp.total()
+    }
+
+    /// Ranks inside each group (all of its pipeline stages).
+    pub fn ranks_per_group(&self) -> usize {
+        self.pp_degree * self.sp.total()
     }
 
     /// Total ranks the spec occupies.
     pub fn total_ranks(&self) -> usize {
         self.groups() * self.ranks_per_group()
+    }
+
+    /// Human-readable plan key, e.g. `cfg2 x pp2 x rep1 x U8R1` — the
+    /// stable label the serving report's plan histogram and the benches
+    /// key on.
+    pub fn label(&self) -> String {
+        format!(
+            "cfg{} x pp{} x rep{} x U{}R{}",
+            self.cfg_degree, self.pp_degree, self.batch_replicas, self.sp.pu, self.sp.pr
+        )
     }
 
     /// Structural validation against a cluster: degree product and
@@ -367,29 +445,44 @@ impl ParallelSpec {
         if self.cfg_degree == 0 || self.cfg_degree > 2 {
             return Err(ParallelSpecError::BadCfgDegree { got: self.cfg_degree });
         }
+        if self.pp_degree == 0 {
+            return Err(ParallelSpecError::ZeroPipelineStages);
+        }
         if self.batch_replicas == 0 {
             return Err(ParallelSpecError::ZeroReplicas);
         }
         if self.total_ranks() != cluster.total_gpus() {
             return Err(ParallelSpecError::SizeMismatch {
                 cfg_degree: self.cfg_degree,
+                pp_degree: self.pp_degree,
                 batch_replicas: self.batch_replicas,
                 sp_total: self.sp.total(),
                 cluster_gpus: cluster.total_gpus(),
             });
         }
-        let group = self.ranks_per_group();
         let m = cluster.gpus_per_machine;
+        let group = self.ranks_per_group();
         if group % m != 0 && m % group != 0 {
             return Err(ParallelSpecError::MisalignedGroups {
                 group_ranks: group,
                 gpus_per_machine: m,
             });
         }
+        let stage = self.ranks_per_stage();
+        if stage % m != 0 && m % stage != 0 {
+            return Err(ParallelSpecError::MisalignedStages {
+                stage_ranks: stage,
+                gpus_per_machine: m,
+            });
+        }
         Ok(())
     }
 
-    /// Per-workload divisibility: `P_u | H` and `(P_u·P_r) | L`.
+    /// Per-workload divisibility: `P_u | H` and `(P_u·P_r) | L` (each
+    /// stage's SP mesh shards the sequence it is handed). Patch
+    /// divisibility for pipelined plans is checked separately by
+    /// [`Self::validate_patches`] (the patch count is a runtime knob,
+    /// not part of the spec).
     pub fn validate_workload(&self, shape: &AttnShape) -> Result<(), ParallelSpecError> {
         if shape.h % self.sp.pu != 0 {
             return Err(ParallelSpecError::HeadsNotDivisible {
@@ -401,6 +494,25 @@ impl ParallelSpec {
             return Err(ParallelSpecError::SeqNotDivisible {
                 l: shape.l,
                 sp_ranks: self.sp.total(),
+            });
+        }
+        Ok(())
+    }
+
+    /// Patch divisibility for the displaced patch pipeline: the sequence
+    /// must split into `patches` patches that each SP-shard evenly over
+    /// the stage's ranks.
+    pub fn validate_patches(
+        &self,
+        shape: &AttnShape,
+        patches: usize,
+    ) -> Result<(), ParallelSpecError> {
+        let stage = self.ranks_per_stage();
+        if patches == 0 || shape.l % (patches * stage) != 0 {
+            return Err(ParallelSpecError::PatchesNotDivisible {
+                l: shape.l,
+                patches,
+                stage_ranks: stage,
             });
         }
         Ok(())
@@ -514,6 +626,57 @@ mod tests {
         let e = spec.validate_workload(&AttnShape::new(1, 130, 8, 16)).unwrap_err();
         assert!(matches!(e, ParallelSpecError::SeqNotDivisible { l: 130, sp_ranks: 8 }));
         assert!(e.to_string().contains("aligned_to"), "suggests the fix: {e}");
+    }
+
+    #[test]
+    fn parallel_spec_pipeline_dimension() {
+        let c = ClusterSpec::new(4, 8); // 32 GPUs
+        // cfg2 x pp2 x rep1 x sp8: one machine per stage
+        let s = ParallelSpec::with_pp(2, 2, 1, SpDegrees::new(8, 1));
+        assert!(s.validate(&c).is_ok());
+        assert_eq!(s.ranks_per_stage(), 8);
+        assert_eq!(s.ranks_per_group(), 16);
+        assert_eq!(s.groups(), 2);
+        assert_eq!(s.total_ranks(), 32);
+        assert_eq!(s.label(), "cfg2 x pp2 x rep1 x U8R1");
+        // cfg1 x pp4 x rep1 x sp8
+        assert!(ParallelSpec::with_pp(1, 4, 1, SpDegrees::new(8, 1)).validate(&c).is_ok());
+        // sub-machine stages: cfg1 x pp2 x rep4 x sp4
+        assert!(ParallelSpec::with_pp(1, 2, 4, SpDegrees::new(4, 1)).validate(&c).is_ok());
+        // pp = 0 rejected with an actionable message
+        let e = ParallelSpec::with_pp(1, 0, 1, SpDegrees::new(8, 4)).validate(&c).unwrap_err();
+        assert!(matches!(e, ParallelSpecError::ZeroPipelineStages));
+        assert!(e.to_string().contains("pp_degree"));
+        // product must still tile the cluster
+        let e = ParallelSpec::with_pp(2, 2, 1, SpDegrees::new(8, 2)).validate(&c).unwrap_err();
+        assert!(matches!(e, ParallelSpecError::SizeMismatch { pp_degree: 2, .. }));
+        assert!(e.to_string().contains("pp_degree(2)"), "{e}");
+    }
+
+    #[test]
+    fn parallel_spec_rejects_straddling_stages() {
+        // 4 machines x 3 GPUs: stages of 2 straddle machine boundaries
+        // even though the group (pp x sp = 6) is machine-aligned.
+        let c = ClusterSpec::new(4, 3);
+        let e = ParallelSpec::with_pp(2, 3, 1, SpDegrees::new(2, 1)).validate(&c).unwrap_err();
+        assert!(matches!(e, ParallelSpecError::MisalignedStages { .. }));
+        assert!(e.to_string().contains("stage"));
+    }
+
+    #[test]
+    fn parallel_spec_patch_divisibility() {
+        let spec = ParallelSpec::with_pp(2, 2, 1, SpDegrees::new(8, 1));
+        // L = 64 splits into 4 patches of 16 = 2 tokens per stage rank
+        assert!(spec.validate_patches(&AttnShape::new(1, 64, 8, 4), 4).is_ok());
+        // L = 40 does not split into 4 patches over 8 stage ranks
+        let e = spec.validate_patches(&AttnShape::new(1, 40, 8, 4), 4).unwrap_err();
+        assert!(matches!(
+            e,
+            ParallelSpecError::PatchesNotDivisible { l: 40, patches: 4, stage_ranks: 8 }
+        ));
+        assert!(e.to_string().contains("--patches"), "actionable: {e}");
+        // zero patches is rejected, not a division panic
+        assert!(spec.validate_patches(&AttnShape::new(1, 64, 8, 4), 0).is_err());
     }
 
     #[test]

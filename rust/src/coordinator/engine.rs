@@ -7,7 +7,7 @@
 //! Results are cached per (workload, batch) since the schedules are
 //! deterministic.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::Mutex;
 
 use crate::cluster::exec::{run_cluster, ExecMode};
@@ -18,7 +18,7 @@ use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::router::Router;
 use crate::coordinator::ServiceModel;
-use crate::sp::{hybrid, SpAlgo, SpParams};
+use crate::sp::{hybrid, pipefusion, SpAlgo, SpParams};
 use crate::workload::{Request, Workload};
 
 /// How the engine maps requests to hybrid CFG×SP plans.
@@ -47,7 +47,13 @@ pub struct SimService {
     /// Per-generation fixed overhead (VAE decode, host sync), seconds.
     pub fixed_overhead: f64,
     pub plan: PlanPolicy,
+    /// Patch count for pipelined (`pp_degree > 1`) plans — PipeFusion's
+    /// `M`, shared with the cost model's pipeline term.
+    pub patches: usize,
     cache: Mutex<HashMap<(String, usize), f64>>,
+    /// Auto-plan memo: workload name → chosen spec (the chooser
+    /// re-enumerates the whole plan space otherwise — once per batch).
+    spec_cache: Mutex<HashMap<String, ParallelSpec>>,
 }
 
 impl SimService {
@@ -57,7 +63,9 @@ impl SimService {
             algo,
             fixed_overhead: 0.05,
             plan: PlanPolicy::SingleMesh,
+            patches: crate::analysis::DEFAULT_PATCHES,
             cache: Mutex::new(HashMap::new()),
+            spec_cache: Mutex::new(HashMap::new()),
         }
     }
 
@@ -127,10 +135,47 @@ impl SimService {
     /// One attention layer's makespan under a hybrid spec: the group-
     /// scoped schedule on the carved meshes, plus the pointwise stages on
     /// each group's shard (paid once per guidance eval the group runs).
-    /// Alignment is to the SP rank count only — a request admitted by a
-    /// fixed plan (`L % sp_ranks == 0`) is modeled at its full length,
-    /// never cropped.
+    /// Alignment is to the plan's sharding granularity only — a request
+    /// admitted by a fixed plan is modeled at its full length, never
+    /// cropped.
+    ///
+    /// Pipelined specs (`pp_degree > 1`) are timed by the executable
+    /// displaced-patch-pipeline schedule
+    /// ([`pipefusion::pipefusion_layer_makespan`]): the makespan of one
+    /// pp-layer block divided by `pp_degree` is the per-layer
+    /// equivalent, since the pipeline keeps all stages busy across the
+    /// layer partition.
     pub fn plan_layer_time(&self, spec: &ParallelSpec, workload: &Workload, batch: usize) -> f64 {
+        if spec.pp_degree > 1 {
+            let stage_ranks = spec.ranks_per_stage();
+            // the pipeline shards by patches x stage ranks (pp partitions
+            // layers, not the sequence) — the same granularity admit()
+            // checks, so admitted requests are never cropped
+            let w = workload.aligned_to(stage_ranks * self.patches);
+            if w.shape.l == 0 {
+                // the workload is too short to patch-pipeline at all
+                return f64::INFINITY;
+            }
+            let mut shape = w.shape;
+            shape.b = batch;
+            let plan = ParallelPlan::build(&self.cluster, *spec, self.algo)
+                .expect("spec validated at construction");
+            let chunk = shape.l / self.patches / stage_ranks;
+            let block = pipefusion::pipefusion_layer_makespan(
+                &plan,
+                shape,
+                chunk,
+                self.patches,
+                workload.cfg_evals,
+            );
+            let evals = workload.cfg_evals.div_ceil(spec.cfg_degree) as f64;
+            // pointwise pipelines across stages exactly like attention
+            // (each stage runs its own layers' pointwise concurrently),
+            // so the per-layer equivalent divides by pp_degree too
+            let ls = shape.l / stage_ranks;
+            let pointwise = self.pointwise_time(&shape, ls) / spec.pp_degree as f64;
+            return block / spec.pp_degree as f64 + evals * pointwise;
+        }
         let sp_ranks = spec.ranks_per_group();
         let w = workload.aligned_to(sp_ranks);
         let mut shape = w.shape;
@@ -149,13 +194,24 @@ impl SimService {
         match &self.plan {
             PlanPolicy::SingleMesh => None,
             PlanPolicy::Fixed(spec) => Some(*spec),
-            PlanPolicy::Auto => Some(crate::analysis::choose_spec(
-                &self.cluster,
-                self.algo,
-                &workload.shape,
-                workload.cfg_evals,
-                1,
-            )),
+            PlanPolicy::Auto => {
+                if let Some(&s) = self.spec_cache.lock().unwrap().get(workload.name) {
+                    return Some(s);
+                }
+                let s = crate::analysis::choose_spec_with_patches(
+                    &self.cluster,
+                    self.algo,
+                    &workload.shape,
+                    workload.cfg_evals,
+                    1,
+                    self.patches,
+                );
+                self.spec_cache
+                    .lock()
+                    .unwrap()
+                    .insert(workload.name.to_string(), s);
+                Some(s)
+            }
         }
     }
 }
@@ -180,9 +236,21 @@ impl ServiceModel for SimService {
             // legacy + auto paths align the workload themselves
             PlanPolicy::SingleMesh | PlanPolicy::Auto => Ok(()),
             PlanPolicy::Fixed(spec) => {
-                spec.validate_workload(&workload.shape).map_err(|e| e.to_string())
+                spec.validate_workload(&workload.shape).map_err(|e| e.to_string())?;
+                if spec.pp_degree > 1 {
+                    spec.validate_patches(&workload.shape, self.patches)
+                        .map_err(|e| e.to_string())?;
+                }
+                Ok(())
             }
         }
+    }
+
+    fn plan_label(&self, workload: &Workload) -> Option<String> {
+        Some(match self.resolve_spec(workload) {
+            None => "single-mesh".to_string(),
+            Some(spec) => spec.label(),
+        })
     }
 }
 
@@ -196,6 +264,11 @@ pub struct ServeReport {
     /// its workload (e.g. sequence length not divisible by the plan's SP
     /// ranks).
     pub rejected: Vec<(u64, String)>,
+    /// Chosen parallel plan → served request count
+    /// ([`crate::config::ParallelSpec::label`] keys, sorted), so
+    /// auto-planning behaviour is observable from `serve()` output.
+    /// Empty when the service model does not report plans.
+    pub plan_histogram: BTreeMap<String, usize>,
 }
 
 /// Deterministic virtual-time serving loop: requests (time-ordered) flow
@@ -212,14 +285,19 @@ pub fn serve(
     let mut metrics = Metrics::new();
     let mut completions = Vec::new();
     let mut rejected = Vec::new();
+    let mut plan_histogram: BTreeMap<String, usize> = BTreeMap::new();
 
     let serve_batch = |router: &mut Router,
                            batch: crate::coordinator::batcher::Batch,
                            metrics: &mut Metrics,
-                           completions: &mut Vec<(u64, f64, f64)>| {
+                           completions: &mut Vec<(u64, f64, f64)>,
+                           plan_histogram: &mut BTreeMap<String, usize>| {
         let pod = router.pick();
         let workload = batch.requests[0].workload.clone();
         let dur = service.service_time(&workload, batch.size());
+        if let Some(label) = service.plan_label(&workload) {
+            *plan_histogram.entry(label).or_insert(0) += batch.size();
+        }
         let (_, done) = router.dispatch(pod, batch.ready_at(), dur);
         for r in &batch.requests {
             metrics.record(workload.name, done - r.arrival, done);
@@ -235,14 +313,14 @@ pub fn serve(
         }
         batcher.push(r);
         while let Some(batch) = batcher.pop_ready(now) {
-            serve_batch(router, batch, &mut metrics, &mut completions);
+            serve_batch(router, batch, &mut metrics, &mut completions, &mut plan_histogram);
         }
     }
     // end of trace: drain
     while let Some(batch) = batcher.pop_any() {
-        serve_batch(router, batch, &mut metrics, &mut completions);
+        serve_batch(router, batch, &mut metrics, &mut completions, &mut plan_histogram);
     }
-    ServeReport { metrics, completions, rejected }
+    ServeReport { metrics, completions, rejected, plan_histogram }
 }
 
 #[cfg(test)]
@@ -404,5 +482,114 @@ mod tests {
         let report = serve(&mut router, BatchPolicy::default(), reqs, &svc);
         assert_eq!(report.metrics.completed(), 12);
         assert!(report.rejected.is_empty());
+    }
+
+    #[test]
+    fn serve_report_histograms_chosen_plans() {
+        // Auto planning on a mixed trace: every served request lands in
+        // the plan histogram under its spec's label.
+        let mut router = Router::new(4, 8, 1, SpAlgo::SwiftFusion);
+        let svc = SimService::auto_plan(router.pods[0].cluster.clone(), SpAlgo::SwiftFusion);
+        let reqs = TraceGen::new(23, 0.02, Workload::paper_suite()).take(10);
+        let report = serve(&mut router, BatchPolicy::default(), reqs, &svc);
+        let counted: usize = report.plan_histogram.values().sum();
+        assert_eq!(counted, report.metrics.completed(), "every request counted once");
+        assert!(
+            report.plan_histogram.keys().all(|k| k.starts_with("cfg")),
+            "spec labels: {:?}",
+            report.plan_histogram
+        );
+        // the guided video workloads pipeline on the 4x8 testbed, so the
+        // histogram is where that becomes observable
+        assert!(
+            report.plan_histogram.keys().any(|k| k.contains("pp2") || k.contains("pp4")),
+            "expected a pipelined plan in {:?}",
+            report.plan_histogram
+        );
+        // models that don't plan (ConstService) leave it empty
+        let mut router2 = Router::new(2, 2, 1, SpAlgo::SwiftFusion);
+        let reqs2 = TraceGen::new(3, 1.0, Workload::paper_suite()).take(5);
+        let rep2 = serve(&mut router2, BatchPolicy::default(), reqs2, &ConstService(0.1));
+        assert!(rep2.plan_histogram.is_empty());
+    }
+
+    #[test]
+    fn fixed_pipelined_plan_serves_and_rejects_cleanly() {
+        use crate::config::ParallelSpec;
+        // cfg2 x pp2 x sp8 on 4x8: stage-aligned paper workloads serve;
+        // a sequence that cannot split into patches is rejected with an
+        // actionable reason, never panicked on.
+        let cluster = ClusterSpec::new(4, 8);
+        let spec = ParallelSpec::with_pp(2, 2, 1, SpDegrees::new(8, 1));
+        let svc = SimService::with_plan(cluster, SpAlgo::SwiftFusion, spec).unwrap();
+        let ok = Workload::cogvideo_20s(); // L = 163200 = 2550 * 64
+        let mut odd = Workload::cogvideo_20s();
+        odd.shape.l = 163_208; // divisible by sp=8 but not by patches*sp
+        let reqs = vec![
+            crate::workload::Request { id: 0, workload: ok, arrival: 0.0, seed: 0 },
+            crate::workload::Request { id: 1, workload: odd, arrival: 0.1, seed: 1 },
+        ];
+        let mut router = Router::new(4, 8, 1, SpAlgo::SwiftFusion);
+        let report = serve(
+            &mut router,
+            BatchPolicy { max_batch: 1, window: 0.0 },
+            reqs,
+            &svc,
+        );
+        assert_eq!(report.metrics.completed(), 1);
+        assert_eq!(report.rejected.len(), 1);
+        assert_eq!(report.rejected[0].0, 1);
+        assert!(
+            report.rejected[0].1.contains("patches"),
+            "actionable reason: {}",
+            report.rejected[0].1
+        );
+        assert_eq!(report.plan_histogram.get("cfg2 x pp2 x rep1 x U8R1"), Some(&1));
+    }
+
+    #[test]
+    fn pipelined_plan_beats_single_mesh_for_guided_video() {
+        // The tentpole's serving-level claim, now with the third plan
+        // dimension: a fixed cfg2 x pp2 x sp8 plan (stages never touch
+        // the inter-machine fabric for SP) must beat the full-mesh
+        // single plan that pays the cross-machine all-to-all, and the
+        // auto planner must do at least as well as CFG x SP alone.
+        let cluster = ClusterSpec::new(4, 8);
+        let w = Workload::cogvideo_20s();
+        let single = {
+            let svc = SimService::with_plan(
+                cluster.clone(),
+                SpAlgo::SwiftFusion,
+                crate::config::ParallelSpec::new(1, 1, SpDegrees::new(8, 4)),
+            )
+            .unwrap();
+            svc.service_time(&w, 1)
+        };
+        let piped = {
+            let svc = SimService::with_plan(
+                cluster.clone(),
+                SpAlgo::SwiftFusion,
+                crate::config::ParallelSpec::with_pp(2, 2, 1, SpDegrees::new(8, 1)),
+            )
+            .unwrap();
+            svc.service_time(&w, 1)
+        };
+        let cfg_sp = {
+            let svc = SimService::with_plan(
+                cluster,
+                SpAlgo::SwiftFusion,
+                crate::config::ParallelSpec::new(2, 1, SpDegrees::new(8, 2)),
+            )
+            .unwrap();
+            svc.service_time(&w, 1)
+        };
+        assert!(
+            piped < single,
+            "cfg x pp x sp plan {piped} must beat single mesh {single}"
+        );
+        assert!(
+            piped < cfg_sp,
+            "adding the pp dimension ({piped}) must beat cfg x sp alone ({cfg_sp})"
+        );
     }
 }

@@ -34,4 +34,12 @@ pub trait ServiceModel: Sync {
     fn admit(&self, _workload: &Workload) -> Result<(), String> {
         Ok(())
     }
+
+    /// Stable label of the parallel plan this model would serve
+    /// `workload` with (e.g. `cfg2 x pp2 x rep1 x U8R1`), if it plans at
+    /// all — feeds [`engine::ServeReport::plan_histogram`] so
+    /// auto-planning behaviour is observable from `serve()` output.
+    fn plan_label(&self, _workload: &Workload) -> Option<String> {
+        None
+    }
 }

@@ -35,10 +35,11 @@ impl Pod {
         }
     }
 
-    /// Hybrid CFG×SP plan for one request of `workload` on this pod,
+    /// Hybrid CFG×PP×SP plan for one request of `workload` on this pod,
     /// given how many similar requests are queued behind it — the
-    /// analysis cost model trades SP degree against CFG-branch groups
-    /// and batch replicas.
+    /// analysis cost model trades SP degree against CFG-branch groups,
+    /// pipeline stages ([`analysis::DEFAULT_PATCHES`] patches), and
+    /// batch replicas.
     pub fn plan_for(&self, workload: &Workload, queue_depth: usize) -> ParallelSpec {
         analysis::choose_spec(
             &self.cluster,
@@ -150,6 +151,9 @@ mod tests {
         let video = pod.plan_for(&Workload::cogvideo_20s(), 1);
         assert!(video.validate(&pod.cluster).is_ok());
         assert_eq!(video.cfg_degree, 2, "{video:?}");
+        // the long sequence is inter-machine-bound: the planner also
+        // carves pipeline stages so SP stays intra-machine
+        assert!(video.pp_degree > 1, "{video:?}");
         // distilled Flux has one branch: nothing to CFG-split
         let flux = pod.plan_for(&Workload::flux_3072(), 1);
         assert!(flux.validate(&pod.cluster).is_ok());

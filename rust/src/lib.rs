@@ -18,28 +18,31 @@
 //! Python never runs on the request path: after `make artifacts`, the
 //! engine is a self-contained binary.
 //!
-//! ## Hybrid parallelism: the CFG×SP planner
+//! ## Hybrid parallelism: the CFG×PP×SP planner
 //!
 //! The paper scales one attention pass across one mesh. The serving
 //! engine composes parallelism dimensions on top of that via
-//! [`config::ParallelSpec`] / [`cluster::plan::ParallelPlan`]:
+//! [`config::ParallelSpec`] / [`cluster::plan::ParallelPlan`] — a 3D
+//! plan space of guidance branches × pipeline stages × SP meshes:
 //!
 //! ```text
 //!             ClusterSpec (N machines × M GPUs)
 //!                          │
 //!            ParallelPlan::build(spec, algo)           spec = {cfg_degree,
-//!                          │                                   batch_replicas,
-//!          ┌───────────────┼────────────────┐                  sp: P_u × P_r}
-//!          ▼               ▼                ▼
+//!                          │                                   pp_degree,
+//!          ┌───────────────┼────────────────┐                  batch_replicas,
+//!          ▼               ▼                ▼                  sp: P_u × P_r}
 //!    group 0 (cond)   group 1 (cond,    group k (uncond)   cfg_degree × batch_replicas
-//!    Mesh2D::carved    replica 1) …      …                  contiguous, machine-aligned
-//!    [base, base+G)                                         carves; G = P_u·P_r ranks
+//!    [base, base+G)    replica 1) …      …                  contiguous, machine-aligned
+//!          │               │                │               carves; G = pp·P_u·P_r ranks
+//!     ┌────┴─────┐                                          each group split into
+//!     ▼          ▼                                          pp_degree contiguous stages
+//!  stage 0 …  stage pp-1                                    (Mesh2D::carved per stage);
+//!  Mesh2D     Mesh2D       …                …               patches stream stage-to-
+//!     │          │                                          stage with one-step-stale
+//!     any SpAlgo inside each stage                          off-stage KV
+//!    (ring/ulysses/torus/swiftfusion …)                     (sp::pipefusion)
 //!          │               │                │
-//!     any SpAlgo      any SpAlgo       any SpAlgo           group-scoped: rings,
-//!    (ring/ulysses/   on its carve     on its carve         all-to-alls and barriers
-//!     torus/swift-                                          are built from the carved
-//!     fusion …)                                             mesh's rank set and never
-//!          │               │                │               cross a partition
 //!          └───────────────┴───────┬────────┘
 //!                                  ▼
 //!               guidance combine  ε = ε_u + s·(ε_c − ε_u)
@@ -48,13 +51,22 @@
 //!
 //! Inside each carve the paper's §4.2 placement rules apply unchanged —
 //! [`config::SpDegrees::swiftfusion_default`]'s gcd rule just sees the
-//! group as its "cluster" (P_u = gcd(G, H)), and the torus/TAS machine
-//! geometry is derived from the carve's actual machine footprint. The
-//! [`analysis`] cost model ([`analysis::choose_spec`]) trades SP degree
-//! against CFG-branch groups and batch replicas per request size; the
-//! [`coordinator`] resolves a plan per workload (`--plan auto`) or runs
-//! a fixed one (`--cfg-degree`/`--batch-replicas`), rejecting requests
-//! a plan cannot serve with typed, actionable errors.
+//! stage as its "cluster" (P_u = gcd(stage, H)), and the torus/TAS
+//! machine geometry is derived from the carve's actual machine
+//! footprint. With `pp_degree > 1`, DiT layers are partitioned across a
+//! group's stages and the latent sequence streams between them as
+//! patches over the one-sided comm layer, with off-stage KV served from
+//! the previous diffusion step's activations — PipeFusion's displaced
+//! patch pipeline ([`sp::pipefusion`]; synchronous oracle-exact warm-up,
+//! documented stale-KV tolerance afterwards). The [`analysis`] cost
+//! model ([`analysis::choose_spec`]) trades SP degree against CFG-branch
+//! groups, pipeline depth (bubble ≈ (pp−1)/(pp·patches), per-patch
+//! inter-stage α–β hops overlapped with compute), and batch replicas per
+//! request size; the [`coordinator`] resolves a plan per workload
+//! (`--plan auto`) or runs a fixed one
+//! (`--cfg-degree`/`--pp-degree`/`--patches`/`--batch-replicas`),
+//! rejecting requests a plan cannot serve with typed, actionable errors
+//! and reporting a per-plan request histogram from `serve()`.
 //!
 //! Numeric validation of all of this is hermetic: `ExecMode::HostNumeric`
 //! backs the tile contract with in-process Algorithm-2 kernels

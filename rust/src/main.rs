@@ -70,9 +70,14 @@ USAGE: swiftfusion <info|validate|bench-layer|serve|volumes> [flags]
 
 Hybrid plan flags (bench-layer, serve):
   --plan single|auto|fixed   single = one SP mesh (default); auto = pick a
-                             CFG x SP x replica plan per workload via the
-                             cost model; fixed = use --cfg-degree/--batch-replicas
+                             CFG x PP x SP x replica plan per workload via
+                             the cost model; fixed = use --cfg-degree/
+                             --pp-degree/--batch-replicas
   --cfg-degree N             guidance branches on disjoint groups (1 or 2)
+  --pp-degree K              patch-pipeline stages per group (PipeFusion's
+                             displaced patch pipeline; 1 = off)
+  --patches M                patches the sequence streams through the
+                             pipeline as (default 4)
   --batch-replicas R         independent replica groups beyond the CFG split
 ";
 
@@ -83,12 +88,17 @@ fn workload_by_name(name: &str) -> Result<Workload> {
         .ok_or_else(|| anyhow::anyhow!("unknown workload '{name}'"))
 }
 
-/// The plan mode the flags resolve to: `--cfg-degree` or
+/// The plan mode the flags resolve to: `--cfg-degree`, `--pp-degree` or
 /// `--batch-replicas` without `--plan` implies `--plan fixed`.
 fn effective_plan(args: &Args) -> Result<&str> {
     let cfg_degree = args.usize_or("cfg-degree", 1)?;
+    let pp_degree = args.usize_or("pp-degree", 1)?;
     let reps = args.usize_or("batch-replicas", 1)?;
-    let default_plan = if cfg_degree > 1 || reps > 1 { "fixed" } else { "single" };
+    let default_plan = if cfg_degree > 1 || pp_degree > 1 || reps > 1 {
+        "fixed"
+    } else {
+        "single"
+    };
     Ok(args.str_or("plan", default_plan))
 }
 
@@ -100,24 +110,35 @@ fn service_for(
     algo: SpAlgo,
     heads: usize,
 ) -> Result<SimService> {
-    match effective_plan(args)? {
-        "single" => Ok(SimService::new(cluster, algo)),
-        "auto" => Ok(SimService::auto_plan(cluster, algo)),
+    let patches = args.usize_or("patches", swiftfusion::analysis::DEFAULT_PATCHES)?;
+    anyhow::ensure!(patches > 0, "--patches must be >= 1");
+    let mut svc = match effective_plan(args)? {
+        "single" => SimService::new(cluster, algo),
+        "auto" => SimService::auto_plan(cluster, algo),
         "fixed" => {
             let cfg_degree = args.usize_or("cfg-degree", 1)?;
+            let pp_degree = args.usize_or("pp-degree", 1)?;
             let reps = args.usize_or("batch-replicas", 1)?;
             let total = cluster.total_gpus();
-            let groups = cfg_degree * reps;
+            let groups = cfg_degree * pp_degree * reps;
             anyhow::ensure!(
                 groups > 0 && total % groups == 0,
-                "cfg-degree x batch-replicas ({groups}) must divide the pod's {total} GPUs"
+                "cfg-degree x pp-degree x batch-replicas ({groups}) must divide the \
+                 pod's {total} GPUs"
             );
-            let spec =
-                ParallelSpec::with_gcd_placement(cfg_degree, reps, total / groups, heads);
-            Ok(SimService::with_plan(cluster, algo, spec)?)
+            let spec = ParallelSpec::with_gcd_placement_pp(
+                cfg_degree,
+                pp_degree,
+                reps,
+                total / groups,
+                heads,
+            );
+            SimService::with_plan(cluster, algo, spec)?
         }
         other => bail!("unknown --plan '{other}' (expected single, auto, or fixed)"),
-    }
+    };
+    svc.patches = patches;
+    Ok(svc)
 }
 
 fn cmd_info() -> Result<()> {
@@ -219,14 +240,7 @@ fn cmd_bench_layer(args: &Args) -> Result<()> {
         let speedup = baseline
             .map(|b| format!("{:.2}x vs USP", b / t))
             .unwrap_or_default();
-        let plan_note = spec
-            .map(|s| {
-                format!(
-                    "  [cfg{} x rep{} x U{}R{}]",
-                    s.cfg_degree, s.batch_replicas, s.sp.pu, s.sp.pr
-                )
-            })
-            .unwrap_or_default();
+        let plan_note = spec.map(|s| format!("  [{}]", s.label())).unwrap_or_default();
         println!("  {:<12} {:>12}  {speedup}{plan_note}", algo.name(), fmt_time(t));
     }
     Ok(())
@@ -262,6 +276,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!("rejected {} request(s):", report.rejected.len());
         for (id, reason) in &report.rejected {
             println!("  #{id}: {reason}");
+        }
+    }
+    if !report.plan_histogram.is_empty() {
+        println!("plans chosen:");
+        for (label, count) in &report.plan_histogram {
+            println!("  {label:<28} {count:>5} request(s)");
         }
     }
     print!("{}", metrics.report());

@@ -65,6 +65,11 @@ pub fn guided_attention_distributed(
     mode: &ExecMode,
 ) -> Result<(Tensor, f64)> {
     anyhow::ensure!(mode.is_numeric(), "guided layer needs a numeric ExecMode");
+    anyhow::ensure!(
+        plan.spec.pp_degree == 1,
+        "guided_attention_distributed runs non-pipelined plans; use \
+         sp::pipefusion for pp_degree > 1"
+    );
     plan.spec.validate_workload(&shape)?;
     let sp_ranks = plan.spec.ranks_per_group();
     let ls = shape.l / sp_ranks;
@@ -83,7 +88,7 @@ pub fn guided_attention_distributed(
     let run = run_cluster(&plan.cluster, mode, |ctx| {
         let group = plan.group_of(ctx.rank);
         let local = group.local_rank(ctx.rank);
-        let params = SpParams { shape, chunk, mesh: group.mesh.clone() };
+        let params = SpParams { shape, chunk, mesh: group.mesh().clone() };
         let run_branch = |ctx: &mut crate::cluster::exec::RankCtx, qkv: &BranchQkv| {
             let out = algo.run(
                 ctx,
@@ -142,12 +147,16 @@ pub fn hybrid_layer_makespan(
     chunk: usize,
     cfg_evals: usize,
 ) -> f64 {
+    debug_assert_eq!(
+        plan.spec.pp_degree, 1,
+        "pipelined plans are timed by sp::pipefusion::pipefusion_layer_makespan"
+    );
     let sp_ranks = plan.spec.ranks_per_group();
     let ls = shape.l / sp_ranks;
     let algo = plan.algo;
     let run = run_cluster(&plan.cluster, &ExecMode::Timing, |ctx| {
         let group = plan.group_of(ctx.rank);
-        let params = SpParams { shape, chunk, mesh: group.mesh.clone() };
+        let params = SpParams { shape, chunk, mesh: group.mesh().clone() };
         let branches = match group.role {
             BranchRole::Both => cfg_evals,
             BranchRole::Conditional => 1,

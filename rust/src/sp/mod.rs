@@ -14,6 +14,12 @@
 //! | Torus      | [`torus`]   | chunked all-to-all overlap (§4.3)            |
 //! | SwiftFusion| [`swiftfusion`] | Algorithm 1: one-sided Torus+Ulysses+Ring |
 //!
+//! On top of the per-mesh algorithms, [`pipefusion`] implements
+//! PipeFusion's displaced patch pipeline (the `pp` dimension of the
+//! hybrid `cfg × pp × sp` plan space): DiT layers partitioned across
+//! pipeline stages, the sequence streaming between them as patches, and
+//! off-stage KV served from one-step-stale activations.
+//!
 //! All algorithms decompose attention into *tile* operations
 //! ([`tiles`]) on `[B, chunk, g, D]` blocks — the same universal
 //! decomposition the paper's Algorithm 2 kernel provides (multiple
@@ -21,6 +27,7 @@
 //! onto the AOT Pallas artifacts.
 
 pub mod hybrid;
+pub mod pipefusion;
 pub mod ring;
 pub mod swiftfusion;
 pub mod tiles;

@@ -1,0 +1,609 @@
+//! PipeFusion: patch-level *displaced* pipeline parallelism over the
+//! one-sided comm layer — the third dimension of the `cfg × pp × sp`
+//! plan space.
+//!
+//! A `pp_degree`-stage plan partitions the DiT layers across the
+//! [`crate::cluster::plan::ParallelGroup`]'s contiguous, machine-aligned
+//! pipeline stages; the latent sequence is split into `patches` patches
+//! that stream stage-to-stage through one-sided `put`s, so each stage is
+//! computing one patch while its successors work on earlier patches and
+//! its predecessors on later ones. Each stage is its own carved
+//! [`crate::cluster::Mesh2D`], so any [`SpAlgo`] runs unchanged *inside*
+//! a stage.
+//!
+//! ## Stale-activation (displaced) semantics
+//!
+//! Attention needs KV for the *whole* sequence, but a stage only has the
+//! fresh activations of the patches that already arrived this diffusion
+//! step. PipeFusion's observation is that diffusion inputs drift slowly
+//! between consecutive steps (temporal redundancy), so each stage keeps
+//! the **previous step's layer input as a stale KV cache** and serves
+//! off-patch KV from it:
+//!
+//! * when patch `i` arrives, its cache slot is overwritten with the
+//!   fresh activation *before* computing, so a patch always attends to
+//!   its own fresh KV;
+//! * patches `< i` of the current step are fresh too (their slots were
+//!   overwritten earlier this step);
+//! * patches `> i` are served one-step-stale.
+//!
+//! The per-patch inter-stage transfer is `B·(L/M)·H·D` activations —
+//! independent of the SP degree — so pipelining slashes the
+//! inter-machine volume whenever the sequence-parallel all-to-all would
+//! otherwise cross machines ([`crate::analysis::plan_step_cost`] models
+//! exactly this trade).
+//!
+//! ## Warm-up guarantee
+//!
+//! The **first step of a generation runs synchronously**: every stage
+//! waits for all patches of its input, runs the plan's [`SpAlgo`] over
+//! the full sequence on its stage mesh, and only then streams the result
+//! onward. No stale KV is ever read, so the warm-up step equals the
+//! plain-softmax oracle exactly (within the repo-wide 1e-4 f32 tolerance
+//! of the tiled schedules — the same "exact, never approximate" bar the
+//! SP algorithms meet, proven in `rust/tests/sp_property.rs`). Staleness
+//! can therefore only ever appear *after* a fully-correct step, which is
+//! what bounds the steady-state error: stale KV differs from fresh KV by
+//! at most one step of input drift.
+
+use anyhow::Result;
+
+use crate::cluster::exec::{run_cluster, ExecMode, RankCtx};
+use crate::cluster::plan::{BranchRole, ParallelGroup, ParallelPlan};
+use crate::cluster::Mesh2D;
+use crate::comm::Buf;
+use crate::config::AttnShape;
+use crate::tensor::Tensor;
+
+use super::hybrid::guidance_combine;
+use super::tiles::{host, AttnAccum};
+use super::{SpAlgo, SpParams};
+
+/// Knobs of the displaced patch pipeline shared by the numeric and
+/// timing paths.
+#[derive(Debug, Clone, Copy)]
+pub struct PipeParams {
+    /// Full per-branch attention shape `[B, L, H, D]`.
+    pub shape: AttnShape,
+    /// Tile granularity; must divide the per-rank patch shard
+    /// `L / patches / sp_ranks`.
+    pub chunk: usize,
+    /// Number of patches the sequence streams through the pipeline as
+    /// (PipeFusion's `M`).
+    pub patches: usize,
+}
+
+impl PipeParams {
+    /// Tokens per patch.
+    pub fn patch_len(&self) -> usize {
+        self.shape.l / self.patches
+    }
+}
+
+/// Per-rank result of one branch step.
+struct StageOut {
+    /// The full fresh layer input this stage assembled this step — it
+    /// becomes the stage's stale KV cache for the next step.
+    input: Buf,
+    /// Present on the last pipeline stage only: this rank's output
+    /// shards — one per patch in streamed steps, a single contiguous SP
+    /// shard in the synchronous warm-up step.
+    out: Option<Vec<Buf>>,
+}
+
+/// One-sided allgather along the sequence axis within a stage mesh:
+/// every rank exposes its shard under `slot` and pulls its peers',
+/// reassembling the full sequence in rank order.
+fn allgather_seq(
+    ctx: &mut RankCtx,
+    mesh: &Mesh2D,
+    local: usize,
+    own: Buf,
+    slot: &str,
+    flows: usize,
+) -> Buf {
+    let sp = mesh.total();
+    if sp == 1 {
+        return own;
+    }
+    ctx.expose(slot, own.clone());
+    let mut parts: Vec<Option<Buf>> = vec![None; sp];
+    parts[local] = Some(own);
+    let mut pulls = Vec::new();
+    for j in 0..sp {
+        if j != local {
+            pulls.push((j, ctx.get(mesh.base + j, slot, flows)));
+        }
+    }
+    for (j, h) in pulls {
+        parts[j] = Some(ctx.wait_get(h));
+    }
+    let bufs: Vec<Buf> = parts.into_iter().map(|b| b.unwrap()).collect();
+    Buf::concat(&bufs, 1)
+}
+
+/// One branch of one diffusion step on this rank's pipeline stage.
+///
+/// `x` is the step's full input latent (read by stage-0 ranks only —
+/// later stages receive their input from their predecessor). `cache` is
+/// the stage's stale KV cache as `patches` patch buffers; `None` selects
+/// the synchronous warm-up schedule (no stale reads, the plan's `algo`
+/// over the full sequence).
+fn branch_step(
+    ctx: &mut RankCtx,
+    p: &PipeParams,
+    group: &ParallelGroup,
+    branch: &str,
+    x: &Buf,
+    cache: Option<Vec<Buf>>,
+    algo: SpAlgo,
+    flows: usize,
+) -> StageOut {
+    let stage = group.stage_of(ctx.rank);
+    let mesh = &group.stages[stage];
+    let sp = mesh.total();
+    let local = ctx.rank - mesh.base;
+    let last = stage + 1 == group.stages.len();
+    let lp = p.patch_len();
+    let lps = lp / sp;
+
+    match cache {
+        // ---- warm-up: synchronous, oracle-exact ------------------------
+        None => {
+            let x_full = if stage == 0 {
+                x.clone()
+            } else {
+                let h = ctx.get(ctx.rank, &format!("pf.{branch}.s{stage}.sync.in"), flows);
+                let own = ctx.wait_get(h);
+                allgather_seq(
+                    ctx,
+                    mesh,
+                    local,
+                    own,
+                    &format!("pf.{branch}.s{stage}.sync.ag"),
+                    flows,
+                )
+            };
+            // the plan's SP algorithm, unchanged, on the stage's carve
+            let ls = p.shape.l / sp;
+            let params = SpParams { shape: p.shape, chunk: p.chunk, mesh: mesh.clone() };
+            let qs = x_full.slice(1, local * ls, (local + 1) * ls);
+            let out = algo.run(ctx, &params, qs.clone(), qs.clone(), qs);
+            let outs = if last {
+                Some(vec![out])
+            } else {
+                let next = group.stages[stage + 1].base + local;
+                ctx.put(next, &format!("pf.{branch}.s{}.sync.in", stage + 1), out, flows);
+                None
+            };
+            StageOut { input: x_full, out: outs }
+        }
+        // ---- steady state: displaced patch pipeline --------------------
+        Some(mut cache) => {
+            debug_assert_eq!(cache.len(), p.patches, "cache must hold one buf per patch");
+            let mut outs = Vec::new();
+            let mut fresh = Vec::with_capacity(p.patches);
+            for i in 0..p.patches {
+                // fresh patch i: stage 0 slices the step input locally;
+                // later stages receive their SP shard from the previous
+                // stage and allgather the full patch for the KV update.
+                let patch = if stage == 0 {
+                    x.slice(1, i * lp, (i + 1) * lp)
+                } else {
+                    let h =
+                        ctx.get(ctx.rank, &format!("pf.{branch}.s{stage}.p{i}.in"), flows);
+                    let own = ctx.wait_get(h);
+                    allgather_seq(
+                        ctx,
+                        mesh,
+                        local,
+                        own,
+                        &format!("pf.{branch}.s{stage}.p{i}.ag"),
+                        flows,
+                    )
+                };
+                // displaced KV: own patch fresh before compute, earlier
+                // patches fresh from this step, later ones one-step stale
+                cache[i] = patch.clone();
+                let q = patch.slice(1, local * lps, (local + 1) * lps);
+                let mut accum = AttnAccum::new(ctx, &q, p.chunk);
+                for kv in &cache {
+                    accum.absorb(ctx, kv, kv, None);
+                }
+                let o = accum.finish(ctx);
+                if last {
+                    outs.push(o);
+                } else {
+                    let next = group.stages[stage + 1].base + local;
+                    ctx.put(next, &format!("pf.{branch}.s{}.p{i}.in", stage + 1), o, flows);
+                }
+                fresh.push(patch);
+            }
+            StageOut {
+                input: Buf::concat(&fresh, 1),
+                out: if last { Some(outs) } else { None },
+            }
+        }
+    }
+}
+
+/// Result of one guided diffusion step through the patch pipeline.
+pub struct GuidedPipeStep {
+    /// The CFG-combined output `[B, L, H, D]`.
+    pub eps: Tensor,
+    /// Per-stage fresh layer inputs of the conditional branch — next
+    /// step's stale KV caches.
+    pub cond_caches: Vec<Tensor>,
+    /// Same for the unconditional branch.
+    pub uncond_caches: Vec<Tensor>,
+    /// Virtual-time makespan of the step.
+    pub makespan: f64,
+}
+
+/// One branch's per-rank result: (assembled stage input, last-stage
+/// output shards).
+type BranchResult = (Tensor, Option<Vec<Tensor>>);
+/// Per-rank results, tagged by branch ("c" / "u").
+type BranchOut = (&'static str, BranchResult);
+
+fn branch_out<'a>(per_rank: &'a [BranchOut], tag: &str) -> &'a BranchResult {
+    per_rank
+        .iter()
+        .find(|(t, _)| *t == tag)
+        .map(|(_, v)| v)
+        .unwrap_or_else(|| panic!("missing '{tag}' branch output"))
+}
+
+/// Run one guided diffusion step of the displaced patch pipeline under
+/// `plan` with real tensors. `caches` carries each branch's per-stage
+/// stale layer inputs from the previous step; `None` selects the
+/// synchronous warm-up schedule (oracle-exact, see the module docs).
+/// Each DiT "layer block" here is one self-attention layer per stage
+/// (`x → attn(x, x, x)` stacked `pp_degree` times), the same toy network
+/// [`guided_pipefusion_oracle`] evaluates exactly.
+pub fn guided_pipefusion_step(
+    plan: &ParallelPlan,
+    p: &PipeParams,
+    cond_x: &Tensor,
+    uncond_x: &Tensor,
+    scale: f32,
+    caches: Option<(&[Tensor], &[Tensor])>,
+    mode: &ExecMode,
+) -> Result<GuidedPipeStep> {
+    anyhow::ensure!(mode.is_numeric(), "pipefusion step needs a numeric ExecMode");
+    plan.spec.validate_workload(&p.shape)?;
+    plan.spec.validate_patches(&p.shape, p.patches)?;
+    let sp = plan.spec.ranks_per_stage();
+    let lps = p.patch_len() / sp;
+    anyhow::ensure!(
+        lps > 0 && lps % p.chunk == 0,
+        "chunk {} must divide the per-rank patch shard {} (L={} patches={} sp={})",
+        p.chunk,
+        lps,
+        p.shape.l,
+        p.patches,
+        sp
+    );
+    if let Some((c, u)) = caches {
+        anyhow::ensure!(
+            c.len() == plan.spec.pp_degree && u.len() == plan.spec.pp_degree,
+            "caches must hold one layer input per pipeline stage"
+        );
+    }
+    let warmup = caches.is_none();
+
+    let run = run_cluster(&plan.cluster, mode, |ctx| {
+        let group = plan.group_of(ctx.rank);
+        let flows = ctx.cluster().gpus_per_machine;
+        let run_one = |ctx: &mut RankCtx,
+                       branch: &'static str,
+                       x: &Tensor,
+                       cache_src: Option<&[Tensor]>|
+         -> (Tensor, Option<Vec<Tensor>>) {
+            let stage = group.stage_of(ctx.rank);
+            let x_buf = Buf::Real(x.clone());
+            let cache = cache_src.map(|c| Buf::Real(c[stage].clone()).split(1, p.patches));
+            let so = branch_step(ctx, p, group, branch, &x_buf, cache, plan.algo, flows);
+            (
+                so.input.into_tensor(),
+                so.out
+                    .map(|v| v.into_iter().map(Buf::into_tensor).collect::<Vec<_>>()),
+            )
+        };
+        match group.role {
+            BranchRole::Conditional => {
+                vec![("c", run_one(ctx, "c", cond_x, caches.map(|c| c.0)))]
+            }
+            BranchRole::Unconditional => {
+                vec![("u", run_one(ctx, "u", uncond_x, caches.map(|c| c.1)))]
+            }
+            BranchRole::Both => {
+                let c = run_one(ctx, "c", cond_x, caches.map(|c| c.0));
+                // fresh window epoch so the second branch can never read
+                // the first branch's exposed buffers
+                ctx.next_epoch();
+                let u = run_one(ctx, "u", uncond_x, caches.map(|c| c.1));
+                vec![("c", c), ("u", u)]
+            }
+        }
+    });
+
+    // Assemble each branch from replica 0 of its role.
+    let assemble = |role: BranchRole, tag: &str| -> Result<(Tensor, Vec<Tensor>)> {
+        let group = plan.group_for(role, 0);
+        let stage_caches: Vec<Tensor> = group
+            .stages
+            .iter()
+            .map(|m| branch_out(&run.outputs[m.base], tag).0.clone())
+            .collect();
+        let last = group.stages.last().expect("pp_degree >= 1");
+        let per_rank: Vec<&Vec<Tensor>> = last
+            .ranks()
+            .into_iter()
+            .map(|r| {
+                branch_out(&run.outputs[r], tag)
+                    .1
+                    .as_ref()
+                    .unwrap_or_else(|| panic!("rank {r} missing last-stage output"))
+            })
+            .collect();
+        let full = if warmup {
+            // warm-up: one contiguous SP shard per rank, in rank order
+            let shards: Vec<&Tensor> = per_rank.iter().map(|v| &v[0]).collect();
+            Tensor::concat(&shards, 1)?
+        } else {
+            // streamed: per-patch shards, patch-major then rank-major
+            let mut patch_outs: Vec<Tensor> = Vec::with_capacity(p.patches);
+            for i in 0..p.patches {
+                let shards: Vec<&Tensor> = per_rank.iter().map(|v| &v[i]).collect();
+                patch_outs.push(Tensor::concat(&shards, 1)?);
+            }
+            let refs: Vec<&Tensor> = patch_outs.iter().collect();
+            Tensor::concat(&refs, 1)?
+        };
+        Ok((full, stage_caches))
+    };
+
+    let (c_out, cond_caches) = assemble(BranchRole::Conditional, "c")?;
+    let (u_out, uncond_caches) = assemble(BranchRole::Unconditional, "u")?;
+    let eps = guidance_combine(&c_out, &u_out, scale)?;
+    Ok(GuidedPipeStep { eps, cond_caches, uncond_caches, makespan: run.makespan() })
+}
+
+/// Exact single-device reference for one branch's stage stack: plain
+/// softmax self-attention applied `pp` times.
+pub fn stacked_attention_oracle(x: &Tensor, pp: usize) -> Tensor {
+    let mut t = x.clone();
+    for _ in 0..pp {
+        t = host::attention_oracle(&t, &t, &t);
+    }
+    t
+}
+
+/// Drive `steps` diffusion steps of the displaced patch pipeline: step 0
+/// is the synchronous warm-up, later steps stream patches against
+/// one-step-stale KV. The latent update `x ← x + η·(eps − x)` models the
+/// slowly-drifting inputs PipeFusion's temporal-redundancy argument
+/// relies on; `cond_bias` is a fixed conditioning offset so the two
+/// guidance branches differ. Returns the final latent and the summed
+/// per-step makespan.
+pub fn guided_pipefusion_generate(
+    plan: &ParallelPlan,
+    p: &PipeParams,
+    steps: usize,
+    eta: f32,
+    x0: &Tensor,
+    cond_bias: &Tensor,
+    scale: f32,
+    mode: &ExecMode,
+) -> Result<(Tensor, f64)> {
+    let mut x = x0.clone();
+    let mut caches: Option<(Vec<Tensor>, Vec<Tensor>)> = None;
+    let mut makespan = 0.0;
+    for _ in 0..steps {
+        let xc = x.add(cond_bias)?;
+        let step = guided_pipefusion_step(
+            plan,
+            p,
+            &xc,
+            &x,
+            scale,
+            caches.as_ref().map(|(c, u)| (c.as_slice(), u.as_slice())),
+            mode,
+        )?;
+        makespan += step.makespan;
+        x = x.add(&step.eps.sub(&x)?.scale(eta))?;
+        caches = Some((step.cond_caches, step.uncond_caches));
+    }
+    Ok((x, makespan))
+}
+
+/// Exact (staleness-free) reference for [`guided_pipefusion_generate`]:
+/// the same diffusion loop with plain-softmax attention stacks.
+pub fn guided_pipefusion_oracle(
+    pp: usize,
+    steps: usize,
+    eta: f32,
+    x0: &Tensor,
+    cond_bias: &Tensor,
+    scale: f32,
+) -> Result<Tensor> {
+    let mut x = x0.clone();
+    for _ in 0..steps {
+        let c = stacked_attention_oracle(&x.add(cond_bias)?, pp);
+        let u = stacked_attention_oracle(&x, pp);
+        let eps = guidance_combine(&c, &u, scale)?;
+        x = x.add(&eps.sub(&x)?.scale(eta))?;
+    }
+    Ok(x)
+}
+
+/// Virtual-time makespan of one steady-state step of the patch pipeline
+/// in timing mode (shape-only buffers at paper scale), with each stage
+/// running ONE attention layer — a "pp-layer block". Callers model a
+/// full network by dividing by `pp_degree` (per-layer equivalent) and
+/// scaling by layer count; see `SimService::plan_layer_time`. `cfg_evals`
+/// mirrors [`super::hybrid::hybrid_layer_makespan`]: a `cfg_degree == 1`
+/// plan pays the guidance branches sequentially, a CFG-parallel plan
+/// concurrently.
+pub fn pipefusion_layer_makespan(
+    plan: &ParallelPlan,
+    shape: AttnShape,
+    chunk: usize,
+    patches: usize,
+    cfg_evals: usize,
+) -> f64 {
+    let p = PipeParams { shape, chunk, patches };
+    let lp = p.patch_len();
+    let run = run_cluster(&plan.cluster, &ExecMode::Timing, |ctx| {
+        let group = plan.group_of(ctx.rank);
+        let flows = ctx.cluster().gpus_per_machine;
+        let branches = match group.role {
+            BranchRole::Both => cfg_evals,
+            BranchRole::Conditional => 1,
+            BranchRole::Unconditional => usize::from(cfg_evals >= 2),
+        };
+        for b in 0..branches {
+            let x = Buf::Shape(vec![shape.b, shape.l, shape.h, shape.d]);
+            let cache: Vec<Buf> =
+                vec![Buf::Shape(vec![shape.b, lp, shape.h, shape.d]); patches];
+            branch_step(ctx, &p, group, &format!("t{b}"), &x, Some(cache), plan.algo, flows);
+            ctx.next_epoch();
+        }
+    });
+    run.makespan()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterSpec, ParallelSpec, SpDegrees};
+
+    #[test]
+    fn timing_pipeline_runs_and_costs_time() {
+        // 2 machines x 2 GPUs, pp2 x sp2: one stage per machine.
+        let cluster = ClusterSpec::new(2, 2);
+        let plan = ParallelPlan::build(
+            &cluster,
+            ParallelSpec::with_pp(1, 2, 1, SpDegrees::new(2, 1)),
+            SpAlgo::SwiftFusion,
+        )
+        .unwrap();
+        let shape = AttnShape::new(1, 4096, 8, 64);
+        let t = pipefusion_layer_makespan(&plan, shape, 4096 / 4 / 2, 4, 1);
+        assert!(t > 0.0);
+        // a second guidance eval on a cfg1 plan costs more
+        let t2 = pipefusion_layer_makespan(&plan, shape, 4096 / 4 / 2, 4, 2);
+        assert!(t2 > t, "sequential branches {t2} vs one {t}");
+    }
+
+    #[test]
+    fn warmup_step_matches_stacked_oracle() {
+        // pp2 x sp2 on one 4-GPU machine, synchronous warm-up.
+        let cluster = ClusterSpec::new(1, 4);
+        let plan = ParallelPlan::build(
+            &cluster,
+            ParallelSpec::with_pp(1, 2, 1, SpDegrees::new(2, 1)),
+            SpAlgo::Ulysses,
+        )
+        .unwrap();
+        let shape = AttnShape::new(1, 32, 4, 8);
+        let p = PipeParams { shape, chunk: 4, patches: 2 };
+        let dims = [1, 32, 4, 8];
+        let x = Tensor::random(&dims, 11);
+        let cb = Tensor::random(&dims, 12).scale(0.5);
+        let step = guided_pipefusion_step(
+            &plan,
+            &p,
+            &x.add(&cb).unwrap(),
+            &x,
+            3.0,
+            None,
+            &ExecMode::HostNumeric,
+        )
+        .unwrap();
+        let want = guidance_combine(
+            &stacked_attention_oracle(&x.add(&cb).unwrap(), 2),
+            &stacked_attention_oracle(&x, 2),
+            3.0,
+        )
+        .unwrap();
+        let diff = step.eps.max_abs_diff(&want);
+        assert!(diff < 1e-4, "warm-up vs stacked oracle: {diff}");
+        assert!(step.makespan > 0.0);
+        // the warm-up caches are the stages' exact layer inputs
+        assert_eq!(step.cond_caches.len(), 2);
+        let c0 = step.cond_caches[0].max_abs_diff(&x.add(&cb).unwrap());
+        assert!(c0 < 1e-6, "stage-0 cache is the step input: {c0}");
+    }
+
+    #[test]
+    fn streamed_step_reads_stale_kv_but_stays_bounded() {
+        // After a warm-up, a streamed step against *unchanged* inputs
+        // must reproduce the oracle exactly (the "stale" cache equals
+        // the fresh activations when the input did not move).
+        let cluster = ClusterSpec::new(1, 2);
+        let plan = ParallelPlan::build(
+            &cluster,
+            ParallelSpec::with_pp(1, 2, 1, SpDegrees::new(1, 1)),
+            SpAlgo::Ring,
+        )
+        .unwrap();
+        let shape = AttnShape::new(1, 16, 2, 4);
+        let p = PipeParams { shape, chunk: 4, patches: 2 };
+        let dims = [1, 16, 2, 4];
+        let x = Tensor::random(&dims, 77);
+        let cb = Tensor::random(&dims, 78).scale(0.5);
+        let warm = guided_pipefusion_step(
+            &plan,
+            &p,
+            &x.add(&cb).unwrap(),
+            &x,
+            2.0,
+            None,
+            &ExecMode::HostNumeric,
+        )
+        .unwrap();
+        let streamed = guided_pipefusion_step(
+            &plan,
+            &p,
+            &x.add(&cb).unwrap(),
+            &x,
+            2.0,
+            Some((&warm.cond_caches, &warm.uncond_caches)),
+            &ExecMode::HostNumeric,
+        )
+        .unwrap();
+        // both schedules are exact but reorder the softmax merge, so
+        // each may sit up to 1e-4 from the true value
+        let diff = streamed.eps.max_abs_diff(&warm.eps);
+        assert!(diff < 2e-4, "fixed-point streamed step vs warm-up: {diff}");
+    }
+
+    #[test]
+    fn step_rejects_bad_patch_divisibility() {
+        let cluster = ClusterSpec::new(1, 4);
+        let plan = ParallelPlan::build(
+            &cluster,
+            ParallelSpec::with_pp(1, 2, 1, SpDegrees::new(2, 1)),
+            SpAlgo::Ulysses,
+        )
+        .unwrap();
+        // L = 36 does not split into 4 patches over 2 stage ranks x chunk 4
+        let shape = AttnShape::new(1, 36, 4, 8);
+        let p = PipeParams { shape, chunk: 4, patches: 4 };
+        let dims = [1, 36, 4, 8];
+        let x = Tensor::random(&dims, 5);
+        let err = guided_pipefusion_step(
+            &plan,
+            &p,
+            &x,
+            &x,
+            1.0,
+            None,
+            &ExecMode::HostNumeric,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("patches"), "{err}");
+    }
+}
