@@ -207,6 +207,33 @@ pub fn plan_step_cost_patches(
     evals * per_layer
 }
 
+/// Predicted fractional per-step improvement of re-carving a pod from
+/// plan `from` to plan `to` for a workload of `shape`:
+/// `1 − cost(to) / cost(from)` under [`plan_step_cost_patches`].
+/// Positive when the move helps (`0.1` = 10 % cheaper per step),
+/// negative when it hurts. This is the prediction the hysteresis
+/// re-carving policy
+/// ([`crate::cluster::recarve::RecarvePolicy::Hysteresis`]) compares
+/// against its threshold: using the same closed form as
+/// [`choose_spec`] keeps the drain/re-plan decision consistent with the
+/// admission-time planner.
+pub fn recarve_gain(
+    cluster: &ClusterSpec,
+    algo: SpAlgo,
+    shape: &AttnShape,
+    cfg_evals: usize,
+    patches: usize,
+    from: &ParallelSpec,
+    to: &ParallelSpec,
+) -> f64 {
+    let c_from = plan_step_cost_patches(cluster, algo, shape, from, cfg_evals, patches);
+    let c_to = plan_step_cost_patches(cluster, algo, shape, to, cfg_evals, patches);
+    if !(c_from.is_finite() && c_from > 0.0) {
+        return 0.0;
+    }
+    1.0 - c_to / c_from
+}
+
 /// All structurally valid hybrid specs for a cluster/head count, each
 /// stage's SP degrees set by the paper's gcd placement rule. Covers
 /// `cfg_degree ∈ {1, 2}` × every machine-aligned pipeline depth ×
@@ -487,6 +514,64 @@ mod tests {
                     "{picked:?} (cost {picked_cost}) not minimal vs {cand:?} (cost {cost})"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn recarve_gain_is_signed_and_consistent_with_the_chooser() {
+        // Moving from a stale short-image carve to the plan the chooser
+        // picks for a long CFG video must predict a substantial win; the
+        // reverse move must predict a loss of the matching magnitude
+        // (1 - 1/(1 - g)), and a no-op move predicts zero.
+        let c = ClusterSpec::paper_testbed();
+        let video = shape(); // 96k tokens, CFG
+        let small = AttnShape::new(1, 4096, 24, 64);
+        let video_plan = choose_spec(&c, SpAlgo::SwiftFusion, &video, 2, 1);
+        let short_plan = choose_spec(&c, SpAlgo::SwiftFusion, &small, 1, 1);
+        assert_ne!(video_plan, short_plan);
+        let g = recarve_gain(
+            &c,
+            SpAlgo::SwiftFusion,
+            &video,
+            2,
+            DEFAULT_PATCHES,
+            &short_plan,
+            &video_plan,
+        );
+        assert!(g > 0.2, "stale short carve must predict a large gain: {g}");
+        let back = recarve_gain(
+            &c,
+            SpAlgo::SwiftFusion,
+            &video,
+            2,
+            DEFAULT_PATCHES,
+            &video_plan,
+            &short_plan,
+        );
+        assert!(back < 0.0, "reverse move must predict a loss: {back}");
+        let noop = recarve_gain(
+            &c,
+            SpAlgo::SwiftFusion,
+            &video,
+            2,
+            DEFAULT_PATCHES,
+            &video_plan,
+            &video_plan,
+        );
+        assert!(noop.abs() < 1e-12);
+        // by argmin-ness of the chooser, no move away from the chosen
+        // plan can predict a positive gain
+        for cand in enumerate_specs(&c, video.h) {
+            let g = recarve_gain(
+                &c,
+                SpAlgo::SwiftFusion,
+                &video,
+                2,
+                DEFAULT_PATCHES,
+                &video_plan,
+                &cand,
+            );
+            assert!(g <= 1e-12, "{cand:?} beats the chosen plan by {g}");
         }
     }
 

@@ -15,6 +15,7 @@
 pub mod clock;
 pub mod exec;
 pub mod plan;
+pub mod recarve;
 
 use crate::config::{ClusterSpec, SpDegrees};
 

@@ -1,0 +1,549 @@
+//! Dynamic re-carving of live pods: plan *epochs*, drain barriers, and
+//! the policies that decide when a pod trades its current carve for a
+//! better one.
+//!
+//! The hybrid planner ([`crate::cluster::plan`]) freezes one
+//! [`crate::cluster::plan::ParallelPlan`] when a pod admits a request
+//! stream. That is the right call while traffic is homogeneous — but a
+//! serving pod sees traffic *shift* (short image bursts giving way to
+//! long CFG video, and back), and the plan
+//! [`crate::analysis::choose_spec`] would pick for the new mix can differ
+//! from the one the pod is carved into. This module models a pod as a
+//! sequence of **plan epochs**:
+//!
+//! ```text
+//!   epoch 0                  epoch 1                    epoch 2
+//!   cfg1 x rep4 x U8R1  →→   cfg2 x pp2 x U8R1    →→    cfg1 x rep4 x U8R1
+//!   [-- requests --]|drain|setup|[--- requests ---]|drain|setup|[- requests -]
+//! ```
+//!
+//! Each epoch owns one `ParallelSpec`; transitioning requires **draining**
+//! the in-flight groups (no request ever spans two carves — the old
+//! epoch's batches run to completion behind the drain barrier), then
+//! paying a modeled **re-setup** cost ([`resetup_cost`]) for tearing down
+//! and rebuilding the carved [`crate::cluster::Mesh2D`] sub-meshes and
+//! pipeline stages, before the first batch of the new epoch can start.
+//!
+//! When to pay that cost is a policy question — re-carving on every
+//! preference flip thrashes, never re-carving serves long sequences with
+//! a stale carve. [`RecarvePolicy`] covers the spectrum, and
+//! [`EpochTracker`] is the per-pod state machine the epoch-aware router
+//! ([`crate::coordinator::router`]) and serving loop
+//! ([`crate::coordinator::engine::serve`]) drive. The numerics are
+//! unaffected by construction: every epoch's plan is rebuilt from its
+//! validated spec ([`EpochTracker::carved_plan`]), and
+//! `rust/tests/sp_property.rs` proves oracle-exactness on both sides of
+//! an epoch boundary, including a pipelined (`pp > 1`) to non-pipelined
+//! transition.
+
+use crate::cluster::plan::ParallelPlan;
+use crate::config::{ClusterSpec, ParallelSpec};
+use crate::sp::SpAlgo;
+
+/// When a pod may trade its current carve for the plan the cost model
+/// prefers for the traffic it is actually seeing.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RecarvePolicy {
+    /// The pre-recarve idealization (and the default, so existing serving
+    /// paths are unchanged): adopt the preferred plan on every dispatch
+    /// with **zero** modeled transition cost. This is what the planner
+    /// implicitly assumed before epochs existed — useful as an upper
+    /// bound on what any real policy can achieve.
+    Free,
+    /// Freeze the admission-time carve for the pod's lifetime. Requests
+    /// preferring a different plan are served under the stale carve —
+    /// the static-plan baseline `benches/fig_recarve.rs` compares
+    /// against, and (for a fixed-plan service) exactly the pre-epoch
+    /// serving behaviour. One exception: a carve that cannot serve a
+    /// request *at all* still yields via [`EpochTracker::force`] —
+    /// that transition is dictated by physics, not preference.
+    Never,
+    /// Re-carve only when the pod is idle at dispatch time (the drain
+    /// barrier is free); under backlog the pod keeps its carve. Cheap
+    /// and safe, but a saturated pod never gets to adapt.
+    OnIdle,
+    /// Re-carve once the cost model predicts at least `threshold`
+    /// fractional per-step improvement (`0.1` = 10 %, via
+    /// [`crate::analysis::recarve_gain`]) for `window` *consecutive*
+    /// dispatches on the pod. The window is the hysteresis: alternating
+    /// short/long traffic resets the streak before it fires, so the pod
+    /// never thrashes between carves, while a sustained shift clears the
+    /// window and pays the drain + re-setup once.
+    Hysteresis {
+        /// Minimum predicted fractional gain (e.g. `0.1` for 10 %).
+        threshold: f64,
+        /// Consecutive gainful dispatches required before re-carving.
+        window: usize,
+    },
+}
+
+impl RecarvePolicy {
+    /// Does this policy read the modeled gain prediction passed to
+    /// [`EpochTracker::on_dispatch`]? Callers use this to skip computing
+    /// [`crate::analysis::recarve_gain`] for policies that ignore it —
+    /// keep it in sync when adding a gain-driven policy variant.
+    pub fn wants_gain(&self) -> bool {
+        matches!(self, Self::Hysteresis { .. })
+    }
+
+    /// Parse a CLI policy name; `threshold`/`window` feed the hysteresis
+    /// variant and are ignored by the others.
+    pub fn from_name(name: &str, threshold: f64, window: usize) -> Option<Self> {
+        match name {
+            "free" => Some(Self::Free),
+            "never" => Some(Self::Never),
+            "on-idle" => Some(Self::OnIdle),
+            "hysteresis" => Some(Self::Hysteresis { threshold, window }),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for RecarvePolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Free => write!(f, "free"),
+            Self::Never => write!(f, "never"),
+            Self::OnIdle => write!(f, "on-idle"),
+            Self::Hysteresis { threshold, window } => {
+                write!(f, "hysteresis({:.0}% x {window})", threshold * 100.0)
+            }
+        }
+    }
+}
+
+/// One plan epoch of a pod: a half-open span of virtual time during
+/// which the pod is carved into one fixed plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanEpoch {
+    /// Epoch index within the pod (0 = admission-time carve).
+    pub index: usize,
+    /// The epoch's hybrid spec; `None` for service models that do not
+    /// plan (legacy single-mesh serving).
+    pub plan: Option<ParallelSpec>,
+    /// Virtual time the epoch became serveable (after the previous
+    /// epoch's drain and this epoch's re-setup).
+    pub started_at: f64,
+    /// Requests served inside this epoch.
+    pub served: usize,
+}
+
+impl PlanEpoch {
+    /// Stable display key, matching the serving report's plan histogram:
+    /// the spec's [`ParallelSpec::label`], or `single-mesh` for
+    /// unplanned epochs.
+    pub fn label(&self) -> String {
+        self.plan
+            .map_or_else(|| "single-mesh".to_string(), |s| s.label())
+    }
+}
+
+/// Outcome of one dispatch-time policy decision.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Transition {
+    /// The carve the batch must be served under (the new plan if
+    /// `recarved`, otherwise the — possibly stale — current one).
+    pub carve: Option<ParallelSpec>,
+    /// Whether an epoch boundary was crossed at this dispatch.
+    pub recarved: bool,
+    /// Seconds the batch waited on the drain barrier (previous epoch's
+    /// in-flight work running to completion). Zero unless `recarved`.
+    pub drain: f64,
+    /// Re-setup seconds charged to the pod timeline. Zero unless
+    /// `recarved` (and always zero under [`RecarvePolicy::Free`]).
+    pub setup: f64,
+}
+
+impl Transition {
+    fn keep(carve: Option<ParallelSpec>) -> Self {
+        Self { carve, recarved: false, drain: 0.0, setup: 0.0 }
+    }
+}
+
+/// Modeled cost (seconds) of tearing down and rebuilding a pod's carved
+/// sub-meshes at an epoch boundary: a host-side re-plan constant plus,
+/// per log₂(P) communicator stage, a pod-wide barrier and the
+/// window/communicator re-registration that one-sided libraries pay when
+/// the symmetric heap is re-laid-out. Deliberately of NCCL/NVSHMEM
+/// re-init magnitude (tens of milliseconds on a 32-GPU pod) — small next
+/// to a video generation, ruinous if paid on every request, which is
+/// exactly the trade the [`RecarvePolicy`] variants navigate.
+pub fn resetup_cost(cluster: &ClusterSpec) -> f64 {
+    /// Host-side cost of validating the spec and rebuilding the
+    /// `ParallelPlan` / schedule state.
+    const REPLAN_HOST: f64 = 5e-3;
+    /// Per-log-stage communicator + window re-registration.
+    const COMM_INIT: f64 = 4e-3;
+    let p = cluster.total_gpus() as f64;
+    let stages = p.log2().ceil().max(1.0);
+    REPLAN_HOST + stages * (cluster.net.barrier_lat + COMM_INIT)
+}
+
+/// Per-pod epoch state machine: the current carve, the hysteresis
+/// streak, and the epoch/drain observability the serving report
+/// aggregates. Driven by the serving loop once per batch dispatch.
+#[derive(Debug, Clone)]
+pub struct EpochTracker {
+    /// The pod's re-carving policy.
+    pub policy: RecarvePolicy,
+    /// Seconds charged per epoch transition (see [`resetup_cost`]).
+    pub setup_cost: f64,
+    /// False until the first dispatch adopts the admission-time carve.
+    started: bool,
+    carve: Option<ParallelSpec>,
+    /// Consecutive gainful dispatches (hysteresis state).
+    streak: usize,
+    epochs: Vec<PlanEpoch>,
+    recarve_count: usize,
+    drain_time: f64,
+    setup_time: f64,
+}
+
+impl EpochTracker {
+    pub fn new(policy: RecarvePolicy, setup_cost: f64) -> Self {
+        Self {
+            policy,
+            setup_cost,
+            started: false,
+            carve: None,
+            streak: 0,
+            epochs: Vec::new(),
+            recarve_count: 0,
+            drain_time: 0.0,
+            setup_time: 0.0,
+        }
+    }
+
+    /// The pod's current carve (`None` before the first dispatch, or for
+    /// models that do not plan).
+    pub fn carve(&self) -> Option<ParallelSpec> {
+        self.carve
+    }
+
+    /// All epochs so far, in order; the last one is live.
+    pub fn epochs(&self) -> &[PlanEpoch] {
+        &self.epochs
+    }
+
+    /// Epoch transitions paid so far (the admission-time carve is not a
+    /// transition).
+    pub fn recarve_count(&self) -> usize {
+        self.recarve_count
+    }
+
+    /// Total seconds epoch-opening batches waited on drain barriers.
+    pub fn drain_time(&self) -> f64 {
+        self.drain_time
+    }
+
+    /// Total re-setup seconds charged to the pod's timeline.
+    pub fn setup_time(&self) -> f64 {
+        self.setup_time
+    }
+
+    /// Rebuild the current epoch's carved [`ParallelPlan`] — the step a
+    /// real pod performs after the drain barrier: fresh `Mesh2D`
+    /// sub-meshes and pipeline stages from the validated spec. `None`
+    /// when the pod has no hybrid carve (single-mesh serving) *or* when
+    /// the carve does not validate against `cluster` (a mismatched
+    /// service model); the serving path models the latter as
+    /// unserveable rather than panicking, and this accessor mirrors
+    /// that posture.
+    pub fn carved_plan(&self, cluster: &ClusterSpec, algo: SpAlgo) -> Option<ParallelPlan> {
+        self.carve
+            .and_then(|spec| ParallelPlan::build(cluster, spec, algo).ok())
+    }
+
+    /// Decide (and apply) the epoch transition for one batch dispatch.
+    ///
+    /// * `ready_at` — when the batch is ready to start;
+    /// * `free_at` — when the pod's in-flight work drains;
+    /// * `preferred` — the plan the service model would carve for this
+    ///   batch's workload (`None` for unplanned models);
+    /// * `gain` — predicted fractional per-step improvement of moving
+    ///   from the current carve to `preferred`
+    ///   ([`crate::analysis::recarve_gain`]); only the hysteresis policy
+    ///   reads it, so callers may pass `None` for other policies.
+    ///
+    /// The first dispatch adopts `preferred` as the admission-time carve
+    /// (epoch 0) at no cost. Afterwards a transition happens only when
+    /// `preferred` differs from the current carve *and* the policy fires;
+    /// the returned [`Transition`] carries the carve to serve under plus
+    /// the drain/setup accounting the caller must commit to the pod's
+    /// timeline ([`crate::coordinator::router::Router::commit_recarve`]).
+    pub fn on_dispatch(
+        &mut self,
+        ready_at: f64,
+        free_at: f64,
+        preferred: Option<ParallelSpec>,
+        gain: Option<f64>,
+    ) -> Transition {
+        if !self.started {
+            self.started = true;
+            self.carve = preferred;
+            self.epochs.push(PlanEpoch {
+                index: 0,
+                plan: preferred,
+                started_at: ready_at.max(free_at),
+                served: 0,
+            });
+            return Transition::keep(preferred);
+        }
+        if self.carve == preferred {
+            self.streak = 0;
+            return Transition::keep(self.carve);
+        }
+        let recarve = match self.policy {
+            RecarvePolicy::Free => true,
+            RecarvePolicy::Never => false,
+            RecarvePolicy::OnIdle => free_at <= ready_at,
+            RecarvePolicy::Hysteresis { threshold, window } => {
+                if gain.is_some_and(|g| g >= threshold) {
+                    self.streak += 1;
+                } else {
+                    self.streak = 0;
+                }
+                self.streak >= window.max(1)
+            }
+        };
+        if !recarve {
+            return Transition::keep(self.carve);
+        }
+        self.transition(ready_at, free_at, preferred)
+    }
+
+    /// Force an epoch transition regardless of policy. The serving loop
+    /// uses this when the live carve **cannot serve** a batch at all
+    /// (e.g. a patch-pipeline granularity larger than the request's
+    /// sequence): the re-carve is dictated by physics, not preference,
+    /// so even [`RecarvePolicy::Never`] yields. The transition is paid
+    /// for like any other (drain + re-setup).
+    pub fn force(
+        &mut self,
+        ready_at: f64,
+        free_at: f64,
+        preferred: Option<ParallelSpec>,
+    ) -> Transition {
+        if !self.started || self.carve == preferred {
+            return self.on_dispatch(ready_at, free_at, preferred, None);
+        }
+        self.transition(ready_at, free_at, preferred)
+    }
+
+    /// The shared transition tail: bookkeeping + the new epoch.
+    fn transition(
+        &mut self,
+        ready_at: f64,
+        free_at: f64,
+        preferred: Option<ParallelSpec>,
+    ) -> Transition {
+        self.streak = 0;
+        self.recarve_count += 1;
+        // Free models the pre-epoch idealization: the switch is
+        // instantaneous and unpaid. Real policies drain in-flight work
+        // and pay the re-setup before the new epoch opens.
+        let (drain, setup) = if matches!(self.policy, RecarvePolicy::Free) {
+            (0.0, 0.0)
+        } else {
+            ((free_at - ready_at).max(0.0), self.setup_cost)
+        };
+        self.drain_time += drain;
+        self.setup_time += setup;
+        self.carve = preferred;
+        self.epochs.push(PlanEpoch {
+            index: self.epochs.len(),
+            plan: preferred,
+            // the true open time: the previous epoch's in-flight work
+            // finishes at free_at even under the unpaid Free policy
+            // (whose drain is recorded as zero), then setup is paid
+            started_at: ready_at.max(free_at) + setup,
+            served: 0,
+        });
+        Transition { carve: preferred, recarved: true, drain, setup }
+    }
+
+    /// Attribute `n` served requests to the live epoch.
+    pub fn record_served(&mut self, n: usize) {
+        if let Some(e) = self.epochs.last_mut() {
+            e.served += n;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SpDegrees;
+
+    fn spec_a() -> ParallelSpec {
+        ParallelSpec::new(1, 4, SpDegrees::new(8, 1))
+    }
+
+    fn spec_b() -> ParallelSpec {
+        ParallelSpec::with_pp(2, 2, 1, SpDegrees::new(8, 1))
+    }
+
+    #[test]
+    fn first_dispatch_adopts_admission_carve_for_free() {
+        for policy in [
+            RecarvePolicy::Free,
+            RecarvePolicy::Never,
+            RecarvePolicy::OnIdle,
+            RecarvePolicy::Hysteresis { threshold: 0.1, window: 2 },
+        ] {
+            let mut t = EpochTracker::new(policy, 0.03);
+            let tr = t.on_dispatch(1.0, 0.0, Some(spec_a()), None);
+            assert!(!tr.recarved, "{policy:?}");
+            assert_eq!(tr.carve, Some(spec_a()));
+            assert_eq!((tr.drain, tr.setup), (0.0, 0.0));
+            assert_eq!(t.epochs().len(), 1);
+            assert_eq!(t.epochs()[0].index, 0);
+            assert_eq!(t.recarve_count(), 0);
+        }
+    }
+
+    #[test]
+    fn never_serves_stale_under_the_admission_carve() {
+        let mut t = EpochTracker::new(RecarvePolicy::Never, 0.03);
+        t.on_dispatch(0.0, 0.0, Some(spec_a()), None);
+        let tr = t.on_dispatch(1.0, 5.0, Some(spec_b()), Some(0.9));
+        assert!(!tr.recarved);
+        assert_eq!(tr.carve, Some(spec_a()), "stale carve kept");
+        assert_eq!(t.epochs().len(), 1);
+        assert_eq!(t.recarve_count(), 0);
+    }
+
+    #[test]
+    fn free_adopts_every_preference_at_zero_cost() {
+        let mut t = EpochTracker::new(RecarvePolicy::Free, 0.03);
+        t.on_dispatch(0.0, 0.0, Some(spec_a()), None);
+        let tr = t.on_dispatch(1.0, 9.0, Some(spec_b()), None);
+        assert!(tr.recarved);
+        assert_eq!(tr.carve, Some(spec_b()));
+        assert_eq!((tr.drain, tr.setup), (0.0, 0.0), "free = unpaid");
+        assert_eq!(t.setup_time(), 0.0);
+        assert_eq!(t.recarve_count(), 1);
+        assert_eq!(t.epochs().len(), 2);
+    }
+
+    #[test]
+    fn on_idle_recarves_only_when_drained() {
+        let mut t = EpochTracker::new(RecarvePolicy::OnIdle, 0.03);
+        t.on_dispatch(0.0, 0.0, Some(spec_a()), None);
+        // pod busy until t=5, batch ready at t=1: keep the carve
+        let busy = t.on_dispatch(1.0, 5.0, Some(spec_b()), None);
+        assert!(!busy.recarved);
+        // pod idle: re-carve, drain free, setup charged
+        let idle = t.on_dispatch(6.0, 5.0, Some(spec_b()), None);
+        assert!(idle.recarved);
+        assert_eq!(idle.drain, 0.0);
+        assert_eq!(idle.setup, 0.03);
+        assert_eq!(t.carve(), Some(spec_b()));
+    }
+
+    #[test]
+    fn hysteresis_needs_a_sustained_gain_streak() {
+        let mut t =
+            EpochTracker::new(RecarvePolicy::Hysteresis { threshold: 0.2, window: 2 }, 0.03);
+        t.on_dispatch(0.0, 0.0, Some(spec_a()), None);
+        // gainful once, then below threshold: streak resets
+        assert!(!t.on_dispatch(1.0, 2.0, Some(spec_b()), Some(0.5)).recarved);
+        assert!(!t.on_dispatch(2.0, 3.0, Some(spec_b()), Some(0.1)).recarved);
+        // a dispatch already on the preferred plan also resets the streak
+        assert!(!t.on_dispatch(3.0, 4.0, Some(spec_b()), Some(0.5)).recarved);
+        assert!(!t.on_dispatch(4.0, 5.0, Some(spec_a()), None).recarved);
+        // two consecutive gainful dispatches: the second one fires
+        assert!(!t.on_dispatch(5.0, 8.0, Some(spec_b()), Some(0.5)).recarved);
+        let fire = t.on_dispatch(6.0, 8.0, Some(spec_b()), Some(0.5));
+        assert!(fire.recarved);
+        // drain = in-flight work (until t=8) minus readiness (t=6)
+        assert_eq!(fire.drain, 2.0);
+        assert_eq!(fire.setup, 0.03);
+        assert_eq!(t.drain_time(), 2.0);
+        assert_eq!(t.setup_time(), 0.03);
+        // the new epoch opens after drain + setup
+        assert_eq!(t.epochs()[1].started_at, 6.0 + 2.0 + 0.03);
+        assert_eq!(t.epochs()[1].plan, Some(spec_b()));
+    }
+
+    #[test]
+    fn force_overrides_never_and_invalid_carves_yield_no_plan() {
+        let mut t = EpochTracker::new(RecarvePolicy::Never, 0.1);
+        t.on_dispatch(0.0, 0.0, Some(spec_a()), None);
+        // the policy says keep; physics (an unserveable carve) says go
+        let f = t.force(2.0, 5.0, Some(spec_b()));
+        assert!(f.recarved);
+        assert_eq!(f.drain, 3.0);
+        assert_eq!(f.setup, 0.1);
+        assert_eq!(t.carve(), Some(spec_b()));
+        assert_eq!(t.recarve_count(), 1);
+        // forcing onto the current carve is a no-op
+        let same = t.force(6.0, 5.0, Some(spec_b()));
+        assert!(!same.recarved);
+        assert_eq!(t.recarve_count(), 1);
+        // a carve that does not validate against the given cluster
+        // yields None (modeled as unserveable), never a panic
+        let tiny = ClusterSpec::new(1, 2);
+        assert!(t.carved_plan(&tiny, SpAlgo::SwiftFusion).is_none());
+    }
+
+    #[test]
+    fn unplanned_models_stay_in_one_epoch() {
+        let mut t = EpochTracker::new(RecarvePolicy::Free, 0.03);
+        for i in 0..4 {
+            let tr = t.on_dispatch(i as f64, 0.0, None, None);
+            assert!(!tr.recarved);
+            assert_eq!(tr.carve, None);
+            t.record_served(1);
+        }
+        assert_eq!(t.epochs().len(), 1);
+        assert_eq!(t.epochs()[0].served, 4);
+        assert_eq!(t.epochs()[0].label(), "single-mesh");
+    }
+
+    #[test]
+    fn carved_plan_rebuilds_the_epoch_mesh() {
+        let cluster = ClusterSpec::new(4, 8);
+        let mut t = EpochTracker::new(RecarvePolicy::Free, 0.0);
+        assert!(t.carved_plan(&cluster, SpAlgo::SwiftFusion).is_none());
+        t.on_dispatch(0.0, 0.0, Some(spec_b()), None);
+        let plan = t.carved_plan(&cluster, SpAlgo::SwiftFusion).unwrap();
+        assert_eq!(plan.spec, spec_b());
+        assert_eq!(plan.groups.len(), 2);
+        assert_eq!(plan.groups[0].pp_degree(), 2);
+    }
+
+    #[test]
+    fn resetup_cost_is_milliseconds_scale_and_grows_with_pod_size() {
+        let small = resetup_cost(&ClusterSpec::new(1, 2));
+        let big = resetup_cost(&ClusterSpec::new(4, 8));
+        assert!(small > 1e-3 && big < 1.0, "{small} .. {big}");
+        assert!(big > small);
+    }
+
+    #[test]
+    fn policy_names_round_trip() {
+        assert_eq!(
+            RecarvePolicy::from_name("never", 0.0, 0),
+            Some(RecarvePolicy::Never)
+        );
+        assert_eq!(RecarvePolicy::from_name("free", 0.0, 0), Some(RecarvePolicy::Free));
+        assert_eq!(
+            RecarvePolicy::from_name("on-idle", 0.0, 0),
+            Some(RecarvePolicy::OnIdle)
+        );
+        assert_eq!(
+            RecarvePolicy::from_name("hysteresis", 0.25, 3),
+            Some(RecarvePolicy::Hysteresis { threshold: 0.25, window: 3 })
+        );
+        assert_eq!(RecarvePolicy::from_name("sometimes", 0.0, 0), None);
+        assert!(RecarvePolicy::Hysteresis { threshold: 0.1, window: 2 }.wants_gain());
+        assert!(!RecarvePolicy::Never.wants_gain());
+        assert!(!RecarvePolicy::Free.wants_gain());
+        assert!(!RecarvePolicy::OnIdle.wants_gain());
+        assert_eq!(RecarvePolicy::Never.to_string(), "never");
+        assert!(RecarvePolicy::Hysteresis { threshold: 0.1, window: 2 }
+            .to_string()
+            .contains("10%"));
+    }
+}

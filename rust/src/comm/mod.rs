@@ -21,6 +21,31 @@
 //! Determinism: completion times depend only on (sender issue time,
 //! receiver issue time, link model, per-rank egress/ingress queues) — not
 //! on wall-clock thread interleaving.
+//!
+//! ## One-sided window semantics (the contract PipeFusion relies on)
+//!
+//! Windows are keyed by `(owner rank, slot name)`; ranks re-expose slots
+//! freely, and [`crate::cluster::exec::RankCtx`] prefixes every slot
+//! with its *window epoch* so successive collectives can never read a
+//! stale window from an earlier layer by accident
+//! ([`crate::cluster::exec::RankCtx::next_epoch`]). Within an epoch the
+//! guarantees are exactly NVSHMEM's:
+//!
+//! * a [`CommWorld::get`] observes the **whole** buffer most recently
+//!   published under the slot (publication is atomic — never a torn or
+//!   half-written tensor), and its virtual completion respects the
+//!   publisher's `publish_time`;
+//! * there is **no implicit global ordering**: only explicit waits,
+//!   fences, and [`CommWorld::barrier`] synchronize, so a rank may
+//!   legally keep computing against an *older local copy* of data a
+//!   peer has since refreshed.
+//!
+//! That last point is a feature, not a hazard: the displaced patch
+//! pipeline ([`crate::sp::pipefusion`]) deliberately serves off-stage KV
+//! from the previous diffusion step's activations (one-step-stale), and
+//! its correctness argument — an oracle-exact synchronous warm-up step,
+//! then staleness bounded by one step of input drift — depends only on
+//! the two guarantees above, never on inter-rank timing.
 
 use std::collections::HashMap;
 use std::sync::{Condvar, Mutex};

@@ -1,17 +1,21 @@
 //! The serving engine: a deterministic virtual-time loop over
-//! router + batcher + a [`ServiceModel`].
+//! router + batcher + a [`ServiceModel`], with epoch-aware dispatch —
+//! every batch is served under its pod's live carve, and crossing a plan
+//! epoch boundary ([`crate::cluster::recarve`]) first drains the pod and
+//! charges the modeled re-setup cost.
 //!
 //! Also provides [`SimService`]: the paper-scale service model that runs
 //! the *actual* SP schedules in timing mode (threaded cluster, shape-only
 //! buffers) to get per-layer latencies, then scales by layers × steps.
-//! Results are cached per (workload, batch) since the schedules are
-//! deterministic.
+//! Results are cached per (workload, batch, plan) since the schedules
+//! are deterministic.
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::Mutex;
 
 use crate::cluster::exec::{run_cluster, ExecMode};
 use crate::cluster::plan::ParallelPlan;
+use crate::cluster::recarve::PlanEpoch;
 use crate::comm::Buf;
 use crate::config::{ClusterSpec, ParallelSpec, ParallelSpecError, SpDegrees};
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
@@ -19,6 +23,7 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::router::Router;
 use crate::coordinator::ServiceModel;
 use crate::sp::{hybrid, pipefusion, SpAlgo, SpParams};
+use crate::util::json::Json;
 use crate::workload::{Request, Workload};
 
 /// How the engine maps requests to hybrid CFG×SP plans.
@@ -50,7 +55,10 @@ pub struct SimService {
     /// Patch count for pipelined (`pp_degree > 1`) plans — PipeFusion's
     /// `M`, shared with the cost model's pipeline term.
     pub patches: usize,
-    cache: Mutex<HashMap<(String, usize), f64>>,
+    /// (workload, batch, plan label) → service seconds. The plan label
+    /// keys the cache because the epoch-aware engine may serve the same
+    /// workload under a *stale* carve as well as its preferred plan.
+    cache: Mutex<HashMap<(String, usize, String), f64>>,
     /// Auto-plan memo: workload name → chosen spec (the chooser
     /// re-enumerates the whole plan space otherwise — once per batch).
     spec_cache: Mutex<HashMap<String, ParallelSpec>>,
@@ -178,6 +186,12 @@ impl SimService {
         }
         let sp_ranks = spec.ranks_per_group();
         let w = workload.aligned_to(sp_ranks);
+        if w.shape.l == 0 {
+            // the workload is too short for this carve's SP sharding
+            // (mirrors the pipelined branch above): unserveable, not
+            // free
+            return f64::INFINITY;
+        }
         let mut shape = w.shape;
         shape.b = batch;
         let plan = ParallelPlan::build(&self.cluster, *spec, self.algo)
@@ -214,21 +228,63 @@ impl SimService {
             }
         }
     }
-}
 
-impl ServiceModel for SimService {
-    fn service_time(&self, workload: &Workload, batch: usize) -> f64 {
-        let key = (workload.name.to_string(), batch);
+    /// Full-generation service time under an explicit carve (`None` =
+    /// the legacy single-mesh path): the shared implementation behind
+    /// both [`ServiceModel::service_time`] (preferred plan) and
+    /// [`ServiceModel::service_time_under`] (possibly stale epoch
+    /// carve). A carve that is structurally invalid for this service's
+    /// cluster models as unserveable (infinite time) rather than
+    /// panicking.
+    fn timed(&self, workload: &Workload, batch: usize, spec: Option<ParallelSpec>) -> f64 {
+        let plan_key = spec.map_or_else(|| "single-mesh".to_string(), |s| s.label());
+        let key = (workload.name.to_string(), batch, plan_key);
         if let Some(&t) = self.cache.lock().unwrap().get(&key) {
             return t;
         }
-        let layer = match self.resolve_spec(workload) {
+        let layer = match spec {
             None => self.layer_time(workload, batch),
+            Some(spec) if spec.validate(&self.cluster).is_err() => f64::INFINITY,
             Some(spec) => self.plan_layer_time(&spec, workload, batch),
         };
         let total = layer * workload.layers as f64 * workload.steps as f64 + self.fixed_overhead;
         self.cache.lock().unwrap().insert(key, total);
         total
+    }
+}
+
+impl ServiceModel for SimService {
+    fn service_time(&self, workload: &Workload, batch: usize) -> f64 {
+        self.timed(workload, batch, self.resolve_spec(workload))
+    }
+
+    fn service_time_under(
+        &self,
+        workload: &Workload,
+        batch: usize,
+        carve: Option<&ParallelSpec>,
+    ) -> f64 {
+        self.timed(workload, batch, carve.copied())
+    }
+
+    fn plan_spec(&self, workload: &Workload) -> Option<ParallelSpec> {
+        self.resolve_spec(workload)
+    }
+
+    fn recarve_gain(&self, workload: &Workload, from: &ParallelSpec) -> Option<f64> {
+        let to = self.resolve_spec(workload)?;
+        if to == *from {
+            return None;
+        }
+        Some(crate::analysis::recarve_gain(
+            &self.cluster,
+            self.algo,
+            &workload.shape,
+            workload.cfg_evals,
+            self.patches,
+            from,
+            &to,
+        ))
     }
 
     fn admit(&self, workload: &Workload) -> Result<(), String> {
@@ -254,27 +310,128 @@ impl ServiceModel for SimService {
     }
 }
 
+/// Epoch/drain observability of one serving run, aggregated over the
+/// router's pods — how often live pods were re-carved and what the
+/// transitions cost ([`crate::cluster::recarve`]).
+#[derive(Debug, Default)]
+pub struct RecarveReport {
+    /// Epoch transitions paid across all pods (admission-time carves are
+    /// not transitions).
+    pub recarve_count: usize,
+    /// Total seconds epoch-opening batches waited on drain barriers.
+    pub drain_time: f64,
+    /// Total modeled re-setup seconds charged to pod timelines.
+    pub setup_time: f64,
+    /// Per-epoch plan histogram: plan label → number of epochs (across
+    /// all pods) that ran it.
+    pub epoch_histogram: BTreeMap<String, usize>,
+    /// Every pod's epoch log, as (pod id, epoch) in pod order.
+    pub epochs: Vec<(usize, PlanEpoch)>,
+}
+
 /// Outcome of a serving run.
 pub struct ServeReport {
     pub metrics: Metrics,
     /// (request id, arrival, completion) per request.
     pub completions: Vec<(u64, f64, f64)>,
-    /// Requests refused at admission: (request id, reason). A request is
-    /// rejected — never panicked on — when the service's plan cannot run
-    /// its workload (e.g. sequence length not divisible by the plan's SP
-    /// ranks).
+    /// Requests refused, as (request id, reason) — at admission when the
+    /// service's plan cannot run the workload (e.g. sequence length not
+    /// divisible by the plan's SP ranks), or at dispatch when *no*
+    /// available carve (neither the pod's live one nor the preferred
+    /// plan) models a finite service time. A request is rejected — never
+    /// panicked on, and never dispatched with an infinite duration.
     pub rejected: Vec<(u64, String)>,
-    /// Chosen parallel plan → served request count
+    /// Parallel plan *served under* → request count
     /// ([`crate::config::ParallelSpec::label`] keys, sorted), so
-    /// auto-planning behaviour is observable from `serve()` output.
-    /// Empty when the service model does not report plans.
+    /// auto-planning and stale-carve behaviour are observable from
+    /// `serve()` output. Under
+    /// [`RecarvePolicy::Never`](crate::cluster::recarve::RecarvePolicy::Never)
+    /// this is the pod's frozen carve, not the plan the model would
+    /// have preferred. Empty when the service model does not report
+    /// plans.
     pub plan_histogram: BTreeMap<String, usize>,
+    /// Epoch/drain observability (see [`RecarveReport`]).
+    pub recarve: RecarveReport,
+}
+
+impl ServeReport {
+    /// Stable JSON rendering of the report's observable fields (plan
+    /// histogram, epoch log, drain/setup totals) — the serialization the
+    /// golden regression test in `rust/tests/recarve_serving.rs` pins.
+    pub fn to_json(&self) -> Json {
+        let obj = |pairs: Vec<(&str, Json)>| {
+            Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+        };
+        let plan_histogram = Json::Obj(
+            self.plan_histogram
+                .iter()
+                .map(|(k, &v)| (k.clone(), Json::Num(v as f64)))
+                .collect(),
+        );
+        let epoch_histogram = Json::Obj(
+            self.recarve
+                .epoch_histogram
+                .iter()
+                .map(|(k, &v)| (k.clone(), Json::Num(v as f64)))
+                .collect(),
+        );
+        let epochs = Json::Arr(
+            self.recarve
+                .epochs
+                .iter()
+                .map(|(pod, e)| {
+                    obj(vec![
+                        ("pod", Json::Num(*pod as f64)),
+                        ("index", Json::Num(e.index as f64)),
+                        ("plan", Json::Str(e.label())),
+                        ("started_at", Json::Num(e.started_at)),
+                        ("served", Json::Num(e.served as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        let rejected = Json::Arr(
+            self.rejected
+                .iter()
+                .map(|(id, reason)| {
+                    Json::Arr(vec![Json::Num(*id as f64), Json::Str(reason.clone())])
+                })
+                .collect(),
+        );
+        obj(vec![
+            ("completed", Json::Num(self.metrics.completed() as f64)),
+            ("horizon", Json::Num(self.metrics.horizon)),
+            ("rejected", rejected),
+            ("plan_histogram", plan_histogram),
+            (
+                "recarve",
+                obj(vec![
+                    ("count", Json::Num(self.recarve.recarve_count as f64)),
+                    ("drain_time", Json::Num(self.recarve.drain_time)),
+                    ("setup_time", Json::Num(self.recarve.setup_time)),
+                    ("epoch_histogram", epoch_histogram),
+                    ("epochs", epochs),
+                ]),
+            ),
+        ])
+    }
 }
 
 /// Deterministic virtual-time serving loop: requests (time-ordered) flow
 /// through the batcher; closed batches dispatch to the least-loaded pod.
 /// Requests failing the service's admission check are recorded in
 /// [`ServeReport::rejected`] and never reach a batch.
+///
+/// Dispatch is *epoch-aware*: the pod's
+/// [`RecarvePolicy`](crate::cluster::recarve::RecarvePolicy) (installed
+/// via [`Router::set_recarve`]; the default
+/// [`RecarvePolicy::Free`](crate::cluster::recarve::RecarvePolicy::Free)
+/// keeps the pre-epoch behaviour exactly) decides per batch whether the pod
+/// keeps its live carve — serving the batch under a possibly stale plan
+/// — or drains, pays the modeled re-setup, and re-carves to the plan the
+/// service prefers for this workload. A batch never spans two carves:
+/// transitions happen strictly between batches, behind the drain
+/// barrier [`Router::commit_recarve`] enforces.
 pub fn serve(
     router: &mut Router,
     policy: BatchPolicy,
@@ -291,14 +448,72 @@ pub fn serve(
                            batch: crate::coordinator::batcher::Batch,
                            metrics: &mut Metrics,
                            completions: &mut Vec<(u64, f64, f64)>,
+                           rejected: &mut Vec<(u64, String)>,
                            plan_histogram: &mut BTreeMap<String, usize>| {
         let pod = router.pick();
         let workload = batch.requests[0].workload.clone();
-        let dur = service.service_time(&workload, batch.size());
-        if let Some(label) = service.plan_label(&workload) {
+        let ready = batch.ready_at();
+        let preferred = service.plan_spec(&workload);
+        let free_at = router.pods[pod].free_at;
+        // Compute the modeled gain only for policies that read it.
+        let gain = {
+            let rc = &router.pods[pod].recarver;
+            if rc.policy.wants_gain() {
+                match rc.carve() {
+                    Some(from) if Some(from) != preferred => {
+                        service.recarve_gain(&workload, &from)
+                    }
+                    _ => None,
+                }
+            } else {
+                None
+            }
+        };
+        let mut t = router.pods[pod].recarver.on_dispatch(ready, free_at, preferred, gain);
+        // Serve under the epoch's carve — the preferred plan only if the
+        // policy adopted it, the stale one otherwise.
+        let mut dur = service.service_time_under(&workload, batch.size(), t.carve.as_ref());
+        if !dur.is_finite() {
+            // The live carve cannot serve this batch at all (e.g. a
+            // patch granularity larger than the sequence); dispatching
+            // an infinite duration would poison the pod's timeline
+            // forever. If the preferred plan can serve it, the re-carve
+            // is forced by physics, overriding the policy; if nothing
+            // can, the batch is rejected rather than dispatched.
+            let pref_dur = if t.carve == preferred {
+                dur
+            } else {
+                service.service_time_under(&workload, batch.size(), preferred.as_ref())
+            };
+            if !pref_dur.is_finite() {
+                for r in &batch.requests {
+                    rejected.push((
+                        r.id,
+                        format!(
+                            "no plan can serve workload '{}' on this pod (modeled \
+                             service time is infinite under both the live carve and \
+                             the preferred plan)",
+                            workload.name
+                        ),
+                    ));
+                }
+                return;
+            }
+            t = router.pods[pod].recarver.force(ready, free_at, preferred);
+            dur = pref_dur;
+        }
+        if t.recarved && t.setup > 0.0 {
+            router.commit_recarve(pod, ready, t.setup);
+        }
+        if let Some(label) = t
+            .carve
+            .map(|s| s.label())
+            .or_else(|| service.plan_label(&workload))
+        {
             *plan_histogram.entry(label).or_insert(0) += batch.size();
         }
-        let (_, done) = router.dispatch(pod, batch.ready_at(), dur);
+        router.pods[pod].recarver.record_served(batch.size());
+        let (_, done) = router.dispatch(pod, ready, dur);
         for r in &batch.requests {
             metrics.record(workload.name, done - r.arrival, done);
             completions.push((r.id, r.arrival, done));
@@ -313,19 +528,47 @@ pub fn serve(
         }
         batcher.push(r);
         while let Some(batch) = batcher.pop_ready(now) {
-            serve_batch(router, batch, &mut metrics, &mut completions, &mut plan_histogram);
+            serve_batch(
+                router,
+                batch,
+                &mut metrics,
+                &mut completions,
+                &mut rejected,
+                &mut plan_histogram,
+            );
         }
     }
     // end of trace: drain
     while let Some(batch) = batcher.pop_any() {
-        serve_batch(router, batch, &mut metrics, &mut completions, &mut plan_histogram);
+        serve_batch(
+            router,
+            batch,
+            &mut metrics,
+            &mut completions,
+            &mut rejected,
+            &mut plan_histogram,
+        );
     }
-    ServeReport { metrics, completions, rejected, plan_histogram }
+
+    // Snapshot the pods' epoch logs into the report.
+    let mut recarve = RecarveReport::default();
+    for pod in &router.pods {
+        let rc = &pod.recarver;
+        recarve.recarve_count += rc.recarve_count();
+        recarve.drain_time += rc.drain_time();
+        recarve.setup_time += rc.setup_time();
+        for e in rc.epochs() {
+            *recarve.epoch_histogram.entry(e.label()).or_insert(0) += 1;
+            recarve.epochs.push((pod.id, e.clone()));
+        }
+    }
+    ServeReport { metrics, completions, rejected, plan_histogram, recarve }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::recarve::RecarvePolicy;
     use crate::workload::TraceGen;
 
     struct ConstService(f64);
@@ -545,6 +788,252 @@ mod tests {
             report.rejected[0].1
         );
         assert_eq!(report.plan_histogram.get("cfg2 x pp2 x rep1 x U8R1"), Some(&1));
+    }
+
+    // ---- dynamic re-carving ------------------------------------------------
+
+    /// [`Workload::short_image_4k`] (chosen plan stays on one machine,
+    /// proven by `analysis::tests::deep_queues_favor_batch_replicas`)
+    /// shrunk to 2 layers × 2 steps so the test trace serves fast.
+    fn short_workload() -> Workload {
+        let mut w = Workload::short_image_4k();
+        w.layers = 2;
+        w.steps = 2;
+        w
+    }
+
+    /// [`Workload::cfg_video_96k`] (chosen plan is CFG- and
+    /// pipeline-parallel, proven by
+    /// `analysis::tests::pipeline_chosen_for_long_sequence_multi_machine`),
+    /// shrunk like [`short_workload`].
+    fn long_workload() -> Workload {
+        let mut w = Workload::cfg_video_96k();
+        w.layers = 2;
+        w.steps = 2;
+        w
+    }
+
+    fn serve_bimodal(policy: RecarvePolicy) -> ServeReport {
+        let mut router = Router::new(4, 8, 1, SpAlgo::SwiftFusion);
+        router.set_recarve_with_setup(policy, 0.01);
+        let svc = SimService::auto_plan(router.pods[0].cluster.clone(), SpAlgo::SwiftFusion);
+        let reqs = crate::workload::bimodal_trace(&short_workload(), &long_workload(), 3, 6);
+        serve(&mut router, BatchPolicy { max_batch: 1, window: 0.0 }, reqs, &svc)
+    }
+
+    #[test]
+    fn never_policy_freezes_the_admission_carve() {
+        // The motivating failure: traffic shifts short → long, but the
+        // pod keeps the short-optimal admission carve and serves the
+        // videos stale. One epoch, zero transitions, and the histogram
+        // shows every request under the frozen plan.
+        let report = serve_bimodal(RecarvePolicy::Never);
+        assert_eq!(report.metrics.completed(), 18);
+        assert_eq!(report.recarve.recarve_count, 0);
+        assert_eq!(report.recarve.epochs.len(), 1, "{:?}", report.recarve.epochs);
+        assert_eq!(
+            report.plan_histogram.len(),
+            1,
+            "stale serving keeps one label: {:?}",
+            report.plan_histogram
+        );
+        let pinned = report.plan_histogram.keys().next().unwrap();
+        assert!(pinned.starts_with("cfg1"), "admission carve is the short plan: {pinned}");
+        assert_eq!(report.recarve.drain_time, 0.0);
+        assert_eq!(report.recarve.setup_time, 0.0);
+    }
+
+    #[test]
+    fn hysteresis_recarving_beats_the_frozen_carve_on_bimodal_traffic() {
+        // The tentpole's serving-level claim: paying drain + re-setup to
+        // follow a sustained traffic shift beats serving long videos
+        // under a stale short-image carve.
+        let frozen = serve_bimodal(RecarvePolicy::Never);
+        let adaptive =
+            serve_bimodal(RecarvePolicy::Hysteresis { threshold: 0.05, window: 2 });
+        assert_eq!(adaptive.metrics.completed(), 18);
+        assert!(adaptive.recarve.recarve_count >= 1, "the shift must fire the policy");
+        assert!(
+            adaptive.metrics.horizon < frozen.metrics.horizon,
+            "adaptive {} must beat frozen {}",
+            adaptive.metrics.horizon,
+            frozen.metrics.horizon
+        );
+        // the epoch log shows the plan change; transitions were paid for
+        assert!(adaptive.recarve.epochs.len() >= 2);
+        assert!(adaptive.recarve.setup_time > 0.0);
+        assert!(adaptive.recarve.epoch_histogram.len() >= 2);
+        // hysteresis held the line for `window` dispatches: the first
+        // stale epoch served at least 2 requests before the switch
+        assert!(adaptive.recarve.epochs[0].1.served >= 2, "{:?}", adaptive.recarve.epochs);
+    }
+
+    #[test]
+    fn free_policy_is_an_upper_bound_and_pays_nothing() {
+        let free = serve_bimodal(RecarvePolicy::Free);
+        let adaptive =
+            serve_bimodal(RecarvePolicy::Hysteresis { threshold: 0.05, window: 2 });
+        assert!(free.recarve.recarve_count >= 2, "free follows every shift");
+        assert_eq!(free.recarve.setup_time, 0.0);
+        assert_eq!(free.recarve.drain_time, 0.0);
+        assert!(
+            free.metrics.horizon <= adaptive.metrics.horizon,
+            "free {} is the idealized lower bound vs {}",
+            free.metrics.horizon,
+            adaptive.metrics.horizon
+        );
+    }
+
+    #[test]
+    fn on_idle_recarves_between_lulls_only() {
+        // Widely spaced arrivals: the pod is idle at each dispatch, so
+        // on-idle adapts like free but pays the re-setup.
+        let mut router = Router::new(4, 8, 1, SpAlgo::SwiftFusion);
+        router.set_recarve_with_setup(RecarvePolicy::OnIdle, 0.01);
+        let svc = SimService::auto_plan(router.pods[0].cluster.clone(), SpAlgo::SwiftFusion);
+        let gap = 1e6; // far beyond any service time
+        let reqs: Vec<Request> = [short_workload(), long_workload(), short_workload()]
+            .into_iter()
+            .enumerate()
+            .map(|(i, w)| Request {
+                id: i as u64,
+                workload: w,
+                arrival: i as f64 * gap,
+                seed: i as u64,
+            })
+            .collect();
+        let report = serve(&mut router, BatchPolicy { max_batch: 1, window: 0.0 }, reqs, &svc);
+        assert_eq!(report.metrics.completed(), 3);
+        assert_eq!(report.recarve.recarve_count, 2, "{:?}", report.recarve.epochs);
+        assert_eq!(report.recarve.drain_time, 0.0, "idle pods drain for free");
+        assert!((report.recarve.setup_time - 0.02).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unserveable_stale_carve_forces_a_recarve_instead_of_poisoning_the_pod() {
+        // A carve that cannot serve a workload at all (infinite modeled
+        // time) must never be dispatched — an infinite duration would
+        // push the pod's free_at to infinity for the rest of the run.
+        // The engine forces the transition even under Never.
+        struct TwoPlan;
+        impl TwoPlan {
+            fn spec_for(w: &Workload) -> ParallelSpec {
+                if w.name.starts_with("flux") {
+                    ParallelSpec::new(1, 4, SpDegrees::new(8, 1))
+                } else {
+                    ParallelSpec::with_pp(2, 2, 1, SpDegrees::new(8, 1))
+                }
+            }
+        }
+        impl ServiceModel for TwoPlan {
+            fn service_time(&self, _w: &Workload, batch: usize) -> f64 {
+                batch as f64
+            }
+            fn service_time_under(
+                &self,
+                w: &Workload,
+                batch: usize,
+                carve: Option<&ParallelSpec>,
+            ) -> f64 {
+                if carve.copied() == Some(Self::spec_for(w)) {
+                    batch as f64
+                } else {
+                    f64::INFINITY
+                }
+            }
+            fn plan_spec(&self, w: &Workload) -> Option<ParallelSpec> {
+                Some(Self::spec_for(w))
+            }
+        }
+        let mut router = Router::new(4, 8, 1, SpAlgo::SwiftFusion);
+        router.set_recarve_with_setup(RecarvePolicy::Never, 0.25);
+        let reqs = vec![
+            Request { id: 0, workload: Workload::flux_3072(), arrival: 0.0, seed: 0 },
+            Request { id: 1, workload: Workload::cogvideo_20s(), arrival: 1.0, seed: 1 },
+        ];
+        let report = serve(
+            &mut router,
+            BatchPolicy { max_batch: 1, window: 0.0 },
+            reqs,
+            &TwoPlan,
+        );
+        assert_eq!(report.metrics.completed(), 2);
+        assert!(report.metrics.horizon.is_finite(), "{}", report.metrics.horizon);
+        assert_eq!(report.metrics.horizon, 2.25, "drain 0 + setup 0.25 + service 1");
+        assert_eq!(report.recarve.recarve_count, 1, "forced despite Never");
+        assert_eq!(report.recarve.setup_time, 0.25);
+    }
+
+    #[test]
+    fn totally_unserveable_batches_are_rejected_not_dispatched() {
+        // When neither the live carve nor the preferred plan can serve
+        // a batch, it must land in `rejected` — the pod timeline stays
+        // finite and later requests are unaffected.
+        struct Unserveable;
+        impl ServiceModel for Unserveable {
+            fn service_time(&self, _w: &Workload, _b: usize) -> f64 {
+                f64::INFINITY
+            }
+        }
+        let mut router = Router::new(2, 2, 1, SpAlgo::SwiftFusion);
+        let reqs = TraceGen::new(5, 1.0, vec![Workload::flux_3072()]).take(3);
+        let report = serve(
+            &mut router,
+            BatchPolicy { max_batch: 1, window: 0.0 },
+            reqs,
+            &Unserveable,
+        );
+        assert_eq!(report.metrics.completed(), 0);
+        assert_eq!(report.rejected.len(), 3);
+        assert!(report.rejected[0].1.contains("no plan can serve"));
+        assert!(report.metrics.horizon.is_finite());
+        assert_eq!(report.recarve.recarve_count, 0);
+    }
+
+    #[test]
+    fn epoch_log_attributes_every_request_to_one_epoch() {
+        for policy in [
+            RecarvePolicy::Free,
+            RecarvePolicy::Never,
+            RecarvePolicy::Hysteresis { threshold: 0.05, window: 2 },
+        ] {
+            let report = serve_bimodal(policy);
+            let served: usize = report.recarve.epochs.iter().map(|(_, e)| e.served).sum();
+            assert_eq!(served, report.metrics.completed(), "{policy:?}");
+            let histo: usize = report.recarve.epoch_histogram.values().sum();
+            assert_eq!(histo, report.recarve.epochs.len(), "{policy:?}");
+            // epochs open in order on the single pod; no batch can start
+            // before its epoch does
+            for w in report.recarve.epochs.windows(2) {
+                assert!(w[0].1.started_at <= w[1].1.started_at, "{policy:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn stale_carve_for_the_wrong_cluster_models_as_unserveable() {
+        let svc = SimService::new(ClusterSpec::new(2, 2), SpAlgo::SwiftFusion);
+        // a 32-rank spec cannot carve a 4-GPU pod: infinite, not a panic
+        let spec = ParallelSpec::new(2, 1, SpDegrees::new(8, 2));
+        let t = svc.service_time_under(&Workload::flux_3072(), 1, Some(&spec));
+        assert!(t.is_infinite());
+    }
+
+    #[test]
+    fn recarve_gain_prefers_the_chosen_plan() {
+        let svc = SimService::auto_plan(ClusterSpec::new(4, 8), SpAlgo::SwiftFusion);
+        let long = long_workload();
+        // moving off a short-optimal carve onto the video plan is a big
+        // predicted win; the reverse move is a loss
+        let short_spec = svc.resolve_spec(&short_workload()).unwrap();
+        let long_spec = svc.resolve_spec(&long).unwrap();
+        assert_ne!(short_spec, long_spec);
+        let gain = svc.recarve_gain(&long, &short_spec).unwrap();
+        assert!(gain > 0.2, "stale video carve must predict a large gain: {gain}");
+        let reverse = svc.recarve_gain(&short_workload(), &long_spec).unwrap();
+        assert!(reverse < gain, "reverse move cannot look better: {reverse} vs {gain}");
+        // already on the preferred plan: no prediction
+        assert!(svc.recarve_gain(&long, &long_spec).is_none());
     }
 
     #[test]

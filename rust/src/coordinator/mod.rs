@@ -11,12 +11,19 @@
 //!   (simulated paper-scale service times, or measured numeric sampling
 //!   as in `examples/serve_images.rs`);
 //! * [`metrics`] — per-workload latency/throughput summaries.
+//!
+//! Serving is *epoch-aware*: each pod carries an
+//! [`crate::cluster::recarve::EpochTracker`], so the router can drain a
+//! pod and re-carve it into a different `cfg × pp × sp` plan between
+//! requests when its [`crate::cluster::recarve::RecarvePolicy`] fires —
+//! see [`crate::cluster::recarve`] for the epoch model.
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
 pub mod router;
 
+use crate::config::ParallelSpec;
 use crate::workload::Workload;
 
 /// Abstraction over "how long does one batched generation take": the
@@ -40,6 +47,38 @@ pub trait ServiceModel: Sync {
     /// all — feeds [`engine::ServeReport::plan_histogram`] so
     /// auto-planning behaviour is observable from `serve()` output.
     fn plan_label(&self, _workload: &Workload) -> Option<String> {
+        None
+    }
+
+    /// The hybrid spec this model would carve a pod into for `workload`
+    /// — the *preferred* plan the epoch-aware serving loop compares a
+    /// pod's live carve against. `None` (the default) means the model
+    /// does not plan; such pods stay in a single unplanned epoch.
+    fn plan_spec(&self, _workload: &Workload) -> Option<ParallelSpec> {
+        None
+    }
+
+    /// Service time when the pod is pinned to `carve` — a possibly
+    /// *stale* plan epoch — instead of the model's preferred plan for
+    /// `workload`. Models that do not plan ignore the carve. The default
+    /// delegates to [`Self::service_time`], so plan-agnostic models need
+    /// not implement it.
+    fn service_time_under(
+        &self,
+        workload: &Workload,
+        batch: usize,
+        _carve: Option<&ParallelSpec>,
+    ) -> f64 {
+        self.service_time(workload, batch)
+    }
+
+    /// Predicted fractional per-step improvement of re-carving a pod
+    /// from `from` to this model's preferred plan for `workload`
+    /// (`0.1` = 10 % cheaper per step; negative when the move hurts).
+    /// Feeds [`crate::cluster::recarve::RecarvePolicy::Hysteresis`];
+    /// `None` (the default) means no prediction is available and the
+    /// hysteresis streak resets.
+    fn recarve_gain(&self, _workload: &Workload, _from: &ParallelSpec) -> Option<f64> {
         None
     }
 }

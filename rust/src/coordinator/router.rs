@@ -5,8 +5,17 @@
 //! implements the paper's placement rule per workload (P_u = gcd(P, H),
 //! §4.2) and least-loaded dispatch (earliest-free pod, ties by index —
 //! deterministic).
+//!
+//! The router is also *epoch-aware*: each pod carries an
+//! [`EpochTracker`] recording the plan epoch it is currently carved
+//! into. The serving loop drives the tracker's policy decision per
+//! dispatch, and [`Router::commit_recarve`] applies the resulting drain
+//! barrier + re-setup cost to the pod's timeline, so no batch of a new
+//! epoch can start before the old epoch's in-flight work has drained
+//! and the sub-meshes have been rebuilt.
 
 use crate::analysis;
+use crate::cluster::recarve::{resetup_cost, EpochTracker, RecarvePolicy};
 use crate::config::{ClusterSpec, ParallelSpec, SpDegrees};
 use crate::sp::SpAlgo;
 use crate::workload::Workload;
@@ -19,6 +28,9 @@ pub struct Pod {
     pub algo: SpAlgo,
     /// Virtual time at which the pod becomes free.
     pub free_at: f64,
+    /// Plan-epoch state: the live carve, the re-carving policy, and the
+    /// epoch/drain log the serving report aggregates.
+    pub recarver: EpochTracker,
 }
 
 impl Pod {
@@ -64,14 +76,48 @@ impl Router {
         assert!(num_pods > 0 && machines % num_pods == 0);
         let per_pod = machines / num_pods;
         let pods = (0..num_pods)
-            .map(|id| Pod {
-                id,
-                cluster: ClusterSpec::new(per_pod, gpus_per_machine),
-                algo,
-                free_at: 0.0,
+            .map(|id| {
+                let cluster = ClusterSpec::new(per_pod, gpus_per_machine);
+                let setup = resetup_cost(&cluster);
+                Pod {
+                    id,
+                    cluster,
+                    algo,
+                    free_at: 0.0,
+                    // Free keeps the pre-epoch serving behaviour (adopt
+                    // the preferred plan each dispatch, unpaid) unless a
+                    // policy is installed via [`Self::set_recarve`].
+                    recarver: EpochTracker::new(RecarvePolicy::Free, setup),
+                }
             })
             .collect();
         Self { pods }
+    }
+
+    /// Install a re-carving policy on every pod (the modeled re-setup
+    /// cost stays at [`resetup_cost`] for each pod's cluster).
+    pub fn set_recarve(&mut self, policy: RecarvePolicy) {
+        for p in &mut self.pods {
+            p.recarver.policy = policy;
+        }
+    }
+
+    /// [`Self::set_recarve`] with an explicit per-transition re-setup
+    /// cost (seconds) — tests and benches pin this for determinism.
+    pub fn set_recarve_with_setup(&mut self, policy: RecarvePolicy, setup_cost: f64) {
+        for p in &mut self.pods {
+            p.recarver.policy = policy;
+            p.recarver.setup_cost = setup_cost;
+        }
+    }
+
+    /// Apply an epoch transition to `pod`'s timeline: the pod drains
+    /// (in-flight work runs to `free_at`), then pays `setup` seconds
+    /// rebuilding its carved sub-meshes; only then can the next batch
+    /// start ([`Self::dispatch`] starts at the updated `free_at`).
+    pub fn commit_recarve(&mut self, pod: usize, ready_at: f64, setup: f64) {
+        let p = &mut self.pods[pod];
+        p.free_at = p.free_at.max(ready_at) + setup;
     }
 
     /// Earliest-free pod (ties broken by lowest id — deterministic).
@@ -139,6 +185,34 @@ mod tests {
     fn deterministic_tiebreak() {
         let r = Router::new(2, 2, 2, SpAlgo::SwiftFusion);
         assert_eq!(r.pick(), 0, "equal free_at -> lowest id");
+    }
+
+    #[test]
+    fn commit_recarve_delays_the_next_dispatch() {
+        let mut r = Router::new(2, 2, 1, SpAlgo::SwiftFusion);
+        r.set_recarve_with_setup(RecarvePolicy::Hysteresis { threshold: 0.1, window: 1 }, 0.5);
+        assert_eq!(r.pods[0].recarver.setup_cost, 0.5);
+        // pod busy until t=10; a re-carve committed for a batch ready at
+        // t=4 drains to t=10, then pays 0.5s of re-setup
+        r.dispatch(0, 0.0, 10.0);
+        r.commit_recarve(0, 4.0, 0.5);
+        let (start, done) = r.dispatch(0, 4.0, 1.0);
+        assert_eq!((start, done), (10.5, 11.5));
+        // an idle pod pays only the re-setup
+        let mut r2 = Router::new(2, 2, 1, SpAlgo::SwiftFusion);
+        r2.commit_recarve(0, 3.0, 0.25);
+        let (start, _) = r2.dispatch(0, 3.0, 1.0);
+        assert_eq!(start, 3.25);
+    }
+
+    #[test]
+    fn pods_default_to_the_free_policy() {
+        let r = Router::new(2, 2, 2, SpAlgo::SwiftFusion);
+        for p in &r.pods {
+            assert_eq!(p.recarver.policy, RecarvePolicy::Free);
+            assert!(p.recarver.carve().is_none(), "no carve before admission");
+            assert!(p.recarver.setup_cost > 0.0);
+        }
     }
 
     #[test]

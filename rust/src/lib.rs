@@ -27,7 +27,8 @@
 //!
 //! ```text
 //!             ClusterSpec (N machines × M GPUs)
-//!                          │
+//!                          │   ▲ per-pod plan *epochs*: drain → re-carve
+//!                          │   │ (cluster::recarve, RecarvePolicy)
 //!            ParallelPlan::build(spec, algo)           spec = {cfg_degree,
 //!                          │                                   pp_degree,
 //!          ┌───────────────┼────────────────┐                  batch_replicas,
@@ -68,6 +69,19 @@
 //! rejecting requests a plan cannot serve with typed, actionable errors
 //! and reporting a per-plan request histogram from `serve()`.
 //!
+//! A carve is no longer frozen for a pod's lifetime: serving is
+//! *epoch-aware*. Each pod models its life as a sequence of plan epochs
+//! ([`cluster::recarve`]) — when traffic shifts (short image bursts
+//! giving way to long CFG video), the pod's
+//! [`cluster::recarve::RecarvePolicy`] (`--recarve
+//! never|on-idle|hysteresis`, hysteresis gated by
+//! [`analysis::recarve_gain`] over `--recarve-threshold`/`-window`) may
+//! drain its in-flight groups, pay a modeled re-setup cost, and rebuild
+//! the carved sub-meshes for the new plan. No request ever spans two
+//! carves, numerics stay oracle-exact across the boundary
+//! (`rust/tests/sp_property.rs`), and `serve()` reports the epoch log,
+//! drain/setup totals, and a per-carve plan histogram.
+//!
 //! Numeric validation of all of this is hermetic: `ExecMode::HostNumeric`
 //! backs the tile contract with in-process Algorithm-2 kernels
 //! ([`sp::tiles::host`]), so `rust/tests/sp_property.rs` proves every
@@ -80,8 +94,10 @@
 //! has neither, so the GPU cluster is *simulated*: every rank is a thread
 //! exchanging **real tensors** (numerics are exact and validated against
 //! the single-device oracle), while elapsed time is tracked by a calibrated
-//! α–β network/compute model ([`cluster::netsim`], [`analysis`]). See
-//! DESIGN.md §2 for the substitution table and why figure *shapes* survive.
+//! α–β network/compute model ([`comm`], [`cluster::clock`], [`analysis`]).
+//! See DESIGN.md §2 for the substitution table and why figure *shapes*
+//! survive, and `rust/ARCHITECTURE.md` for the paper-section → module map,
+//! the 3D plan-space walkthrough, and the ExecMode matrix.
 
 // Kernel-plumbing functions (ring/torus stages, tile ops) thread rank
 // context + geometry + buffers + schedule knobs through flat argument

@@ -5,7 +5,9 @@
 //!   validate [--config NAME]   distributed-vs-oracle numeric check
 //!   bench-layer [...]          single-attention-layer latency (timing sim)
 //!   serve [...]                virtual-time serving run on a trace
+//!                              (epoch-aware: see the --recarve flags)
 //!   volumes [...]              Appendix-D inter-machine volume table
+//!   trace [...]                chrome://tracing timeline of one layer
 //!
 //! Examples:
 //!   swiftfusion validate --config small4
@@ -17,6 +19,7 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use swiftfusion::cluster::exec::{run_cluster, ExecMode};
+use swiftfusion::cluster::recarve::RecarvePolicy;
 use swiftfusion::comm::Buf;
 use swiftfusion::config::{AttnShape, ClusterSpec, ParallelSpec, SpDegrees};
 use swiftfusion::coordinator::batcher::BatchPolicy;
@@ -57,7 +60,7 @@ fn main() {
 const HELP: &str = "\
 swiftfusion — scalable sequence parallelism for distributed DiT inference
 
-USAGE: swiftfusion <info|validate|bench-layer|serve|volumes> [flags]
+USAGE: swiftfusion <info|validate|bench-layer|serve|volumes|trace> [flags]
 
   info                                  artifact + config inventory
   validate  --config small4             numeric check: all SP algos vs oracle
@@ -69,16 +72,36 @@ USAGE: swiftfusion <info|validate|bench-layer|serve|volumes> [flags]
             (per-rank timeline of one attention layer, chrome://tracing JSON)
 
 Hybrid plan flags (bench-layer, serve):
-  --plan single|auto|fixed   single = one SP mesh (default); auto = pick a
-                             CFG x PP x SP x replica plan per workload via
-                             the cost model; fixed = use --cfg-degree/
-                             --pp-degree/--batch-replicas
-  --cfg-degree N             guidance branches on disjoint groups (1 or 2)
+  --plan single|auto|fixed   single = one SP mesh over the whole pod;
+                             auto = pick a cfg x pp x sp x replica plan per
+                             workload via the cost model; fixed = build one
+                             plan from --cfg-degree/--pp-degree/
+                             --batch-replicas and serve everything under it.
+                             Default: single, or fixed when any of those
+                             three degree flags is given
+  --cfg-degree N             guidance branches on disjoint groups (1 or 2;
+                             only --plan fixed reads it, default 1)
   --pp-degree K              patch-pipeline stages per group (PipeFusion's
-                             displaced patch pipeline; 1 = off)
-  --patches M                patches the sequence streams through the
-                             pipeline as (default 4)
+                             displaced patch pipeline; only --plan fixed
+                             reads it, default 1 = off)
+  --patches M                patch count the sequence streams through
+                             pipelined plans as (all plan modes; default 4)
   --batch-replicas R         independent replica groups beyond the CFG split
+                             (only --plan fixed reads it, default 1)
+
+Dynamic re-carving flags (serve):
+  --recarve POLICY           when a live pod may drain and re-carve to the
+                             plan the cost model prefers for the current
+                             traffic: free (default; adopt per-request,
+                             zero modeled cost — the pre-epoch behaviour),
+                             never (freeze the admission-time carve),
+                             on-idle (re-carve only when the pod is idle),
+                             hysteresis (re-carve after a sustained
+                             predicted gain; pays drain + re-setup)
+  --recarve-threshold F      hysteresis: minimum predicted fractional gain
+                             per step (default 0.15 = 15%)
+  --recarve-window N         hysteresis: consecutive gainful dispatches
+                             required before re-carving (default 2)
 ";
 
 fn workload_by_name(name: &str) -> Result<Workload> {
@@ -255,11 +278,34 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let algo = SpAlgo::from_name(args.str_or("algo", "swiftfusion"))
         .ok_or_else(|| anyhow::anyhow!("bad algo"))?;
     let max_batch = args.usize_or("max-batch", 2)?;
+    let threshold = args.f64_or("recarve-threshold", 0.15)?;
+    let window = args.usize_or("recarve-window", 2)?;
+    anyhow::ensure!(window > 0, "--recarve-window must be >= 1");
+    let recarve_name = args.str_or("recarve", "free");
+    let recarve = RecarvePolicy::from_name(recarve_name, threshold, window)
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown --recarve '{recarve_name}' (expected free, never, on-idle, \
+                 or hysteresis)"
+            )
+        })?;
 
     let mut router = Router::new(n, m, pods, algo);
+    router.set_recarve(recarve);
     // every paper-suite workload has 24 heads
     let svc = service_for(args, router.pods[0].cluster.clone(), algo, 24)?;
     let plan_label = effective_plan(args)?.to_string();
+    // Only auto planning ever changes a pod's preferred plan; under
+    // single/fixed the preferred spec is constant, so any re-carving
+    // policy is inert. Say so instead of letting a zero-recarve run
+    // read as "the policy never helped".
+    if recarve != RecarvePolicy::Free && plan_label != "auto" {
+        eprintln!(
+            "note: --recarve {recarve} has no effect with --plan {plan_label}: the \
+             preferred plan never changes, so no transition can ever fire \
+             (use --plan auto)"
+        );
+    }
     let reqs = TraceGen::new(42, rate, Workload::paper_suite()).take(nreq);
     let report = serve(
         &mut router,
@@ -269,7 +315,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     let mut metrics = report.metrics;
     println!(
-        "serving {nreq} requests on {n}x{m} ({pods} pod(s), {}, plan {plan_label})",
+        "serving {nreq} requests on {n}x{m} ({pods} pod(s), {}, plan {plan_label}, \
+         recarve {recarve})",
         algo.name(),
     );
     if !report.rejected.is_empty() {
@@ -279,9 +326,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
     if !report.plan_histogram.is_empty() {
-        println!("plans chosen:");
+        println!("plans served under (recarve policy: {recarve}):");
         for (label, count) in &report.plan_histogram {
             println!("  {label:<28} {count:>5} request(s)");
+        }
+    }
+    let rc = &report.recarve;
+    if rc.recarve_count > 0 {
+        println!(
+            "re-carves: {} (drain {}, re-setup {})",
+            rc.recarve_count,
+            fmt_time(rc.drain_time),
+            fmt_time(rc.setup_time)
+        );
+        for (pod, e) in &rc.epochs {
+            println!(
+                "  pod {pod} epoch {}: {:<28} opened {:>10}  served {:>5}",
+                e.index,
+                e.label(),
+                fmt_time(e.started_at),
+                e.served
+            );
         }
     }
     print!("{}", metrics.report());

@@ -14,9 +14,11 @@
 //! | Torus      | [`torus`]   | chunked all-to-all overlap (§4.3)            |
 //! | SwiftFusion| [`swiftfusion`] | Algorithm 1: one-sided Torus+Ulysses+Ring |
 //!
-//! On top of the per-mesh algorithms, [`pipefusion`] implements
-//! PipeFusion's displaced patch pipeline (the `pp` dimension of the
-//! hybrid `cfg × pp × sp` plan space): DiT layers partitioned across
+//! On top of the per-mesh algorithms, [`hybrid`] runs classifier-free
+//! guidance branches on disjoint carved groups and merges them with the
+//! CFG combine (the `cfg` dimension of the hybrid `cfg × pp × sp` plan
+//! space), and [`pipefusion`] implements PipeFusion's displaced patch
+//! pipeline (the `pp` dimension): DiT layers partitioned across
 //! pipeline stages, the sequence streaming between them as patches, and
 //! off-stage KV served from one-step-stale activations.
 //!

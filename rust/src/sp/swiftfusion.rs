@@ -15,8 +15,8 @@
 //! 2. **BarrierAll** (line 16) with quiet semantics (outstanding puts
 //!    complete first, as `nvshmem_barrier_all_on_stream` guarantees).
 //! 3. **Pull Q / Pull KV / Push O torus stages** (lines 18–35) via
-//!    [`super::torus::torus_one_sided`]-equivalent scheduling, with the
-//!    one-sided RINGATTN (line 1–7) inside each stage.
+//!    scheduling equivalent to [`super::torus`]'s one-sided path, with
+//!    the one-sided RINGATTN (line 1–7) inside each stage.
 //! 4. **ScatterPush O + BarrierAll** (lines 35–36) — inverse intra
 //!    all-to-all, one-sided.
 

@@ -28,8 +28,9 @@ fn dims4(b: &Buf) -> (usize, usize, usize, usize) {
 
 /// In-process tile kernels: the same partial/merge/finalize math as the
 /// AOT Pallas artifacts (Algorithm 2), in plain f32 on the host. Backs
-/// [`ExecMode::HostNumeric`] so exact numeric validation needs no PJRT —
-/// the property suite and hybrid-plan tests run hermetically.
+/// [`crate::cluster::exec::ExecMode::HostNumeric`] so exact numeric
+/// validation needs no PJRT — the property suite and hybrid-plan tests
+/// run hermetically.
 pub mod host {
     use crate::comm::Buf;
     use crate::sp::AttnState;

@@ -10,7 +10,13 @@
 //! * **TAS** (`Placement::UlyssesInter`): Ulysses groups span machines
 //!   (volume ~4·BLHD/P_u, shrinking), the Ring stays on NVSwitch. The
 //!   inter-machine all-to-all is *not overlapped* — that residual cost is
-//!   what Torus Attention removes.
+//!   what Torus Attention ([`super::torus`]) removes and
+//!   [`super::swiftfusion`] folds into Algorithm 1's one-sided schedule.
+//!
+//! Both run unchanged on carved sub-meshes (`crate::cluster::plan`), so
+//! the same code serves full-cluster baselines and hybrid-plan stages;
+//! `rust/tests/sp_property.rs` proves either placement exact against
+//! the plain-softmax oracle in `ExecMode::HostNumeric`.
 
 use crate::cluster::exec::RankCtx;
 use crate::comm::Buf;

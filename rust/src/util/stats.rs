@@ -1,4 +1,7 @@
-//! Summary statistics for the bench harness and serving metrics.
+//! Summary statistics for the bench harness and serving metrics:
+//! [`Summary`] accumulates samples and answers mean/percentile/extreme
+//! queries (sorting lazily on first percentile read), and the `fmt_*`
+//! helpers render seconds/bytes with sensible units for table output.
 
 /// Online summary of a sample set (latencies in seconds, volumes, ...).
 #[derive(Debug, Clone, Default)]

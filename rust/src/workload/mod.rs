@@ -93,6 +93,35 @@ impl Workload {
         }
     }
 
+    /// Synthetic short distilled image request (4096 tokens, one
+    /// guidance eval): small enough that the plan chooser keeps it on a
+    /// single machine. Paired with [`Self::cfg_video_96k`] as the
+    /// bimodal short ↔ long traffic shift the dynamic re-carving bench
+    /// and tests drive (`benches/fig_recarve.rs`).
+    pub fn short_image_4k() -> Self {
+        Self {
+            name: "short-image-4k",
+            shape: AttnShape::new(1, 4096, 24, 64),
+            layers: 19,
+            steps: 28,
+            cfg_evals: 1,
+        }
+    }
+
+    /// Synthetic long CFG video request (96k tokens, two guidance
+    /// evals, the Fig. 9 microbench scale): the plan chooser wants CFG ×
+    /// pipeline parallelism across the whole pod for it — the other
+    /// half of the [`Self::short_image_4k`] bimodal pair.
+    pub fn cfg_video_96k() -> Self {
+        Self {
+            name: "cfg-video-96k",
+            shape: AttnShape::new(1, 96_000, 24, 64),
+            layers: 30,
+            steps: 50,
+            cfg_evals: 2,
+        }
+    }
+
     /// All four paper workloads (Fig. 7 / Fig. 10 x-axis).
     pub fn paper_suite() -> Vec<Workload> {
         vec![
@@ -120,6 +149,28 @@ pub struct Request {
     /// Arrival time (seconds, virtual).
     pub arrival: f64,
     pub seed: u64,
+}
+
+/// Deterministic alternating-phase trace: `phases` phases of
+/// `per_phase` requests each, one arrival per second, even phases drawn
+/// from `short` and odd phases from `long` — the sustained bimodal
+/// traffic shift the dynamic re-carving policies
+/// ([`crate::cluster::recarve`]) are designed to adapt to.
+pub fn bimodal_trace(
+    short: &Workload,
+    long: &Workload,
+    phases: usize,
+    per_phase: usize,
+) -> Vec<Request> {
+    let mut reqs = Vec::new();
+    for phase in 0..phases {
+        let w = if phase % 2 == 0 { short } else { long };
+        for i in 0..per_phase {
+            let id = (phase * per_phase + i) as u64;
+            reqs.push(Request { id, workload: w.clone(), arrival: id as f64, seed: id });
+        }
+    }
+    reqs
 }
 
 /// Poisson-arrival trace over a workload mix.
@@ -191,6 +242,25 @@ mod tests {
         let w = Workload::cogvideo_20s().aligned_to(32);
         assert_eq!(w.shape.l % 32, 0);
         assert!(w.shape.l <= Workload::cogvideo_20s().shape.l);
+    }
+
+    #[test]
+    fn bimodal_pair_and_trace() {
+        let s = Workload::short_image_4k();
+        let l = Workload::cfg_video_96k();
+        assert_eq!(s.cfg_evals, 1);
+        assert_eq!(l.cfg_evals, 2);
+        assert!(l.shape.l > 20 * s.shape.l, "the pair must be bimodal");
+        let reqs = bimodal_trace(&s, &l, 3, 4);
+        assert_eq!(reqs.len(), 12);
+        // phases alternate short, long, short; 1 Hz arrivals, unique ids
+        assert_eq!(reqs[0].workload.name, "short-image-4k");
+        assert_eq!(reqs[4].workload.name, "cfg-video-96k");
+        assert_eq!(reqs[8].workload.name, "short-image-4k");
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert_eq!(r.arrival, i as f64);
+        }
     }
 
     #[test]

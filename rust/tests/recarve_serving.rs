@@ -1,0 +1,184 @@
+//! Integration regressions for epoch-aware serving (dynamic re-carving):
+//!
+//! * `RecarvePolicy::Never` must reproduce the pre-epoch (static-plan)
+//!   serving results **bit-for-bit** — the epoch machinery may not
+//!   perturb a pod whose plan never changes;
+//! * the serving report's plan histogram and the new epoch/drain fields
+//!   must serialize stably (JSON golden);
+//! * epoch accounting must be exact under a hand-checkable scripted
+//!   service model.
+
+use swiftfusion::cluster::recarve::RecarvePolicy;
+use swiftfusion::config::{ClusterSpec, ParallelSpec, SpDegrees};
+use swiftfusion::coordinator::batcher::BatchPolicy;
+use swiftfusion::coordinator::engine::{serve, ServeReport, SimService};
+use swiftfusion::coordinator::router::Router;
+use swiftfusion::coordinator::ServiceModel;
+use swiftfusion::sp::SpAlgo;
+use swiftfusion::util::json::to_string;
+use swiftfusion::workload::{Request, TraceGen, Workload};
+
+/// Fixed-plan serving under the default (`Free`) policy vs an explicit
+/// `Never` policy: with a static plan the preferred spec never changes,
+/// so freezing the admission carve must be *exactly* the pre-epoch
+/// behaviour — identical completions, horizon, histogram, rejections.
+#[test]
+fn never_policy_matches_static_plan_serving_bit_for_bit() {
+    let cluster = ClusterSpec::new(4, 8);
+    let spec = ParallelSpec::with_pp(2, 2, 1, SpDegrees::new(8, 1));
+    let algo = SpAlgo::SwiftFusion;
+    let run = |policy: Option<RecarvePolicy>| -> ServeReport {
+        let svc = SimService::with_plan(cluster.clone(), algo, spec).unwrap();
+        let mut router = Router::new(4, 8, 1, algo);
+        if let Some(p) = policy {
+            router.set_recarve(p);
+        }
+        let reqs = TraceGen::new(42, 0.05, Workload::paper_suite()).take(24);
+        serve(&mut router, BatchPolicy { max_batch: 2, window: 10.0 }, reqs, &svc)
+    };
+    let legacy = run(None); // default Free = pre-epoch behaviour
+    let frozen = run(Some(RecarvePolicy::Never));
+
+    assert_eq!(legacy.completions, frozen.completions, "bit-for-bit completions");
+    assert_eq!(legacy.metrics.horizon.to_bits(), frozen.metrics.horizon.to_bits());
+    assert_eq!(legacy.metrics.completed(), frozen.metrics.completed());
+    assert_eq!(legacy.plan_histogram, frozen.plan_histogram);
+    assert_eq!(legacy.rejected, frozen.rejected);
+    // and neither run paid a single transition
+    assert_eq!(legacy.recarve.recarve_count, 0);
+    assert_eq!(frozen.recarve.recarve_count, 0);
+    assert_eq!(frozen.recarve.epochs.len(), 1, "one frozen epoch");
+    assert_eq!(
+        frozen.recarve.epochs[0].1.served,
+        frozen.metrics.completed(),
+        "every request served inside the admission epoch"
+    );
+}
+
+/// A scripted service model with hand-computable times: preferred-plan
+/// dispatches cost 0.5 s, stale ones 2 s, and every cross-plan gain
+/// prediction is 0.75.
+struct StubService;
+
+impl StubService {
+    fn spec_for(w: &Workload) -> ParallelSpec {
+        if w.name.starts_with("flux") {
+            ParallelSpec::new(1, 4, SpDegrees::new(8, 1))
+        } else {
+            ParallelSpec::with_pp(2, 2, 1, SpDegrees::new(8, 1))
+        }
+    }
+}
+
+impl ServiceModel for StubService {
+    fn service_time(&self, _w: &Workload, batch: usize) -> f64 {
+        0.5 * batch as f64
+    }
+
+    fn service_time_under(
+        &self,
+        w: &Workload,
+        batch: usize,
+        carve: Option<&ParallelSpec>,
+    ) -> f64 {
+        if carve.copied() == Some(Self::spec_for(w)) {
+            0.5 * batch as f64
+        } else {
+            2.0 * batch as f64
+        }
+    }
+
+    fn plan_spec(&self, w: &Workload) -> Option<ParallelSpec> {
+        Some(Self::spec_for(w))
+    }
+
+    fn plan_label(&self, w: &Workload) -> Option<String> {
+        Some(Self::spec_for(w).label())
+    }
+
+    fn recarve_gain(&self, _w: &Workload, _from: &ParallelSpec) -> Option<f64> {
+        Some(0.75)
+    }
+}
+
+fn scripted_trace() -> Vec<Request> {
+    let mk = |id: u64, w: Workload, arrival: f64| Request { id, workload: w, arrival, seed: id };
+    vec![
+        mk(0, Workload::flux_3072(), 0.0),
+        mk(1, Workload::flux_3072(), 1.0),
+        mk(2, Workload::cogvideo_20s(), 2.0),
+        mk(3, Workload::cogvideo_20s(), 3.0),
+        mk(4, Workload::cogvideo_20s(), 4.0),
+        mk(5, Workload::flux_3072(), 5.0),
+    ]
+}
+
+fn scripted_report() -> ServeReport {
+    let mut router = Router::new(4, 8, 1, SpAlgo::SwiftFusion);
+    router.set_recarve_with_setup(
+        RecarvePolicy::Hysteresis { threshold: 0.5, window: 2 },
+        0.25,
+    );
+    serve(
+        &mut router,
+        BatchPolicy { max_batch: 1, window: 0.0 },
+        scripted_trace(),
+        &StubService,
+    )
+}
+
+/// Hand-checked epoch arithmetic for the scripted trace: the pod adopts
+/// the flux plan, holds it for one gainful video dispatch (hysteresis
+/// window 2), then drains 1 s, pays 0.25 s of re-setup, and opens the
+/// video epoch at t = 4.25.
+#[test]
+fn scripted_hysteresis_run_has_exact_epoch_accounting() {
+    let report = scripted_report();
+    assert_eq!(report.metrics.completed(), 6);
+    assert_eq!(report.metrics.horizon, 7.25);
+    assert_eq!(report.recarve.recarve_count, 1);
+    assert_eq!(report.recarve.drain_time, 1.0);
+    assert_eq!(report.recarve.setup_time, 0.25);
+    let epochs = &report.recarve.epochs;
+    assert_eq!(epochs.len(), 2);
+    assert_eq!(epochs[0].1.started_at, 0.0);
+    assert_eq!(epochs[0].1.served, 3, "flux x2 + one stale video");
+    assert_eq!(epochs[1].1.started_at, 4.25, "drain to 4.0 + 0.25 setup");
+    assert_eq!(epochs[1].1.served, 3, "video x2 + one stale flux");
+    // per-carve histogram: three requests served under each plan
+    assert_eq!(
+        report.plan_histogram.get("cfg1 x pp1 x rep4 x U8R1"),
+        Some(&3)
+    );
+    assert_eq!(
+        report.plan_histogram.get("cfg2 x pp2 x rep1 x U8R1"),
+        Some(&3)
+    );
+}
+
+/// Golden serialization: `ServeReport::to_json` (plan histogram + the
+/// epoch/drain fields added with dynamic re-carving) must render this
+/// exact string. If a field is added, renamed, or re-ordered, update the
+/// golden deliberately — downstream tooling parses this.
+#[test]
+fn serve_report_json_is_stable() {
+    let report = scripted_report();
+    let golden = concat!(
+        "{\"completed\":6,\"horizon\":7.25,",
+        "\"plan_histogram\":{",
+        "\"cfg1 x pp1 x rep4 x U8R1\":3,",
+        "\"cfg2 x pp2 x rep1 x U8R1\":3},",
+        "\"recarve\":{\"count\":1,\"drain_time\":1,",
+        "\"epoch_histogram\":{",
+        "\"cfg1 x pp1 x rep4 x U8R1\":1,",
+        "\"cfg2 x pp2 x rep1 x U8R1\":1},",
+        "\"epochs\":[",
+        "{\"index\":0,\"plan\":\"cfg1 x pp1 x rep4 x U8R1\",\"pod\":0,",
+        "\"served\":3,\"started_at\":0},",
+        "{\"index\":1,\"plan\":\"cfg2 x pp2 x rep1 x U8R1\",\"pod\":0,",
+        "\"served\":3,\"started_at\":4.25}],",
+        "\"setup_time\":0.25},",
+        "\"rejected\":[]}",
+    );
+    assert_eq!(to_string(&report.to_json()), golden);
+}

@@ -11,6 +11,7 @@
 
 use swiftfusion::cluster::exec::{run_cluster, ExecMode};
 use swiftfusion::cluster::plan::ParallelPlan;
+use swiftfusion::cluster::recarve::{EpochTracker, RecarvePolicy};
 use swiftfusion::comm::Buf;
 use swiftfusion::config::{gcd, AttnShape, ClusterSpec, ParallelSpec, SpDegrees};
 use swiftfusion::sp::hybrid::{
@@ -386,6 +387,88 @@ fn cfg2_pp2_carve_on_testbed_matches_oracle() {
     let oracle = guided_pipefusion_oracle(2, 3, STALE_ETA, &x, &cb, 1.5).unwrap();
     let d3 = got.max_abs_diff(&oracle);
     assert!(d3 < STALE_TOL, "cfg2 x pp2 stale loop: {d3}");
+}
+
+#[test]
+fn epoch_boundary_recarve_stays_oracle_exact() {
+    // Dynamic re-carving's numeric contract: a pod serving one request
+    // stream changes its plan *between* requests (drain + rebuild, no
+    // request ever spans two carves), and every request must still match
+    // the single-device oracle under whichever epoch served it. The
+    // transition here is the acceptance case: a pipelined cfg2 × pp2 ×
+    // sp8 carve of the 4×8 testbed re-carved to an sp-only cfg1 × U8R4
+    // mesh — i.e. a pp > 1 → pp = 1 boundary — driven through the real
+    // policy machinery (EpochTracker), with both epochs' ParallelPlans
+    // rebuilt from their specs exactly as a live pod would.
+    let cluster = ClusterSpec::new(4, 8);
+    let piped = ParallelSpec::with_pp(2, 2, 1, SpDegrees::new(8, 1));
+    let sp_only = ParallelSpec::new(1, 1, SpDegrees::new(8, 4));
+    let mut tracker =
+        EpochTracker::new(RecarvePolicy::Hysteresis { threshold: 0.1, window: 1 }, 0.03);
+
+    // admission: the pod carves into the pipelined plan (epoch 0)
+    let t0 = tracker.on_dispatch(0.0, 0.0, Some(piped), None);
+    assert!(!t0.recarved);
+    let plan_a = tracker.carved_plan(&cluster, SpAlgo::SwiftFusion).unwrap();
+    assert_eq!(plan_a.spec, piped);
+
+    // request 1 under epoch 0: the synchronous pipeline warm-up step
+    // must equal the stacked guided oracle
+    let shape = AttnShape::new(1, 64, 8, 4);
+    let p = PipeParams { shape, chunk: 2, patches: 2 };
+    let dims = [shape.b, shape.l, shape.h, shape.d];
+    let x = Tensor::random(&dims, 31_337);
+    let cb = Tensor::random(&dims, 31_338).scale(0.5);
+    let xc = x.add(&cb).unwrap();
+    let step = guided_pipefusion_step(&plan_a, &p, &xc, &x, 5.0, None, &ExecMode::HostNumeric)
+        .unwrap();
+    let want_a = guidance_combine(
+        &stacked_attention_oracle(&xc, 2),
+        &stacked_attention_oracle(&x, 2),
+        5.0,
+    )
+    .unwrap();
+    let d_a = step.eps.max_abs_diff(&want_a);
+    assert!(d_a < TOL, "epoch 0 (cfg2 x pp2) vs oracle: {d_a}");
+    tracker.record_served(1);
+
+    // traffic shifts: the chooser prefers the sp-only plan and the
+    // hysteresis policy fires — drain the pod, rebuild the carve
+    let t1 = tracker.on_dispatch(1.0, 0.5, Some(sp_only), Some(0.5));
+    assert!(t1.recarved, "policy must fire across the boundary");
+    assert_eq!(t1.setup, 0.03);
+    let plan_b = tracker.carved_plan(&cluster, SpAlgo::SwiftFusion).unwrap();
+    assert_eq!(plan_b.spec, sp_only);
+    assert_eq!(plan_b.spec.pp_degree, 1, "pp2 -> pp1 transition");
+    assert_eq!(plan_b.groups.len(), 1);
+
+    // request 2 (same stream, new epoch): a guided layer on the rebuilt
+    // 32-rank mesh must equal the guided oracle
+    let cond = rand_qkv(&shape, 41_000);
+    let uncond = rand_qkv(&shape, 42_000);
+    let (got, _) = guided_attention_distributed(
+        &plan_b,
+        shape,
+        2,
+        &cond,
+        &uncond,
+        6.5,
+        &ExecMode::HostNumeric,
+    )
+    .unwrap();
+    let want_b = guided_attention_oracle(&cond, &uncond, 6.5).unwrap();
+    let d_b = got.max_abs_diff(&want_b);
+    assert!(d_b < TOL, "epoch 1 (sp-only) vs oracle: {d_b}");
+    tracker.record_served(1);
+
+    // the epoch log shows one request per carve and disjoint epochs —
+    // no request spanned the boundary
+    let epochs = tracker.epochs();
+    assert_eq!(epochs.len(), 2);
+    assert_eq!((epochs[0].served, epochs[1].served), (1, 1));
+    assert!(epochs[1].started_at > epochs[0].started_at);
+    assert_eq!(epochs[0].plan, Some(piped));
+    assert_eq!(epochs[1].plan, Some(sp_only));
 }
 
 #[test]
