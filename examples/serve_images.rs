@@ -14,7 +14,7 @@ use swiftfusion::config::{AttnShape, ClusterSpec, SpDegrees};
 use swiftfusion::coordinator::batcher::BatchPolicy;
 use swiftfusion::coordinator::engine::serve;
 use swiftfusion::coordinator::router::Router;
-use swiftfusion::coordinator::ServiceModel;
+use swiftfusion::coordinator::{CostModel, Planner};
 use swiftfusion::model::DiTModel;
 use swiftfusion::runtime::Runtime;
 use swiftfusion::sp::SpAlgo;
@@ -35,7 +35,7 @@ struct NumericService {
     wall: Mutex<f64>,
 }
 
-impl ServiceModel for NumericService {
+impl CostModel for NumericService {
     fn service_time(&self, _w: &Workload, batch: usize) -> f64 {
         let t0 = std::time::Instant::now();
         let mut sim_total = 0.0;
@@ -59,6 +59,10 @@ impl ServiceModel for NumericService {
         sim_total
     }
 }
+
+// NumericService does not plan (it serves one fixed mesh); the empty
+// Planner impl opts into the scheduler's plan-agnostic defaults.
+impl Planner for NumericService {}
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();

@@ -1,0 +1,165 @@
+//! `ServeSession` scheduler demos on the 4×8-A100 testbed: the two new
+//! scheduler clients the coordinator API redesign shipped, each against
+//! its PR-3 baseline.
+//!
+//! **Replica co-batching** — a saturated short-image burst lands on the
+//! auto-planner's 4-replica carve (`cfg1 x pp1 x rep4 x U8R1`). The
+//! baseline queues each closed batch on one replica group; co-batching
+//! scatters it across all four (each group serves `⌈B/R⌉` requests
+//! concurrently), so the burst drains ~4× faster at bounded per-request
+//! latency.
+//!
+//! **Cross-pod re-balancing** — a drifting pod-mix trace (short images
+//! giving way to sparse long CFG videos) on a fleet of two 2-machine
+//! pods (8 GPUs per machine). The frozen fleet serves every video on a
+//! 16-GPU pod; the `gain` policy migrates the idle pod's machine toward
+//! the video pod (2+2 → 3+1), whose 24-GPU footprint affords a
+//! one-machine-stage pipeline carve (16 patches) no 16-GPU pod can
+//! hold.
+//!
+//! Run: `cargo bench --bench fig_serve_session`
+
+use std::sync::Arc;
+
+use swiftfusion::bench::{print_table, Series};
+use swiftfusion::coordinator::batcher::BatchPolicy;
+use swiftfusion::coordinator::engine::{PlanPolicy, ServeReport, SimService};
+use swiftfusion::coordinator::router::Router;
+use swiftfusion::coordinator::session::{
+    EarliestFinish, RebalancePolicy, ServeConfig, ServeSession, SimFleet,
+};
+use swiftfusion::sp::SpAlgo;
+use swiftfusion::util::stats::fmt_time;
+use swiftfusion::workload::{Request, Workload};
+
+fn burst(w: &Workload, n: usize, spacing: f64) -> Vec<Request> {
+    (0..n)
+        .map(|i| Request {
+            id: i as u64,
+            workload: w.clone(),
+            arrival: i as f64 * spacing,
+            seed: i as u64,
+        })
+        .collect()
+}
+
+fn run_cobatch(co_batch: bool) -> ServeReport {
+    let mut router = Router::new(4, 8, 1, SpAlgo::SwiftFusion);
+    let svc = SimService::auto_plan(router.pods[0].cluster.clone(), SpAlgo::SwiftFusion);
+    let config = ServeConfig::new()
+        .batch(BatchPolicy { max_batch: 8, window: 1.0 })
+        .plan(PlanPolicy::Auto)
+        .co_batch(co_batch);
+    ServeSession::new(config, &svc).run(&mut router, burst(&Workload::short_image_4k(), 32, 0.1))
+}
+
+/// Short-image phase (1 Hz), then sparse long CFG videos (spaced far
+/// beyond their service time, so the fleet always has an idle donor).
+fn drifting_trace() -> Vec<Request> {
+    let mut reqs = burst(&Workload::short_image_4k(), 8, 1.0);
+    for i in 0..6u64 {
+        let id = reqs.len() as u64;
+        reqs.push(Request {
+            id,
+            workload: Workload::cfg_video_96k(),
+            arrival: 8.0 + 200.0 + i as f64 * 200.0,
+            seed: id,
+        });
+    }
+    reqs
+}
+
+fn run_rebalance(policy: RebalancePolicy) -> (ServeReport, Vec<usize>) {
+    let mut router = Router::new(4, 8, 2, SpAlgo::SwiftFusion);
+    let fleet = SimFleet::auto(SpAlgo::SwiftFusion, 16);
+    let config = ServeConfig::new()
+        .batch(BatchPolicy { max_batch: 1, window: 0.0 })
+        .plan(PlanPolicy::Auto)
+        .patches(16)
+        .dispatch(Arc::new(EarliestFinish))
+        .rebalance(policy);
+    let report = ServeSession::with_fleet(config, &fleet).run(&mut router, drifting_trace());
+    let machines = router.pods.iter().map(|p| p.cluster.machines).collect();
+    (report, machines)
+}
+
+fn main() {
+    // --- replica co-batching ------------------------------------------------
+    println!("fig_serve_session (1/2): replica co-batching, 32-request short-image");
+    println!("burst on one auto-planned 4x8 pod (rep4 carve), max_batch=8\n");
+    let mut series = vec![Series::new("one group (PR-3)"), Series::new("co-batched")];
+    let mut horizons = Vec::new();
+    for (i, co) in [false, true].into_iter().enumerate() {
+        let mut report = run_cobatch(co);
+        let name = Workload::short_image_4k().name;
+        let mean = report.metrics.latency(name).map(|s| s.mean()).unwrap_or(f64::NAN);
+        series[i].push("mean latency", mean);
+        series[i].push("horizon", report.metrics.horizon);
+        series[i].push("req/s", report.metrics.throughput());
+        println!(
+            "  co-batch={:<5} horizon {:>10}  mean latency {:>10}  co-batched dispatches {}",
+            co,
+            fmt_time(report.metrics.horizon),
+            fmt_time(mean),
+            report.co_batched
+        );
+        horizons.push(report.metrics.horizon);
+    }
+    print_table(
+        "fig_serve_session: short-image burst, one group vs co-batched",
+        &series,
+        Some("one group (PR-3)"),
+    );
+    assert!(
+        horizons[1] < horizons[0],
+        "co-batching {} must beat the one-group baseline {}",
+        horizons[1],
+        horizons[0]
+    );
+
+    // --- cross-pod re-balancing ---------------------------------------------
+    println!("\nfig_serve_session (2/2): cross-pod re-balancing, drifting short->video");
+    println!("mix on two 2-machine pods (4x8 GPUs), earliest-finish dispatch\n");
+    let (frozen, frozen_machines) = run_rebalance(RebalancePolicy::Never);
+    let (adaptive, adaptive_machines) =
+        run_rebalance(RebalancePolicy::Gain { threshold: 0.1, window: 2 });
+    let video = Workload::cfg_video_96k().name;
+    let mut rows = Vec::new();
+    for (label, mut report, machines) in [
+        ("never (frozen fleet)", frozen, frozen_machines),
+        ("gain 10%x2", adaptive, adaptive_machines),
+    ] {
+        let mean = report.metrics.latency(video).map(|s| s.mean()).unwrap_or(f64::NAN);
+        println!(
+            "  {label:<22} pods {machines:?}  video mean {:>10}  horizon {:>10}  migrations {}",
+            fmt_time(mean),
+            fmt_time(report.metrics.horizon),
+            report.rebalances.len()
+        );
+        for ev in &report.rebalances {
+            println!(
+                "    t={:>10}: machine pod {} -> pod {} (now {} / {})",
+                fmt_time(ev.at),
+                ev.from_pod,
+                ev.to_pod,
+                ev.from_machines,
+                ev.to_machines
+            );
+        }
+        rows.push((mean, report.metrics.horizon, report.rebalances.len()));
+    }
+    assert!(rows[1].2 >= 1, "the drift must fire a migration");
+    assert!(
+        rows[1].0 < rows[0].0,
+        "re-balanced video latency {} must beat the frozen fleet {}",
+        rows[1].0,
+        rows[0].0
+    );
+    assert!(rows[1].1 < rows[0].1, "and the fleet finishes sooner");
+    println!(
+        "\nre-balancing serves videos {:.2}x faster than the frozen fleet ({} vs {})",
+        rows[0].0 / rows[1].0,
+        fmt_time(rows[1].0),
+        fmt_time(rows[0].0)
+    );
+}

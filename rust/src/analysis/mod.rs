@@ -234,6 +234,36 @@ pub fn recarve_gain(
     1.0 - c_to / c_from
 }
 
+/// Predicted fractional per-step improvement of serving `shape` on a
+/// pod whose footprint changes from `from` to `to` (cross-pod
+/// re-balancing, [`crate::coordinator::router::Router::rebalance_machine`]):
+/// each footprint is scored by the best plan [`choose_spec_with_patches`]
+/// finds on it, then compared like [`recarve_gain`] —
+/// `1 − cost(to) / cost(from)`, positive when the bigger (or better-
+/// shaped) pod helps. This is the prediction
+/// [`crate::coordinator::session::RebalancePolicy::Gain`] compares
+/// against its threshold, so the fleet-level migration decision uses the
+/// same closed form as per-pod admission and re-carving.
+pub fn rebalance_gain(
+    from: &ClusterSpec,
+    to: &ClusterSpec,
+    algo: SpAlgo,
+    shape: &AttnShape,
+    cfg_evals: usize,
+    patches: usize,
+) -> f64 {
+    let best = |c: &ClusterSpec| {
+        let spec = choose_spec_with_patches(c, algo, shape, cfg_evals, 1, patches);
+        plan_step_cost_patches(c, algo, shape, &spec, cfg_evals, patches)
+    };
+    let c_from = best(from);
+    let c_to = best(to);
+    if !(c_from.is_finite() && c_from > 0.0) {
+        return 0.0;
+    }
+    1.0 - c_to / c_from
+}
+
 /// All structurally valid hybrid specs for a cluster/head count, each
 /// stage's SP degrees set by the paper's gcd placement rule. Covers
 /// `cfg_degree ∈ {1, 2}` × every machine-aligned pipeline depth ×
@@ -573,6 +603,39 @@ mod tests {
             );
             assert!(g <= 1e-12, "{cand:?} beats the chosen plan by {g}");
         }
+    }
+
+    #[test]
+    fn rebalance_gain_predicts_when_a_machine_helps() {
+        // Growing a 2-machine pod to 3 (8-GPU machines) unlocks a carve
+        // the smaller pod cannot hold for the long CFG video: one-machine
+        // pipeline stages over all three machines (cfg-combined pp3 x
+        // sp8) — a ~25 % predicted win at 16 patches, where the pipeline
+        // fill is well amortized. The short image is already served by a
+        // one-machine carve that exists on both footprints, so the extra
+        // machine buys it nothing.
+        let from = ClusterSpec::new(2, 8);
+        let to = ClusterSpec::new(3, 8);
+        let patches = 16;
+        let video = shape(); // 96k tokens, 24 heads, CFG
+        let g = rebalance_gain(&from, &to, SpAlgo::SwiftFusion, &video, 2, patches);
+        assert!(g > 0.1, "video gains from the third machine: {g}");
+        let back = rebalance_gain(&to, &from, SpAlgo::SwiftFusion, &video, 2, patches);
+        assert!(back < 0.0, "shrinking the pod must predict a loss: {back}");
+        let small = AttnShape::new(1, 4096, 24, 64);
+        let gs = rebalance_gain(&from, &to, SpAlgo::SwiftFusion, &small, 1, patches);
+        assert!(
+            gs.abs() < 0.05,
+            "short images already fit a one-machine carve: {gs}"
+        );
+        let noop = rebalance_gain(&from, &from, SpAlgo::SwiftFusion, &video, 2, patches);
+        assert!(noop.abs() < 1e-12, "{noop}");
+        // at the default coarse patch count the pipeline-fill bubble
+        // ((pp-1)/M of the stage layer) eats the whole win — the knob
+        // matters, which is why ServeConfig carries it
+        let coarse =
+            rebalance_gain(&from, &to, SpAlgo::SwiftFusion, &video, 2, DEFAULT_PATCHES);
+        assert!(coarse < g, "coarse patches amortize the fill worse: {coarse} vs {g}");
     }
 
     #[test]

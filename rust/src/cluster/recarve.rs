@@ -282,7 +282,10 @@ impl EpochTracker {
             self.started = true;
             self.carve = preferred;
             self.epochs.push(PlanEpoch {
-                index: 0,
+                // 0 on the true first dispatch; after a fleet-scope
+                // resize ([`Self::resize_reset`]) re-admission continues
+                // the pod's epoch numbering
+                index: self.epochs.len(),
                 plan: preferred,
                 started_at: ready_at.max(free_at),
                 served: 0,
@@ -360,6 +363,22 @@ impl EpochTracker {
             served: 0,
         });
         Transition { carve: preferred, recarved: true, drain, setup }
+    }
+
+    /// Fleet-scope epoch boundary: the pod's machine footprint changed
+    /// (cross-pod re-balancing,
+    /// [`crate::coordinator::router::Router::rebalance_machine`]), so the
+    /// live carve is obsolete no matter what the policy says. Closes the
+    /// current epoch; the next dispatch re-admits — it adopts the
+    /// model's preferred plan for the *new* footprint as a fresh
+    /// admission-time carve at no further cost, because the migration
+    /// barrier already charged drain + re-setup to the pod's timeline.
+    /// Not counted in [`Self::recarve_count`] (that counts per-pod
+    /// policy transitions; fleet events are reported separately).
+    pub fn resize_reset(&mut self) {
+        self.started = false;
+        self.carve = None;
+        self.streak = 0;
     }
 
     /// Attribute `n` served requests to the live epoch.
@@ -499,6 +518,25 @@ mod tests {
         assert_eq!(t.epochs().len(), 1);
         assert_eq!(t.epochs()[0].served, 4);
         assert_eq!(t.epochs()[0].label(), "single-mesh");
+    }
+
+    #[test]
+    fn resize_reset_reopens_admission_for_free() {
+        let mut t = EpochTracker::new(RecarvePolicy::Never, 0.1);
+        t.on_dispatch(0.0, 0.0, Some(spec_a()), None);
+        t.record_served(2);
+        t.resize_reset();
+        assert!(t.carve().is_none(), "carve obsolete after the resize");
+        // next dispatch re-admits the (new-footprint) preferred plan at
+        // no cost, even under Never — the migration barrier already paid
+        let tr = t.on_dispatch(3.0, 1.0, Some(spec_b()), None);
+        assert!(!tr.recarved);
+        assert_eq!(tr.carve, Some(spec_b()));
+        assert_eq!((tr.drain, tr.setup), (0.0, 0.0));
+        assert_eq!(t.recarve_count(), 0, "fleet resets are not policy transitions");
+        assert_eq!(t.epochs().len(), 2, "but they do open a new epoch");
+        assert_eq!(t.epochs()[1].plan, Some(spec_b()));
+        assert_eq!(t.epochs()[0].served, 2, "the closed epoch keeps its log");
     }
 
     #[test]

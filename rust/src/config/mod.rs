@@ -136,6 +136,14 @@ impl ClusterSpec {
         Self::new(4, 8)
     }
 
+    /// The same hardware with a different machine count — how cross-pod
+    /// re-balancing models a pod after a machine migrated in or out
+    /// (GPU/network constants are fleet-wide, only the footprint moves).
+    pub fn resized(&self, machines: usize) -> Self {
+        assert!(machines > 0, "a pod needs at least one machine");
+        Self { machines, ..self.clone() }
+    }
+
     pub fn total_gpus(&self) -> usize {
         self.machines * self.gpus_per_machine
     }
@@ -428,6 +436,25 @@ impl ParallelSpec {
         self.groups() * self.ranks_per_group()
     }
 
+    /// Replica co-batching scatter arithmetic: how a closed batch of
+    /// `batch` requests splits across this spec's `batch_replicas`
+    /// groups (balanced, largest shards first, empty groups omitted).
+    /// The first entry is the makespan-determining shard — the batch
+    /// size each replica group effectively serves when the scheduler
+    /// scatters one shared batch instead of queueing the whole batch on
+    /// one group (`coordinator::session::ServeConfig::co_batch`).
+    pub fn replica_shards(&self, batch: usize) -> Vec<usize> {
+        let groups = self.batch_replicas.max(1).min(batch);
+        if groups == 0 {
+            return Vec::new();
+        }
+        let base = batch / groups;
+        let extra = batch % groups;
+        (0..groups)
+            .map(|g| if g < extra { base + 1 } else { base })
+            .collect()
+    }
+
     /// Human-readable plan key, e.g. `cfg2 x pp2 x rep1 x U8R1` — the
     /// stable label the serving report's plan histogram and the benches
     /// key on.
@@ -677,6 +704,42 @@ mod tests {
         assert!(e.to_string().contains("--patches"), "actionable: {e}");
         // zero patches is rejected, not a division panic
         assert!(spec.validate_patches(&AttnShape::new(1, 64, 8, 4), 0).is_err());
+    }
+
+    #[test]
+    fn resized_cluster_keeps_hardware_constants() {
+        let c = ClusterSpec::paper_testbed();
+        let bigger = c.resized(5);
+        assert_eq!(bigger.machines, 5);
+        assert_eq!(bigger.gpus_per_machine, c.gpus_per_machine);
+        assert_eq!(bigger.gpu, c.gpu);
+        assert_eq!(bigger.net, c.net);
+        assert_eq!(c.machines, 4, "original untouched");
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one machine")]
+    fn resized_to_zero_is_rejected() {
+        ClusterSpec::paper_testbed().resized(0);
+    }
+
+    #[test]
+    fn replica_shards_balance_the_batch() {
+        let rep4 = ParallelSpec::new(1, 4, SpDegrees::new(8, 1));
+        assert_eq!(rep4.replica_shards(8), vec![2, 2, 2, 2]);
+        assert_eq!(rep4.replica_shards(6), vec![2, 2, 1, 1]);
+        assert_eq!(rep4.replica_shards(3), vec![1, 1, 1], "empty groups omitted");
+        assert_eq!(rep4.replica_shards(1), vec![1]);
+        assert_eq!(rep4.replica_shards(0), Vec::<usize>::new());
+        // shards sum to the batch and the head shard is the makespan one
+        for b in 1..20 {
+            let shards = rep4.replica_shards(b);
+            assert_eq!(shards.iter().sum::<usize>(), b);
+            assert_eq!(shards[0], b.div_ceil(shards.len()));
+        }
+        // a replica-free spec serves the whole batch on its one group
+        let rep1 = ParallelSpec::new(2, 1, SpDegrees::new(8, 2));
+        assert_eq!(rep1.replica_shards(5), vec![5]);
     }
 
     #[test]

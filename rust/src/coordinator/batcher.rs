@@ -155,6 +155,32 @@ mod tests {
     }
 
     #[test]
+    fn deadline_arrival_joins_the_closing_batch() {
+        // Flush-deadline edge: a request arriving *exactly* when the
+        // head's window expires must ride in the closing batch — the
+        // serving loop pushes the arrival before sweeping, and the
+        // sweep's `now - head >= window` close takes the whole queue up
+        // to max_batch, so nothing strands behind the deadline.
+        let mut b = Batcher::new(BatchPolicy { max_batch: 8, window: 1.0 });
+        b.push(req(0, Workload::flux_3072(), 0.0));
+        assert!(b.pop_ready(0.999).is_none(), "window still open");
+        b.push(req(1, Workload::flux_3072(), 1.0)); // exactly the deadline
+        let batch = b.pop_ready(1.0).expect("deadline closes the batch");
+        assert_eq!(batch.size(), 2, "the deadline arrival joins, not strands");
+        assert_eq!(batch.requests[1].id, 1);
+        assert_eq!(b.pending(), 0);
+        // beyond capacity the overflow stays queued (capacity, not a
+        // stranding bug): the next sweep picks it up
+        let mut b2 = Batcher::new(BatchPolicy { max_batch: 2, window: 1.0 });
+        b2.push(req(0, Workload::flux_3072(), 0.0));
+        b2.push(req(1, Workload::flux_3072(), 0.5));
+        b2.push(req(2, Workload::flux_3072(), 1.0));
+        assert_eq!(b2.pop_ready(1.0).unwrap().size(), 2);
+        assert_eq!(b2.pending(), 1);
+        assert_eq!(b2.pop_ready(2.0).unwrap().requests[0].id, 2);
+    }
+
+    #[test]
     fn workloads_never_mix() {
         let mut b = Batcher::new(BatchPolicy { max_batch: 4, window: 0.0 });
         b.push(req(0, Workload::flux_3072(), 0.0));

@@ -1,14 +1,11 @@
-//! The serving engine: a deterministic virtual-time loop over
-//! router + batcher + a [`ServiceModel`], with epoch-aware dispatch —
-//! every batch is served under its pod's live carve, and crossing a plan
-//! epoch boundary ([`crate::cluster::recarve`]) first drains the pod and
-//! charges the modeled re-setup cost.
-//!
-//! Also provides [`SimService`]: the paper-scale service model that runs
-//! the *actual* SP schedules in timing mode (threaded cluster, shape-only
-//! buffers) to get per-layer latencies, then scales by layers × steps.
-//! Results are cached per (workload, batch, plan) since the schedules
-//! are deterministic.
+//! Service models and the serving report: [`SimService`] — the
+//! paper-scale service model that runs the *actual* SP schedules in
+//! timing mode (threaded cluster, shape-only buffers) to get per-layer
+//! latencies, then scales by layers × steps, cached per
+//! (workload, batch, plan) since the schedules are deterministic — plus
+//! [`ServeReport`] and the legacy [`serve`] entry point, now a thin shim
+//! over the event-driven scheduler
+//! ([`crate::coordinator::session::ServeSession`]).
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::Mutex;
@@ -18,10 +15,11 @@ use crate::cluster::plan::ParallelPlan;
 use crate::cluster::recarve::PlanEpoch;
 use crate::comm::Buf;
 use crate::config::{ClusterSpec, ParallelSpec, ParallelSpecError, SpDegrees};
-use crate::coordinator::batcher::{BatchPolicy, Batcher};
+use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::router::Router;
-use crate::coordinator::ServiceModel;
+use crate::coordinator::router::{RebalanceEvent, Router};
+use crate::coordinator::session::{ServeConfig, ServeSession};
+use crate::coordinator::{CostModel, Planner, ServiceModel};
 use crate::sp::{hybrid, pipefusion, SpAlgo, SpParams};
 use crate::util::json::Json;
 use crate::workload::{Request, Workload};
@@ -40,6 +38,16 @@ pub enum PlanPolicy {
     /// Per-workload choice via [`crate::analysis::choose_spec`];
     /// workloads are aligned to the chosen group size.
     Auto,
+}
+
+impl std::fmt::Display for PlanPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::SingleMesh => write!(f, "single"),
+            Self::Fixed(spec) => write!(f, "fixed({})", spec.label()),
+            Self::Auto => write!(f, "auto"),
+        }
+    }
 }
 
 /// Timing-mode service model: one full generation = steps × layers ×
@@ -253,7 +261,7 @@ impl SimService {
     }
 }
 
-impl ServiceModel for SimService {
+impl CostModel for SimService {
     fn service_time(&self, workload: &Workload, batch: usize) -> f64 {
         self.timed(workload, batch, self.resolve_spec(workload))
     }
@@ -266,7 +274,9 @@ impl ServiceModel for SimService {
     ) -> f64 {
         self.timed(workload, batch, carve.copied())
     }
+}
 
+impl Planner for SimService {
     fn plan_spec(&self, workload: &Workload) -> Option<ParallelSpec> {
         self.resolve_spec(workload)
     }
@@ -332,7 +342,12 @@ pub struct RecarveReport {
 /// Outcome of a serving run.
 pub struct ServeReport {
     pub metrics: Metrics,
-    /// (request id, arrival, completion) per request.
+    /// (request id, arrival, completion) per request, in
+    /// completion-time order (ties in dispatch order). The pre-redesign
+    /// loop recorded these in dispatch order; on a single pod the two
+    /// orders coincide (and the pinned goldens reproduce bit-for-bit),
+    /// on multiple pods the completion-time order is the deliberate new
+    /// contract.
     pub completions: Vec<(u64, f64, f64)>,
     /// Requests refused, as (request id, reason) — at admission when the
     /// service's plan cannot run the workload (e.g. sequence length not
@@ -352,12 +367,27 @@ pub struct ServeReport {
     pub plan_histogram: BTreeMap<String, usize>,
     /// Epoch/drain observability (see [`RecarveReport`]).
     pub recarve: RecarveReport,
+    /// Fleet-scope machine migrations
+    /// ([`crate::coordinator::session::RebalancePolicy`]), in commit
+    /// order; empty unless cross-pod re-balancing fired.
+    pub rebalances: Vec<RebalanceEvent>,
+    /// Dispatches whose batch was scattered across replica groups
+    /// (`ServeConfig::co_batch` in [`crate::coordinator::session`]); zero
+    /// unless co-batching was enabled and fired.
+    pub co_batched: usize,
 }
 
 impl ServeReport {
     /// Stable JSON rendering of the report's observable fields (plan
     /// histogram, epoch log, drain/setup totals) — the serialization the
     /// golden regression test in `rust/tests/recarve_serving.rs` pins.
+    ///
+    /// The scheduler's new capabilities serialize *additively*: a
+    /// `"rebalance"` array / `"co_batched"` count appear only when
+    /// cross-pod re-balancing / replica co-batching actually fired, so
+    /// runs that do not use them — including everything reachable
+    /// through the legacy [`serve`] shim — render byte-identically to
+    /// the pre-redesign format.
     pub fn to_json(&self) -> Json {
         let obj = |pairs: Vec<(&str, Json)>| {
             Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
@@ -398,7 +428,7 @@ impl ServeReport {
                 })
                 .collect(),
         );
-        obj(vec![
+        let mut fields = vec![
             ("completed", Json::Num(self.metrics.completed() as f64)),
             ("horizon", Json::Num(self.metrics.horizon)),
             ("rejected", rejected),
@@ -413,7 +443,30 @@ impl ServeReport {
                     ("epochs", epochs),
                 ]),
             ),
-        ])
+        ];
+        if self.co_batched > 0 {
+            fields.push(("co_batched", Json::Num(self.co_batched as f64)));
+        }
+        if !self.rebalances.is_empty() {
+            fields.push((
+                "rebalance",
+                Json::Arr(
+                    self.rebalances
+                        .iter()
+                        .map(|ev| {
+                            obj(vec![
+                                ("at", Json::Num(ev.at)),
+                                ("from_pod", Json::Num(ev.from_pod as f64)),
+                                ("to_pod", Json::Num(ev.to_pod as f64)),
+                                ("from_machines", Json::Num(ev.from_machines as f64)),
+                                ("to_machines", Json::Num(ev.to_machines as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        obj(fields)
     }
 }
 
@@ -432,137 +485,24 @@ impl ServeReport {
 /// service prefers for this workload. A batch never spans two carves:
 /// transitions happen strictly between batches, behind the drain
 /// barrier [`Router::commit_recarve`] enforces.
+///
+/// This is the **legacy entry point**, kept as a thin shim over the
+/// event-driven [`ServeSession`]: a default [`ServeConfig`] with only
+/// the batch policy set inherits the router's installed re-carving
+/// policies, dispatches least-loaded, and leaves co-batching and
+/// re-balancing off — reproducing the pre-redesign results bit-for-bit
+/// on the pinned goldens (`rust/tests/recarve_serving.rs`,
+/// `rust/tests/serve_session.rs`). One deliberate observable change:
+/// [`ServeReport::completions`] is now in completion-time order, which
+/// coincides with the old dispatch order on a single pod but can
+/// reorder the (identical) entries of multi-pod runs.
 pub fn serve(
     router: &mut Router,
     policy: BatchPolicy,
     requests: Vec<Request>,
     service: &dyn ServiceModel,
 ) -> ServeReport {
-    let mut batcher = Batcher::new(policy);
-    let mut metrics = Metrics::new();
-    let mut completions = Vec::new();
-    let mut rejected = Vec::new();
-    let mut plan_histogram: BTreeMap<String, usize> = BTreeMap::new();
-
-    let serve_batch = |router: &mut Router,
-                           batch: crate::coordinator::batcher::Batch,
-                           metrics: &mut Metrics,
-                           completions: &mut Vec<(u64, f64, f64)>,
-                           rejected: &mut Vec<(u64, String)>,
-                           plan_histogram: &mut BTreeMap<String, usize>| {
-        let pod = router.pick();
-        let workload = batch.requests[0].workload.clone();
-        let ready = batch.ready_at();
-        let preferred = service.plan_spec(&workload);
-        let free_at = router.pods[pod].free_at;
-        // Compute the modeled gain only for policies that read it.
-        let gain = {
-            let rc = &router.pods[pod].recarver;
-            if rc.policy.wants_gain() {
-                match rc.carve() {
-                    Some(from) if Some(from) != preferred => {
-                        service.recarve_gain(&workload, &from)
-                    }
-                    _ => None,
-                }
-            } else {
-                None
-            }
-        };
-        let mut t = router.pods[pod].recarver.on_dispatch(ready, free_at, preferred, gain);
-        // Serve under the epoch's carve — the preferred plan only if the
-        // policy adopted it, the stale one otherwise.
-        let mut dur = service.service_time_under(&workload, batch.size(), t.carve.as_ref());
-        if !dur.is_finite() {
-            // The live carve cannot serve this batch at all (e.g. a
-            // patch granularity larger than the sequence); dispatching
-            // an infinite duration would poison the pod's timeline
-            // forever. If the preferred plan can serve it, the re-carve
-            // is forced by physics, overriding the policy; if nothing
-            // can, the batch is rejected rather than dispatched.
-            let pref_dur = if t.carve == preferred {
-                dur
-            } else {
-                service.service_time_under(&workload, batch.size(), preferred.as_ref())
-            };
-            if !pref_dur.is_finite() {
-                for r in &batch.requests {
-                    rejected.push((
-                        r.id,
-                        format!(
-                            "no plan can serve workload '{}' on this pod (modeled \
-                             service time is infinite under both the live carve and \
-                             the preferred plan)",
-                            workload.name
-                        ),
-                    ));
-                }
-                return;
-            }
-            t = router.pods[pod].recarver.force(ready, free_at, preferred);
-            dur = pref_dur;
-        }
-        if t.recarved && t.setup > 0.0 {
-            router.commit_recarve(pod, ready, t.setup);
-        }
-        if let Some(label) = t
-            .carve
-            .map(|s| s.label())
-            .or_else(|| service.plan_label(&workload))
-        {
-            *plan_histogram.entry(label).or_insert(0) += batch.size();
-        }
-        router.pods[pod].recarver.record_served(batch.size());
-        let (_, done) = router.dispatch(pod, ready, dur);
-        for r in &batch.requests {
-            metrics.record(workload.name, done - r.arrival, done);
-            completions.push((r.id, r.arrival, done));
-        }
-    };
-
-    for r in requests {
-        let now = r.arrival;
-        if let Err(reason) = service.admit(&r.workload) {
-            rejected.push((r.id, reason));
-            continue;
-        }
-        batcher.push(r);
-        while let Some(batch) = batcher.pop_ready(now) {
-            serve_batch(
-                router,
-                batch,
-                &mut metrics,
-                &mut completions,
-                &mut rejected,
-                &mut plan_histogram,
-            );
-        }
-    }
-    // end of trace: drain
-    while let Some(batch) = batcher.pop_any() {
-        serve_batch(
-            router,
-            batch,
-            &mut metrics,
-            &mut completions,
-            &mut rejected,
-            &mut plan_histogram,
-        );
-    }
-
-    // Snapshot the pods' epoch logs into the report.
-    let mut recarve = RecarveReport::default();
-    for pod in &router.pods {
-        let rc = &pod.recarver;
-        recarve.recarve_count += rc.recarve_count();
-        recarve.drain_time += rc.drain_time();
-        recarve.setup_time += rc.setup_time();
-        for e in rc.epochs() {
-            *recarve.epoch_histogram.entry(e.label()).or_insert(0) += 1;
-            recarve.epochs.push((pod.id, e.clone()));
-        }
-    }
-    ServeReport { metrics, completions, rejected, plan_histogram, recarve }
+    ServeSession::new(ServeConfig::new().batch(policy), service).run(router, requests)
 }
 
 #[cfg(test)]
@@ -572,11 +512,12 @@ mod tests {
     use crate::workload::TraceGen;
 
     struct ConstService(f64);
-    impl ServiceModel for ConstService {
+    impl CostModel for ConstService {
         fn service_time(&self, _w: &Workload, batch: usize) -> f64 {
             self.0 * batch as f64
         }
     }
+    impl Planner for ConstService {}
 
     #[test]
     fn serves_all_requests_exactly_once() {
@@ -628,11 +569,12 @@ mod tests {
         // With a sub-linear service model, batching must beat no-batching
         // on saturated arrivals.
         struct SubLinear;
-        impl ServiceModel for SubLinear {
+        impl CostModel for SubLinear {
             fn service_time(&self, _w: &Workload, batch: usize) -> f64 {
                 1.0 + 0.1 * batch as f64
             }
         }
+        impl Planner for SubLinear {}
         let reqs = || TraceGen::new(4, 100.0, vec![Workload::flux_3072()]).take(64);
         let run = |max_batch: usize| {
             let mut router = Router::new(1, 2, 1, SpAlgo::SwiftFusion);
@@ -925,7 +867,7 @@ mod tests {
                 }
             }
         }
-        impl ServiceModel for TwoPlan {
+        impl CostModel for TwoPlan {
             fn service_time(&self, _w: &Workload, batch: usize) -> f64 {
                 batch as f64
             }
@@ -941,6 +883,8 @@ mod tests {
                     f64::INFINITY
                 }
             }
+        }
+        impl Planner for TwoPlan {
             fn plan_spec(&self, w: &Workload) -> Option<ParallelSpec> {
                 Some(Self::spec_for(w))
             }
@@ -970,11 +914,12 @@ mod tests {
         // a batch, it must land in `rejected` — the pod timeline stays
         // finite and later requests are unaffected.
         struct Unserveable;
-        impl ServiceModel for Unserveable {
+        impl CostModel for Unserveable {
             fn service_time(&self, _w: &Workload, _b: usize) -> f64 {
                 f64::INFINITY
             }
         }
+        impl Planner for Unserveable {}
         let mut router = Router::new(2, 2, 1, SpAlgo::SwiftFusion);
         let reqs = TraceGen::new(5, 1.0, vec![Workload::flux_3072()]).take(3);
         let report = serve(

@@ -4,6 +4,28 @@ use std::collections::BTreeMap;
 
 use crate::util::stats::{fmt_time, Summary};
 
+/// One finished request, as the scheduler's completion event carries it
+/// — the typed record behind `ServeReport::completions` tuples.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Completion {
+    pub id: u64,
+    /// Workload name (stable — workload names are `&'static`).
+    pub workload: &'static str,
+    /// Virtual arrival time of the request.
+    pub arrival: f64,
+    /// Virtual completion time.
+    pub done: f64,
+    /// Pod that served the request.
+    pub pod: usize,
+}
+
+impl Completion {
+    /// Request latency (completion − arrival).
+    pub fn latency(&self) -> f64 {
+        self.done - self.arrival
+    }
+}
+
 #[derive(Debug, Default)]
 pub struct Metrics {
     per_workload: BTreeMap<String, Summary>,
@@ -24,6 +46,11 @@ impl Metrics {
             .add(latency);
         self.completed += 1;
         self.horizon = self.horizon.max(completion);
+    }
+
+    /// [`Self::record`] from a typed [`Completion`] event.
+    pub fn observe(&mut self, c: &Completion) {
+        self.record(c.workload, c.latency(), c.done);
     }
 
     pub fn completed(&self) -> usize {
@@ -93,6 +120,19 @@ mod tests {
         assert!((m.latency("flux").unwrap().mean() - 2.0).abs() < 1e-12);
         let rep = m.report();
         assert!(rep.contains("flux") && rep.contains("video"));
+    }
+
+    #[test]
+    fn observe_matches_record() {
+        let c = Completion { id: 3, workload: "flux", arrival: 1.5, done: 4.0, pod: 0 };
+        assert_eq!(c.latency(), 2.5);
+        let mut a = Metrics::new();
+        a.observe(&c);
+        let mut b = Metrics::new();
+        b.record("flux", 2.5, 4.0);
+        assert_eq!(a.completed(), b.completed());
+        assert_eq!(a.horizon, b.horizon);
+        assert_eq!(a.latency("flux").unwrap().mean(), b.latency("flux").unwrap().mean());
     }
 
     #[test]

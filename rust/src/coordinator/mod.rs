@@ -3,60 +3,64 @@
 //! (vLLM-style router → batcher → engine workers):
 //!
 //! * [`router`] — partitions the cluster into pods (one 2D mesh each) and
-//!   routes requests to the least-loaded compatible pod;
+//!   routes requests to the pod a [`session::DispatchPolicy`] picks;
 //! * [`batcher`] — groups same-workload requests within a batching
 //!   window up to a max batch size (diffusion requests are uniform-length
 //!   per workload, so batching is along B);
-//! * [`engine`] — virtual-time serving loop over a [`ServiceModel`]
-//!   (simulated paper-scale service times, or measured numeric sampling
-//!   as in `examples/serve_images.rs`);
+//! * [`session`] — the event-driven serving scheduler: a
+//!   [`session::ServeSession`] built from a typed [`session::ServeConfig`]
+//!   drives arrival → batch-close → dispatch → recarve-commit →
+//!   completion events over the virtual clock;
+//! * [`engine`] — the service models ([`engine::SimService`] times the
+//!   *actual* SP schedules; `examples/serve_images.rs` plugs in measured
+//!   numeric sampling) plus the legacy [`engine::serve`] shim;
 //! * [`metrics`] — per-workload latency/throughput summaries.
 //!
 //! Serving is *epoch-aware*: each pod carries an
-//! [`crate::cluster::recarve::EpochTracker`], so the router can drain a
+//! [`crate::cluster::recarve::EpochTracker`], so the scheduler can drain a
 //! pod and re-carve it into a different `cfg × pp × sp` plan between
 //! requests when its [`crate::cluster::recarve::RecarvePolicy`] fires —
-//! see [`crate::cluster::recarve`] for the epoch model.
+//! see [`crate::cluster::recarve`] for the epoch model. With a
+//! [`session::FleetModel`] installed, epochs extend to *fleet* scope:
+//! cross-pod re-balancing can migrate an idle machine between pods when
+//! the workload mix shifts ([`session::RebalancePolicy`]).
+//!
+//! ## Migration note (old combined trait → new surface)
+//!
+//! The old six-method `ServiceModel` god-trait is now two focused traits
+//! plus a blanket-implemented marker; old call sites map as follows:
+//!
+//! | old (`ServiceModel` method / API)      | new home                                      |
+//! |----------------------------------------|-----------------------------------------------|
+//! | `service_time`, `service_time_under`   | [`CostModel`]                                 |
+//! | `plan_spec`, `plan_label`, `admit`, `recarve_gain` | [`Planner`]                       |
+//! | `impl ServiceModel for T { … }`        | `impl CostModel for T { … }` + `impl Planner for T { … }` (empty for plan-agnostic models) |
+//! | `&dyn ServiceModel` bounds             | unchanged — [`ServiceModel`] is blanket-implemented for every `CostModel + Planner` |
+//! | `serve(router, policy, reqs, svc)`     | unchanged (thin shim over [`session::ServeSession`]) |
+//! | `Router::set_recarve(_with_setup)`     | `ServeConfig::recarve` / `ServeConfig::recarve_setup` in [`session`] (the router setters remain for direct use) |
+//! | `SimService` constructor scatter (`new`/`with_plan`/`auto_plan` + `patches` field pokes) | [`session::ServeConfig::sim_service`] builds the model from the config's plan policy + patches |
+//! | `Router::pick` hard-wired in `serve()` | [`session::DispatchPolicy`] (least-loaded stays the default) |
+//! | `Router::dispatch` `(f64, f64)` return | [`router::DispatchOutcome`]                   |
+//! | `serve_batch`'s six-`&mut` closure     | [`session::ServeState`]                       |
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
 pub mod router;
+pub mod session;
 
 use crate::config::ParallelSpec;
 use crate::workload::Workload;
 
 /// Abstraction over "how long does one batched generation take": the
 /// simulated engine plugs in the timing-mode cluster model; the numeric
-/// engine plugs in real measured sampling.
-pub trait ServiceModel: Sync {
+/// engine plugs in real measured sampling. One half of the old combined
+/// `ServiceModel` trait — the other half (planning/admission) is
+/// [`Planner`].
+pub trait CostModel: Sync {
     /// End-to-end service time (seconds) for a batch of `batch` requests
-    /// of `workload` on one pod.
+    /// of `workload` on one pod, under the plan this model prefers.
     fn service_time(&self, workload: &Workload, batch: usize) -> f64;
-
-    /// Admission check: can this workload run under the engine's plan at
-    /// all? `Err` carries an actionable reason; the serving loop rejects
-    /// such requests cleanly instead of batching them (see
-    /// [`engine::ServeReport::rejected`]). Default: admit everything.
-    fn admit(&self, _workload: &Workload) -> Result<(), String> {
-        Ok(())
-    }
-
-    /// Stable label of the parallel plan this model would serve
-    /// `workload` with (e.g. `cfg2 x pp2 x rep1 x U8R1`), if it plans at
-    /// all — feeds [`engine::ServeReport::plan_histogram`] so
-    /// auto-planning behaviour is observable from `serve()` output.
-    fn plan_label(&self, _workload: &Workload) -> Option<String> {
-        None
-    }
-
-    /// The hybrid spec this model would carve a pod into for `workload`
-    /// — the *preferred* plan the epoch-aware serving loop compares a
-    /// pod's live carve against. `None` (the default) means the model
-    /// does not plan; such pods stay in a single unplanned epoch.
-    fn plan_spec(&self, _workload: &Workload) -> Option<ParallelSpec> {
-        None
-    }
 
     /// Service time when the pod is pinned to `carve` — a possibly
     /// *stale* plan epoch — instead of the model's preferred plan for
@@ -71,6 +75,37 @@ pub trait ServiceModel: Sync {
     ) -> f64 {
         self.service_time(workload, batch)
     }
+}
+
+/// Plan resolution and admission: which hybrid carve a model would serve
+/// a workload with, whether it can serve it at all, and what re-carving
+/// toward the preferred plan is predicted to buy. All methods default to
+/// "this model does not plan", so plan-agnostic cost models implement
+/// this trait with an empty `impl Planner for T {}`.
+pub trait Planner: Sync {
+    /// Admission check: can this workload run under the model's plan at
+    /// all? `Err` carries an actionable reason; the serving loop rejects
+    /// such requests cleanly instead of batching them (see
+    /// [`engine::ServeReport::rejected`]). Default: admit everything.
+    fn admit(&self, _workload: &Workload) -> Result<(), String> {
+        Ok(())
+    }
+
+    /// Stable label of the parallel plan this model would serve
+    /// `workload` with (e.g. `cfg2 x pp2 x rep1 x U8R1`), if it plans at
+    /// all — feeds [`engine::ServeReport::plan_histogram`] so
+    /// auto-planning behaviour is observable from serving output.
+    fn plan_label(&self, _workload: &Workload) -> Option<String> {
+        None
+    }
+
+    /// The hybrid spec this model would carve a pod into for `workload`
+    /// — the *preferred* plan the epoch-aware scheduler compares a pod's
+    /// live carve against. `None` (the default) means the model does not
+    /// plan; such pods stay in a single unplanned epoch.
+    fn plan_spec(&self, _workload: &Workload) -> Option<ParallelSpec> {
+        None
+    }
 
     /// Predicted fractional per-step improvement of re-carving a pod
     /// from `from` to this model's preferred plan for `workload`
@@ -82,3 +117,12 @@ pub trait ServiceModel: Sync {
         None
     }
 }
+
+/// The full service-model surface the scheduler drives: costing
+/// ([`CostModel`]) plus planning/admission ([`Planner`]). Blanket-
+/// implemented for every type that implements both halves, so existing
+/// `&dyn ServiceModel` call sites keep working and a plan-agnostic model
+/// only needs `impl CostModel` + an empty `impl Planner`.
+pub trait ServiceModel: CostModel + Planner {}
+
+impl<T: CostModel + Planner> ServiceModel for T {}

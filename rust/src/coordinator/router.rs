@@ -13,6 +13,14 @@
 //! barrier + re-setup cost to the pod's timeline, so no batch of a new
 //! epoch can start before the old epoch's in-flight work has drained
 //! and the sub-meshes have been rebuilt.
+//!
+//! Epochs extend to *fleet* scope with [`Router::rebalance_machine`]:
+//! cross-pod re-balancing migrates one machine between pods (the
+//! workload mix shifted and one pod's traffic wants a bigger carve while
+//! another sits idle). Both pods drain, pay their re-setup, and re-admit
+//! a fresh carve on their next dispatch — see
+//! [`crate::coordinator::session::RebalancePolicy`] for the policy that
+//! drives it.
 
 use crate::analysis;
 use crate::cluster::recarve::{resetup_cost, EpochTracker, RecarvePolicy};
@@ -61,6 +69,33 @@ impl Pod {
             queue_depth,
         )
     }
+}
+
+/// Outcome of committing one batch to a pod (what [`Router::dispatch`]
+/// used to return as a bare `(f64, f64)` pair).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DispatchOutcome {
+    /// Virtual time service started (max of pod-free and batch-ready).
+    pub start: f64,
+    /// Virtual time the batch completes.
+    pub done: f64,
+}
+
+/// One fleet-scope machine migration, as recorded by
+/// [`Router::rebalance_machine`] and reported in
+/// `ServeReport::rebalances`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RebalanceEvent {
+    /// Virtual time the migration was committed.
+    pub at: f64,
+    /// Donor pod (shrinks by one machine).
+    pub from_pod: usize,
+    /// Receiver pod (grows by one machine).
+    pub to_pod: usize,
+    /// Donor machine count *after* the migration.
+    pub from_machines: usize,
+    /// Receiver machine count *after* the migration.
+    pub to_machines: usize,
 }
 
 /// The router: owns the pods, assigns batches.
@@ -136,13 +171,44 @@ impl Router {
     }
 
     /// Commit a batch to `pod`: service starts when both the pod is free
-    /// and the batch is ready; returns (start, completion).
-    pub fn dispatch(&mut self, pod: usize, ready_at: f64, service: f64) -> (f64, f64) {
+    /// and the batch is ready.
+    pub fn dispatch(&mut self, pod: usize, ready_at: f64, service: f64) -> DispatchOutcome {
         let p = &mut self.pods[pod];
         let start = p.free_at.max(ready_at);
         let done = start + service;
         p.free_at = done;
-        (start, done)
+        DispatchOutcome { start, done }
+    }
+
+    /// Fleet-scope epoch boundary: migrate one machine from pod `from`
+    /// to pod `to` at virtual time `at`. Both pods drain (their timeline
+    /// already carries in-flight work), pay their installed re-setup
+    /// cost, and have their epoch trackers reset so the next dispatch
+    /// re-admits a carve sized for the new footprint
+    /// ([`EpochTracker::resize_reset`] — the adoption itself is free,
+    /// the migration barrier charged here is the paid part). The donor
+    /// must keep at least one machine.
+    pub fn rebalance_machine(&mut self, from: usize, to: usize, at: f64) -> RebalanceEvent {
+        assert_ne!(from, to, "a pod cannot donate a machine to itself");
+        assert!(
+            self.pods[from].cluster.machines >= 2,
+            "donor pod {from} has only {} machine(s); migrating it away would kill the pod",
+            self.pods[from].cluster.machines
+        );
+        for (pod, delta) in [(from, -1isize), (to, 1)] {
+            let p = &mut self.pods[pod];
+            let machines = p.cluster.machines.checked_add_signed(delta).unwrap();
+            p.cluster = p.cluster.resized(machines);
+            p.free_at = p.free_at.max(at) + p.recarver.setup_cost;
+            p.recarver.resize_reset();
+        }
+        RebalanceEvent {
+            at,
+            from_pod: from,
+            to_pod: to,
+            from_machines: self.pods[from].cluster.machines,
+            to_machines: self.pods[to].cluster.machines,
+        }
     }
 }
 
@@ -171,14 +237,14 @@ mod tests {
     fn least_loaded_dispatch() {
         let mut r = Router::new(2, 2, 2, SpAlgo::SwiftFusion);
         assert_eq!(r.pick(), 0);
-        let (s0, d0) = r.dispatch(0, 0.0, 10.0);
-        assert_eq!((s0, d0), (0.0, 10.0));
+        let out = r.dispatch(0, 0.0, 10.0);
+        assert_eq!(out, DispatchOutcome { start: 0.0, done: 10.0 });
         assert_eq!(r.pick(), 1, "pod 0 busy until 10");
         r.dispatch(1, 0.0, 3.0);
         assert_eq!(r.pick(), 1, "pod 1 free sooner");
         // batch not ready until t=20: idles the pod
-        let (s, d) = r.dispatch(1, 20.0, 1.0);
-        assert_eq!((s, d), (20.0, 21.0));
+        let out = r.dispatch(1, 20.0, 1.0);
+        assert_eq!((out.start, out.done), (20.0, 21.0));
     }
 
     #[test]
@@ -196,13 +262,56 @@ mod tests {
         // t=4 drains to t=10, then pays 0.5s of re-setup
         r.dispatch(0, 0.0, 10.0);
         r.commit_recarve(0, 4.0, 0.5);
-        let (start, done) = r.dispatch(0, 4.0, 1.0);
-        assert_eq!((start, done), (10.5, 11.5));
+        let out = r.dispatch(0, 4.0, 1.0);
+        assert_eq!((out.start, out.done), (10.5, 11.5));
         // an idle pod pays only the re-setup
         let mut r2 = Router::new(2, 2, 1, SpAlgo::SwiftFusion);
         r2.commit_recarve(0, 3.0, 0.25);
-        let (start, _) = r2.dispatch(0, 3.0, 1.0);
-        assert_eq!(start, 3.25);
+        let out = r2.dispatch(0, 3.0, 1.0);
+        assert_eq!(out.start, 3.25);
+    }
+
+    #[test]
+    fn rebalance_migrates_a_machine_and_resets_both_pods() {
+        let mut r = Router::new(4, 8, 2, SpAlgo::SwiftFusion);
+        r.set_recarve_with_setup(RecarvePolicy::Never, 0.25);
+        // adopt admission carves so the reset is observable
+        let spec = crate::config::ParallelSpec::new(2, 1, crate::config::SpDegrees::new(8, 2));
+        for p in &mut r.pods {
+            p.recarver.on_dispatch(0.0, 0.0, Some(spec), None);
+        }
+        // pod 0 busy until t=5, pod 1 idle; migrate 1 -> 0 at t=2
+        r.dispatch(0, 0.0, 5.0);
+        let ev = r.rebalance_machine(1, 0, 2.0);
+        assert_eq!(
+            ev,
+            RebalanceEvent {
+                at: 2.0,
+                from_pod: 1,
+                to_pod: 0,
+                from_machines: 1,
+                to_machines: 3
+            }
+        );
+        assert_eq!(r.pods[0].cluster.machines, 3);
+        assert_eq!(r.pods[1].cluster.machines, 1);
+        // receiver drains (to 5.0) then pays setup; idle donor pays setup only
+        assert_eq!(r.pods[0].free_at, 5.25);
+        assert_eq!(r.pods[1].free_at, 2.25);
+        // both trackers re-admit on the next dispatch (fresh epoch, free)
+        for p in &mut r.pods {
+            let tr = p.recarver.on_dispatch(6.0, p.free_at, Some(spec), None);
+            assert!(!tr.recarved, "re-admission after a resize is unpaid");
+            assert_eq!((tr.drain, tr.setup), (0.0, 0.0));
+        }
+        assert_eq!(r.pods[0].recarver.epochs().len(), 2, "resize opened a new epoch");
+    }
+
+    #[test]
+    #[should_panic(expected = "donor pod")]
+    fn rebalance_never_empties_a_pod() {
+        let mut r = Router::new(2, 8, 2, SpAlgo::SwiftFusion);
+        r.rebalance_machine(0, 1, 0.0); // pods have 1 machine each
     }
 
     #[test]

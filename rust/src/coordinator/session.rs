@@ -1,0 +1,904 @@
+//! The event-driven serving scheduler: a [`ServeSession`] built from a
+//! typed [`ServeConfig`] drives **arrival → batch-close → dispatch →
+//! recarve-commit → completion** events over the virtual clock.
+//!
+//! Before this redesign the serving loop was one hard-coded
+//! batch → pick → dispatch path (a 150-line free function with an inner
+//! closure); policies lived in scattered places — batch policy as a
+//! `serve()` argument, plan policy + patches in `SimService`
+//! constructors, re-carving in ad-hoc `Router` setters. [`ServeConfig`]
+//! folds all of them into one reproducible value (see
+//! [`ServeConfig::summary`]), and the explicit event loop makes dispatch
+//! policy pluggable ([`DispatchPolicy`]) and leaves room for fleet-level
+//! events. The redesign ships its first two new scheduler clients:
+//!
+//! * **replica co-batching** (`ServeConfig::co_batch`) — a closed
+//!   batch is *scattered* across its carve's batch-replica groups (each
+//!   group serves `⌈B/R⌉` requests concurrently, outputs gathered)
+//!   instead of the whole batch queueing on one group;
+//! * **cross-pod re-balancing** ([`RebalancePolicy`]) — a fleet-level
+//!   event that migrates an idle machine between pods when the workload
+//!   mix shifts, extending [`crate::cluster::recarve`] epochs from
+//!   per-pod to fleet scope
+//!   ([`crate::coordinator::router::Router::rebalance_machine`]).
+//!
+//! The legacy [`crate::coordinator::engine::serve`] entry point remains
+//! as a thin shim over [`ServeSession`] and reproduces the pre-redesign
+//! results bit-for-bit on the pinned goldens
+//! (`rust/tests/serve_session.rs`, `rust/tests/recarve_serving.rs`);
+//! the one deliberate observable change is that completions are
+//! recorded in completion-time order (see
+//! [`crate::coordinator::engine::ServeReport::completions`]).
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+use std::sync::{Arc, Mutex};
+
+use crate::cluster::recarve::RecarvePolicy;
+use crate::config::{ClusterSpec, ParallelSpec, ParallelSpecError};
+use crate::coordinator::batcher::{Batch, BatchPolicy, Batcher};
+use crate::coordinator::engine::{PlanPolicy, RecarveReport, ServeReport, SimService};
+use crate::coordinator::metrics::{Completion, Metrics};
+use crate::coordinator::router::{RebalanceEvent, Router};
+use crate::coordinator::{CostModel, Planner, ServiceModel};
+use crate::sp::SpAlgo;
+use crate::workload::{Request, Workload};
+
+// ---------------------------------------------------------------------------
+// Dispatch policy
+// ---------------------------------------------------------------------------
+
+/// Pluggable "which pod serves this batch" policy. `est(pod, batch)`
+/// is a service-time estimate on that pod (the pod-sized model's
+/// preferred-plan time); policies that only read queue state may ignore
+/// it — it is never called unless the policy asks.
+pub trait DispatchPolicy: Sync {
+    /// Stable policy name for the effective-config line
+    /// ([`ServeConfig::summary`]) and CLI parsing.
+    fn name(&self) -> &'static str;
+
+    /// Pick the pod for `batch`. Must be deterministic.
+    fn pick(
+        &self,
+        router: &Router,
+        batch: &Batch,
+        est: &dyn Fn(usize, &Batch) -> f64,
+    ) -> usize;
+}
+
+/// The default (and the pre-redesign behaviour, `Router::pick`):
+/// earliest-free pod, ties by lowest id.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LeastLoaded;
+
+impl DispatchPolicy for LeastLoaded {
+    fn name(&self) -> &'static str {
+        "least-loaded"
+    }
+
+    fn pick(
+        &self,
+        router: &Router,
+        _batch: &Batch,
+        _est: &dyn Fn(usize, &Batch) -> f64,
+    ) -> usize {
+        router.pick()
+    }
+}
+
+/// Plan-aware dispatch: minimize the batch's predicted completion time
+/// `max(free_at, ready) + est(pod, batch)` — with differently-sized pods
+/// (cross-pod re-balancing) this routes long sequences to the pod whose
+/// carve actually serves them fastest, where least-loaded is blind to
+/// pod shape. Ties by lowest pod id.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EarliestFinish;
+
+impl DispatchPolicy for EarliestFinish {
+    fn name(&self) -> &'static str {
+        "earliest-finish"
+    }
+
+    fn pick(
+        &self,
+        router: &Router,
+        batch: &Batch,
+        est: &dyn Fn(usize, &Batch) -> f64,
+    ) -> usize {
+        let ready = batch.ready_at();
+        router
+            .pods
+            .iter()
+            .map(|p| (p.id, p.free_at.max(ready) + est(p.id, batch)))
+            .min_by(|(ia, a), (ib, b)| a.total_cmp(b).then(ia.cmp(ib)))
+            .map(|(id, _)| id)
+            .unwrap()
+    }
+}
+
+/// Parse a dispatch policy by CLI name.
+pub fn dispatch_policy_from_name(name: &str) -> Option<Arc<dyn DispatchPolicy>> {
+    match name {
+        "least-loaded" => Some(Arc::new(LeastLoaded)),
+        "earliest-finish" => Some(Arc::new(EarliestFinish)),
+        _ => None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fleet scope: pod-sized models + re-balancing policy
+// ---------------------------------------------------------------------------
+
+/// Fleet-scope extension of the cost/plan pair: resolves a service model
+/// *per pod footprint*. Cross-pod re-balancing changes pod sizes at
+/// runtime, so a single cluster-bound model (like one `SimService`)
+/// cannot price every pod; a `FleetModel` can.
+pub trait FleetModel: Sync {
+    /// The cost/plan model for a pod carved as `cluster`.
+    fn model_for(&self, cluster: &ClusterSpec) -> Arc<dyn ServiceModel>;
+}
+
+/// [`FleetModel`] over auto-planning [`SimService`]s, one per distinct
+/// pod footprint, built lazily and cached (the timing schedules behind
+/// them are themselves cached per workload/batch/plan).
+pub struct SimFleet {
+    algo: SpAlgo,
+    patches: usize,
+    models: Mutex<HashMap<(usize, usize), Arc<SimService>>>,
+}
+
+impl SimFleet {
+    /// An auto-planning fleet: every footprint gets
+    /// [`SimService::auto_plan`] with the given patch count.
+    pub fn auto(algo: SpAlgo, patches: usize) -> Self {
+        Self { algo, patches, models: Mutex::new(HashMap::new()) }
+    }
+}
+
+impl FleetModel for SimFleet {
+    fn model_for(&self, cluster: &ClusterSpec) -> Arc<dyn ServiceModel> {
+        let key = (cluster.machines, cluster.gpus_per_machine);
+        let mut models = self.models.lock().unwrap();
+        let model = models.entry(key).or_insert_with(|| {
+            let mut svc = SimService::auto_plan(cluster.clone(), self.algo);
+            svc.patches = self.patches;
+            Arc::new(svc)
+        });
+        let model: Arc<SimService> = Arc::clone(model);
+        model
+    }
+}
+
+/// When the fleet may migrate an idle machine between pods
+/// ([`crate::coordinator::router::Router::rebalance_machine`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RebalancePolicy {
+    /// Pods keep their admission-time footprint (the pre-redesign
+    /// behaviour, and the default).
+    Never,
+    /// Migrate one machine toward the dispatching pod when
+    /// [`crate::analysis::rebalance_gain`] predicts at least `threshold`
+    /// fractional per-step improvement from one more machine for
+    /// `window` consecutive dispatches (fleet-scope hysteresis), and
+    /// some other pod is idle with a machine to spare. Requires a
+    /// [`FleetModel`] (pods change size); without one the policy is
+    /// inert.
+    Gain {
+        /// Minimum predicted fractional gain (e.g. `0.1` for 10 %).
+        threshold: f64,
+        /// Consecutive gainful dispatches required before migrating.
+        window: usize,
+    },
+}
+
+impl RebalancePolicy {
+    /// Parse a CLI policy name; `threshold`/`window` feed the gain
+    /// variant and are ignored by `never`.
+    pub fn from_name(name: &str, threshold: f64, window: usize) -> Option<Self> {
+        match name {
+            "never" => Some(Self::Never),
+            "gain" => Some(Self::Gain { threshold, window }),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for RebalancePolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Never => write!(f, "never"),
+            Self::Gain { threshold, window } => {
+                write!(f, "gain({:.0}% x {window})", threshold * 100.0)
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ServeConfig
+// ---------------------------------------------------------------------------
+
+/// Typed serving configuration — every knob of one serving run in one
+/// value, where they used to be scattered across `serve()` arguments,
+/// `SimService` constructors, and `Router` setters. Built with the
+/// builder methods; [`Self::summary`] renders the effective config as
+/// one line so any run is reproducible from its log.
+#[derive(Clone)]
+pub struct ServeConfig {
+    /// Batching policy (max batch size + batching window — how long
+    /// the head request may wait for same-workload companions; distinct
+    /// from replica *co*-batching, which is the `co_batch` flag).
+    pub batch: BatchPolicy,
+    /// Plan policy the service model is built from
+    /// ([`Self::sim_service`]); informational for hand-built models.
+    pub plan: PlanPolicy,
+    /// Patch count for pipelined (`pp_degree > 1`) plans.
+    pub patches: usize,
+    /// Re-carving policy to install on every pod at run start; `None`
+    /// (the default) inherits whatever the router already has — the
+    /// legacy-shim behaviour.
+    pub recarve: Option<RecarvePolicy>,
+    /// Per-transition re-setup seconds to install on every pod at run
+    /// start; `None` keeps each pod's modeled
+    /// [`crate::cluster::recarve::resetup_cost`].
+    pub recarve_setup: Option<f64>,
+    /// Which pod serves each batch ([`LeastLoaded`] by default).
+    pub dispatch: Arc<dyn DispatchPolicy>,
+    /// Replica co-batching: scatter a closed batch across its carve's
+    /// batch-replica groups (service time of `⌈B/R⌉` per group) instead
+    /// of queueing the whole batch on one group. Off by default (the
+    /// pre-redesign behaviour).
+    pub co_batch: bool,
+    /// Cross-pod machine migration policy ([`RebalancePolicy::Never`]
+    /// by default).
+    pub rebalance: RebalancePolicy,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            batch: BatchPolicy::default(),
+            plan: PlanPolicy::SingleMesh,
+            patches: crate::analysis::DEFAULT_PATCHES,
+            recarve: None,
+            recarve_setup: None,
+            dispatch: Arc::new(LeastLoaded),
+            co_batch: false,
+            rebalance: RebalancePolicy::Never,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Set the batching policy.
+    pub fn batch(mut self, batch: BatchPolicy) -> Self {
+        self.batch = batch;
+        self
+    }
+
+    /// Set the plan policy ([`Self::sim_service`] builds from it).
+    pub fn plan(mut self, plan: PlanPolicy) -> Self {
+        self.plan = plan;
+        self
+    }
+
+    /// Set the pipeline patch count.
+    pub fn patches(mut self, patches: usize) -> Self {
+        assert!(patches > 0, "patches must be >= 1");
+        self.patches = patches;
+        self
+    }
+
+    /// Install a re-carving policy on every pod at run start.
+    pub fn recarve(mut self, policy: RecarvePolicy) -> Self {
+        self.recarve = Some(policy);
+        self
+    }
+
+    /// Pin the per-transition re-setup cost (seconds) on every pod.
+    pub fn recarve_setup(mut self, seconds: f64) -> Self {
+        self.recarve_setup = Some(seconds);
+        self
+    }
+
+    /// Set the dispatch policy.
+    pub fn dispatch(mut self, policy: Arc<dyn DispatchPolicy>) -> Self {
+        self.dispatch = policy;
+        self
+    }
+
+    /// Enable/disable replica co-batching.
+    pub fn co_batch(mut self, on: bool) -> Self {
+        self.co_batch = on;
+        self
+    }
+
+    /// Set the cross-pod re-balancing policy.
+    pub fn rebalance(mut self, policy: RebalancePolicy) -> Self {
+        self.rebalance = policy;
+        self
+    }
+
+    /// Build the timing-mode service model this config describes for one
+    /// pod footprint — the constructor scatter
+    /// (`SimService::{new, auto_plan, with_plan}` + `patches` field
+    /// pokes) behind one call.
+    pub fn sim_service(
+        &self,
+        cluster: ClusterSpec,
+        algo: SpAlgo,
+    ) -> Result<SimService, ParallelSpecError> {
+        let mut svc = match &self.plan {
+            PlanPolicy::SingleMesh => SimService::new(cluster, algo),
+            PlanPolicy::Auto => SimService::auto_plan(cluster, algo),
+            PlanPolicy::Fixed(spec) => SimService::with_plan(cluster, algo, *spec)?,
+        };
+        svc.patches = self.patches;
+        Ok(svc)
+    }
+
+    /// The effective-config line, e.g.
+    /// `serve: batch=4x2s plan=auto patches=4 recarve=hysteresis(15% x 2)
+    /// dispatch=least-loaded co-batch=off rebalance=never` — printed by
+    /// the CLI so a run is reproducible from its log.
+    pub fn summary(&self) -> String {
+        format!(
+            "serve: batch={}x{}s plan={} patches={} recarve={} dispatch={} co-batch={} \
+             rebalance={}",
+            self.batch.max_batch,
+            self.batch.window,
+            self.plan,
+            self.patches,
+            self.recarve
+                .map_or_else(|| "inherit".to_string(), |p| p.to_string()),
+            self.dispatch.name(),
+            if self.co_batch { "on" } else { "off" },
+            self.rebalance,
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ServeState — the named accumulation state of one run
+// ---------------------------------------------------------------------------
+
+/// Mutable accumulation state of one serving run — the six `&mut`
+/// arguments the pre-redesign `serve_batch` closure threaded, as one
+/// named struct the dispatch handler receives.
+#[derive(Default)]
+pub struct ServeState {
+    pub metrics: Metrics,
+    /// (request id, arrival, completion), in completion-event order.
+    pub completions: Vec<(u64, f64, f64)>,
+    /// (request id, reason) for admission- and dispatch-time rejections.
+    pub rejected: Vec<(u64, String)>,
+    /// Plan label served under → request count.
+    pub plan_histogram: std::collections::BTreeMap<String, usize>,
+    /// Fleet-scope machine migrations, in commit order.
+    pub rebalances: Vec<RebalanceEvent>,
+    /// Dispatches whose batch was scattered across replica groups.
+    pub co_batched: usize,
+}
+
+impl ServeState {
+    /// Finalize into a [`ServeReport`], snapshotting the pods' epoch
+    /// logs (the tail of the pre-redesign `serve()`).
+    pub fn into_report(self, router: &Router) -> ServeReport {
+        let mut recarve = RecarveReport::default();
+        for pod in &router.pods {
+            let rc = &pod.recarver;
+            recarve.recarve_count += rc.recarve_count();
+            recarve.drain_time += rc.drain_time();
+            recarve.setup_time += rc.setup_time();
+            for e in rc.epochs() {
+                *recarve.epoch_histogram.entry(e.label()).or_insert(0) += 1;
+                recarve.epochs.push((pod.id, e.clone()));
+            }
+        }
+        ServeReport {
+            metrics: self.metrics,
+            completions: self.completions,
+            rejected: self.rejected,
+            plan_histogram: self.plan_histogram,
+            recarve,
+            rebalances: self.rebalances,
+            co_batched: self.co_batched,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The event loop
+// ---------------------------------------------------------------------------
+
+/// One scheduler event over the virtual clock.
+enum Event {
+    /// A request reaches the coordinator (admission + batching).
+    Arrival(Request),
+    /// The batcher closed a batch at this instant; dispatch it.
+    Dispatch(Batch),
+    /// A dispatched batch's requests finish service.
+    Completion(Completion),
+    /// End of trace: force-close everything still queued.
+    Flush,
+}
+
+/// Heap entry: events process in `(time, seq)` order — seq is the
+/// creation order, so same-instant events are FIFO and the loop is
+/// deterministic (and, with the default config, reproduces the legacy
+/// nested-loop order exactly).
+struct Timed {
+    at: f64,
+    seq: u64,
+    ev: Event,
+}
+
+impl PartialEq for Timed {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl Eq for Timed {}
+impl PartialOrd for Timed {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Timed {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // reversed: BinaryHeap is a max-heap, we want earliest first
+        other
+            .at
+            .total_cmp(&self.at)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Where the scheduler gets cost/plan models from: one shared model
+/// (pods priced identically — the classic path), or a [`FleetModel`]
+/// pricing each pod by its current footprint (required for cross-pod
+/// re-balancing).
+#[derive(Clone, Copy)]
+enum ModelSource<'a> {
+    Shared(&'a dyn ServiceModel),
+    Fleet(&'a dyn FleetModel),
+}
+
+/// A resolved per-pod model (borrowed or fleet-owned).
+enum PodModel<'a> {
+    Shared(&'a dyn ServiceModel),
+    Owned(Arc<dyn ServiceModel>),
+}
+
+impl PodModel<'_> {
+    fn get(&self) -> &dyn ServiceModel {
+        match self {
+            PodModel::Shared(s) => *s,
+            PodModel::Owned(a) => a.as_ref(),
+        }
+    }
+}
+
+impl<'a> ModelSource<'a> {
+    fn for_pod(&self, cluster: &ClusterSpec) -> PodModel<'a> {
+        match self {
+            ModelSource::Shared(s) => PodModel::Shared(*s),
+            ModelSource::Fleet(f) => PodModel::Owned(f.model_for(cluster)),
+        }
+    }
+
+    /// Fleet-wide admission: a shared model speaks for every pod; with
+    /// a fleet source a request is admitted when *any* pod's
+    /// footprint-sized model admits it (footprints diverge after
+    /// re-balancing — a workload only the big pod can serve must not be
+    /// rejected because a small pod cannot). On rejection the first
+    /// pod's reason is reported.
+    fn admit(&self, router: &Router, workload: &Workload) -> Result<(), String> {
+        match self {
+            ModelSource::Shared(s) => s.admit(workload),
+            ModelSource::Fleet(f) => {
+                let mut first_err = None;
+                for p in &router.pods {
+                    match f.model_for(&p.cluster).admit(workload) {
+                        Ok(()) => return Ok(()),
+                        Err(e) => {
+                            first_err.get_or_insert(e);
+                        }
+                    }
+                }
+                Err(first_err.unwrap_or_else(|| "router has no pods".to_string()))
+            }
+        }
+    }
+}
+
+/// One serving run: a [`ServeConfig`], a model source, and the
+/// event-driven scheduler that executes a request trace against a
+/// [`Router`]. Construct with [`Self::new`] (one shared service model)
+/// or [`Self::with_fleet`] (per-footprint models, enables cross-pod
+/// re-balancing), then call [`Self::run`].
+pub struct ServeSession<'a> {
+    config: ServeConfig,
+    source: ModelSource<'a>,
+}
+
+impl<'a> ServeSession<'a> {
+    /// A session pricing every pod with one shared service model.
+    pub fn new(config: ServeConfig, service: &'a dyn ServiceModel) -> Self {
+        Self { config, source: ModelSource::Shared(service) }
+    }
+
+    /// A session pricing each pod by its current footprint — required
+    /// for [`RebalancePolicy::Gain`] (pods change size at runtime).
+    pub fn with_fleet(config: ServeConfig, fleet: &'a dyn FleetModel) -> Self {
+        Self { config, source: ModelSource::Fleet(fleet) }
+    }
+
+    /// Execute `requests` (time-ordered) against `router`. Deterministic
+    /// virtual time; every request ends as exactly one completion or one
+    /// rejection in the report.
+    pub fn run(self, router: &mut Router, requests: Vec<Request>) -> ServeReport {
+        if let Some(policy) = self.config.recarve {
+            match self.config.recarve_setup {
+                Some(s) => router.set_recarve_with_setup(policy, s),
+                None => router.set_recarve(policy),
+            }
+        } else if let Some(s) = self.config.recarve_setup {
+            for p in &mut router.pods {
+                p.recarver.setup_cost = s;
+            }
+        }
+
+        let mut state = ServeState::default();
+        let mut batcher = Batcher::new(self.config.batch.clone());
+        // Fleet-rebalance hysteresis streaks, keyed by the *receiving*
+        // pod (mirroring the per-pod EpochTracker streak): a pod earns
+        // its machine with its own consecutive gainful dispatches, so
+        // two gainful pods cannot pool their streaks and interleaved
+        // traffic to other pods does not reset a pod's progress.
+        let mut fleet_streaks: HashMap<usize, usize> = HashMap::new();
+        let mut heap: BinaryHeap<Timed> = BinaryHeap::new();
+        let mut seq = 0u64;
+        let mut push = |heap: &mut BinaryHeap<Timed>, at: f64, ev: Event| {
+            heap.push(Timed { at, seq, ev });
+            seq += 1;
+        };
+        for r in requests {
+            push(&mut heap, r.arrival, Event::Arrival(r));
+        }
+        push(&mut heap, f64::INFINITY, Event::Flush);
+
+        while let Some(Timed { at, ev, .. }) = heap.pop() {
+            match ev {
+                Event::Arrival(r) => {
+                    if let Err(reason) = self.source.admit(router, &r.workload) {
+                        state.rejected.push((r.id, reason));
+                        continue;
+                    }
+                    batcher.push(r);
+                    // batch-close: sweep synchronously at the arrival
+                    // instant (push-then-sweep, so a request arriving
+                    // exactly at a window deadline joins the closing
+                    // batch), dispatch as queued events
+                    while let Some(batch) = batcher.pop_ready(at) {
+                        push(&mut heap, at, Event::Dispatch(batch));
+                    }
+                }
+                Event::Dispatch(batch) => {
+                    for c in
+                        self.dispatch_batch(router, batch, &mut state, &mut fleet_streaks)
+                    {
+                        push(&mut heap, c.done, Event::Completion(c));
+                    }
+                }
+                Event::Completion(c) => {
+                    state.metrics.observe(&c);
+                    state.completions.push((c.id, c.arrival, c.done));
+                }
+                Event::Flush => {
+                    while let Some(batch) = batcher.pop_any() {
+                        push(&mut heap, at, Event::Dispatch(batch));
+                    }
+                }
+            }
+        }
+        state.into_report(router)
+    }
+
+    /// The dispatch handler: pick a pod, run the fleet re-balancing and
+    /// per-pod re-carving policies, commit the (possibly co-batched)
+    /// service to the pod timeline. Returns one [`Completion`] per
+    /// request (empty when the batch is rejected at dispatch).
+    fn dispatch_batch(
+        &self,
+        router: &mut Router,
+        batch: Batch,
+        state: &mut ServeState,
+        fleet_streaks: &mut HashMap<usize, usize>,
+    ) -> Vec<Completion> {
+        let workload = batch.requests[0].workload.clone();
+        let ready = batch.ready_at();
+        let source = self.source;
+        let est = |pod: usize, b: &Batch| -> f64 {
+            source
+                .for_pod(&router.pods[pod].cluster)
+                .get()
+                .service_time(&b.requests[0].workload, b.size())
+        };
+        let pod = self.config.dispatch.pick(router, &batch, &est);
+
+        // Fleet event: would one more machine pay off here, and is some
+        // other pod idle enough to donate one?
+        if let RebalancePolicy::Gain { threshold, window } = self.config.rebalance {
+            if matches!(self.source, ModelSource::Fleet(_)) {
+                let cur = router.pods[pod].cluster.clone();
+                let grown = cur.resized(cur.machines + 1);
+                let gain = crate::analysis::rebalance_gain(
+                    &cur,
+                    &grown,
+                    router.pods[pod].algo,
+                    &workload.shape,
+                    workload.cfg_evals,
+                    self.config.patches,
+                );
+                let streak = fleet_streaks.entry(pod).or_insert(0);
+                if gain >= threshold {
+                    *streak += 1;
+                } else {
+                    *streak = 0;
+                }
+                if *streak >= window.max(1) {
+                    let donor = router
+                        .pods
+                        .iter()
+                        .filter(|p| {
+                            p.id != pod && p.free_at <= ready && p.cluster.machines >= 2
+                        })
+                        .min_by_key(|p| (Reverse(p.cluster.machines), p.id))
+                        .map(|p| p.id);
+                    if let Some(donor) = donor {
+                        state.rebalances.push(router.rebalance_machine(donor, pod, ready));
+                        fleet_streaks.clear();
+                    }
+                }
+            }
+        }
+
+        let model = self.source.for_pod(&router.pods[pod].cluster);
+        let service = model.get();
+        let preferred = service.plan_spec(&workload);
+        let free_at = router.pods[pod].free_at;
+        // Compute the modeled gain only for policies that read it.
+        let gain = {
+            let rc = &router.pods[pod].recarver;
+            if rc.policy.wants_gain() {
+                match rc.carve() {
+                    Some(from) if Some(from) != preferred => {
+                        service.recarve_gain(&workload, &from)
+                    }
+                    _ => None,
+                }
+            } else {
+                None
+            }
+        };
+        let mut t = router.pods[pod]
+            .recarver
+            .on_dispatch(ready, free_at, preferred, gain);
+        // Service duration under a carve: with co-batching on, the batch
+        // scatters across the carve's replica groups and the makespan is
+        // one group's largest shard; otherwise the whole batch serves on
+        // one group (the pre-redesign behaviour).
+        let dur_under = |carve: Option<&ParallelSpec>| -> f64 {
+            let eff = if self.config.co_batch {
+                carve
+                    .map(|s| s.replica_shards(batch.size())[0])
+                    .unwrap_or(batch.size())
+            } else {
+                batch.size()
+            };
+            service.service_time_under(&workload, eff, carve)
+        };
+        let mut dur = dur_under(t.carve.as_ref());
+        if !dur.is_finite() {
+            // The live carve cannot serve this batch at all (e.g. a
+            // patch granularity larger than the sequence); dispatching
+            // an infinite duration would poison the pod's timeline
+            // forever. If the preferred plan can serve it, the re-carve
+            // is forced by physics, overriding the policy; if nothing
+            // can, the batch is rejected rather than dispatched.
+            let pref_dur = if t.carve == preferred {
+                dur
+            } else {
+                dur_under(preferred.as_ref())
+            };
+            if !pref_dur.is_finite() {
+                for r in &batch.requests {
+                    state.rejected.push((
+                        r.id,
+                        format!(
+                            "no plan can serve workload '{}' on this pod (modeled \
+                             service time is infinite under both the live carve and \
+                             the preferred plan)",
+                            workload.name
+                        ),
+                    ));
+                }
+                return Vec::new();
+            }
+            t = router.pods[pod].recarver.force(ready, free_at, preferred);
+            dur = pref_dur;
+        }
+        if t.recarved && t.setup > 0.0 {
+            router.commit_recarve(pod, ready, t.setup);
+        }
+        if self.config.co_batch
+            && batch.size() > 1
+            && t.carve.is_some_and(|s| s.batch_replicas > 1)
+        {
+            state.co_batched += 1;
+        }
+        if let Some(label) = t
+            .carve
+            .map(|s| s.label())
+            .or_else(|| service.plan_label(&workload))
+        {
+            *state.plan_histogram.entry(label).or_insert(0) += batch.size();
+        }
+        router.pods[pod].recarver.record_served(batch.size());
+        let out = router.dispatch(pod, ready, dur);
+        batch
+            .requests
+            .iter()
+            .map(|r| Completion {
+                id: r.id,
+                workload: workload.name,
+                arrival: r.arrival,
+                done: out.done,
+                pod,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::CostModel;
+    use crate::coordinator::Planner;
+    use crate::workload::Workload;
+
+    struct ConstService(f64);
+    impl CostModel for ConstService {
+        fn service_time(&self, _w: &Workload, batch: usize) -> f64 {
+            self.0 * batch as f64
+        }
+    }
+    impl Planner for ConstService {}
+
+    fn req(id: u64, w: Workload, arrival: f64) -> Request {
+        Request { id, workload: w, arrival, seed: id }
+    }
+
+    #[test]
+    fn config_summary_is_one_reproducible_line() {
+        let cfg = ServeConfig::new()
+            .batch(BatchPolicy { max_batch: 4, window: 2.0 })
+            .plan(PlanPolicy::Auto)
+            .recarve(RecarvePolicy::Hysteresis { threshold: 0.15, window: 2 })
+            .dispatch(Arc::new(EarliestFinish))
+            .co_batch(true)
+            .rebalance(RebalancePolicy::Gain { threshold: 0.1, window: 2 });
+        assert_eq!(
+            cfg.summary(),
+            "serve: batch=4x2s plan=auto patches=4 recarve=hysteresis(15% x 2) \
+             dispatch=earliest-finish co-batch=on rebalance=gain(10% x 2)"
+        );
+        // defaults render the legacy-shim posture
+        let s = ServeConfig::new().summary();
+        assert!(s.contains("plan=single"), "{s}");
+        assert!(s.contains("recarve=inherit"), "{s}");
+        assert!(s.contains("dispatch=least-loaded"), "{s}");
+        assert!(s.contains("co-batch=off"), "{s}");
+        assert!(s.contains("rebalance=never"), "{s}");
+    }
+
+    #[test]
+    fn dispatch_policy_names_round_trip() {
+        for name in ["least-loaded", "earliest-finish"] {
+            assert_eq!(dispatch_policy_from_name(name).unwrap().name(), name);
+        }
+        assert!(dispatch_policy_from_name("random").is_none());
+        assert_eq!(
+            RebalancePolicy::from_name("never", 0.0, 0),
+            Some(RebalancePolicy::Never)
+        );
+        assert_eq!(
+            RebalancePolicy::from_name("gain", 0.2, 3),
+            Some(RebalancePolicy::Gain { threshold: 0.2, window: 3 })
+        );
+        assert!(RebalancePolicy::from_name("sometimes", 0.0, 0).is_none());
+    }
+
+    #[test]
+    fn least_loaded_matches_router_pick() {
+        let mut router = Router::new(2, 2, 2, SpAlgo::SwiftFusion);
+        router.dispatch(0, 0.0, 10.0);
+        let batch = Batch { requests: vec![req(0, Workload::flux_3072(), 0.0)] };
+        let est = |_: usize, _: &Batch| 0.0;
+        assert_eq!(LeastLoaded.pick(&router, &batch, &est), router.pick());
+    }
+
+    #[test]
+    fn earliest_finish_prefers_the_faster_pod() {
+        // pod 0 free now but slow; pod 1 busy briefly but much faster:
+        // earliest-finish picks pod 1, least-loaded picks pod 0.
+        let mut router = Router::new(2, 2, 2, SpAlgo::SwiftFusion);
+        router.dispatch(1, 0.0, 1.0);
+        let batch = Batch { requests: vec![req(0, Workload::flux_3072(), 0.0)] };
+        let est = |pod: usize, _: &Batch| if pod == 0 { 100.0 } else { 2.0 };
+        assert_eq!(EarliestFinish.pick(&router, &batch, &est), 1);
+        assert_eq!(LeastLoaded.pick(&router, &batch, &est), 0);
+        // ties break to the lowest pod id
+        let router2 = Router::new(2, 2, 2, SpAlgo::SwiftFusion);
+        let flat = |_: usize, _: &Batch| 1.0;
+        assert_eq!(EarliestFinish.pick(&router2, &batch, &flat), 0);
+    }
+
+    #[test]
+    fn session_serves_a_trace_like_the_legacy_loop() {
+        let reqs: Vec<Request> =
+            (0..6).map(|i| req(i, Workload::flux_3072(), i as f64)).collect();
+        let mut router = Router::new(2, 2, 1, SpAlgo::SwiftFusion);
+        let report = ServeSession::new(
+            ServeConfig::new().batch(BatchPolicy { max_batch: 2, window: 1.0 }),
+            &ConstService(0.5),
+        )
+        .run(&mut router, reqs);
+        assert_eq!(report.metrics.completed(), 6);
+        assert!(report.rejected.is_empty());
+        assert!(report.rebalances.is_empty());
+        assert_eq!(report.co_batched, 0);
+        // completion events are processed in time order
+        let dones: Vec<f64> = report.completions.iter().map(|c| c.2).collect();
+        assert!(dones.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn deadline_arrival_joins_the_closing_batch() {
+        // The flush-deadline edge: r1 arrives exactly when r0's window
+        // expires. Arrival pushes before the batch-close sweep, so r1
+        // must ride in r0's batch (one dispatch), not strand behind it.
+        let reqs = vec![
+            req(0, Workload::flux_3072(), 0.0),
+            req(1, Workload::flux_3072(), 1.0), // == window deadline of r0
+        ];
+        let mut router = Router::new(2, 2, 1, SpAlgo::SwiftFusion);
+        let report = ServeSession::new(
+            ServeConfig::new().batch(BatchPolicy { max_batch: 8, window: 1.0 }),
+            &ConstService(0.5),
+        )
+        .run(&mut router, reqs);
+        assert_eq!(report.metrics.completed(), 2);
+        let dones: Vec<f64> = report.completions.iter().map(|c| c.2).collect();
+        assert_eq!(dones[0], dones[1], "one shared batch, one completion time");
+        assert_eq!(dones[0], 2.0, "closed at t=1 with 2 requests x 0.5s");
+    }
+
+    #[test]
+    fn recarve_config_installs_on_every_pod() {
+        let mut router = Router::new(2, 2, 2, SpAlgo::SwiftFusion);
+        let cfg = ServeConfig::new()
+            .recarve(RecarvePolicy::Never)
+            .recarve_setup(0.125);
+        ServeSession::new(cfg, &ConstService(0.1)).run(&mut router, Vec::new());
+        for p in &router.pods {
+            assert_eq!(p.recarver.policy, RecarvePolicy::Never);
+            assert_eq!(p.recarver.setup_cost, 0.125);
+        }
+    }
+}

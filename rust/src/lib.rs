@@ -67,7 +67,25 @@
 //! (`--plan auto`) or runs a fixed one
 //! (`--cfg-degree`/`--pp-degree`/`--patches`/`--batch-replicas`),
 //! rejecting requests a plan cannot serve with typed, actionable errors
-//! and reporting a per-plan request histogram from `serve()`.
+//! and reporting a per-plan request histogram from the serving output.
+//!
+//! Serving itself is an **event-driven scheduler**
+//! ([`coordinator::session::ServeSession`]): a typed
+//! [`coordinator::session::ServeConfig`] (batch policy, plan policy,
+//! re-carving, dispatch, patches — one reproducible value, printed as
+//! one `serve: …` line) drives arrival → batch-close → dispatch →
+//! recarve-commit → completion events over the virtual clock. Cost and
+//! planning are split traits ([`coordinator::CostModel`] /
+//! [`coordinator::Planner`], composed back as
+//! [`coordinator::ServiceModel`] by a blanket impl), dispatch is a
+//! pluggable [`coordinator::session::DispatchPolicy`] (least-loaded
+//! default, plan-aware earliest-finish), and the scheduler's first two
+//! new clients are **replica co-batching** (`--co-batch`: a closed
+//! batch scatters across its carve's batch-replica groups) and
+//! **cross-pod re-balancing** (`--rebalance gain`: a fleet-level event
+//! migrating an idle machine between pods when the workload mix
+//! shifts, [`analysis::rebalance_gain`]-gated). The legacy `serve()`
+//! entry point remains as a bit-for-bit shim over the session.
 //!
 //! A carve is no longer frozen for a pod's lifetime: serving is
 //! *epoch-aware*. Each pod models its life as a sequence of plan epochs
@@ -79,8 +97,11 @@
 //! drain its in-flight groups, pay a modeled re-setup cost, and rebuild
 //! the carved sub-meshes for the new plan. No request ever spans two
 //! carves, numerics stay oracle-exact across the boundary
-//! (`rust/tests/sp_property.rs`), and `serve()` reports the epoch log,
-//! drain/setup totals, and a per-carve plan histogram.
+//! (`rust/tests/sp_property.rs`), and the serving report carries the
+//! epoch log, drain/setup totals, and a per-carve plan histogram.
+//! Epochs extend to *fleet* scope under cross-pod re-balancing:
+//! migrating a machine resizes two pods at once, both re-admitting
+//! footprint-sized carves behind the migration barrier.
 //!
 //! Numeric validation of all of this is hermetic: `ExecMode::HostNumeric`
 //! backs the tile contract with in-process Algorithm-2 kernels

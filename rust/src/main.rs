@@ -23,8 +23,11 @@ use swiftfusion::cluster::recarve::RecarvePolicy;
 use swiftfusion::comm::Buf;
 use swiftfusion::config::{AttnShape, ClusterSpec, ParallelSpec, SpDegrees};
 use swiftfusion::coordinator::batcher::BatchPolicy;
-use swiftfusion::coordinator::engine::{serve, SimService};
+use swiftfusion::coordinator::engine::{PlanPolicy, SimService};
 use swiftfusion::coordinator::router::Router;
+use swiftfusion::coordinator::session::{
+    dispatch_policy_from_name, RebalancePolicy, ServeConfig, ServeSession, SimFleet,
+};
 use swiftfusion::runtime::Runtime;
 use swiftfusion::sp::{SpAlgo, SpParams};
 use swiftfusion::tensor::Tensor;
@@ -66,7 +69,7 @@ USAGE: swiftfusion <info|validate|bench-layer|serve|volumes|trace> [flags]
   validate  --config small4             numeric check: all SP algos vs oracle
   bench-layer --machines N --gpus M --workload NAME [--algo NAME] [plan flags]
   serve     --machines N --gpus M --pods K --requests R --rate Q [--algo NAME]
-            [plan flags]
+            [plan flags] [re-carving flags] [scheduler flags]
   volumes   --machines N --gpus M --heads H
   trace     --machines N --gpus M --workload NAME [--algo NAME] [--out FILE]
             (per-rank timeline of one attention layer, chrome://tracing JSON)
@@ -102,6 +105,29 @@ Dynamic re-carving flags (serve):
                              per step (default 0.15 = 15%)
   --recarve-window N         hysteresis: consecutive gainful dispatches
                              required before re-carving (default 2)
+
+Scheduler flags (serve): every run prints its effective config as one
+`serve: batch=... plan=... recarve=... dispatch=...` line, so a run is
+reproducible from its log.
+  --dispatch POLICY          which pod serves each batch: least-loaded
+                             (default; earliest-free pod) or
+                             earliest-finish (minimize predicted
+                             completion — plan-aware, useful once pods
+                             have different sizes)
+  --co-batch                 replica co-batching: scatter a closed batch
+                             across its carve's batch-replica groups
+                             (each group serves ceil(B/R) requests
+                             concurrently) instead of queueing the whole
+                             batch on one group
+  --rebalance POLICY         cross-pod machine migration: never (default)
+                             or gain (migrate an idle machine toward a
+                             pod whose traffic the cost model predicts
+                             gains from one more machine; needs
+                             --plan auto and >= 2 pods)
+  --rebalance-threshold F    gain: minimum predicted fractional gain
+                             (default 0.15 = 15%)
+  --rebalance-window N       gain: consecutive gainful dispatches before
+                             migrating (default 2)
 ";
 
 fn workload_by_name(name: &str) -> Result<Workload> {
@@ -122,11 +148,41 @@ fn effective_plan(args: &Args) -> Result<&str> {
     } else {
         "single"
     };
-    Ok(args.str_or("plan", default_plan))
+    Ok(args.enum_or("plan", default_plan, &["single", "auto", "fixed"])?)
 }
 
-/// Build the service model the plan flags ask for. `heads` sets the gcd
-/// placement rule for fixed plans (24 for the whole paper suite).
+/// The [`PlanPolicy`] the plan flags resolve to. `heads` sets the gcd
+/// placement rule for fixed plans (24 for the whole paper suite);
+/// `total_gpus` is the pod size the fixed degrees must tile.
+fn plan_policy_for(args: &Args, total_gpus: usize, heads: usize) -> Result<PlanPolicy> {
+    match effective_plan(args)? {
+        "single" => Ok(PlanPolicy::SingleMesh),
+        "auto" => Ok(PlanPolicy::Auto),
+        "fixed" => {
+            let cfg_degree = args.usize_or("cfg-degree", 1)?;
+            let pp_degree = args.usize_or("pp-degree", 1)?;
+            let reps = args.usize_or("batch-replicas", 1)?;
+            let groups = cfg_degree * pp_degree * reps;
+            anyhow::ensure!(
+                groups > 0 && total_gpus % groups == 0,
+                "cfg-degree x pp-degree x batch-replicas ({groups}) must divide the \
+                 pod's {total_gpus} GPUs"
+            );
+            Ok(PlanPolicy::Fixed(ParallelSpec::with_gcd_placement_pp(
+                cfg_degree,
+                pp_degree,
+                reps,
+                total_gpus / groups,
+                heads,
+            )))
+        }
+        other => unreachable!("--plan '{other}' already validated by enum_or"),
+    }
+}
+
+/// Fold the plan flags into a [`ServeConfig`] and build the service
+/// model it describes. `heads` sets the gcd placement rule for fixed
+/// plans (24 for the whole paper suite).
 fn service_for(
     args: &Args,
     cluster: ClusterSpec,
@@ -135,33 +191,10 @@ fn service_for(
 ) -> Result<SimService> {
     let patches = args.usize_or("patches", swiftfusion::analysis::DEFAULT_PATCHES)?;
     anyhow::ensure!(patches > 0, "--patches must be >= 1");
-    let mut svc = match effective_plan(args)? {
-        "single" => SimService::new(cluster, algo),
-        "auto" => SimService::auto_plan(cluster, algo),
-        "fixed" => {
-            let cfg_degree = args.usize_or("cfg-degree", 1)?;
-            let pp_degree = args.usize_or("pp-degree", 1)?;
-            let reps = args.usize_or("batch-replicas", 1)?;
-            let total = cluster.total_gpus();
-            let groups = cfg_degree * pp_degree * reps;
-            anyhow::ensure!(
-                groups > 0 && total % groups == 0,
-                "cfg-degree x pp-degree x batch-replicas ({groups}) must divide the \
-                 pod's {total} GPUs"
-            );
-            let spec = ParallelSpec::with_gcd_placement_pp(
-                cfg_degree,
-                pp_degree,
-                reps,
-                total / groups,
-                heads,
-            );
-            SimService::with_plan(cluster, algo, spec)?
-        }
-        other => bail!("unknown --plan '{other}' (expected single, auto, or fixed)"),
-    };
-    svc.patches = patches;
-    Ok(svc)
+    let config = ServeConfig::new()
+        .plan(plan_policy_for(args, cluster.total_gpus(), heads)?)
+        .patches(patches);
+    Ok(config.sim_service(cluster, algo)?)
 }
 
 fn cmd_info() -> Result<()> {
@@ -281,20 +314,36 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let threshold = args.f64_or("recarve-threshold", 0.15)?;
     let window = args.usize_or("recarve-window", 2)?;
     anyhow::ensure!(window > 0, "--recarve-window must be >= 1");
-    let recarve_name = args.str_or("recarve", "free");
+    let recarve_name =
+        args.enum_or("recarve", "free", &["free", "never", "on-idle", "hysteresis"])?;
     let recarve = RecarvePolicy::from_name(recarve_name, threshold, window)
-        .ok_or_else(|| {
-            anyhow::anyhow!(
-                "unknown --recarve '{recarve_name}' (expected free, never, on-idle, \
-                 or hysteresis)"
-            )
-        })?;
+        .expect("name validated by enum_or");
+    let dispatch_name =
+        args.enum_or("dispatch", "least-loaded", &["least-loaded", "earliest-finish"])?;
+    let dispatch =
+        dispatch_policy_from_name(dispatch_name).expect("name validated by enum_or");
+    let co_batch = args.bool_or("co-batch", false)?;
+    let rb_threshold = args.f64_or("rebalance-threshold", 0.15)?;
+    let rb_window = args.usize_or("rebalance-window", 2)?;
+    anyhow::ensure!(rb_window > 0, "--rebalance-window must be >= 1");
+    let rebalance_name = args.enum_or("rebalance", "never", &["never", "gain"])?;
+    let rebalance = RebalancePolicy::from_name(rebalance_name, rb_threshold, rb_window)
+        .expect("name validated by enum_or");
+    let patches = args.usize_or("patches", swiftfusion::analysis::DEFAULT_PATCHES)?;
+    anyhow::ensure!(patches > 0, "--patches must be >= 1");
 
     let mut router = Router::new(n, m, pods, algo);
-    router.set_recarve(recarve);
     // every paper-suite workload has 24 heads
-    let svc = service_for(args, router.pods[0].cluster.clone(), algo, 24)?;
+    let plan = plan_policy_for(args, router.pods[0].cluster.total_gpus(), 24)?;
     let plan_label = effective_plan(args)?.to_string();
+    let config = ServeConfig::new()
+        .batch(BatchPolicy { max_batch, window: 30.0 })
+        .plan(plan)
+        .patches(patches)
+        .recarve(recarve)
+        .dispatch(dispatch)
+        .co_batch(co_batch)
+        .rebalance(rebalance);
     // Only auto planning ever changes a pod's preferred plan; under
     // single/fixed the preferred spec is constant, so any re-carving
     // policy is inert. Say so instead of letting a zero-recarve run
@@ -307,18 +356,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
     }
     let reqs = TraceGen::new(42, rate, Workload::paper_suite()).take(nreq);
-    let report = serve(
-        &mut router,
-        BatchPolicy { max_batch, window: 30.0 },
-        reqs,
-        &svc,
-    );
-    let mut metrics = report.metrics;
     println!(
-        "serving {nreq} requests on {n}x{m} ({pods} pod(s), {}, plan {plan_label}, \
-         recarve {recarve})",
+        "serving {nreq} requests on {n}x{m} ({pods} pod(s), {})",
         algo.name(),
     );
+    // the effective-config line: the whole run is reproducible from it
+    println!("{}", config.summary());
+    let report = if rebalance != RebalancePolicy::Never {
+        // pods change size at runtime: price each by its live footprint
+        anyhow::ensure!(
+            plan_label == "auto",
+            "--rebalance gain needs --plan auto (the fleet re-plans each pod \
+             for its new footprint)"
+        );
+        anyhow::ensure!(pods >= 2, "--rebalance gain needs at least 2 pods");
+        let fleet = SimFleet::auto(algo, patches);
+        ServeSession::with_fleet(config, &fleet).run(&mut router, reqs)
+    } else {
+        let svc = config.sim_service(router.pods[0].cluster.clone(), algo)?;
+        ServeSession::new(config, &svc).run(&mut router, reqs)
+    };
+    let mut metrics = report.metrics;
     if !report.rejected.is_empty() {
         println!("rejected {} request(s):", report.rejected.len());
         for (id, reason) in &report.rejected {
@@ -329,6 +387,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!("plans served under (recarve policy: {recarve}):");
         for (label, count) in &report.plan_histogram {
             println!("  {label:<28} {count:>5} request(s)");
+        }
+    }
+    if report.co_batched > 0 {
+        println!("co-batched dispatches: {}", report.co_batched);
+    }
+    if !report.rebalances.is_empty() {
+        println!("cross-pod re-balances: {}", report.rebalances.len());
+        for ev in &report.rebalances {
+            println!(
+                "  t={:>10}: machine pod {} -> pod {} (now {} / {} machine(s))",
+                fmt_time(ev.at),
+                ev.from_pod,
+                ev.to_pod,
+                ev.from_machines,
+                ev.to_machines
+            );
         }
     }
     let rc = &report.recarve;

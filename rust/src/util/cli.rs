@@ -15,6 +15,8 @@ pub struct Args {
 pub enum CliError {
     Missing(String),
     Invalid(String, String, &'static str),
+    /// Value outside a closed choice set (see [`Args::enum_or`]).
+    InvalidChoice(String, String, &'static [&'static str]),
 }
 
 impl std::fmt::Display for CliError {
@@ -24,6 +26,11 @@ impl std::fmt::Display for CliError {
             CliError::Invalid(k, v, want) => {
                 write!(f, "argument --{k} has invalid value '{v}': expected {want}")
             }
+            CliError::InvalidChoice(k, v, allowed) => write!(
+                f,
+                "argument --{k} has invalid value '{v}': expected one of {}",
+                allowed.join(", ")
+            ),
         }
     }
 }
@@ -107,6 +114,23 @@ impl Args {
     pub fn required(&self, key: &str) -> Result<&str, CliError> {
         self.get(key).ok_or_else(|| CliError::Missing(key.into()))
     }
+
+    /// A flag constrained to a closed set of names (e.g.
+    /// `--plan single|auto|fixed`): returns `default` when absent, the
+    /// given value when it is one of `allowed`, and an actionable
+    /// [`CliError::InvalidChoice`] listing the options otherwise.
+    pub fn enum_or<'a>(
+        &'a self,
+        key: &str,
+        default: &'a str,
+        allowed: &'static [&'static str],
+    ) -> Result<&'a str, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) if allowed.iter().any(|a| *a == v) => Ok(v),
+            Some(v) => Err(CliError::InvalidChoice(key.into(), v.into(), allowed)),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -146,6 +170,17 @@ mod tests {
         assert!(a.usize_or("n", 0).is_err());
         assert!(a.f64_or("n", 0.0).is_err());
         assert!(a.bool_or("n", false).is_err());
+    }
+
+    #[test]
+    fn enum_or_validates_against_the_choice_set() {
+        let a = parse("--plan auto");
+        assert_eq!(a.enum_or("plan", "single", &["single", "auto", "fixed"]).unwrap(), "auto");
+        assert_eq!(a.enum_or("recarve", "free", &["free", "never"]).unwrap(), "free");
+        let bad = parse("--plan sometimes");
+        let err = bad.enum_or("plan", "single", &["single", "auto", "fixed"]).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("sometimes") && msg.contains("single, auto, fixed"), "{msg}");
     }
 
     #[test]

@@ -1,0 +1,158 @@
+//! Compile-time pins of the coordinator's public API surface.
+//!
+//! Each binding below coerces a public function/method to an explicit
+//! function-pointer type: if a signature drifts (argument added, return
+//! type changed, trait method moved), this test stops *compiling* —
+//! turning silent API breakage into a reviewed, deliberate change. The
+//! trait-bound assertions pin the `CostModel + Planner = ServiceModel`
+//! composition (including the blanket impl for plan-agnostic models)
+//! and object safety of every scheduler trait.
+
+use std::sync::Arc;
+
+use swiftfusion::config::{ClusterSpec, ParallelSpec, ParallelSpecError};
+use swiftfusion::coordinator::batcher::{Batch, BatchPolicy};
+use swiftfusion::coordinator::engine::{serve, ServeReport, SimService};
+use swiftfusion::coordinator::metrics::Completion;
+use swiftfusion::coordinator::router::{DispatchOutcome, RebalanceEvent, Router};
+use swiftfusion::coordinator::session::{
+    dispatch_policy_from_name, DispatchPolicy, EarliestFinish, FleetModel, LeastLoaded,
+    RebalancePolicy, ServeConfig, ServeSession, ServeState, SimFleet,
+};
+use swiftfusion::coordinator::{CostModel, Planner, ServiceModel};
+use swiftfusion::sp::SpAlgo;
+use swiftfusion::workload::{Request, Workload};
+
+/// The legacy entry point: its exact signature is frozen — it is the
+/// compatibility shim the redesign promised to keep.
+const _SERVE: fn(&mut Router, BatchPolicy, Vec<Request>, &dyn ServiceModel) -> ServeReport =
+    serve;
+
+/// Router surface.
+const _DISPATCH: fn(&mut Router, usize, f64, f64) -> DispatchOutcome = Router::dispatch;
+const _REBALANCE: fn(&mut Router, usize, usize, f64) -> RebalanceEvent =
+    Router::rebalance_machine;
+const _PICK: fn(&Router) -> usize = Router::pick;
+
+/// SimService constructors.
+const _SIM_NEW: fn(ClusterSpec, SpAlgo) -> SimService = SimService::new;
+const _SIM_AUTO: fn(ClusterSpec, SpAlgo) -> SimService = SimService::auto_plan;
+const _SIM_PLAN: fn(ClusterSpec, SpAlgo, ParallelSpec) -> Result<SimService, ParallelSpecError> =
+    SimService::with_plan;
+
+#[test]
+fn session_api_signatures_are_pinned() {
+    // ServeSession construction + run (instantiated at a concrete
+    // lifetime so the fn items coerce to pointers).
+    let new: fn(ServeConfig, &'static dyn ServiceModel) -> ServeSession<'static> =
+        ServeSession::new;
+    let with_fleet: fn(ServeConfig, &'static dyn FleetModel) -> ServeSession<'static> =
+        ServeSession::with_fleet;
+    let run: fn(ServeSession<'static>, &mut Router, Vec<Request>) -> ServeReport =
+        ServeSession::run;
+    let _ = (new, with_fleet, run);
+
+    // ServeConfig builder methods.
+    let b: fn(ServeConfig, BatchPolicy) -> ServeConfig = ServeConfig::batch;
+    let p: fn(ServeConfig, usize) -> ServeConfig = ServeConfig::patches;
+    let d: fn(ServeConfig, Arc<dyn DispatchPolicy>) -> ServeConfig = ServeConfig::dispatch;
+    let c: fn(ServeConfig, bool) -> ServeConfig = ServeConfig::co_batch;
+    let r: fn(ServeConfig, RebalancePolicy) -> ServeConfig = ServeConfig::rebalance;
+    let s: fn(&ServeConfig) -> String = ServeConfig::summary;
+    let m: fn(&ServeConfig, ClusterSpec, SpAlgo) -> Result<SimService, ParallelSpecError> =
+        ServeConfig::sim_service;
+    let _ = (b, p, d, c, r, s, m);
+
+    let parse: fn(&str) -> Option<Arc<dyn DispatchPolicy>> = dispatch_policy_from_name;
+    let _ = parse;
+}
+
+/// The split traits compose back into `ServiceModel` via the blanket
+/// impl — for concrete models, trait objects, and plan-agnostic models
+/// that only implement `CostModel` plus an empty `Planner`.
+fn is_service_model<T: ServiceModel + ?Sized>() {}
+fn is_dispatch_policy<T: DispatchPolicy>() {}
+fn is_fleet_model<T: FleetModel>() {}
+
+#[test]
+fn trait_composition_is_pinned() {
+    is_service_model::<SimService>();
+    is_service_model::<dyn ServiceModel>();
+    is_dispatch_policy::<LeastLoaded>();
+    is_dispatch_policy::<EarliestFinish>();
+    is_fleet_model::<SimFleet>();
+
+    struct OnlyCost;
+    impl CostModel for OnlyCost {
+        fn service_time(&self, _w: &Workload, batch: usize) -> f64 {
+            batch as f64
+        }
+    }
+    impl Planner for OnlyCost {}
+    is_service_model::<OnlyCost>();
+}
+
+/// Method signatures of the two trait halves, pinned through their
+/// object types (this also proves both traits stay object-safe).
+fn pin_cost_model(m: &dyn CostModel, w: &Workload, carve: Option<&ParallelSpec>) -> (f64, f64) {
+    (m.service_time(w, 2), m.service_time_under(w, 2, carve))
+}
+
+#[allow(clippy::type_complexity)]
+fn pin_planner(
+    p: &dyn Planner,
+    w: &Workload,
+    from: &ParallelSpec,
+) -> (Result<(), String>, Option<String>, Option<ParallelSpec>, Option<f64>) {
+    (p.admit(w), p.plan_label(w), p.plan_spec(w), p.recarve_gain(w, from))
+}
+
+#[test]
+fn trait_method_signatures_are_pinned() {
+    let svc = SimService::auto_plan(ClusterSpec::new(2, 2), SpAlgo::SwiftFusion);
+    let w = Workload::flux_3072();
+    let spec = ParallelSpec::single(&ClusterSpec::new(2, 2), w.shape.h);
+    let (t, t_under) = pin_cost_model(&svc, &w, Some(&spec));
+    assert!(t.is_finite() && t > 0.0);
+    assert!(t_under > 0.0 || t_under.is_infinite());
+    let (admit, label, plan, gain) = pin_planner(&svc, &w, &spec);
+    assert!(admit.is_ok());
+    assert!(label.is_some() && plan.is_some());
+    let _ = gain;
+}
+
+/// Public data-shape pins: constructing these structs field-by-field
+/// fails to compile if a field is renamed, retyped, or removed.
+#[test]
+fn report_and_event_shapes_are_pinned() {
+    let out = DispatchOutcome { start: 1.0, done: 2.0 };
+    assert!(out.done >= out.start);
+
+    let c = Completion { id: 7, workload: "flux-3072", arrival: 0.5, done: 2.5, pod: 0 };
+    assert_eq!(c.latency(), 2.0);
+
+    let ev = RebalanceEvent {
+        at: 3.0,
+        from_pod: 1,
+        to_pod: 0,
+        from_machines: 1,
+        to_machines: 3,
+    };
+    assert_eq!(ev.from_machines + ev.to_machines, 4);
+
+    let state = ServeState::default();
+    let _: &Vec<(u64, f64, f64)> = &state.completions;
+    let _: &Vec<(u64, String)> = &state.rejected;
+    let _: &Vec<RebalanceEvent> = &state.rebalances;
+    assert_eq!(state.co_batched, 0);
+
+    let batch = Batch {
+        requests: vec![Request {
+            id: 0,
+            workload: Workload::flux_3072(),
+            arrival: 0.0,
+            seed: 0,
+        }],
+    };
+    assert_eq!(batch.size(), 1);
+}

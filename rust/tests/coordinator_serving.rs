@@ -5,7 +5,7 @@
 
 use swiftfusion::coordinator::batcher::BatchPolicy;
 use swiftfusion::coordinator::engine::{serve, SimService};
-use swiftfusion::coordinator::ServiceModel;
+use swiftfusion::coordinator::{CostModel, Planner};
 use swiftfusion::coordinator::router::Router;
 use swiftfusion::sp::SpAlgo;
 use swiftfusion::workload::{TraceGen, Workload};
@@ -124,7 +124,7 @@ struct FlakyService {
     base: f64,
 }
 
-impl ServiceModel for FlakyService {
+impl CostModel for FlakyService {
     fn service_time(&self, _w: &Workload, batch: usize) -> f64 {
         let n = self
             .counter
@@ -133,6 +133,8 @@ impl ServiceModel for FlakyService {
         self.base * batch as f64 * straggle
     }
 }
+
+impl Planner for FlakyService {}
 
 #[test]
 fn stragglers_delay_but_never_drop_requests() {
@@ -170,11 +172,12 @@ fn burst_of_identical_arrivals_is_work_conserving() {
     // 64/batch * service (no pod idles while work is queued).
     let mut router = Router::new(4, 2, 4, SpAlgo::SwiftFusion);
     struct Const;
-    impl ServiceModel for Const {
+    impl CostModel for Const {
         fn service_time(&self, _w: &Workload, _b: usize) -> f64 {
             1.0
         }
     }
+    impl Planner for Const {}
     let reqs: Vec<_> = (0..64)
         .map(|i| swiftfusion::workload::Request {
             id: i,

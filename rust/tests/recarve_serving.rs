@@ -13,7 +13,7 @@ use swiftfusion::config::{ClusterSpec, ParallelSpec, SpDegrees};
 use swiftfusion::coordinator::batcher::BatchPolicy;
 use swiftfusion::coordinator::engine::{serve, ServeReport, SimService};
 use swiftfusion::coordinator::router::Router;
-use swiftfusion::coordinator::ServiceModel;
+use swiftfusion::coordinator::{CostModel, Planner};
 use swiftfusion::sp::SpAlgo;
 use swiftfusion::util::json::to_string;
 use swiftfusion::workload::{Request, TraceGen, Workload};
@@ -70,7 +70,7 @@ impl StubService {
     }
 }
 
-impl ServiceModel for StubService {
+impl CostModel for StubService {
     fn service_time(&self, _w: &Workload, batch: usize) -> f64 {
         0.5 * batch as f64
     }
@@ -87,7 +87,9 @@ impl ServiceModel for StubService {
             2.0 * batch as f64
         }
     }
+}
 
+impl Planner for StubService {
     fn plan_spec(&self, w: &Workload) -> Option<ParallelSpec> {
         Some(Self::spec_for(w))
     }

@@ -1,0 +1,358 @@
+//! Integration regressions for the `ServeSession` scheduler redesign:
+//!
+//! * the legacy `serve()` entry point is a thin shim over `ServeSession`
+//!   and must reproduce it **bit-for-bit** on the bimodal re-carving
+//!   trace (golden `ServeReport::to_json` parity);
+//! * replica co-batching: replica groups serve one shared batch —
+//!   throughput up, per-request latency bounded (exact arithmetic under
+//!   a scripted model, and a real `SimService` burst);
+//! * cross-pod re-balancing: on a drifting pod-mix trace, migrating an
+//!   idle machine toward the video pod beats the frozen 2+2 fleet;
+//! * the batcher flush-deadline edge at the serving-loop level.
+
+use std::sync::Arc;
+
+use swiftfusion::cluster::recarve::RecarvePolicy;
+use swiftfusion::config::{ParallelSpec, SpDegrees};
+use swiftfusion::coordinator::batcher::BatchPolicy;
+use swiftfusion::coordinator::engine::{serve, PlanPolicy, ServeReport, SimService};
+use swiftfusion::coordinator::router::Router;
+use swiftfusion::coordinator::session::{
+    EarliestFinish, RebalancePolicy, ServeConfig, ServeSession, SimFleet,
+};
+use swiftfusion::coordinator::{CostModel, Planner};
+use swiftfusion::sp::SpAlgo;
+use swiftfusion::util::json::to_string;
+use swiftfusion::workload::{bimodal_trace, Request, Workload};
+
+/// The recarve-bench workload pair, shrunk (2 layers × 2 steps) so the
+/// timing simulations stay fast — same shapes the engine unit tests use.
+fn short_workload() -> Workload {
+    let mut w = Workload::short_image_4k();
+    w.layers = 2;
+    w.steps = 2;
+    w
+}
+
+fn long_workload() -> Workload {
+    let mut w = Workload::cfg_video_96k();
+    w.layers = 2;
+    w.steps = 2;
+    w
+}
+
+// ---------------------------------------------------------------------------
+// Golden parity: legacy serve() shim vs ServeSession
+// ---------------------------------------------------------------------------
+
+/// Legacy entry (router setters + `serve()`) vs the new API
+/// (`ServeConfig` + `ServeSession`) on the bimodal re-carving trace:
+/// identical completions, bit-identical horizon, and byte-identical
+/// `to_json` — the redesign may not perturb a single result.
+#[test]
+fn serve_session_matches_legacy_serve_bit_for_bit() {
+    let trace = || bimodal_trace(&short_workload(), &long_workload(), 3, 6);
+    let policy = RecarvePolicy::Hysteresis { threshold: 0.05, window: 2 };
+    let batch = BatchPolicy { max_batch: 1, window: 0.0 };
+
+    let legacy: ServeReport = {
+        let mut router = Router::new(4, 8, 1, SpAlgo::SwiftFusion);
+        router.set_recarve_with_setup(policy, 0.01);
+        let svc = SimService::auto_plan(router.pods[0].cluster.clone(), SpAlgo::SwiftFusion);
+        serve(&mut router, batch.clone(), trace(), &svc)
+    };
+    let session: ServeReport = {
+        let mut router = Router::new(4, 8, 1, SpAlgo::SwiftFusion);
+        let svc = SimService::auto_plan(router.pods[0].cluster.clone(), SpAlgo::SwiftFusion);
+        let config = ServeConfig::new()
+            .batch(batch.clone())
+            .plan(PlanPolicy::Auto)
+            .recarve(policy)
+            .recarve_setup(0.01);
+        ServeSession::new(config, &svc).run(&mut router, trace())
+    };
+
+    assert_eq!(legacy.completions, session.completions, "bit-for-bit completions");
+    assert_eq!(
+        legacy.metrics.horizon.to_bits(),
+        session.metrics.horizon.to_bits(),
+        "bit-for-bit horizon"
+    );
+    assert_eq!(legacy.rejected, session.rejected);
+    assert_eq!(legacy.plan_histogram, session.plan_histogram);
+    assert_eq!(legacy.recarve.recarve_count, session.recarve.recarve_count);
+    assert_eq!(
+        to_string(&legacy.to_json()),
+        to_string(&session.to_json()),
+        "byte-identical serialized reports"
+    );
+    // the adaptive run actually exercised the epoch machinery
+    assert!(legacy.recarve.recarve_count >= 1);
+    // and neither new capability leaked into a default-config run
+    assert!(legacy.rebalances.is_empty() && session.rebalances.is_empty());
+    assert_eq!((legacy.co_batched, session.co_batched), (0, 0));
+    assert!(!to_string(&session.to_json()).contains("rebalance\":["));
+    assert!(!to_string(&session.to_json()).contains("co_batched"));
+}
+
+/// The one deliberate observable change of the shim: completions are
+/// recorded in completion-time order. On multiple pods a later dispatch
+/// can finish first — the report must order by completion, not
+/// dispatch, and still account every request exactly once.
+#[test]
+fn multi_pod_completions_are_in_completion_time_order() {
+    struct PerWorkload;
+    impl CostModel for PerWorkload {
+        fn service_time(&self, w: &Workload, _b: usize) -> f64 {
+            // videos take far longer than images
+            if w.name.starts_with("cfg-video") { 10.0 } else { 1.0 }
+        }
+    }
+    impl Planner for PerWorkload {}
+    // video dispatched first (pod 0), image right after (pod 1): the
+    // image completes first and must lead the completions vec
+    let reqs = vec![
+        Request { id: 0, workload: long_workload(), arrival: 0.0, seed: 0 },
+        Request { id: 1, workload: short_workload(), arrival: 0.1, seed: 1 },
+    ];
+    let mut router = Router::new(2, 2, 2, SpAlgo::SwiftFusion);
+    let report = serve(
+        &mut router,
+        BatchPolicy { max_batch: 1, window: 0.0 },
+        reqs,
+        &PerWorkload,
+    );
+    assert_eq!(report.metrics.completed(), 2);
+    let ids: Vec<u64> = report.completions.iter().map(|c| c.0).collect();
+    assert_eq!(ids, vec![1, 0], "image (done 1.1) precedes video (done 10.0)");
+    let dones: Vec<f64> = report.completions.iter().map(|c| c.2).collect();
+    assert!(dones.windows(2).all(|w| w[0] <= w[1]));
+}
+
+// ---------------------------------------------------------------------------
+// Replica co-batching
+// ---------------------------------------------------------------------------
+
+/// Scripted model with hand-computable times: prefers a 4-replica carve
+/// and costs `1 + batch` seconds per dispatch.
+struct RepService;
+
+impl RepService {
+    fn spec() -> ParallelSpec {
+        // cfg1 x pp1 x rep4 x U8R1 on the 4x8 testbed
+        ParallelSpec::new(1, 4, SpDegrees::new(8, 1))
+    }
+}
+
+impl CostModel for RepService {
+    fn service_time(&self, _w: &Workload, batch: usize) -> f64 {
+        1.0 + batch as f64
+    }
+}
+
+impl Planner for RepService {
+    fn plan_spec(&self, _w: &Workload) -> Option<ParallelSpec> {
+        Some(Self::spec())
+    }
+}
+
+fn burst(n: usize) -> Vec<Request> {
+    (0..n)
+        .map(|i| Request {
+            id: i as u64,
+            workload: short_workload(),
+            arrival: i as f64 * 0.1,
+            seed: i as u64,
+        })
+        .collect()
+}
+
+/// The co-batching arithmetic, exactly: a batch of 8 on a 4-replica
+/// carve scatters into shards of 2, so the dispatch costs `1 + 2`
+/// instead of `1 + 8` seconds — throughput up, every request's latency
+/// bounded by its non-co-batched latency.
+#[test]
+fn co_batching_scatters_a_batch_across_replica_groups() {
+    let run = |co_batch: bool| {
+        let mut router = Router::new(4, 8, 1, SpAlgo::SwiftFusion);
+        let config = ServeConfig::new()
+            .batch(BatchPolicy { max_batch: 8, window: 1.0 })
+            .co_batch(co_batch);
+        ServeSession::new(config, &RepService).run(&mut router, burst(8))
+    };
+    let off = run(false);
+    let on = run(true);
+    assert_eq!(off.metrics.completed(), 8);
+    assert_eq!(on.metrics.completed(), 8);
+    // one full batch closes at t = 0.7 in both runs
+    assert_eq!(off.co_batched, 0);
+    assert_eq!(on.co_batched, 1);
+    assert_eq!(off.metrics.horizon, 0.7 + 9.0, "whole batch on one group");
+    assert_eq!(on.metrics.horizon, 0.7 + 3.0, "shards of 2 across 4 groups");
+    // per-request latency bounded: co-batching never makes a request slower
+    for ((id_on, arr_on, done_on), (id_off, arr_off, done_off)) in
+        on.completions.iter().zip(off.completions.iter())
+    {
+        assert_eq!((id_on, arr_on), (id_off, arr_off));
+        assert!(done_on - arr_on <= done_off - arr_off + 1e-12);
+    }
+    // observability: the count serializes only when the feature fired
+    assert!(to_string(&on.to_json()).contains("\"co_batched\":1"));
+    assert!(!to_string(&off.to_json()).contains("co_batched"));
+}
+
+/// Same claim through the real timing model: an auto-planned short-image
+/// burst lands on a replica carve (`rep4` on the 4x8 testbed), and
+/// co-batching the closed batches across those replica groups finishes
+/// the burst sooner than queueing each batch on one group.
+#[test]
+fn co_batched_short_image_burst_beats_the_pr3_baseline() {
+    let run = |co_batch: bool| {
+        let mut router = Router::new(4, 8, 1, SpAlgo::SwiftFusion);
+        let svc = SimService::auto_plan(router.pods[0].cluster.clone(), SpAlgo::SwiftFusion);
+        let config = ServeConfig::new()
+            .batch(BatchPolicy { max_batch: 8, window: 1.0 })
+            .plan(PlanPolicy::Auto)
+            .co_batch(co_batch);
+        ServeSession::new(config, &svc).run(&mut router, burst(16))
+    };
+    let off = run(false);
+    let on = run(true);
+    assert_eq!(off.metrics.completed(), 16);
+    assert_eq!(on.metrics.completed(), 16);
+    assert!(on.co_batched >= 1, "the replica carve must trigger scattering");
+    assert!(
+        on.metrics.horizon < off.metrics.horizon,
+        "co-batched burst {} must beat one-group batches {}",
+        on.metrics.horizon,
+        off.metrics.horizon
+    );
+    // the plan histogram shows the replica carve both runs served under
+    assert!(
+        on.plan_histogram.keys().any(|k| k.contains("rep4")),
+        "expected a replica plan: {:?}",
+        on.plan_histogram
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Cross-pod re-balancing
+// ---------------------------------------------------------------------------
+
+/// Drifting pod-mix trace: a short-image phase (1 Hz) followed by
+/// sparse long CFG videos (one every 10 s, far above their service
+/// time, so the fleet always has an idle donor).
+fn drifting_trace(shorts: usize, videos: usize) -> Vec<Request> {
+    let mut reqs = Vec::new();
+    for i in 0..shorts {
+        reqs.push(Request {
+            id: i as u64,
+            workload: short_workload(),
+            arrival: i as f64,
+            seed: i as u64,
+        });
+    }
+    for i in 0..videos {
+        let id = (shorts + i) as u64;
+        reqs.push(Request {
+            id,
+            workload: long_workload(),
+            arrival: shorts as f64 + 10.0 + i as f64 * 10.0,
+            seed: id,
+        });
+    }
+    reqs
+}
+
+/// The drifting-mix claim: when traffic shifts to long CFG videos, a
+/// fleet that migrates an idle machine toward the video pod (2+2 → 3+1
+/// on machines of 8 GPUs) serves the videos faster than the frozen 2+2
+/// fleet — the 24-GPU pod affords a carve no 16-GPU pod can hold
+/// (one-machine pipeline stages over three machines, at 16 patches so
+/// the pipeline fill is well amortized), while the short images are
+/// indifferent (their one-machine carve exists on every footprint).
+#[test]
+fn cross_pod_rebalancing_beats_the_frozen_fleet_on_a_drifting_mix() {
+    let run = |rebalance: RebalancePolicy| {
+        // 4 machines x 8 GPUs, two pods of 2 machines each
+        let mut router = Router::new(4, 8, 2, SpAlgo::SwiftFusion);
+        let fleet = SimFleet::auto(SpAlgo::SwiftFusion, 16);
+        let config = ServeConfig::new()
+            .batch(BatchPolicy { max_batch: 1, window: 0.0 })
+            .plan(PlanPolicy::Auto)
+            .patches(16)
+            .dispatch(Arc::new(EarliestFinish))
+            .rebalance(rebalance);
+        let report =
+            ServeSession::with_fleet(config, &fleet).run(&mut router, drifting_trace(6, 8));
+        let machines: Vec<usize> = router.pods.iter().map(|p| p.cluster.machines).collect();
+        (report, machines)
+    };
+    let (frozen, frozen_machines) = run(RebalancePolicy::Never);
+    let (adaptive, adaptive_machines) =
+        run(RebalancePolicy::Gain { threshold: 0.1, window: 2 });
+
+    assert_eq!(frozen.metrics.completed(), 14);
+    assert_eq!(adaptive.metrics.completed(), 14);
+    assert_eq!(frozen_machines, vec![2, 2], "never keeps the admission fleet");
+    assert!(frozen.rebalances.is_empty());
+
+    // the shift fired exactly one migration toward the video pod
+    assert_eq!(adaptive.rebalances.len(), 1, "{:?}", adaptive.rebalances);
+    let ev = &adaptive.rebalances[0];
+    assert_eq!(ev.to_machines, 3);
+    assert_eq!(ev.from_machines, 1);
+    assert_eq!(adaptive_machines.iter().sum::<usize>(), 4, "no machine lost");
+    assert!(adaptive_machines.contains(&3) && adaptive_machines.contains(&1));
+
+    // and it paid off: videos served faster, fleet finishes sooner
+    let mut frozen_m = frozen.metrics;
+    let mut adaptive_m = adaptive.metrics;
+    let name = long_workload().name;
+    let frozen_video = frozen_m.latency(name).unwrap().mean();
+    let adaptive_video = adaptive_m.latency(name).unwrap().mean();
+    assert!(
+        adaptive_video < frozen_video,
+        "video latency: adaptive {adaptive_video} must beat frozen {frozen_video}"
+    );
+    assert!(adaptive_m.horizon < frozen_m.horizon);
+
+    // observability: the migration serializes (only) when it happened
+    assert!(to_string(&adaptive.to_json()).contains("\"rebalance\":["));
+    assert!(!to_string(&frozen.to_json()).contains("\"rebalance\""));
+}
+
+// ---------------------------------------------------------------------------
+// Batcher flush-deadline edge, at the serving-loop level
+// ---------------------------------------------------------------------------
+
+/// A request arriving exactly at the head request's window deadline must
+/// join the closing batch (the loop pushes the arrival before sweeping
+/// the batcher), not strand in the queue until the end-of-trace flush.
+#[test]
+fn deadline_arrival_joins_the_closing_batch_not_the_flush() {
+    struct Unit;
+    impl CostModel for Unit {
+        fn service_time(&self, _w: &Workload, _b: usize) -> f64 {
+            1.0
+        }
+    }
+    impl Planner for Unit {}
+    let reqs = vec![
+        Request { id: 0, workload: short_workload(), arrival: 0.0, seed: 0 },
+        Request { id: 1, workload: short_workload(), arrival: 2.0, seed: 1 },
+    ];
+    let mut router = Router::new(2, 2, 1, SpAlgo::SwiftFusion);
+    let report = serve(
+        &mut router,
+        BatchPolicy { max_batch: 4, window: 2.0 },
+        reqs,
+        &Unit,
+    );
+    assert_eq!(report.metrics.completed(), 2);
+    // one shared dispatch at t=2 (flat 1s service): both done at t=3 —
+    // a stranded r1 would instead complete in a second 1s slot at t=4
+    assert_eq!(report.completions[0].2, 3.0);
+    assert_eq!(report.completions[1].2, 3.0);
+    assert_eq!(report.metrics.horizon, 3.0);
+}
