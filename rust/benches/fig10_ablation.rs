@@ -9,13 +9,14 @@
 //!
 //! Run: `cargo bench --bench fig10_ablation`
 
-use swiftfusion::bench::{print_table, Series};
+use swiftfusion::bench::{BenchRun, Series};
 use swiftfusion::config::ClusterSpec;
 use swiftfusion::coordinator::engine::SimService;
 use swiftfusion::sp::SpAlgo;
 use swiftfusion::workload::Workload;
 
 fn main() {
+    let mut run = BenchRun::from_env("fig10_ablation");
     let cluster = ClusterSpec::paper_testbed();
     let variants = [
         ("usp", SpAlgo::Usp),
@@ -27,14 +28,20 @@ fn main() {
         .iter()
         .map(|(name, _)| Series::new(*name))
         .collect();
-    for w in Workload::paper_suite() {
+    // smoke: one image + one video workload keep every ablation column
+    let workloads = if run.smoke() {
+        vec![Workload::flux_3072(), Workload::cogvideo_20s()]
+    } else {
+        Workload::paper_suite()
+    };
+    for w in workloads {
         for (i, (_, algo)) in variants.iter().enumerate() {
             let svc = SimService::new(cluster.clone(), *algo);
             let step = svc.layer_time(&w, 1) * w.layers as f64;
             series[i].push(w.name.to_string(), step);
         }
     }
-    print_table(
+    run.table(
         "Fig 10: ablation — one sampling step on 4x8, per workload",
         &series,
         Some("usp"),
@@ -43,4 +50,5 @@ fn main() {
         "\nreading: every row should order usp >= +tas >= +torus(nccl) >= sfu;\n\
          torus helps most on cogvideox (long L), one-sided most on flux."
     );
+    run.finish().expect("write BENCH_fig10_ablation.json");
 }

@@ -9,6 +9,7 @@
 //!
 //! Run: `cargo bench --bench fig3_motivation`
 
+use swiftfusion::bench::BenchRun;
 use swiftfusion::cluster::exec::{run_cluster, ExecMode};
 use swiftfusion::comm::Buf;
 use swiftfusion::config::{ClusterSpec, NetSpec, SpDegrees};
@@ -17,8 +18,13 @@ use swiftfusion::util::stats::{fmt_bytes, fmt_time};
 use swiftfusion::workload::Workload;
 
 fn main() {
+    let mut run = BenchRun::from_env("fig3_motivation");
     fig3a();
-    fig3b();
+    // the machine-count sweep: full [1, 2, 4], smoke drops to the
+    // endpoints (the comm-bound trend needs only the extremes)
+    let machines: &[usize] = if run.smoke() { &[1, 4] } else { &[1, 2, 4] };
+    fig3b(&mut run, machines);
+    run.finish().expect("write BENCH_fig3_motivation.json");
 }
 
 fn fig3a() {
@@ -52,7 +58,7 @@ fn fig3a() {
     );
 }
 
-fn fig3b() {
+fn fig3b(run: &mut BenchRun, machines: &[usize]) {
     println!("\n=== Fig 3b: USP latency breakdown vs machine count ===");
     let w = Workload::cogvideo_20s();
     println!(
@@ -63,7 +69,7 @@ fn fig3b() {
         "{:<6}{:>12}{:>12}{:>12}{:>12}{:>10}",
         "M", "total", "compute", "comm", "sync", "comm%"
     );
-    for m in [1usize, 2, 4] {
+    for &m in machines {
         let cluster = ClusterSpec::new(m, 8);
         let p = cluster.total_gpus();
         let pu = swiftfusion::config::gcd(8, w.shape.h);
@@ -92,6 +98,7 @@ fn fig3b() {
             fmt_time(sy),
             (wt + sy) / total * 100.0
         );
+        run.note(&format!("usp_comm_fraction/M={m}"), (wt + sy) / total);
     }
     println!("(paper: USP becomes communication-bound by M=4 — the comm% column)");
 }

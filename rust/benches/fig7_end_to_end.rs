@@ -11,7 +11,7 @@
 //! Run: `cargo bench --bench fig7_end_to_end`
 
 use swiftfusion::analysis;
-use swiftfusion::bench::{print_table, Series};
+use swiftfusion::bench::{BenchRun, Series};
 use swiftfusion::config::ClusterSpec;
 use swiftfusion::coordinator::engine::SimService;
 use swiftfusion::sp::SpAlgo;
@@ -19,11 +19,19 @@ use swiftfusion::util::stats::fmt_bytes;
 use swiftfusion::workload::Workload;
 
 fn main() {
-    for w in Workload::paper_suite() {
+    let mut run = BenchRun::from_env("fig7_end_to_end");
+    // smoke: two workloads x the endpoint machine counts
+    let workloads = if run.smoke() {
+        vec![Workload::flux_3072(), Workload::cogvideo_20s()]
+    } else {
+        Workload::paper_suite()
+    };
+    let machines: &[usize] = if run.smoke() { &[1, 4] } else { &[1, 2, 3, 4] };
+    for w in workloads {
         let mut usp = Series::new("usp");
         let mut tas = Series::new("tas");
         let mut sfu = Series::new("swiftfusion");
-        for m in [1usize, 2, 3, 4] {
+        for &m in machines {
             let cluster = ClusterSpec::new(m, 8);
             let step = |algo: SpAlgo| {
                 let svc = SimService::new(cluster.clone(), algo);
@@ -34,7 +42,7 @@ fn main() {
             tas.push(label.clone(), step(SpAlgo::Tas));
             sfu.push(label, step(SpAlgo::SwiftFusion));
         }
-        print_table(
+        run.table(
             &format!("Fig 7: {} — one sampling-step latency", w.name),
             &[usp, tas, sfu],
             Some("usp"),
@@ -52,4 +60,5 @@ fn main() {
         println!("{:<16}{:>14}{:>14}{:>14}", w.name, row[0], row[1], row[2]);
     }
     println!("(paper conclusion 4: SwiftFusion introduces no memory overhead vs USP)");
+    run.finish().expect("write BENCH_fig7_end_to_end.json");
 }

@@ -10,7 +10,7 @@
 use swiftfusion::cluster::exec::{run_cluster, ExecMode};
 use swiftfusion::comm::Buf;
 use swiftfusion::config::{ClusterSpec, SpDegrees};
-use swiftfusion::bench::{print_table, Series};
+use swiftfusion::bench::{BenchRun, Series};
 use swiftfusion::sp::{SpAlgo, SpParams};
 use swiftfusion::workload::Workload;
 
@@ -29,7 +29,7 @@ fn layer_time(cluster: &ClusterSpec, algo: SpAlgo, deg: SpDegrees, w: &Workload)
     run.makespan()
 }
 
-fn sweep(machines: usize, w: &Workload) {
+fn sweep(run: &mut BenchRun, machines: usize, w: &Workload) {
     let cluster = ClusterSpec::new(machines, 8);
     let p = cluster.total_gpus();
     let h = w.shape.h;
@@ -47,7 +47,7 @@ fn sweep(machines: usize, w: &Workload) {
         tas.push(label.clone(), layer_time(&cluster, SpAlgo::Tas, deg, w));
         sfu.push(label, layer_time(&cluster, SpAlgo::SwiftFusion, deg, w));
     }
-    print_table(
+    run.table(
         &format!(
             "Fig 8: {} on {} machines x 8 — per-layer latency across UxRy",
             w.name, machines
@@ -58,6 +58,11 @@ fn sweep(machines: usize, w: &Workload) {
 }
 
 fn main() {
-    sweep(4, &Workload::cogvideo_20s());
-    sweep(3, &Workload::cogvideo_40s());
+    let mut run = BenchRun::from_env("fig8_configs");
+    sweep(&mut run, 4, &Workload::cogvideo_20s());
+    if !run.smoke() {
+        // smoke keeps the 4-machine sweep only (the paper's headline row)
+        sweep(&mut run, 3, &Workload::cogvideo_40s());
+    }
+    run.finish().expect("write BENCH_fig8_configs.json");
 }

@@ -13,7 +13,7 @@ use swiftfusion::cluster::exec::{run_cluster, ExecMode};
 use swiftfusion::comm::Buf;
 use swiftfusion::config::{AttnShape, ClusterSpec, SpDegrees};
 use swiftfusion::sp::{SpAlgo, SpParams};
-use swiftfusion::bench::{print_table, Series};
+use swiftfusion::bench::{BenchRun, Series};
 
 const H: usize = 24;
 
@@ -35,20 +35,25 @@ fn layer_time(cluster: &ClusterSpec, algo: SpAlgo, shape: AttnShape) -> f64 {
 }
 
 fn main() {
+    let mut run = BenchRun::from_env("fig9_layerwise");
     let cluster = ClusterSpec::paper_testbed();
+    // smoke: one head dim, endpoint sequence lengths / batch sizes
+    let dims: &[usize] = if run.smoke() { &[64] } else { &[32, 64, 128] };
+    let lens: &[usize] = if run.smoke() { &[96, 192] } else { &[96, 128, 160, 192] };
+    let batches: &[usize] = if run.smoke() { &[1, 4] } else { &[1, 2, 4] };
 
     // ---- Fig 9a: sequence length sweep per head dim ----
-    for d in [32usize, 64, 128] {
+    for &d in dims {
         let mut usp = Series::new("usp");
         let mut sfu = Series::new("swiftfusion");
-        for l_k in [96usize, 128, 160, 192] {
+        for &l_k in lens {
             let l = l_k * 1024;
             let shape = AttnShape::new(1, l, H, d);
             let label = format!("L={l_k}k");
             usp.push(label.clone(), layer_time(&cluster, SpAlgo::Usp, shape));
             sfu.push(label, layer_time(&cluster, SpAlgo::SwiftFusion, shape));
         }
-        print_table(
+        run.table(
             &format!("Fig 9a: attention layer latency vs sequence length (D={d})"),
             &[usp, sfu],
             Some("usp"),
@@ -56,19 +61,20 @@ fn main() {
     }
 
     // ---- Fig 9b: batch sweep per head dim ----
-    for d in [32usize, 64, 128] {
+    for &d in dims {
         let mut usp = Series::new("usp");
         let mut sfu = Series::new("swiftfusion");
-        for b in [1usize, 2, 4] {
+        for &b in batches {
             let shape = AttnShape::new(b, 96 * 1024, H, d);
             let label = format!("B={b}");
             usp.push(label.clone(), layer_time(&cluster, SpAlgo::Usp, shape));
             sfu.push(label, layer_time(&cluster, SpAlgo::SwiftFusion, shape));
         }
-        print_table(
+        run.table(
             &format!("Fig 9b: attention layer latency vs batch size (D={d})"),
             &[usp, sfu],
             Some("usp"),
         );
     }
+    run.finish().expect("write BENCH_fig9_layerwise.json");
 }

@@ -16,7 +16,7 @@
 //! Run: `cargo bench --bench fig_hybrid`
 
 use swiftfusion::analysis;
-use swiftfusion::bench::{print_table, Series};
+use swiftfusion::bench::{BenchRun, Series};
 use swiftfusion::config::{ClusterSpec, ParallelSpec};
 use swiftfusion::coordinator::engine::SimService;
 use swiftfusion::sp::SpAlgo;
@@ -37,15 +37,22 @@ fn spec_for(cluster: &ClusterSpec, cfg: usize, reps: usize, heads: usize) -> Par
 }
 
 fn main() {
+    let mut run = BenchRun::from_env("fig_hybrid");
     let cluster = ClusterSpec::paper_testbed();
     let algo = SpAlgo::SwiftFusion;
     println!("hybrid CFG x SP plan sweep on 4x8 A100 ({})", algo.name());
+    // smoke: one image + one video workload keep every plan column
+    let workloads = if run.smoke() {
+        vec![Workload::flux_3072(), Workload::cogvideo_20s()]
+    } else {
+        Workload::paper_suite()
+    };
 
     // One series per plan; rows are workloads (matches print_table).
     let mut lat_series: Vec<Series> = PLANS.iter().map(|(l, _, _)| Series::new(*l)).collect();
     let mut thr_rows: Vec<(String, Vec<f64>)> = Vec::new();
 
-    for w in Workload::paper_suite() {
+    for w in workloads {
         let mut thr = Vec::new();
         for (i, (label, cfg, reps)) in PLANS.iter().enumerate() {
             let spec = spec_for(&cluster, *cfg, *reps, w.shape.h);
@@ -64,7 +71,7 @@ fn main() {
         println!("  {:<16} chooser (latency): {}", w.name, picked.label());
     }
 
-    print_table(
+    run.table(
         "fig_hybrid: one full generation (batch 1), per plan",
         &lat_series,
         Some(PLANS[0].0),
@@ -93,5 +100,7 @@ fn main() {
             .map(|(_, y)| *y)
             .unwrap();
         println!("plan {label}: cogvideox-20s generation {}", fmt_time(video));
+        run.note(&format!("cogvideox-20s/{label}"), video);
     }
+    run.finish().expect("write BENCH_fig_hybrid.json");
 }

@@ -1,0 +1,185 @@
+//! Group-granular (partial) re-carving on the 4×8-A100 testbed: a mixed
+//! short-image / long-video trace served by one auto-planning pod under
+//! pod-wide policies vs `RecarvePolicy::Partial`.
+//!
+//! The motivating failure of pod-wide re-carving: a single long CFG
+//! video freezes the whole pod's plan — every transition must wait for
+//! the **pod-wide drain barrier**, so while a stale video grinds on one
+//! group, nothing can re-carve and later arrivals queue behind it.
+//! `partial` splits instead: the busy machines keep serving under the
+//! (narrowed) old carve while the idle machines re-carve immediately —
+//! no drain — and the pod runs **two carve generations at once** (videos
+//! on a 3-machine CFG×pp carve, shorts on the surviving one-machine
+//! group) until it re-unifies during a lull. Expected shape:
+//! `partial` strictly beats pod-wide `hysteresis` on horizon (it pays
+//! staleness once instead of per phase boundary, drains nothing, and
+//! overlaps the two traffic modes), while `never` serves every video
+//! stale and trails far behind.
+//!
+//! Run: `cargo bench --bench fig_partial_recarve` (add `-- --smoke` for
+//! the CI-sized run; this sweep is already CI-sized, so `--smoke` only
+//! tags the artifact).
+
+use swiftfusion::bench::{BenchRun, Series};
+use swiftfusion::cluster::recarve::RecarvePolicy;
+use swiftfusion::coordinator::batcher::BatchPolicy;
+use swiftfusion::coordinator::engine::{PlanPolicy, ServeReport, SimService};
+use swiftfusion::coordinator::router::Router;
+use swiftfusion::coordinator::session::{ServeConfig, ServeSession};
+use swiftfusion::sp::SpAlgo;
+use swiftfusion::util::stats::fmt_time;
+use swiftfusion::workload::{phased_trace, Workload};
+
+fn short_workload() -> Workload {
+    Workload::short_image_4k()
+}
+
+fn long_workload() -> Workload {
+    Workload::cfg_video_96k()
+}
+
+/// Dense short phases punctuated by window-sized video bursts — the
+/// mixed traffic a pod-wide drain barrier handles worst: each burst
+/// forces pod-wide hysteresis to serve a video stale (streak = window)
+/// and then re-carve through the drain, twice per cycle, while the
+/// partial policy splits once at the first burst and never serves stale
+/// again.
+fn mixed_trace() -> Vec<swiftfusion::workload::Request> {
+    let short = short_workload();
+    let long = long_workload();
+    phased_trace(&[(&short, 8), (&long, 2), (&short, 8), (&long, 2)])
+}
+
+fn run_policy(policy: RecarvePolicy) -> ServeReport {
+    let mut router = Router::new(4, 8, 1, SpAlgo::SwiftFusion);
+    let svc = SimService::auto_plan(router.pods[0].cluster.clone(), SpAlgo::SwiftFusion);
+    let config = ServeConfig::new()
+        .batch(BatchPolicy { max_batch: 1, window: 0.0 })
+        .plan(PlanPolicy::Auto)
+        .recarve(policy);
+    ServeSession::new(config, &svc).run(&mut router, mixed_trace())
+}
+
+fn main() {
+    let mut run = BenchRun::from_env("fig_partial_recarve");
+    let policies: [(&str, RecarvePolicy); 4] = [
+        ("never (frozen)", RecarvePolicy::Never),
+        (
+            "hysteresis 10%x2",
+            RecarvePolicy::Hysteresis { threshold: 0.1, window: 2 },
+        ),
+        (
+            "partial 10%x2",
+            RecarvePolicy::Partial { threshold: 0.1, window: 2 },
+        ),
+        ("free (pod-wide ideal)", RecarvePolicy::Free),
+    ];
+    println!(
+        "partial re-carving on 4x8 A100: mixed {} / {} trace (8+2 x 2 phases), one \
+         auto-planned pod",
+        short_workload().name,
+        long_workload().name
+    );
+
+    let mut lat_series: Vec<Series> =
+        policies.iter().map(|(l, _)| Series::new(*l)).collect();
+    let mut reports = Vec::new();
+    for (i, (_, policy)) in policies.iter().enumerate() {
+        let mut report = run_policy(*policy);
+        for w in [short_workload(), long_workload()] {
+            let mean = report
+                .metrics
+                .latency(w.name)
+                .map(|s| s.mean())
+                .unwrap_or(f64::NAN);
+            lat_series[i].push(w.name, mean);
+        }
+        lat_series[i].push("horizon", report.metrics.horizon);
+        reports.push(report);
+    }
+    run.table(
+        "fig_partial_recarve: mean latency per workload + horizon, per policy",
+        &lat_series,
+        Some(policies[0].0),
+    );
+
+    println!("\n=== fig_partial_recarve: what each policy paid / split ===");
+    println!(
+        "{:<22}{:>9}{:>8}{:>8}{:>12}{:>12}",
+        "policy", "recarves", "splits", "merges", "drain", "re-setup"
+    );
+    for ((label, _), report) in policies.iter().zip(&reports) {
+        let rc = &report.recarve;
+        println!(
+            "{:<22}{:>9}{:>8}{:>8}{:>12}{:>12}",
+            label,
+            rc.recarve_count,
+            rc.partial_splits,
+            rc.merges,
+            fmt_time(rc.drain_time),
+            fmt_time(rc.setup_time)
+        );
+    }
+    let partial = &reports[2];
+    for (pod, g) in &partial.recarve.group_epochs {
+        println!(
+            "partial: pod {pod} side generation {}: {} on machines [{}, {}), opened {}, \
+             served {}",
+            g.index,
+            g.label(),
+            g.base_machine,
+            g.base_machine + g.machines,
+            fmt_time(g.started_at),
+            g.served
+        );
+    }
+
+    let horizon = |i: usize| reports[i].metrics.horizon;
+    for (i, (label, _)) in policies.iter().enumerate() {
+        run.note(&format!("horizon/{label}"), horizon(i));
+    }
+    run.note("partial_splits", partial.recarve.partial_splits as f64);
+    run.note(
+        "speedup_partial_vs_hysteresis",
+        horizon(1) / horizon(2),
+    );
+
+    // sanity lines the acceptance criterion reads off this bench: every
+    // request completes, the mixed trace actually fires a split, and
+    // group-granular re-carving strictly beats the pod-wide drain
+    // barrier on this trace
+    for ((label, _), report) in policies.iter().zip(&reports) {
+        assert_eq!(
+            report.metrics.completed(),
+            mixed_trace().len(),
+            "{label} must complete the whole trace"
+        );
+    }
+    assert!(
+        partial.recarve.partial_splits >= 1,
+        "the video burst must split the pod"
+    );
+    assert_eq!(
+        partial.recarve.drain_time, 0.0,
+        "group-granular barriers never drain"
+    );
+    assert!(
+        horizon(2) < horizon(1),
+        "partial {} must strictly beat pod-wide hysteresis {}",
+        horizon(2),
+        horizon(1)
+    );
+    assert!(
+        horizon(2) < horizon(0),
+        "partial {} must beat the frozen carve {}",
+        horizon(2),
+        horizon(0)
+    );
+    println!(
+        "\npartial beats pod-wide hysteresis by {:.2}x on this trace ({} vs {})",
+        horizon(1) / horizon(2),
+        fmt_time(horizon(2)),
+        fmt_time(horizon(1))
+    );
+    run.finish().expect("write BENCH_fig_partial_recarve.json");
+}

@@ -16,7 +16,7 @@
 //! Run: `cargo bench --bench fig_pipefusion`
 
 use swiftfusion::analysis;
-use swiftfusion::bench::{print_table, Series};
+use swiftfusion::bench::{BenchRun, Series};
 use swiftfusion::config::{ClusterSpec, ParallelSpec};
 use swiftfusion::coordinator::engine::SimService;
 use swiftfusion::sp::SpAlgo;
@@ -52,9 +52,16 @@ fn main() {
         algo.name()
     );
 
+    let mut run = BenchRun::from_env("fig_pipefusion");
+    // smoke: one image + one video workload keep every plan column
+    let workloads = if run.smoke() {
+        vec![Workload::flux_3072(), Workload::cogvideo_20s()]
+    } else {
+        Workload::paper_suite()
+    };
     let mut lat_series: Vec<Series> = PLANS.iter().map(|(l, _, _, _)| Series::new(*l)).collect();
 
-    for w in Workload::paper_suite() {
+    for w in workloads {
         for (i, (label, cfg, pp, reps)) in PLANS.iter().enumerate() {
             let spec = spec_for(&cluster, *cfg, *pp, *reps, w.shape.h);
             assert!(spec.validate(&cluster).is_ok(), "{label} invalid on 4x8");
@@ -68,7 +75,7 @@ fn main() {
         println!("  {:<16} chooser (latency): {}", w.name, picked.label());
     }
 
-    print_table(
+    run.table(
         "fig_pipefusion: one full generation (batch 1), per plan",
         &lat_series,
         Some(PLANS[0].0),
@@ -84,5 +91,7 @@ fn main() {
             .map(|(_, y)| *y)
             .unwrap();
         println!("plan {label}: cogvideox-20s generation {}", fmt_time(video));
+        run.note(&format!("cogvideox-20s/{label}"), video);
     }
+    run.finish().expect("write BENCH_fig_pipefusion.json");
 }

@@ -15,7 +15,7 @@
 //!
 //! Run: `cargo bench --bench fig_recarve`
 
-use swiftfusion::bench::{print_table, Series};
+use swiftfusion::bench::{BenchRun, Series};
 use swiftfusion::cluster::recarve::RecarvePolicy;
 use swiftfusion::coordinator::batcher::BatchPolicy;
 use swiftfusion::coordinator::engine::{serve, ServeReport, SimService};
@@ -26,20 +26,43 @@ use swiftfusion::workload::{bimodal_trace, Workload};
 
 /// The bimodal pair: [`Workload::short_image_4k`] pins a deliberately
 /// video-hostile one-machine carve; [`Workload::cfg_video_96k`] wants
-/// CFG × pipeline parallelism across the whole pod.
-fn short_workload() -> Workload {
-    Workload::short_image_4k()
+/// CFG × pipeline parallelism across the whole pod. Under `--smoke` the
+/// workloads shrink to 2 layers × 2 steps and the trace to 3 × 6 — the
+/// exact configuration the engine integration tests already prove the
+/// policy ordering on, so the sanity asserts below stay valid.
+fn short_workload(smoke: bool) -> Workload {
+    let mut w = Workload::short_image_4k();
+    if smoke {
+        w.layers = 2;
+        w.steps = 2;
+    }
+    w
 }
 
-fn long_workload() -> Workload {
-    Workload::cfg_video_96k()
+fn long_workload(smoke: bool) -> Workload {
+    let mut w = Workload::cfg_video_96k();
+    if smoke {
+        w.layers = 2;
+        w.steps = 2;
+    }
+    w
 }
 
-fn run_policy(policy: RecarvePolicy) -> ServeReport {
+fn run_policy(policy: RecarvePolicy, smoke: bool) -> ServeReport {
     let mut router = Router::new(4, 8, 1, SpAlgo::SwiftFusion);
-    router.set_recarve(policy);
+    if smoke {
+        router.set_recarve_with_setup(policy, 0.01);
+    } else {
+        router.set_recarve(policy);
+    }
     let svc = SimService::auto_plan(router.pods[0].cluster.clone(), SpAlgo::SwiftFusion);
-    let reqs = bimodal_trace(&short_workload(), &long_workload(), 4, 8);
+    let (phases, per_phase) = if smoke { (3, 6) } else { (4, 8) };
+    let reqs = bimodal_trace(
+        &short_workload(smoke),
+        &long_workload(smoke),
+        phases,
+        per_phase,
+    );
     serve(
         &mut router,
         BatchPolicy { max_batch: 1, window: 0.0 },
@@ -49,6 +72,8 @@ fn run_policy(policy: RecarvePolicy) -> ServeReport {
 }
 
 fn main() {
+    let mut run = BenchRun::from_env("fig_recarve");
+    let smoke = run.smoke();
     let policies: [(&str, RecarvePolicy); 4] = [
         ("never (frozen)", RecarvePolicy::Never),
         ("on-idle", RecarvePolicy::OnIdle),
@@ -60,16 +85,16 @@ fn main() {
     ];
     println!(
         "dynamic re-carving on 4x8 A100: bimodal {} <-> {} trace, one auto-planned pod",
-        short_workload().name,
-        long_workload().name
+        short_workload(smoke).name,
+        long_workload(smoke).name
     );
 
     let mut lat_series: Vec<Series> =
         policies.iter().map(|(l, _)| Series::new(*l)).collect();
     let mut reports = Vec::new();
     for (i, (_, policy)) in policies.iter().enumerate() {
-        let mut report = run_policy(*policy);
-        for w in [short_workload(), long_workload()] {
+        let mut report = run_policy(*policy, smoke);
+        for w in [short_workload(smoke), long_workload(smoke)] {
             let mean = report
                 .metrics
                 .latency(w.name)
@@ -81,7 +106,7 @@ fn main() {
         reports.push(report);
     }
 
-    print_table(
+    run.table(
         "fig_recarve: mean latency per workload + serving horizon, per policy",
         &lat_series,
         Some(policies[0].0),
@@ -108,6 +133,9 @@ fn main() {
     // hysteresis policy must beat the frozen carve on bimodal traffic,
     // and the unpaid idealization bounds it from below
     let horizon = |i: usize| reports[i].metrics.horizon;
+    for (i, (label, _)) in policies.iter().enumerate() {
+        run.note(&format!("horizon/{label}"), horizon(i));
+    }
     assert!(
         horizon(2) < horizon(0),
         "hysteresis {} must beat frozen {}",
@@ -126,4 +154,6 @@ fn main() {
         fmt_time(horizon(2)),
         fmt_time(horizon(0))
     );
+    run.note("speedup_hysteresis_vs_frozen", horizon(0) / horizon(2));
+    run.finish().expect("write BENCH_fig_recarve.json");
 }

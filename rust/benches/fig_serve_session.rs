@@ -21,7 +21,7 @@
 
 use std::sync::Arc;
 
-use swiftfusion::bench::{print_table, Series};
+use swiftfusion::bench::{BenchRun, Series};
 use swiftfusion::coordinator::batcher::BatchPolicy;
 use swiftfusion::coordinator::engine::{PlanPolicy, ServeReport, SimService};
 use swiftfusion::coordinator::router::Router;
@@ -43,14 +43,17 @@ fn burst(w: &Workload, n: usize, spacing: f64) -> Vec<Request> {
         .collect()
 }
 
-fn run_cobatch(co_batch: bool) -> ServeReport {
+fn run_cobatch(co_batch: bool, smoke: bool) -> ServeReport {
     let mut router = Router::new(4, 8, 1, SpAlgo::SwiftFusion);
     let svc = SimService::auto_plan(router.pods[0].cluster.clone(), SpAlgo::SwiftFusion);
     let config = ServeConfig::new()
         .batch(BatchPolicy { max_batch: 8, window: 1.0 })
         .plan(PlanPolicy::Auto)
         .co_batch(co_batch);
-    ServeSession::new(config, &svc).run(&mut router, burst(&Workload::short_image_4k(), 32, 0.1))
+    // smoke: the 16-request burst the integration test proves the
+    // co-batching win on; full: the 32-request figure sweep
+    let n = if smoke { 16 } else { 32 };
+    ServeSession::new(config, &svc).run(&mut router, burst(&Workload::short_image_4k(), n, 0.1))
 }
 
 /// Short-image phase (1 Hz), then sparse long CFG videos (spaced far
@@ -84,13 +87,15 @@ fn run_rebalance(policy: RebalancePolicy) -> (ServeReport, Vec<usize>) {
 }
 
 fn main() {
+    let mut run = BenchRun::from_env("fig_serve_session");
+    let smoke = run.smoke();
     // --- replica co-batching ------------------------------------------------
-    println!("fig_serve_session (1/2): replica co-batching, 32-request short-image");
-    println!("burst on one auto-planned 4x8 pod (rep4 carve), max_batch=8\n");
+    println!("fig_serve_session (1/2): replica co-batching, short-image burst");
+    println!("on one auto-planned 4x8 pod (rep4 carve), max_batch=8\n");
     let mut series = vec![Series::new("one group (PR-3)"), Series::new("co-batched")];
     let mut horizons = Vec::new();
     for (i, co) in [false, true].into_iter().enumerate() {
-        let mut report = run_cobatch(co);
+        let mut report = run_cobatch(co, smoke);
         let name = Workload::short_image_4k().name;
         let mean = report.metrics.latency(name).map(|s| s.mean()).unwrap_or(f64::NAN);
         series[i].push("mean latency", mean);
@@ -105,11 +110,12 @@ fn main() {
         );
         horizons.push(report.metrics.horizon);
     }
-    print_table(
+    run.table(
         "fig_serve_session: short-image burst, one group vs co-batched",
         &series,
         Some("one group (PR-3)"),
     );
+    run.note("cobatch_speedup", horizons[0] / horizons[1]);
     assert!(
         horizons[1] < horizons[0],
         "co-batching {} must beat the one-group baseline {}",
@@ -162,4 +168,6 @@ fn main() {
         fmt_time(rows[1].0),
         fmt_time(rows[0].0)
     );
+    run.note("rebalance_video_speedup", rows[0].0 / rows[1].0);
+    run.finish().expect("write BENCH_fig_serve_session.json");
 }

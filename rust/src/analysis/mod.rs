@@ -234,6 +234,40 @@ pub fn recarve_gain(
     1.0 - c_to / c_from
 }
 
+/// Predicted fractional per-step improvement of a **group-granular**
+/// (partial) re-carve: serving `shape` on the best plan the chooser
+/// finds for the pod's `idle_machines` idle machines *now*, instead of
+/// serving it stale under the pod's live carve `from`
+/// (`1 − cost(best sub-plan on the idle subset) / cost(from on the full
+/// pod)`). Positive when splitting helps despite the smaller footprint —
+/// the gate [`crate::cluster::recarve::RecarvePolicy::Partial`]'s split
+/// decision compares against its threshold, so the drain-free split uses
+/// the same closed form as pod-wide admission and re-carving. Unlike
+/// [`recarve_gain`] there is no drain term to amortize: the idle subset
+/// re-carves immediately, which is exactly why a *smaller* carve can
+/// still win while a long request pins the rest of the pod.
+pub fn partial_recarve_gain(
+    cluster: &ClusterSpec,
+    algo: SpAlgo,
+    shape: &AttnShape,
+    cfg_evals: usize,
+    patches: usize,
+    idle_machines: usize,
+    from: &ParallelSpec,
+) -> f64 {
+    if idle_machines == 0 || idle_machines > cluster.machines {
+        return 0.0;
+    }
+    let sub = cluster.resized(idle_machines);
+    let best = choose_spec_with_patches(&sub, algo, shape, cfg_evals, 1, patches);
+    let c_from = plan_step_cost_patches(cluster, algo, shape, from, cfg_evals, patches);
+    let c_to = plan_step_cost_patches(&sub, algo, shape, &best, cfg_evals, patches);
+    if !(c_from.is_finite() && c_from > 0.0) {
+        return 0.0;
+    }
+    1.0 - c_to / c_from
+}
+
 /// Predicted fractional per-step improvement of serving `shape` on a
 /// pod whose footprint changes from `from` to `to` (cross-pod
 /// re-balancing, [`crate::coordinator::router::Router::rebalance_machine`]):
@@ -603,6 +637,78 @@ mod tests {
             );
             assert!(g <= 1e-12, "{cand:?} beats the chosen plan by {g}");
         }
+    }
+
+    #[test]
+    fn partial_recarve_gain_predicts_the_split_trade() {
+        // The motivating split: a long CFG video arrives while the pod
+        // is pinned to a short-image carve (one-machine rep groups). The
+        // 3-machine idle subset's best video plan must predict a large
+        // win over serving the video stale; a 1-machine subset is weaker
+        // but still beats the stale one-machine group (same footprint,
+        // CFG-aware carve); the degenerate cases return 0.
+        let c = ClusterSpec::paper_testbed();
+        let video = shape(); // 96k tokens, 24 heads, CFG
+        let small = AttnShape::new(1, 4096, 24, 64);
+        let short_plan = choose_spec(&c, SpAlgo::SwiftFusion, &small, 1, 1);
+        let g3 = partial_recarve_gain(
+            &c,
+            SpAlgo::SwiftFusion,
+            &video,
+            2,
+            DEFAULT_PATCHES,
+            3,
+            &short_plan,
+        );
+        assert!(g3 > 0.2, "3-machine split must predict a substantial win: {g3}");
+        let g1 = partial_recarve_gain(
+            &c,
+            SpAlgo::SwiftFusion,
+            &video,
+            2,
+            DEFAULT_PATCHES,
+            1,
+            &short_plan,
+        );
+        assert!(g1 < g3, "fewer idle machines cannot predict more gain: {g1} vs {g3}");
+        // moving off the *preferred* full-pod plan onto any subset is a
+        // predicted loss — the split gate cannot fire on a happy pod
+        let video_plan = choose_spec(&c, SpAlgo::SwiftFusion, &video, 2, 1);
+        let off = partial_recarve_gain(
+            &c,
+            SpAlgo::SwiftFusion,
+            &video,
+            2,
+            DEFAULT_PATCHES,
+            3,
+            &video_plan,
+        );
+        assert!(off < 0.0, "leaving the preferred plan must predict a loss: {off}");
+        // degenerate subsets
+        assert_eq!(
+            partial_recarve_gain(
+                &c,
+                SpAlgo::SwiftFusion,
+                &video,
+                2,
+                DEFAULT_PATCHES,
+                0,
+                &short_plan
+            ),
+            0.0
+        );
+        assert_eq!(
+            partial_recarve_gain(
+                &c,
+                SpAlgo::SwiftFusion,
+                &video,
+                2,
+                DEFAULT_PATCHES,
+                9,
+                &short_plan
+            ),
+            0.0
+        );
     }
 
     #[test]

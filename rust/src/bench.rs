@@ -5,8 +5,11 @@
 //! so their output mirrors the rows/series of the paper's tables and
 //! figures. `cargo bench` runs these binaries with `harness = false`.
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
+use crate::util::cli::Args;
+use crate::util::json::{to_string, Json};
 use crate::util::stats::{fmt_time, Summary};
 
 /// Measured wall-clock runner for real code paths (PJRT execution, the
@@ -115,6 +118,124 @@ pub fn print_table(title: &str, series: &[Series], normalize_to: Option<&str>) {
     }
 }
 
+/// Shared conventions of the `fig_*` bench binaries: the `--smoke` CLI
+/// flag (CI-sized sweeps — CI *runs* every bench, it does not just build
+/// them) and the `BENCH_<name>.json` artifact each bench emits so
+/// runtime panics and perf-trajectory gaps cannot hide behind a
+/// successful build. Usage:
+///
+/// ```no_run
+/// use swiftfusion::bench::{BenchRun, Series};
+/// let mut run = BenchRun::from_env("fig_example");
+/// let sweep = if run.smoke() { 2 } else { 8 };
+/// let series: Vec<Series> = Vec::new(); // ... measure `sweep` points ...
+/// run.table("example sweep", &series, None);
+/// run.note("speedup", 1.25);
+/// run.finish().expect("write BENCH_fig_example.json");
+/// # let _ = sweep;
+/// ```
+pub struct BenchRun {
+    name: &'static str,
+    smoke: bool,
+    tables: Vec<(String, Vec<Series>)>,
+    notes: BTreeMap<String, f64>,
+}
+
+impl BenchRun {
+    /// Parse the bench CLI (`--smoke`; cargo's own `--bench` flag is
+    /// ignored). `name` keys the JSON artifact: `BENCH_<name>.json`.
+    pub fn from_env(name: &'static str) -> Self {
+        let args = Args::from_env();
+        let smoke = args.has("smoke");
+        if smoke {
+            println!("[{name}] --smoke: CI-sized sweep");
+        }
+        Self { name, smoke, tables: Vec::new(), notes: BTreeMap::new() }
+    }
+
+    /// A constructor for tests (no process CLI involved).
+    pub fn new(name: &'static str, smoke: bool) -> Self {
+        Self { name, smoke, tables: Vec::new(), notes: BTreeMap::new() }
+    }
+
+    /// Is this a `--smoke` (CI-sized) run?
+    pub fn smoke(&self) -> bool {
+        self.smoke
+    }
+
+    /// [`print_table`] that also records the series into the JSON
+    /// artifact.
+    pub fn table(&mut self, title: &str, series: &[Series], normalize_to: Option<&str>) {
+        print_table(title, series, normalize_to);
+        self.tables.push((title.to_string(), series.to_vec()));
+    }
+
+    /// Record a headline scalar (a horizon, a speedup) into the JSON
+    /// artifact without printing.
+    pub fn note(&mut self, key: &str, value: f64) {
+        self.notes.insert(key.to_string(), value);
+    }
+
+    /// The artifact as a JSON value (`{bench, smoke, tables, notes}`).
+    pub fn to_json(&self) -> Json {
+        let tables = Json::Arr(
+            self.tables
+                .iter()
+                .map(|(title, series)| {
+                    let series = Json::Arr(
+                        series
+                            .iter()
+                            .map(|s| {
+                                let points = Json::Arr(
+                                    s.points
+                                        .iter()
+                                        .map(|(x, y)| {
+                                            Json::Arr(vec![
+                                                Json::Str(x.clone()),
+                                                Json::Num(*y),
+                                            ])
+                                        })
+                                        .collect(),
+                                );
+                                let mut o = BTreeMap::new();
+                                o.insert("name".to_string(), Json::Str(s.name.clone()));
+                                o.insert("points".to_string(), points);
+                                Json::Obj(o)
+                            })
+                            .collect(),
+                    );
+                    let mut o = BTreeMap::new();
+                    o.insert("title".to_string(), Json::Str(title.clone()));
+                    o.insert("series".to_string(), series);
+                    Json::Obj(o)
+                })
+                .collect(),
+        );
+        let notes = Json::Obj(
+            self.notes
+                .iter()
+                .map(|(k, &v)| (k.clone(), Json::Num(v)))
+                .collect(),
+        );
+        let mut root = BTreeMap::new();
+        root.insert("bench".to_string(), Json::Str(self.name.to_string()));
+        root.insert("smoke".to_string(), Json::Bool(self.smoke));
+        root.insert("tables".to_string(), tables);
+        root.insert("notes".to_string(), notes);
+        Json::Obj(root)
+    }
+
+    /// Write `BENCH_<name>.json` into the current directory (the CI
+    /// bench-smoke job uploads these as workflow artifacts) and return
+    /// the path. Call last.
+    pub fn finish(&self) -> std::io::Result<String> {
+        let path = format!("BENCH_{}.json", self.name);
+        std::fs::write(&path, to_string(&self.to_json()))?;
+        println!("[{}] wrote {path}", self.name);
+        Ok(path)
+    }
+}
+
 /// Print a Summary as a one-line bench result.
 pub fn report(name: &str, s: &mut Summary) {
     println!(
@@ -146,6 +267,25 @@ mod tests {
         s.push("M=2", 1.0);
         s.push("M=4", 2.0);
         assert_eq!(s.points.len(), 2);
+    }
+
+    #[test]
+    fn bench_run_records_tables_and_notes_as_json() {
+        let mut run = BenchRun::new("fig_test", true);
+        assert!(run.smoke());
+        let mut s = Series::new("usp");
+        s.push("M=2", 2.0e-3);
+        run.table("sweep", &[s], None);
+        run.note("speedup", 1.5);
+        let json = to_string(&run.to_json());
+        assert!(json.contains("\"bench\":\"fig_test\""), "{json}");
+        assert!(json.contains("\"smoke\":true"), "{json}");
+        assert!(json.contains("\"title\":\"sweep\""), "{json}");
+        assert!(json.contains("\"name\":\"usp\""), "{json}");
+        assert!(json.contains("[\"M=2\",0.002]"), "{json}");
+        assert!(json.contains("\"speedup\":1.5"), "{json}");
+        // the artifact round-trips through the JSON parser
+        assert!(Json::parse(&json).is_ok());
     }
 
     #[test]

@@ -106,11 +106,21 @@ impl ParallelGroup {
 }
 
 /// A validated partitioning of a cluster into SP groups.
+///
+/// A plan normally covers the whole cluster (`base_rank == 0`, the spec
+/// tiles every GPU). [`Self::build_subset`] instead carves a
+/// *contiguous, machine-aligned subset* of the cluster — the plan's
+/// groups then live at `base_rank > 0` and the remaining ranks belong to
+/// a different carve generation (group-granular re-carving,
+/// [`crate::cluster::recarve`]). Executors skip ranks outside the plan
+/// via [`Self::try_group_of`].
 #[derive(Debug, Clone)]
 pub struct ParallelPlan {
     pub cluster: ClusterSpec,
     pub spec: ParallelSpec,
     pub algo: SpAlgo,
+    /// First absolute rank the plan covers (0 for whole-cluster plans).
+    pub base_rank: usize,
     pub groups: Vec<ParallelGroup>,
 }
 
@@ -126,6 +136,50 @@ impl ParallelPlan {
         algo: SpAlgo,
     ) -> Result<Self, ParallelSpecError> {
         spec.validate(cluster)?;
+        Ok(Self::carve(cluster, spec, algo, 0))
+    }
+
+    /// Carve `spec` onto a contiguous, machine-aligned *subset* of the
+    /// cluster's machines starting at `base_machine` — the plan a
+    /// group-granular re-carve builds for the idle machines of a pod
+    /// while the busy generation keeps serving on the rest
+    /// ([`crate::cluster::recarve::EpochTracker::split`]). The spec is
+    /// validated against the subset footprint it tiles (whole machines),
+    /// and the returned plan's meshes are *pod-absolute*: ranks run from
+    /// `base_machine · gpus_per_machine`, so the two generations'
+    /// collectives can never alias each other's ranks.
+    pub fn build_subset(
+        cluster: &ClusterSpec,
+        spec: ParallelSpec,
+        algo: SpAlgo,
+        base_machine: usize,
+    ) -> Result<Self, ParallelSpecError> {
+        let m = cluster.gpus_per_machine;
+        let ranks = spec.total_ranks();
+        // The subset must be whole machines; validating against the
+        // resized footprint reuses every alignment rule (and yields the
+        // same actionable SizeMismatch when the spec does not tile it).
+        let machines = if ranks % m == 0 { ranks / m } else { 0 };
+        let sub = if machines >= 1 {
+            cluster.resized(machines)
+        } else {
+            // sub-machine footprints cannot form a machine subset; let
+            // validate() report the mismatch against a 1-machine slice
+            cluster.resized(1)
+        };
+        spec.validate(&sub)?;
+        if base_machine + machines > cluster.machines {
+            return Err(ParallelSpecError::SubsetOutOfRange {
+                base_machine,
+                machines,
+                pod_machines: cluster.machines,
+            });
+        }
+        Ok(Self::carve(cluster, spec, algo, base_machine * m))
+    }
+
+    /// The shared carving tail: groups laid out from `base_rank`.
+    fn carve(cluster: &ClusterSpec, spec: ParallelSpec, algo: SpAlgo, base_rank: usize) -> Self {
         let group_size = spec.ranks_per_group();
         let stage_size = spec.ranks_per_stage();
         let groups = (0..spec.groups())
@@ -137,7 +191,7 @@ impl ParallelPlan {
                 } else {
                     BranchRole::Unconditional
                 };
-                let base = g * group_size;
+                let base = base_rank + g * group_size;
                 let stages: Vec<Mesh2D> = (0..spec.pp_degree)
                     .map(|s| {
                         Mesh2D::carved(
@@ -151,13 +205,33 @@ impl ParallelPlan {
                 ParallelGroup { index: g, role, replica: g % spec.batch_replicas, stages }
             })
             .collect();
-        Ok(Self { cluster: cluster.clone(), spec, algo, groups })
+        Self { cluster: cluster.clone(), spec, algo, base_rank, groups }
+    }
+
+    /// Does the plan cover this absolute rank? Always true for
+    /// whole-cluster plans; subset plans ([`Self::build_subset`]) own
+    /// only their carve's contiguous rank range.
+    pub fn contains(&self, rank: usize) -> bool {
+        (self.base_rank..self.base_rank + self.spec.total_ranks()).contains(&rank)
     }
 
     /// The group owning an absolute rank (groups are contiguous and
-    /// equal-sized, so this is a division).
+    /// equal-sized, so this is a division). The rank must be covered by
+    /// the plan; executors that may see out-of-plan ranks (a pod running
+    /// two carve generations) use [`Self::try_group_of`] instead.
     pub fn group_of(&self, rank: usize) -> &ParallelGroup {
-        &self.groups[rank / self.spec.ranks_per_group()]
+        debug_assert!(self.contains(rank), "rank {rank} outside the plan's carve");
+        &self.groups[(rank - self.base_rank) / self.spec.ranks_per_group()]
+    }
+
+    /// [`Self::group_of`] for ranks that may be outside the plan's carve:
+    /// `None` for ranks another generation owns.
+    pub fn try_group_of(&self, rank: usize) -> Option<&ParallelGroup> {
+        if self.contains(rank) {
+            Some(&self.groups[(rank - self.base_rank) / self.spec.ranks_per_group()])
+        } else {
+            None
+        }
     }
 
     /// The group serving `(role, replica)`; for `cfg_degree == 1` pass
@@ -311,6 +385,71 @@ mod tests {
                 assert_eq!(g.local_rank(r), r - g.base());
             }
         }
+    }
+
+    #[test]
+    fn subset_plan_carves_only_its_machines() {
+        // 4x8 pod: a 3-machine video carve on machines 1-3 while machine
+        // 0 belongs to a different (busy) generation.
+        let cluster = ClusterSpec::new(4, 8);
+        let spec = ParallelSpec::new(2, 3, SpDegrees::new(4, 1));
+        assert_eq!(spec.total_ranks(), 24);
+        let plan = ParallelPlan::build_subset(&cluster, spec, SpAlgo::SwiftFusion, 1).unwrap();
+        assert_eq!(plan.base_rank, 8);
+        assert_eq!(plan.cluster.total_gpus(), 32, "the plan stays pod-absolute");
+        // every covered rank maps to exactly one group; outside ranks to none
+        for rank in 0..32 {
+            match plan.try_group_of(rank) {
+                Some(g) => {
+                    assert!(plan.contains(rank));
+                    assert!((8..32).contains(&rank), "rank {rank} outside the subset");
+                    assert!(g.contains(rank));
+                    // collectives stay inside the subset's carve
+                    let mesh = g.stage_mesh(rank);
+                    for peer in
+                        mesh.ulysses_group(rank).into_iter().chain(mesh.ring_group(rank))
+                    {
+                        assert!((8..32).contains(&peer), "peer {peer} escaped the subset");
+                    }
+                }
+                None => assert!(rank < 8, "rank {rank} should be covered"),
+            }
+        }
+        // branch-major layout survives the offset: 3 conditional
+        // replica groups (ranks 8..20), then 3 unconditional (20..32)
+        assert_eq!(plan.groups.len(), 6);
+        assert_eq!(plan.groups[0].base(), 8);
+        assert_eq!(plan.groups[0].role, BranchRole::Conditional);
+        assert_eq!(plan.groups[3].base(), 20);
+        assert_eq!(plan.groups[3].role, BranchRole::Unconditional);
+        assert_eq!(plan.group_of(9).index, 0);
+        assert_eq!(plan.group_of(20).index, 3);
+    }
+
+    #[test]
+    fn subset_plan_rejects_misfits() {
+        let cluster = ClusterSpec::new(4, 8);
+        // a spec tiling 2 machines cannot start at machine 3 (out of room)
+        let spec = ParallelSpec::new(2, 1, SpDegrees::new(8, 1));
+        assert!(ParallelPlan::build_subset(&cluster, spec, SpAlgo::SwiftFusion, 2).is_ok());
+        let err =
+            ParallelPlan::build_subset(&cluster, spec, SpAlgo::SwiftFusion, 3).unwrap_err();
+        assert!(matches!(err, ParallelSpecError::SubsetOutOfRange { .. }));
+        assert!(err.to_string().contains("exceeds the pod"), "{err}");
+        // a sub-machine spec cannot form a machine subset
+        let tiny = ParallelSpec::new(1, 1, SpDegrees::new(4, 1));
+        let e = ParallelPlan::build_subset(&cluster, tiny, SpAlgo::SwiftFusion, 0).unwrap_err();
+        assert!(matches!(e, ParallelSpecError::SizeMismatch { .. }));
+        // whole-cluster builds still report base_rank 0 and contain all
+        let full = ParallelPlan::build(
+            &cluster,
+            ParallelSpec::new(1, 4, SpDegrees::new(8, 1)),
+            SpAlgo::SwiftFusion,
+        )
+        .unwrap();
+        assert_eq!(full.base_rank, 0);
+        assert!(full.contains(0) && full.contains(31));
+        assert!(full.try_group_of(31).is_some());
     }
 
     #[test]

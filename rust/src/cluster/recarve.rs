@@ -75,6 +75,25 @@ pub enum RecarvePolicy {
         /// Consecutive gainful dispatches required before re-carving.
         window: usize,
     },
+    /// Group-granular re-carving: gated exactly like
+    /// [`Self::Hysteresis`], but when the policy fires on a *busy* pod it
+    /// does not wait for the pod-wide drain barrier. Instead the pod
+    /// **splits** into two carve generations: the machines carrying the
+    /// in-flight batch keep serving under the (narrowed) old carve,
+    /// while the idle machines re-carve immediately into the plan the
+    /// cost model prefers for their footprint
+    /// ([`EpochTracker::split`] → [`PartialRecarve`]). The pod
+    /// re-unifies — merging the side generation back and re-admitting a
+    /// full-footprint carve — the first time both generations are idle
+    /// at a dispatch ([`EpochTracker::merge`]). On an idle pod the
+    /// policy degenerates to plain hysteresis (the drain is free, so a
+    /// pod-wide transition is strictly better than a split).
+    Partial {
+        /// Minimum predicted fractional gain (e.g. `0.1` for 10 %).
+        threshold: f64,
+        /// Consecutive gainful dispatches required before re-carving.
+        window: usize,
+    },
 }
 
 impl RecarvePolicy {
@@ -83,17 +102,18 @@ impl RecarvePolicy {
     /// [`crate::analysis::recarve_gain`] for policies that ignore it —
     /// keep it in sync when adding a gain-driven policy variant.
     pub fn wants_gain(&self) -> bool {
-        matches!(self, Self::Hysteresis { .. })
+        matches!(self, Self::Hysteresis { .. } | Self::Partial { .. })
     }
 
     /// Parse a CLI policy name; `threshold`/`window` feed the hysteresis
-    /// variant and are ignored by the others.
+    /// and partial variants and are ignored by the others.
     pub fn from_name(name: &str, threshold: f64, window: usize) -> Option<Self> {
         match name {
             "free" => Some(Self::Free),
             "never" => Some(Self::Never),
             "on-idle" => Some(Self::OnIdle),
             "hysteresis" => Some(Self::Hysteresis { threshold, window }),
+            "partial" => Some(Self::Partial { threshold, window }),
             _ => None,
         }
     }
@@ -107,6 +127,9 @@ impl std::fmt::Display for RecarvePolicy {
             Self::OnIdle => write!(f, "on-idle"),
             Self::Hysteresis { threshold, window } => {
                 write!(f, "hysteresis({:.0}% x {window})", threshold * 100.0)
+            }
+            Self::Partial { threshold, window } => {
+                write!(f, "partial({:.0}% x {window})", threshold * 100.0)
             }
         }
     }
@@ -152,12 +175,86 @@ pub struct Transition {
     /// Re-setup seconds charged to the pod timeline. Zero unless
     /// `recarved` (and always zero under [`RecarvePolicy::Free`]).
     pub setup: f64,
+    /// [`RecarvePolicy::Partial`] fired on a busy pod: the carve is kept
+    /// (no pod-wide transition) and the caller should attempt a
+    /// group-granular split ([`EpochTracker::split`]) — or fall back to
+    /// a forced pod-wide transition when no machine-aligned split
+    /// exists. Always false for every other policy.
+    pub split_pending: bool,
 }
 
 impl Transition {
     fn keep(carve: Option<ParallelSpec>) -> Self {
-        Self { carve, recarved: false, drain: 0.0, setup: 0.0 }
+        Self { carve, recarved: false, drain: 0.0, setup: 0.0, split_pending: false }
     }
+}
+
+/// One **group-granular** epoch: a side carve generation opened by a
+/// partial re-carve on the idle machine subset of a busy pod
+/// ([`EpochTracker::split`]). The pod-wide [`PlanEpoch`] log keeps
+/// tracking the main generation; these entries record what the split-off
+/// subset ran, where it lived, and when (if ever) it merged back.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GroupEpoch {
+    /// Side-generation ordinal within the pod (0 = first split).
+    pub index: usize,
+    /// First machine of the subset (machine offset within the pod).
+    pub base_machine: usize,
+    /// Machine footprint of the subset.
+    pub machines: usize,
+    /// The subset's carve (sized for `machines`, not the whole pod).
+    pub plan: Option<ParallelSpec>,
+    /// Virtual time the subset became serveable (split + re-setup).
+    pub started_at: f64,
+    /// Requests served by this generation.
+    pub served: usize,
+    /// Virtual time the generation merged back into the pod-wide carve;
+    /// `None` while live (or when a fleet resize dissolved it).
+    pub merged_at: Option<f64>,
+}
+
+impl GroupEpoch {
+    /// Stable display key, matching [`PlanEpoch::label`].
+    pub fn label(&self) -> String {
+        self.plan
+            .map_or_else(|| "single-mesh".to_string(), |s| s.label())
+    }
+}
+
+/// The live side generation of a split pod: its carve, machine
+/// footprint, and its own serving timeline (`free_at`), independent of
+/// the main generation's — the two generations serve concurrently.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SideCarve {
+    /// The subset's carve (sized for `machines` whole machines).
+    pub plan: Option<ParallelSpec>,
+    /// First machine of the subset within the pod.
+    pub base_machine: usize,
+    /// Machine footprint of the subset.
+    pub machines: usize,
+    /// Virtual time this generation's in-flight work drains.
+    pub free_at: f64,
+    /// Index into [`EpochTracker::group_epochs`] for served attribution.
+    epoch: usize,
+}
+
+/// Outcome of a group-granular (partial) re-carve: what the busy
+/// generation narrowed to, what the idle subset re-carved into, and what
+/// the split cost. Unlike a pod-wide [`Transition`] there is **no
+/// drain** — the whole point is that only already-idle machines re-carve.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PartialRecarve {
+    /// The busy generation's carve, narrowed to its in-flight machine
+    /// footprint ([`ParallelSpec::narrowed_to_machines`]).
+    pub narrowed: Option<ParallelSpec>,
+    /// The idle subset's new carve.
+    pub side: Option<ParallelSpec>,
+    /// First machine of the side subset within the pod.
+    pub base_machine: usize,
+    /// Machine footprint of the side subset.
+    pub machines: usize,
+    /// Re-setup seconds the side generation paid before opening.
+    pub setup: f64,
 }
 
 /// Modeled cost (seconds) of tearing down and rebuilding a pod's carved
@@ -197,6 +294,12 @@ pub struct EpochTracker {
     recarve_count: usize,
     drain_time: f64,
     setup_time: f64,
+    /// Live side generation of a split pod ([`RecarvePolicy::Partial`]).
+    side: Option<SideCarve>,
+    /// Log of every side generation opened on this pod, in order.
+    group_epochs: Vec<GroupEpoch>,
+    partial_splits: usize,
+    merges: usize,
 }
 
 impl EpochTracker {
@@ -211,6 +314,10 @@ impl EpochTracker {
             recarve_count: 0,
             drain_time: 0.0,
             setup_time: 0.0,
+            side: None,
+            group_epochs: Vec::new(),
+            partial_splits: 0,
+            merges: 0,
         }
     }
 
@@ -239,6 +346,43 @@ impl EpochTracker {
     /// Total re-setup seconds charged to the pod's timeline.
     pub fn setup_time(&self) -> f64 {
         self.setup_time
+    }
+
+    /// Is the pod currently running two carve generations?
+    pub fn is_split(&self) -> bool {
+        self.side.is_some()
+    }
+
+    /// The live side generation, if the pod is split.
+    pub fn side(&self) -> Option<&SideCarve> {
+        self.side.as_ref()
+    }
+
+    /// The side generation's carve (`None` when unsplit).
+    pub fn side_carve(&self) -> Option<ParallelSpec> {
+        self.side.and_then(|s| s.plan)
+    }
+
+    /// When the side generation's in-flight work drains (`None` when
+    /// unsplit).
+    pub fn side_free_at(&self) -> Option<f64> {
+        self.side.map(|s| s.free_at)
+    }
+
+    /// Every side generation this pod ever opened, in order; a live one
+    /// (if any) is the last entry with `merged_at == None`.
+    pub fn group_epochs(&self) -> &[GroupEpoch] {
+        &self.group_epochs
+    }
+
+    /// Group-granular splits performed so far.
+    pub fn partial_splits(&self) -> usize {
+        self.partial_splits
+    }
+
+    /// Side generations merged back so far.
+    pub fn merges(&self) -> usize {
+        self.merges
     }
 
     /// Rebuild the current epoch's carved [`ParallelPlan`] — the step a
@@ -308,6 +452,26 @@ impl EpochTracker {
                 }
                 self.streak >= window.max(1)
             }
+            RecarvePolicy::Partial { threshold, window } => {
+                if gain.is_some_and(|g| g >= threshold) {
+                    self.streak += 1;
+                } else {
+                    self.streak = 0;
+                }
+                if self.streak < window.max(1) {
+                    false
+                } else if free_at <= ready_at {
+                    // idle pod: the drain barrier is free, so a plain
+                    // pod-wide transition beats splitting
+                    true
+                } else {
+                    // busy pod: keep the carve and ask the caller to
+                    // split off the idle machines ([`Self::split`])
+                    let mut t = Transition::keep(self.carve);
+                    t.split_pending = true;
+                    return t;
+                }
+            }
         };
         if !recarve {
             return Transition::keep(self.carve);
@@ -362,7 +526,106 @@ impl EpochTracker {
             started_at: ready_at.max(free_at) + setup,
             served: 0,
         });
-        Transition { carve: preferred, recarved: true, drain, setup }
+        Transition { carve: preferred, recarved: true, drain, setup, split_pending: false }
+    }
+
+    /// Group-granular (partial) re-carve of a **busy** pod: the machines
+    /// carrying the in-flight batch keep serving under `narrowed` (the
+    /// live carve restricted to their footprint,
+    /// [`ParallelSpec::narrowed_to_machines`]) while the `machines` idle
+    /// machines starting at `base_machine` immediately re-carve into
+    /// `side_plan` — no drain barrier, only the side's re-setup cost.
+    /// The pod then runs **two carve generations at once**: the main
+    /// generation keeps the pod timeline, the side generation gets its
+    /// own ([`Self::dispatch_side`]), and the pod re-unifies via
+    /// [`Self::merge`] the first time both are idle.
+    ///
+    /// The caller (the scheduler,
+    /// [`crate::coordinator::session::ServeSession`]) is responsible for
+    /// the machine-footprint accounting: `narrowed` and `side_plan` must
+    /// each tile their whole-machine subset
+    /// ([`crate::cluster::plan::ParallelPlan::build_subset`] enforces
+    /// alignment when the sub-meshes are actually built).
+    pub fn split(
+        &mut self,
+        ready_at: f64,
+        narrowed: Option<ParallelSpec>,
+        side_plan: Option<ParallelSpec>,
+        base_machine: usize,
+        machines: usize,
+    ) -> PartialRecarve {
+        debug_assert!(
+            self.side.is_none(),
+            "a pod holds at most two carve generations; merge before re-splitting"
+        );
+        self.streak = 0;
+        self.partial_splits += 1;
+        let setup = self.setup_cost;
+        self.setup_time += setup;
+        // the busy generation narrows: its in-flight work continues
+        // untouched, but future dispatches price (and log) the carve it
+        // actually still holds
+        self.carve = narrowed;
+        self.epochs.push(PlanEpoch {
+            index: self.epochs.len(),
+            plan: narrowed,
+            started_at: ready_at,
+            served: 0,
+        });
+        let epoch = self.group_epochs.len();
+        self.group_epochs.push(GroupEpoch {
+            index: epoch,
+            base_machine,
+            machines,
+            plan: side_plan,
+            started_at: ready_at + setup,
+            served: 0,
+            merged_at: None,
+        });
+        self.side = Some(SideCarve {
+            plan: side_plan,
+            base_machine,
+            machines,
+            free_at: ready_at + setup,
+            epoch,
+        });
+        PartialRecarve { narrowed, side: side_plan, base_machine, machines, setup }
+    }
+
+    /// Commit a batch to the side generation's timeline: service starts
+    /// when both the side is free and the batch is ready. Returns
+    /// `(start, done)`.
+    pub fn dispatch_side(&mut self, ready_at: f64, service: f64) -> (f64, f64) {
+        let s = self.side.as_mut().expect("dispatch_side on an unsplit pod");
+        let start = s.free_at.max(ready_at);
+        let done = start + service;
+        s.free_at = done;
+        (start, done)
+    }
+
+    /// Attribute `n` served requests to the live side generation.
+    pub fn record_side_served(&mut self, n: usize) {
+        if let Some(s) = &self.side {
+            self.group_epochs[s.epoch].served += n;
+        }
+    }
+
+    /// Re-unify a split pod: both generations are idle, so the side
+    /// merges back and the pod re-admits a full-footprint carve on its
+    /// next dispatch (adopted free, like [`Self::resize_reset`] — the
+    /// merge barrier's re-setup, returned here, is the paid part; the
+    /// caller charges it to the pod timeline via
+    /// [`crate::coordinator::router::Router::commit_recarve`]).
+    pub fn merge(&mut self, at: f64) -> f64 {
+        let s = self.side.take().expect("merge on an unsplit pod");
+        self.group_epochs[s.epoch].merged_at = Some(at);
+        self.merges += 1;
+        let setup = self.setup_cost;
+        self.setup_time += setup;
+        self.started = false;
+        self.carve = None;
+        self.streak = 0;
+        setup
     }
 
     /// Fleet-scope epoch boundary: the pod's machine footprint changed
@@ -379,6 +642,9 @@ impl EpochTracker {
         self.started = false;
         self.carve = None;
         self.streak = 0;
+        // a live side generation is dissolved by the footprint change
+        // (its epoch log entry stays, with `merged_at` left `None`)
+        self.side = None;
     }
 
     /// Attribute `n` served requests to the live epoch.
@@ -574,8 +840,13 @@ mod tests {
             RecarvePolicy::from_name("hysteresis", 0.25, 3),
             Some(RecarvePolicy::Hysteresis { threshold: 0.25, window: 3 })
         );
+        assert_eq!(
+            RecarvePolicy::from_name("partial", 0.1, 2),
+            Some(RecarvePolicy::Partial { threshold: 0.1, window: 2 })
+        );
         assert_eq!(RecarvePolicy::from_name("sometimes", 0.0, 0), None);
         assert!(RecarvePolicy::Hysteresis { threshold: 0.1, window: 2 }.wants_gain());
+        assert!(RecarvePolicy::Partial { threshold: 0.1, window: 2 }.wants_gain());
         assert!(!RecarvePolicy::Never.wants_gain());
         assert!(!RecarvePolicy::Free.wants_gain());
         assert!(!RecarvePolicy::OnIdle.wants_gain());
@@ -583,5 +854,131 @@ mod tests {
         assert!(RecarvePolicy::Hysteresis { threshold: 0.1, window: 2 }
             .to_string()
             .contains("10%"));
+        assert!(RecarvePolicy::Partial { threshold: 0.1, window: 2 }
+            .to_string()
+            .starts_with("partial(10%"));
+    }
+
+    // ---- group-granular (partial) re-carving -----------------------------
+
+    fn partial_tracker(window: usize) -> EpochTracker {
+        let policy = RecarvePolicy::Partial { threshold: 0.2, window };
+        let mut t = EpochTracker::new(policy, 0.25);
+        t.on_dispatch(0.0, 0.0, Some(spec_a()), None);
+        t
+    }
+
+    #[test]
+    fn partial_on_an_idle_pod_transitions_pod_wide_like_hysteresis() {
+        let mut t = partial_tracker(2);
+        // one gainful dispatch: streak below window, carve kept
+        let held = t.on_dispatch(1.0, 0.5, Some(spec_b()), Some(0.9));
+        assert!(!held.recarved && !held.split_pending);
+        // second gainful dispatch, pod idle: pod-wide transition fires
+        let fire = t.on_dispatch(2.0, 1.5, Some(spec_b()), Some(0.9));
+        assert!(fire.recarved, "idle pod degenerates to hysteresis");
+        assert!(!fire.split_pending);
+        assert_eq!((fire.drain, fire.setup), (0.0, 0.25));
+        assert_eq!(t.carve(), Some(spec_b()));
+        assert_eq!(t.recarve_count(), 1);
+        assert!(!t.is_split());
+        assert_eq!(t.partial_splits(), 0);
+    }
+
+    #[test]
+    fn partial_on_a_busy_pod_requests_a_split() {
+        let mut t = partial_tracker(1);
+        // gainful dispatch on a busy pod (free_at > ready): no pod-wide
+        // transition, the caller is asked to split
+        let tr = t.on_dispatch(1.0, 9.0, Some(spec_b()), Some(0.9));
+        assert!(tr.split_pending);
+        assert!(!tr.recarved);
+        assert_eq!(tr.carve, Some(spec_a()), "carve kept until the split");
+        assert_eq!(t.recarve_count(), 0);
+        // a below-threshold gain resets the streak and never asks
+        let mut t2 = partial_tracker(1);
+        let quiet = t2.on_dispatch(1.0, 9.0, Some(spec_b()), Some(0.1));
+        assert!(!quiet.split_pending && !quiet.recarved);
+    }
+
+    #[test]
+    fn split_opens_a_side_generation_with_its_own_timeline() {
+        let mut t = partial_tracker(1);
+        let narrowed = ParallelSpec::new(1, 1, SpDegrees::new(8, 1));
+        let pr = t.split(2.0, Some(narrowed), Some(spec_b()), 1, 3);
+        assert_eq!(
+            pr,
+            PartialRecarve {
+                narrowed: Some(narrowed),
+                side: Some(spec_b()),
+                base_machine: 1,
+                machines: 3,
+                setup: 0.25,
+            }
+        );
+        assert!(t.is_split());
+        assert_eq!(t.carve(), Some(narrowed), "main generation narrowed");
+        assert_eq!(t.side_carve(), Some(spec_b()));
+        assert_eq!(t.side_free_at(), Some(2.25), "split + re-setup, no drain");
+        assert_eq!(t.partial_splits(), 1);
+        assert_eq!(t.recarve_count(), 0, "splits are not pod-wide transitions");
+        assert_eq!(t.setup_time(), 0.25);
+        assert_eq!(t.drain_time(), 0.0, "the whole point: no drain");
+        // the main epoch log gained the narrowed epoch; the group log
+        // gained the side generation
+        assert_eq!(t.epochs().len(), 2);
+        assert_eq!(t.epochs()[1].plan, Some(narrowed));
+        assert_eq!(t.group_epochs().len(), 1);
+        let ge = &t.group_epochs()[0];
+        assert_eq!((ge.base_machine, ge.machines), (1, 3));
+        assert_eq!(ge.plan, Some(spec_b()));
+        assert_eq!(ge.started_at, 2.25);
+        assert_eq!(ge.merged_at, None);
+        assert_eq!(ge.label(), spec_b().label());
+
+        // the side generation serves on its own timeline
+        let (start, done) = t.dispatch_side(2.0, 1.0);
+        assert_eq!((start, done), (2.25, 3.25));
+        t.record_side_served(1);
+        let (s2, d2) = t.dispatch_side(2.5, 1.0);
+        assert_eq!((s2, d2), (3.25, 4.25), "side work queues on the side");
+        t.record_side_served(1);
+        assert_eq!(t.group_epochs()[0].served, 2);
+        assert_eq!(t.epochs()[1].served, 0, "main epoch untouched by side work");
+    }
+
+    #[test]
+    fn merge_reunifies_and_readmits_for_free() {
+        let mut t = partial_tracker(1);
+        let narrowed = ParallelSpec::new(1, 1, SpDegrees::new(8, 1));
+        t.split(2.0, Some(narrowed), Some(spec_b()), 1, 3);
+        t.dispatch_side(2.0, 1.0);
+        t.record_side_served(1);
+        let setup = t.merge(8.0);
+        assert_eq!(setup, 0.25);
+        assert!(!t.is_split());
+        assert_eq!(t.merges(), 1);
+        assert_eq!(t.setup_time(), 0.5, "split + merge each paid one re-setup");
+        assert_eq!(t.group_epochs()[0].merged_at, Some(8.0));
+        assert_eq!(t.group_epochs()[0].served, 1, "closed epoch keeps its log");
+        assert!(t.carve().is_none(), "carve obsolete until re-admission");
+        // next dispatch re-admits the preferred full-pod plan at no cost
+        let tr = t.on_dispatch(9.0, 8.0, Some(spec_b()), None);
+        assert!(!tr.recarved && !tr.split_pending);
+        assert_eq!(tr.carve, Some(spec_b()));
+        assert_eq!((tr.drain, tr.setup), (0.0, 0.0));
+        assert_eq!(t.epochs().len(), 3, "re-admission opens a fresh pod-wide epoch");
+    }
+
+    #[test]
+    fn resize_reset_dissolves_a_live_side_generation() {
+        let mut t = partial_tracker(1);
+        t.split(1.0, Some(spec_a()), Some(spec_b()), 1, 3);
+        assert!(t.is_split());
+        t.resize_reset();
+        assert!(!t.is_split(), "footprint change dissolves the side");
+        assert_eq!(t.group_epochs().len(), 1, "the log entry survives");
+        assert_eq!(t.group_epochs()[0].merged_at, None);
+        assert_eq!(t.merges(), 0, "a resize is not a merge");
     }
 }

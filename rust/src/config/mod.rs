@@ -298,6 +298,10 @@ pub enum ParallelSpecError {
     /// The patch pipeline needs `(patches · P_u · P_r) | L` so every
     /// patch SP-shards evenly inside its stage.
     PatchesNotDivisible { l: usize, patches: usize, stage_ranks: usize },
+    /// A machine-subset carve
+    /// (`crate::cluster::plan::ParallelPlan::build_subset`) must fit
+    /// inside the pod: `base_machine + machines <= pod_machines`.
+    SubsetOutOfRange { base_machine: usize, machines: usize, pod_machines: usize },
 }
 
 impl std::fmt::Display for ParallelSpecError {
@@ -356,6 +360,15 @@ impl std::fmt::Display for ParallelSpecError {
                  (Workload::aligned_to) so patches x sp_ranks divides L, or change \
                  --patches"
             ),
+            ParallelSpecError::SubsetOutOfRange { base_machine, machines, pod_machines } => {
+                write!(
+                    f,
+                    "machine subset [{base_machine}, {}) exceeds the pod's \
+                     {pod_machines} machine(s); lower the base machine or shrink the \
+                     subset spec",
+                    base_machine + machines
+                )
+            }
         }
     }
 }
@@ -434,6 +447,26 @@ impl ParallelSpec {
     /// Total ranks the spec occupies.
     pub fn total_ranks(&self) -> usize {
         self.groups() * self.ranks_per_group()
+    }
+
+    /// The busy-subset spec of a group-granular (partial) re-carve: this
+    /// spec narrowed to the fewest batch replicas that still occupy
+    /// *whole* machines of `gpus_per_machine` GPUs. An in-flight batch
+    /// occupies one replica's worth of groups (`cfg_degree` branch
+    /// groups of `ranks_per_group()` ranks each); the machines carrying
+    /// them keep serving while the rest of the pod re-carves, so the
+    /// busy generation's carve is this spec with `batch_replicas`
+    /// reduced to the whole-machine minimum. `None` when narrowing
+    /// cannot free any machine (the spec already has that few replicas —
+    /// one request's groups span the whole footprint).
+    pub fn narrowed_to_machines(&self, gpus_per_machine: usize) -> Option<ParallelSpec> {
+        let per_replica = self.cfg_degree * self.ranks_per_group();
+        // smallest replica count whose rank footprint is whole machines
+        let k = gpus_per_machine / gcd(per_replica, gpus_per_machine);
+        if k >= self.batch_replicas {
+            return None;
+        }
+        Some(ParallelSpec { batch_replicas: k, ..*self })
     }
 
     /// Replica co-batching scatter arithmetic: how a closed batch of
@@ -721,6 +754,35 @@ mod tests {
     #[should_panic(expected = "at least one machine")]
     fn resized_to_zero_is_rejected() {
         ClusterSpec::paper_testbed().resized(0);
+    }
+
+    #[test]
+    fn narrowing_keeps_whole_machines() {
+        // rep4 one-machine groups on 8-GPU machines: one replica's
+        // groups fill exactly one machine
+        let rep4 = ParallelSpec::new(1, 4, SpDegrees::new(8, 1));
+        let n = rep4.narrowed_to_machines(8).unwrap();
+        assert_eq!(n.batch_replicas, 1);
+        assert_eq!(n.total_ranks(), 8);
+        // sub-machine groups round up to a whole machine: 4-rank groups
+        // on 8-GPU machines narrow to 2 replicas (= 8 ranks)
+        let rep8 = ParallelSpec::new(1, 8, SpDegrees::new(4, 1));
+        let n = rep8.narrowed_to_machines(8).unwrap();
+        assert_eq!(n.batch_replicas, 2);
+        assert_eq!(n.total_ranks(), 8);
+        // cfg2 doubles the per-replica footprint: cfg2 x rep2 x sp8 on
+        // 4x8 narrows to one replica spanning two machines
+        let cfg2 = ParallelSpec::new(2, 2, SpDegrees::new(8, 1));
+        let n = cfg2.narrowed_to_machines(8).unwrap();
+        assert_eq!(n.batch_replicas, 1);
+        assert_eq!(n.total_ranks(), 16);
+        // a single-replica spec cannot free any machine
+        assert!(ParallelSpec::new(2, 1, SpDegrees::new(8, 2))
+            .narrowed_to_machines(8)
+            .is_none());
+        assert!(ParallelSpec::with_pp(2, 2, 1, SpDegrees::new(8, 1))
+            .narrowed_to_machines(8)
+            .is_none());
     }
 
     #[test]

@@ -12,7 +12,7 @@ use std::sync::Mutex;
 
 use crate::cluster::exec::{run_cluster, ExecMode};
 use crate::cluster::plan::ParallelPlan;
-use crate::cluster::recarve::PlanEpoch;
+use crate::cluster::recarve::{GroupEpoch, PlanEpoch};
 use crate::comm::Buf;
 use crate::config::{ClusterSpec, ParallelSpec, ParallelSpecError, SpDegrees};
 use crate::coordinator::batcher::BatchPolicy;
@@ -70,6 +70,9 @@ pub struct SimService {
     /// Auto-plan memo: workload name → chosen spec (the chooser
     /// re-enumerates the whole plan space otherwise — once per batch).
     spec_cache: Mutex<HashMap<String, ParallelSpec>>,
+    /// Subset-plan memo for group-granular re-carving:
+    /// (workload name, machines) → chosen spec for that footprint.
+    sub_spec_cache: Mutex<HashMap<(String, usize), ParallelSpec>>,
 }
 
 impl SimService {
@@ -82,6 +85,7 @@ impl SimService {
             patches: crate::analysis::DEFAULT_PATCHES,
             cache: Mutex::new(HashMap::new()),
             spec_cache: Mutex::new(HashMap::new()),
+            sub_spec_cache: Mutex::new(HashMap::new()),
         }
     }
 
@@ -162,6 +166,19 @@ impl SimService {
     /// equivalent, since the pipeline keeps all stages busy across the
     /// layer partition.
     pub fn plan_layer_time(&self, spec: &ParallelSpec, workload: &Workload, batch: usize) -> f64 {
+        self.plan_layer_time_on(&self.cluster, spec, workload, batch)
+    }
+
+    /// [`Self::plan_layer_time`] on an explicit footprint — the whole
+    /// pod normally, or the whole-machine *subset* a partial re-carve's
+    /// side generation occupies ([`Self::pricing_cluster`]).
+    fn plan_layer_time_on(
+        &self,
+        cluster: &ClusterSpec,
+        spec: &ParallelSpec,
+        workload: &Workload,
+        batch: usize,
+    ) -> f64 {
         if spec.pp_degree > 1 {
             let stage_ranks = spec.ranks_per_stage();
             // the pipeline shards by patches x stage ranks (pp partitions
@@ -174,8 +191,8 @@ impl SimService {
             }
             let mut shape = w.shape;
             shape.b = batch;
-            let plan = ParallelPlan::build(&self.cluster, *spec, self.algo)
-                .expect("spec validated at construction");
+            let plan = ParallelPlan::build(cluster, *spec, self.algo)
+                .expect("spec validated against its pricing footprint");
             let chunk = shape.l / self.patches / stage_ranks;
             let block = pipefusion::pipefusion_layer_makespan(
                 &plan,
@@ -202,12 +219,33 @@ impl SimService {
         }
         let mut shape = w.shape;
         shape.b = batch;
-        let plan = ParallelPlan::build(&self.cluster, *spec, self.algo)
-            .expect("spec validated at construction");
+        let plan = ParallelPlan::build(cluster, *spec, self.algo)
+            .expect("spec validated against its pricing footprint");
         let ls = shape.l / sp_ranks;
         let attn = hybrid::hybrid_layer_makespan(&plan, shape, ls, workload.cfg_evals);
         let evals = workload.cfg_evals.div_ceil(spec.cfg_degree) as f64;
         attn + evals * self.pointwise_time(&shape, ls)
+    }
+
+    /// The footprint a carve is priced on: this service's whole cluster
+    /// when the spec tiles it exactly, or the whole-machine subset the
+    /// spec tiles (a group-granular re-carve's side generation — its
+    /// carve spans fewer machines than the pod, and its service time is
+    /// what those machines deliver). `None` when the spec fits neither:
+    /// modeled as unserveable (infinite time), never a panic.
+    fn pricing_cluster(&self, spec: &ParallelSpec) -> Option<ClusterSpec> {
+        if spec.validate(&self.cluster).is_ok() {
+            return Some(self.cluster.clone());
+        }
+        let m = self.cluster.gpus_per_machine;
+        let ranks = spec.total_ranks();
+        if ranks < self.cluster.total_gpus() && ranks % m == 0 {
+            let sub = self.cluster.resized(ranks / m);
+            if spec.validate(&sub).is_ok() {
+                return Some(sub);
+            }
+        }
+        None
     }
 
     /// The spec the policy resolves to for one workload (None for the
@@ -252,8 +290,10 @@ impl SimService {
         }
         let layer = match spec {
             None => self.layer_time(workload, batch),
-            Some(spec) if spec.validate(&self.cluster).is_err() => f64::INFINITY,
-            Some(spec) => self.plan_layer_time(&spec, workload, batch),
+            Some(spec) => match self.pricing_cluster(&spec) {
+                Some(cluster) => self.plan_layer_time_on(&cluster, &spec, workload, batch),
+                None => f64::INFINITY,
+            },
         };
         let total = layer * workload.layers as f64 * workload.steps as f64 + self.fixed_overhead;
         self.cache.lock().unwrap().insert(key, total);
@@ -297,6 +337,55 @@ impl Planner for SimService {
         ))
     }
 
+    fn plan_spec_on(&self, workload: &Workload, machines: usize) -> Option<ParallelSpec> {
+        // only the auto planner can size a carve to an arbitrary subset;
+        // fixed plans are pod-sized and single-mesh does not plan
+        if !matches!(self.plan, PlanPolicy::Auto)
+            || machines == 0
+            || machines > self.cluster.machines
+        {
+            return None;
+        }
+        let key = (workload.name.to_string(), machines);
+        if let Some(&s) = self.sub_spec_cache.lock().unwrap().get(&key) {
+            return Some(s);
+        }
+        let sub = self.cluster.resized(machines);
+        let s = crate::analysis::choose_spec_with_patches(
+            &sub,
+            self.algo,
+            &workload.shape,
+            workload.cfg_evals,
+            1,
+            self.patches,
+        );
+        self.sub_spec_cache.lock().unwrap().insert(key, s);
+        Some(s)
+    }
+
+    fn partial_recarve_gain(
+        &self,
+        workload: &Workload,
+        from: &ParallelSpec,
+        idle_machines: usize,
+    ) -> Option<f64> {
+        if !matches!(self.plan, PlanPolicy::Auto)
+            || idle_machines == 0
+            || idle_machines >= self.cluster.machines
+        {
+            return None;
+        }
+        Some(crate::analysis::partial_recarve_gain(
+            &self.cluster,
+            self.algo,
+            &workload.shape,
+            workload.cfg_evals,
+            self.patches,
+            idle_machines,
+            from,
+        ))
+    }
+
     fn admit(&self, workload: &Workload) -> Result<(), String> {
         match &self.plan {
             // legacy + auto paths align the workload themselves
@@ -337,6 +426,16 @@ pub struct RecarveReport {
     pub epoch_histogram: BTreeMap<String, usize>,
     /// Every pod's epoch log, as (pod id, epoch) in pod order.
     pub epochs: Vec<(usize, PlanEpoch)>,
+    /// Group-granular (partial) re-carves performed across all pods —
+    /// splits that opened a side carve generation on a busy pod's idle
+    /// machines ([`crate::cluster::recarve::RecarvePolicy::Partial`]).
+    pub partial_splits: usize,
+    /// Side generations merged back into their pod's full-footprint
+    /// carve.
+    pub merges: usize,
+    /// Every pod's side-generation log, as (pod id, group epoch) in pod
+    /// order; empty unless partial re-carving fired.
+    pub group_epochs: Vec<(usize, GroupEpoch)>,
 }
 
 /// Outcome of a serving run.
@@ -375,6 +474,10 @@ pub struct ServeReport {
     /// (`ServeConfig::co_batch` in [`crate::coordinator::session`]); zero
     /// unless co-batching was enabled and fired.
     pub co_batched: usize,
+    /// Of `co_batched`, dispatches whose shards spanned **both carve
+    /// generations** of a split pod (cross-epoch co-batching); zero
+    /// unless partial re-carving and co-batching fired together.
+    pub co_batched_cross: usize,
 }
 
 impl ServeReport {
@@ -446,6 +549,40 @@ impl ServeReport {
         ];
         if self.co_batched > 0 {
             fields.push(("co_batched", Json::Num(self.co_batched as f64)));
+        }
+        if self.co_batched_cross > 0 {
+            fields.push(("co_batched_cross", Json::Num(self.co_batched_cross as f64)));
+        }
+        if self.recarve.partial_splits > 0 {
+            let group_epochs = Json::Arr(
+                self.recarve
+                    .group_epochs
+                    .iter()
+                    .map(|(pod, e)| {
+                        let mut pairs = vec![
+                            ("pod", Json::Num(*pod as f64)),
+                            ("index", Json::Num(e.index as f64)),
+                            ("base_machine", Json::Num(e.base_machine as f64)),
+                            ("machines", Json::Num(e.machines as f64)),
+                            ("plan", Json::Str(e.label())),
+                            ("started_at", Json::Num(e.started_at)),
+                            ("served", Json::Num(e.served as f64)),
+                        ];
+                        if let Some(m) = e.merged_at {
+                            pairs.push(("merged_at", Json::Num(m)));
+                        }
+                        obj(pairs)
+                    })
+                    .collect(),
+            );
+            fields.push((
+                "partial",
+                obj(vec![
+                    ("splits", Json::Num(self.recarve.partial_splits as f64)),
+                    ("merges", Json::Num(self.recarve.merges as f64)),
+                    ("group_epochs", group_epochs),
+                ]),
+            ));
         }
         if !self.rebalances.is_empty() {
             fields.push((
@@ -962,6 +1099,50 @@ mod tests {
         let spec = ParallelSpec::new(2, 1, SpDegrees::new(8, 2));
         let t = svc.service_time_under(&Workload::flux_3072(), 1, Some(&spec));
         assert!(t.is_infinite());
+    }
+
+    #[test]
+    fn subset_carves_price_on_their_own_footprint() {
+        // A carve tiling a whole-machine *subset* of the pod (a partial
+        // re-carve's side generation) is priced on that footprint: the
+        // same number a service bound to the subset cluster computes.
+        let pod = SimService::new(ClusterSpec::new(4, 8), SpAlgo::SwiftFusion);
+        let sub = SimService::new(ClusterSpec::new(3, 8), SpAlgo::SwiftFusion);
+        let spec = ParallelSpec::with_pp(1, 3, 1, SpDegrees::new(8, 1)); // 24 ranks
+        let w = Workload::cfg_video_96k();
+        let on_pod = pod.service_time_under(&w, 1, Some(&spec));
+        let on_sub = sub.service_time_under(&w, 1, Some(&spec));
+        assert!(on_pod.is_finite(), "subset carve must be serveable");
+        assert_eq!(on_pod, on_sub, "priced exactly as its own footprint");
+        // misaligned partial footprints stay unserveable: 12 ranks is
+        // not a whole number of 8-GPU machines
+        let ragged = ParallelSpec::new(2, 1, SpDegrees::new(6, 1));
+        assert!(pod.service_time_under(&w, 1, Some(&ragged)).is_infinite());
+    }
+
+    #[test]
+    fn auto_service_plans_machine_subsets() {
+        let svc = SimService::auto_plan(ClusterSpec::new(4, 8), SpAlgo::SwiftFusion);
+        let video = Workload::cfg_video_96k();
+        let sub = svc.plan_spec_on(&video, 3).expect("auto planner sizes subsets");
+        assert_eq!(sub.total_ranks(), 24, "spec tiles the 3-machine subset: {sub:?}");
+        assert!(sub.validate(&ClusterSpec::new(3, 8)).is_ok());
+        // and the chosen subset plan is serveable at its own footprint
+        assert!(svc.service_time_under(&video, 1, Some(&sub)).is_finite());
+        // the split-gain prediction exists and favours leaving a stale
+        // short carve for the 3-machine video plan
+        let short_carve = svc.resolve_spec(&Workload::short_image_4k()).unwrap();
+        let gain = svc
+            .partial_recarve_gain(&video, &short_carve, 3)
+            .expect("auto planner predicts split gains");
+        assert!(gain > 0.2, "{gain}");
+        // degenerate subsets refuse to plan
+        assert!(svc.plan_spec_on(&video, 0).is_none());
+        assert!(svc.plan_spec_on(&video, 9).is_none());
+        assert!(svc.partial_recarve_gain(&video, &short_carve, 4).is_none());
+        // non-auto services do not plan subsets
+        let single = SimService::new(ClusterSpec::new(4, 8), SpAlgo::SwiftFusion);
+        assert!(single.plan_spec_on(&video, 3).is_none());
     }
 
     #[test]

@@ -116,6 +116,32 @@ pub trait Planner: Sync {
     fn recarve_gain(&self, _workload: &Workload, _from: &ParallelSpec) -> Option<f64> {
         None
     }
+
+    /// The hybrid spec this model would carve a `machines`-machine
+    /// *subset* of its pod into for `workload` — how a group-granular
+    /// (partial) re-carve plans the idle machines while the busy carve
+    /// keeps serving ([`crate::cluster::recarve::RecarvePolicy::Partial`]).
+    /// `None` (the default) means the model cannot plan subsets; the
+    /// scheduler then falls back to a pod-wide transition.
+    fn plan_spec_on(&self, _workload: &Workload, _machines: usize) -> Option<ParallelSpec> {
+        None
+    }
+
+    /// Predicted fractional per-step improvement of serving `workload`
+    /// on the best plan for `idle_machines` idle machines *now* instead
+    /// of stale under the pod's live carve `from`
+    /// ([`crate::analysis::partial_recarve_gain`]). Gates the split
+    /// decision of
+    /// [`crate::cluster::recarve::RecarvePolicy::Partial`]; `None` (the
+    /// default) means no prediction, so no split is attempted.
+    fn partial_recarve_gain(
+        &self,
+        _workload: &Workload,
+        _from: &ParallelSpec,
+        _idle_machines: usize,
+    ) -> Option<f64> {
+        None
+    }
 }
 
 /// The full service-model surface the scheduler drives: costing

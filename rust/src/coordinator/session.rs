@@ -382,6 +382,9 @@ pub struct ServeState {
     pub rebalances: Vec<RebalanceEvent>,
     /// Dispatches whose batch was scattered across replica groups.
     pub co_batched: usize,
+    /// Of `co_batched`, dispatches whose shards spanned both carve
+    /// generations of a split pod (cross-epoch co-batching).
+    pub co_batched_cross: usize,
 }
 
 impl ServeState {
@@ -398,6 +401,11 @@ impl ServeState {
                 *recarve.epoch_histogram.entry(e.label()).or_insert(0) += 1;
                 recarve.epochs.push((pod.id, e.clone()));
             }
+            recarve.partial_splits += rc.partial_splits();
+            recarve.merges += rc.merges();
+            for e in rc.group_epochs() {
+                recarve.group_epochs.push((pod.id, e.clone()));
+            }
         }
         ServeReport {
             metrics: self.metrics,
@@ -407,6 +415,7 @@ impl ServeState {
             recarve,
             rebalances: self.rebalances,
             co_batched: self.co_batched,
+            co_batched_cross: self.co_batched_cross,
         }
     }
 }
@@ -623,11 +632,37 @@ impl<'a> ServeSession<'a> {
         let workload = batch.requests[0].workload.clone();
         let ready = batch.ready_at();
         let source = self.source;
+        // Plan-aware dispatch estimates price each pod by the carve it
+        // will actually serve under: for pods whose policy can hold a
+        // stale carve (anything but the free idealization), that is the
+        // pod's *live* carve — a re-carve-averse pod no longer wins
+        // dispatches on the strength of a preferred plan it will refuse
+        // to adopt. Free-policy pods adopt the preferred plan at
+        // dispatch, unpaid, so the preferred-plan estimate remains exact
+        // for them. A split pod is approximated by its cheaper
+        // generation's *duration* (EarliestFinish adds the pod's main
+        // free_at, not the side's own timeline — generation-aware pod
+        // pricing is a known follow-up).
         let est = |pod: usize, b: &Batch| -> f64 {
-            source
-                .for_pod(&router.pods[pod].cluster)
-                .get()
-                .service_time(&b.requests[0].workload, b.size())
+            let p = &router.pods[pod];
+            let svc = source.for_pod(&p.cluster);
+            let svc = svc.get();
+            let w = &b.requests[0].workload;
+            let live = if matches!(p.recarver.policy, RecarvePolicy::Free) {
+                None
+            } else {
+                p.recarver.carve()
+            };
+            match live {
+                None => svc.service_time(w, b.size()),
+                Some(c) => {
+                    let t = svc.service_time_under(w, b.size(), Some(&c));
+                    match p.recarver.side_carve() {
+                        Some(s) => t.min(svc.service_time_under(w, b.size(), Some(&s))),
+                        None => t,
+                    }
+                }
+            }
         };
         let pod = self.config.dispatch.pick(router, &batch, &est);
 
@@ -671,6 +706,21 @@ impl<'a> ServeSession<'a> {
         let model = self.source.for_pod(&router.pods[pod].cluster);
         let service = model.get();
         let preferred = service.plan_spec(&workload);
+        // A pod running two carve generations (a group-granular split,
+        // RecarvePolicy::Partial) has its own dispatch path: merge when
+        // the whole pod is idle, otherwise route between generations.
+        if router.pods[pod].recarver.is_split() {
+            return self.dispatch_split(
+                router,
+                pod,
+                batch,
+                &workload,
+                ready,
+                service,
+                preferred,
+                state,
+            );
+        }
         let free_at = router.pods[pod].free_at;
         // Compute the modeled gain only for policies that read it.
         let gain = {
@@ -689,21 +739,21 @@ impl<'a> ServeSession<'a> {
         let mut t = router.pods[pod]
             .recarver
             .on_dispatch(ready, free_at, preferred, gain);
-        // Service duration under a carve: with co-batching on, the batch
-        // scatters across the carve's replica groups and the makespan is
-        // one group's largest shard; otherwise the whole batch serves on
-        // one group (the pre-redesign behaviour).
-        let dur_under = |carve: Option<&ParallelSpec>| -> f64 {
-            let eff = if self.config.co_batch {
-                carve
-                    .map(|s| s.replica_shards(batch.size())[0])
-                    .unwrap_or(batch.size())
-            } else {
-                batch.size()
-            };
-            service.service_time_under(&workload, eff, carve)
-        };
-        let mut dur = dur_under(t.carve.as_ref());
+        if t.split_pending {
+            // The Partial policy fired on a busy pod: split off the idle
+            // machines and serve this batch on the fresh side carve.
+            if let Some(out) =
+                self.try_split(router, pod, &batch, &workload, ready, service, state)
+            {
+                return out;
+            }
+            // No machine-aligned split exists (or the model cannot plan
+            // the subset, or the predicted gain does not clear the
+            // threshold): fall back to the pod-wide transition plain
+            // hysteresis would have made at this point.
+            t = router.pods[pod].recarver.force(ready, free_at, preferred);
+        }
+        let mut dur = self.service_duration(service, &workload, batch.size(), t.carve.as_ref());
         if !dur.is_finite() {
             // The live carve cannot serve this batch at all (e.g. a
             // patch granularity larger than the sequence); dispatching
@@ -714,7 +764,7 @@ impl<'a> ServeSession<'a> {
             let pref_dur = if t.carve == preferred {
                 dur
             } else {
-                dur_under(preferred.as_ref())
+                self.service_duration(service, &workload, batch.size(), preferred.as_ref())
             };
             if !pref_dur.is_finite() {
                 for r in &batch.requests {
@@ -763,6 +813,257 @@ impl<'a> ServeSession<'a> {
             })
             .collect()
     }
+
+    /// Modeled service seconds for `batch_size` requests of `workload`
+    /// under `carve`: with co-batching on, the batch scatters across the
+    /// carve's replica groups and the makespan is one group's largest
+    /// shard; otherwise the whole batch serves on one group (the
+    /// pre-redesign behaviour).
+    fn service_duration(
+        &self,
+        service: &dyn ServiceModel,
+        workload: &Workload,
+        batch_size: usize,
+        carve: Option<&ParallelSpec>,
+    ) -> f64 {
+        let eff = if self.config.co_batch {
+            carve
+                .map(|s| s.replica_shards(batch_size)[0])
+                .unwrap_or(batch_size)
+        } else {
+            batch_size
+        };
+        service.service_time_under(workload, eff, carve)
+    }
+
+    /// Attempt a group-granular split on `pod` (the `Partial` policy
+    /// fired while the pod was busy): narrow the busy carve to its
+    /// in-flight machine footprint, re-carve the idle machines to the
+    /// model's subset plan, and serve this batch on the fresh side
+    /// generation — no drain barrier is paid. Returns `None` when no
+    /// machine-aligned split exists, the model cannot plan the subset,
+    /// or the predicted gain ([`Planner::partial_recarve_gain`]) does
+    /// not clear the policy threshold; the caller then falls back to a
+    /// pod-wide transition.
+    ///
+    /// Modeling simplification: the busy footprint is taken as **one
+    /// replica's groups** — exact for the serial dispatch path (a batch
+    /// serves on one replica group). A *co-batched* in-flight batch may
+    /// actually occupy every replica group, in which case the split is
+    /// optimistic by up to that batch's residual service time on the
+    /// "idle" machines (the router does not track per-group occupancy;
+    /// a finer model would narrow to the scattered footprint).
+    #[allow(clippy::too_many_arguments)]
+    fn try_split(
+        &self,
+        router: &mut Router,
+        pod: usize,
+        batch: &Batch,
+        workload: &Workload,
+        ready: f64,
+        service: &dyn ServiceModel,
+        state: &mut ServeState,
+    ) -> Option<Vec<Completion>> {
+        let threshold = match router.pods[pod].recarver.policy {
+            RecarvePolicy::Partial { threshold, .. } => threshold,
+            _ => return None,
+        };
+        let gpm = router.pods[pod].cluster.gpus_per_machine;
+        let machines = router.pods[pod].cluster.machines;
+        let live = router.pods[pod].recarver.carve()?;
+        // machine-footprint accounting: the in-flight batch occupies one
+        // replica's worth of groups, rounded up to whole machines; only
+        // what is left can re-carve
+        let narrowed = live.narrowed_to_machines(gpm)?;
+        let busy = narrowed.total_ranks() / gpm;
+        let idle = machines.checked_sub(busy).filter(|&i| i > 0)?;
+        let side_plan = service.plan_spec_on(workload, idle)?;
+        let gain = service.partial_recarve_gain(workload, &live, idle)?;
+        if gain < threshold {
+            return None;
+        }
+        let dur = self.service_duration(service, workload, batch.size(), Some(&side_plan));
+        if !dur.is_finite() {
+            return None;
+        }
+        router.pods[pod]
+            .recarver
+            .split(ready, Some(narrowed), Some(side_plan), busy, idle);
+        let (_, done) = router.pods[pod].recarver.dispatch_side(ready, dur);
+        if self.config.co_batch && batch.size() > 1 && side_plan.batch_replicas > 1 {
+            state.co_batched += 1;
+        }
+        *state.plan_histogram.entry(side_plan.label()).or_insert(0) += batch.size();
+        router.pods[pod].recarver.record_side_served(batch.size());
+        Some(completions_for(batch, workload, done, pod))
+    }
+
+    /// Dispatch onto a pod running two carve generations: re-unify when
+    /// the whole pod is idle ([`crate::cluster::recarve::EpochTracker::merge`]),
+    /// otherwise route the batch to the generation completing it
+    /// earliest — or, with co-batching on, scatter its shards across
+    /// **both** generations when the gathered result lands sooner than
+    /// either generation alone (cross-epoch co-batching).
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch_split(
+        &self,
+        router: &mut Router,
+        pod: usize,
+        batch: Batch,
+        workload: &Workload,
+        ready: f64,
+        service: &dyn ServiceModel,
+        preferred: Option<ParallelSpec>,
+        state: &mut ServeState,
+    ) -> Vec<Completion> {
+        let main_free = router.pods[pod].free_at;
+        let side_free = router.pods[pod]
+            .recarver
+            .side_free_at()
+            .expect("dispatch_split on an unsplit pod");
+
+        // Whole pod idle: merge the side generation back and serve this
+        // batch under the re-admitted full-footprint carve.
+        if main_free <= ready && side_free <= ready {
+            let setup = router.pods[pod].recarver.merge(ready);
+            router.commit_recarve(pod, ready, setup);
+            let free_at = router.pods[pod].free_at;
+            let t = router.pods[pod]
+                .recarver
+                .on_dispatch(ready, free_at, preferred, None);
+            let dur = self.service_duration(service, workload, batch.size(), t.carve.as_ref());
+            if !dur.is_finite() {
+                for r in &batch.requests {
+                    state.rejected.push((
+                        r.id,
+                        format!(
+                            "no plan can serve workload '{}' on this pod after \
+                             re-unification",
+                            workload.name
+                        ),
+                    ));
+                }
+                return Vec::new();
+            }
+            if let Some(label) = t
+                .carve
+                .map(|s| s.label())
+                .or_else(|| service.plan_label(workload))
+            {
+                *state.plan_histogram.entry(label).or_insert(0) += batch.size();
+            }
+            router.pods[pod].recarver.record_served(batch.size());
+            let out = router.dispatch(pod, ready, dur);
+            return completions_for(&batch, workload, out.done, pod);
+        }
+
+        let main_carve = router.pods[pod].recarver.carve();
+        let side_carve = router.pods[pod].recarver.side_carve();
+        let b = batch.size();
+        let dur_main = self.service_duration(service, workload, b, main_carve.as_ref());
+        let dur_side = self.service_duration(service, workload, b, side_carve.as_ref());
+        let fin = |free: f64, dur: f64| {
+            if dur.is_finite() {
+                free.max(ready) + dur
+            } else {
+                f64::INFINITY
+            }
+        };
+        let fin_main = fin(main_free, dur_main);
+        let fin_side = fin(side_free, dur_side);
+
+        // Cross-epoch co-batching: shards of one scattered batch span
+        // the group-granular re-carve boundary when that helps.
+        if self.config.co_batch && b > 1 && dur_main.is_finite() && dur_side.is_finite() {
+            let rm = main_carve.map_or(1, |s| s.batch_replicas).max(1);
+            let rs = side_carve.map_or(1, |s| s.batch_replicas).max(1);
+            // proportional to each generation's replica width, with both
+            // generations guaranteed a non-empty shard
+            let b_main = (b * rm).div_ceil(rm + rs).clamp(1, b - 1);
+            let b_side = b - b_main;
+            let dm = self.service_duration(service, workload, b_main, main_carve.as_ref());
+            let ds = self.service_duration(service, workload, b_side, side_carve.as_ref());
+            let fin_cross = fin(main_free, dm).max(fin(side_free, ds));
+            if fin_cross < fin_main.min(fin_side) {
+                let out_m = router.dispatch(pod, ready, dm);
+                let (_, done_s) = router.pods[pod].recarver.dispatch_side(ready, ds);
+                // the batch gathers when its last shard finishes
+                let done = out_m.done.max(done_s);
+                state.co_batched += 1;
+                state.co_batched_cross += 1;
+                if let Some(s) = main_carve {
+                    *state.plan_histogram.entry(s.label()).or_insert(0) += b_main;
+                }
+                if let Some(s) = side_carve {
+                    *state.plan_histogram.entry(s.label()).or_insert(0) += b_side;
+                }
+                router.pods[pod].recarver.record_served(b_main);
+                router.pods[pod].recarver.record_side_served(b_side);
+                return completions_for(&batch, workload, done, pod);
+            }
+        }
+
+        if !fin_main.is_finite() && !fin_side.is_finite() {
+            for r in &batch.requests {
+                state.rejected.push((
+                    r.id,
+                    format!(
+                        "no live carve generation can serve workload '{}' on this pod \
+                         (modeled service time is infinite under both the main and the \
+                         side carve)",
+                        workload.name
+                    ),
+                ));
+            }
+            return Vec::new();
+        }
+        if fin_side <= fin_main {
+            if self.config.co_batch && b > 1 && side_carve.is_some_and(|s| s.batch_replicas > 1) {
+                state.co_batched += 1;
+            }
+            if let Some(s) = side_carve {
+                *state.plan_histogram.entry(s.label()).or_insert(0) += b;
+            }
+            let (_, done) = router.pods[pod].recarver.dispatch_side(ready, dur_side);
+            router.pods[pod].recarver.record_side_served(b);
+            completions_for(&batch, workload, done, pod)
+        } else {
+            if self.config.co_batch && b > 1 && main_carve.is_some_and(|s| s.batch_replicas > 1) {
+                state.co_batched += 1;
+            }
+            if let Some(label) = main_carve
+                .map(|s| s.label())
+                .or_else(|| service.plan_label(workload))
+            {
+                *state.plan_histogram.entry(label).or_insert(0) += b;
+            }
+            let out = router.dispatch(pod, ready, dur_main);
+            router.pods[pod].recarver.record_served(b);
+            completions_for(&batch, workload, out.done, pod)
+        }
+    }
+}
+
+/// One [`Completion`] per request of `batch`, all finishing at `done`
+/// (batched requests complete together; a cross-epoch scatter gathers at
+/// its last shard).
+fn completions_for(
+    batch: &Batch,
+    workload: &Workload,
+    done: f64,
+    pod: usize,
+) -> Vec<Completion> {
+    batch
+        .requests
+        .iter()
+        .map(|r| Completion {
+            id: r.id,
+            workload: workload.name,
+            arrival: r.arrival,
+            done,
+            pod,
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -900,5 +1201,288 @@ mod tests {
             assert_eq!(p.recarver.policy, RecarvePolicy::Never);
             assert_eq!(p.recarver.setup_cost, 0.125);
         }
+    }
+
+    // ---- group-granular (partial) re-carving ------------------------------
+
+    use crate::config::SpDegrees;
+    use crate::coordinator::engine::ServeReport;
+
+    fn short_spec() -> ParallelSpec {
+        ParallelSpec::new(1, 4, SpDegrees::new(8, 1))
+    }
+
+    fn narrowed_spec() -> ParallelSpec {
+        ParallelSpec::new(1, 1, SpDegrees::new(8, 1))
+    }
+
+    fn video_full() -> ParallelSpec {
+        ParallelSpec::with_pp(2, 2, 1, SpDegrees::new(8, 1))
+    }
+
+    fn video_sub() -> ParallelSpec {
+        // the 3-machine subset plan: one-machine pipeline stages
+        ParallelSpec::with_pp(1, 3, 1, SpDegrees::new(8, 1))
+    }
+
+    fn is_video(w: &Workload) -> bool {
+        w.name.starts_with("cfg-video")
+    }
+
+    /// Scripted two-workload model with hand-set times per
+    /// (workload, carve), so every split/merge/routing decision below is
+    /// hand-checkable.
+    struct SplitScript;
+
+    impl CostModel for SplitScript {
+        fn service_time(&self, w: &Workload, batch: usize) -> f64 {
+            let b = batch as f64;
+            if is_video(w) {
+                b
+            } else {
+                2.0 * b
+            }
+        }
+
+        fn service_time_under(
+            &self,
+            w: &Workload,
+            batch: usize,
+            carve: Option<&ParallelSpec>,
+        ) -> f64 {
+            let b = batch as f64;
+            let Some(c) = carve else {
+                return self.service_time(w, batch);
+            };
+            if is_video(w) {
+                if *c == video_full() {
+                    b
+                } else if *c == video_sub() {
+                    1.5 * b
+                } else {
+                    4.0 * b // stale under a short carve
+                }
+            } else if *c == short_spec() || *c == narrowed_spec() {
+                2.0 * b
+            } else {
+                3.0 * b // short under a video carve
+            }
+        }
+    }
+
+    impl Planner for SplitScript {
+        fn plan_spec(&self, w: &Workload) -> Option<ParallelSpec> {
+            Some(if is_video(w) { video_full() } else { short_spec() })
+        }
+
+        fn plan_label(&self, w: &Workload) -> Option<String> {
+            self.plan_spec(w).map(|s| s.label())
+        }
+
+        fn recarve_gain(&self, _w: &Workload, _from: &ParallelSpec) -> Option<f64> {
+            Some(0.9)
+        }
+
+        fn plan_spec_on(&self, w: &Workload, machines: usize) -> Option<ParallelSpec> {
+            (is_video(w) && machines == 3).then(video_sub)
+        }
+
+        fn partial_recarve_gain(
+            &self,
+            _w: &Workload,
+            _from: &ParallelSpec,
+            idle_machines: usize,
+        ) -> Option<f64> {
+            (idle_machines == 3).then_some(0.9)
+        }
+    }
+
+    fn partial_session(reqs: Vec<Request>, co_batch: bool) -> (ServeReport, Router) {
+        let mut router = Router::new(4, 8, 1, SpAlgo::SwiftFusion);
+        router.set_recarve_with_setup(
+            RecarvePolicy::Partial { threshold: 0.15, window: 1 },
+            0.25,
+        );
+        let report = ServeSession::new(
+            ServeConfig::new()
+                .batch(BatchPolicy { max_batch: 1, window: 0.0 })
+                .co_batch(co_batch),
+            &SplitScript,
+        )
+        .run(&mut router, reqs);
+        (report, router)
+    }
+
+    #[test]
+    fn partial_policy_splits_a_busy_pod_and_serves_both_generations() {
+        let reqs = vec![
+            req(0, Workload::short_image_4k(), 0.0), // adopts the short carve, 2.0 s
+            req(1, Workload::cfg_video_96k(), 0.5),  // busy pod → split, side serves
+            req(2, Workload::short_image_4k(), 0.8), // routed to the narrowed main
+        ];
+        let (report, router) = partial_session(reqs, false);
+        assert_eq!(report.metrics.completed(), 3);
+        // r0: start 0, 2.0 s on the admission short carve → 2.0
+        // r1: split at 0.5 (no drain), 0.25 setup, 1.5 s on the side → 2.25
+        // r2: main busy till 2.0; short under the narrowed carve → 4.0
+        let mut done: Vec<(u64, f64)> =
+            report.completions.iter().map(|c| (c.0, c.2)).collect();
+        done.sort_unstable_by_key(|&(id, _)| id);
+        assert_eq!(done, vec![(0, 2.0), (1, 2.25), (2, 4.0)]);
+        assert_eq!(report.recarve.partial_splits, 1);
+        assert_eq!(report.recarve.recarve_count, 0, "no pod-wide transition paid");
+        assert_eq!(report.recarve.drain_time, 0.0, "group barriers drain nothing");
+        assert_eq!(report.recarve.setup_time, 0.25);
+        assert_eq!(report.recarve.merges, 0);
+        assert_eq!(report.recarve.group_epochs.len(), 1);
+        let (gpod, ge) = &report.recarve.group_epochs[0];
+        assert_eq!(*gpod, 0);
+        assert_eq!((ge.base_machine, ge.machines), (1, 3));
+        assert_eq!(ge.plan, Some(video_sub()));
+        assert_eq!(ge.started_at, 0.75);
+        assert_eq!(ge.served, 1);
+        assert_eq!(ge.merged_at, None, "still live at end of run");
+        assert!(router.pods[0].recarver.is_split());
+        // histogram: one request under each of the three carves
+        assert_eq!(report.plan_histogram.get(&short_spec().label()), Some(&1));
+        assert_eq!(report.plan_histogram.get(&video_sub().label()), Some(&1));
+        assert_eq!(report.plan_histogram.get(&narrowed_spec().label()), Some(&1));
+        // observability: the partial block serializes (only) when it fired
+        let json = crate::util::json::to_string(&report.to_json());
+        assert!(json.contains("\"partial\":{"), "{json}");
+        assert!(json.contains("\"splits\":1"), "{json}");
+    }
+
+    #[test]
+    fn split_pod_reunifies_when_idle_and_readmits_for_free() {
+        let reqs = vec![
+            req(0, Workload::short_image_4k(), 0.0),
+            req(1, Workload::cfg_video_96k(), 0.5), // split
+            req(2, Workload::cfg_video_96k(), 10.0), // both idle → merge + re-admit
+        ];
+        let (report, router) = partial_session(reqs, false);
+        assert_eq!(report.metrics.completed(), 3);
+        assert_eq!(report.recarve.partial_splits, 1);
+        assert_eq!(report.recarve.merges, 1);
+        assert_eq!(report.recarve.group_epochs[0].1.merged_at, Some(10.0));
+        assert!(!router.pods[0].recarver.is_split());
+        // the merge pays one more re-setup (free_at → 10.25), then the
+        // re-admitted full-pod video plan serves r2 in 1.0 s
+        let r2 = report.completions.iter().find(|c| c.0 == 2).unwrap();
+        assert_eq!(r2.2, 11.25);
+        assert_eq!(report.recarve.setup_time, 0.5, "split + merge setups");
+        assert!(report
+            .recarve
+            .epochs
+            .iter()
+            .any(|(_, e)| e.plan == Some(video_full())));
+    }
+
+    #[test]
+    fn cross_epoch_co_batching_spans_both_generations() {
+        // A split pod with a busy main generation: a 4-request short
+        // batch either queues whole on one generation, or (co-batching)
+        // scatters 2 + 2 across the re-carve boundary and gathers.
+        let run = |co: bool| {
+            let mut router = Router::new(4, 8, 1, SpAlgo::SwiftFusion);
+            router.set_recarve_with_setup(
+                RecarvePolicy::Partial { threshold: 0.15, window: 1 },
+                0.0,
+            );
+            router.pods[0]
+                .recarver
+                .on_dispatch(0.0, 0.0, Some(narrowed_spec()), None);
+            router.pods[0]
+                .recarver
+                .split(0.0, Some(narrowed_spec()), Some(video_sub()), 1, 3);
+            router.dispatch(0, 0.0, 0.5); // main busy till 0.5 (no merge)
+            let reqs: Vec<Request> = (0..4)
+                .map(|i| req(i, Workload::short_image_4k(), i as f64 * 0.1))
+                .collect();
+            ServeSession::new(
+                ServeConfig::new()
+                    .batch(BatchPolicy { max_batch: 4, window: 1.0 })
+                    .co_batch(co),
+                &SplitScript,
+            )
+            .run(&mut router, reqs)
+        };
+        let off = run(false);
+        let on = run(true);
+        assert_eq!(off.metrics.completed(), 4);
+        assert_eq!(on.metrics.completed(), 4);
+        // off: whole batch on main → max(0.5, 0.3) + 2*4 = 8.5
+        assert_eq!((off.co_batched, off.co_batched_cross), (0, 0));
+        assert_eq!(off.metrics.horizon, 8.5);
+        // on: 2 shards on main (busy till 0.5, 2*2 s) and 2 on the side
+        // (free, 3*2 s) → gather at max(4.5, 6.3) = 6.3
+        assert_eq!((on.co_batched, on.co_batched_cross), (1, 1));
+        assert_eq!(on.metrics.horizon, 6.3);
+        assert_eq!(on.plan_histogram.get(&narrowed_spec().label()), Some(&2));
+        assert_eq!(on.plan_histogram.get(&video_sub().label()), Some(&2));
+        // all four requests gather at the same instant
+        assert!(on.completions.iter().all(|c| c.2 == 6.3));
+        let json = crate::util::json::to_string(&on.to_json());
+        assert!(json.contains("\"co_batched_cross\":1"), "{json}");
+        assert!(!crate::util::json::to_string(&off.to_json()).contains("co_batched_cross"));
+    }
+
+    #[test]
+    fn earliest_finish_prices_pods_by_their_live_carve() {
+        // Satellite regression: a re-carve-averse (Never) pod frozen on a
+        // carve that serves this workload slowly must *lose* a dispatch
+        // it used to win under preferred-plan pricing.
+        struct TwoCarve;
+        impl CostModel for TwoCarve {
+            fn service_time(&self, _w: &Workload, batch: usize) -> f64 {
+                2.0 * batch as f64
+            }
+            fn service_time_under(
+                &self,
+                _w: &Workload,
+                batch: usize,
+                carve: Option<&ParallelSpec>,
+            ) -> f64 {
+                match carve {
+                    Some(c) if *c == short_spec() => 10.0 * batch as f64, // stale
+                    _ => 2.0 * batch as f64,
+                }
+            }
+        }
+        impl Planner for TwoCarve {
+            fn plan_spec(&self, _w: &Workload) -> Option<ParallelSpec> {
+                Some(video_full())
+            }
+        }
+        let mut router = Router::new(4, 8, 2, SpAlgo::SwiftFusion);
+        router.set_recarve(RecarvePolicy::Never);
+        // pod 0: idle, but frozen on the stale carve it admitted
+        router.pods[0]
+            .recarver
+            .on_dispatch(0.0, 0.0, Some(short_spec()), None);
+        // pod 1: on the preferred carve, busy until t = 1
+        router.pods[1]
+            .recarver
+            .on_dispatch(0.0, 0.0, Some(video_full()), None);
+        router.dispatch(1, 0.0, 1.0);
+        let report = ServeSession::new(
+            ServeConfig::new()
+                .batch(BatchPolicy { max_batch: 1, window: 0.0 })
+                .dispatch(Arc::new(EarliestFinish)),
+            &TwoCarve,
+        )
+        .run(&mut router, vec![req(0, Workload::cfg_video_96k(), 0.0)]);
+        // preferred-plan pricing: pod 0 wins (0 + 2 < 1 + 2) and serves a
+        // 10 s stale generation. Live-carve pricing: pod 1 finishes at
+        // 1 + 2 = 3 and wins.
+        assert_eq!(report.metrics.completed(), 1);
+        assert_eq!(report.completions[0].2, 3.0, "routed around the frozen pod");
+    }
+
+    #[test]
+    fn partial_config_summary_renders() {
+        let cfg = ServeConfig::new()
+            .recarve(RecarvePolicy::Partial { threshold: 0.15, window: 2 });
+        assert!(cfg.summary().contains("recarve=partial(15% x 2)"), "{}", cfg.summary());
     }
 }

@@ -92,16 +92,24 @@
 //! ([`cluster::recarve`]) — when traffic shifts (short image bursts
 //! giving way to long CFG video), the pod's
 //! [`cluster::recarve::RecarvePolicy`] (`--recarve
-//! never|on-idle|hysteresis`, hysteresis gated by
+//! never|on-idle|hysteresis|partial`, the gated policies driven by
 //! [`analysis::recarve_gain`] over `--recarve-threshold`/`-window`) may
 //! drain its in-flight groups, pay a modeled re-setup cost, and rebuild
-//! the carved sub-meshes for the new plan. No request ever spans two
-//! carves, numerics stay oracle-exact across the boundary
+//! the carved sub-meshes for the new plan. The drain barrier is
+//! **group-granular** under `--recarve partial`: a busy pod *splits*
+//! instead of draining — the machines carrying in-flight work keep
+//! serving under the narrowed old carve while the idle machines
+//! re-carve immediately ([`cluster::plan::ParallelPlan::build_subset`],
+//! [`analysis::partial_recarve_gain`]-gated), the pod running two carve
+//! generations concurrently until a lull re-unifies it; with
+//! `--co-batch`, shards of one scattered batch may even span the
+//! re-carve boundary. No request ever spans two carves, numerics stay
+//! oracle-exact across both pod-wide and partial boundaries
 //! (`rust/tests/sp_property.rs`), and the serving report carries the
-//! epoch log, drain/setup totals, and a per-carve plan histogram.
-//! Epochs extend to *fleet* scope under cross-pod re-balancing:
-//! migrating a machine resizes two pods at once, both re-admitting
-//! footprint-sized carves behind the migration barrier.
+//! epoch log, drain/setup totals, split/merge counts, and a per-carve
+//! plan histogram. Epochs extend to *fleet* scope under cross-pod
+//! re-balancing: migrating a machine resizes two pods at once, both
+//! re-admitting footprint-sized carves behind the migration barrier.
 //!
 //! Numeric validation of all of this is hermetic: `ExecMode::HostNumeric`
 //! backs the tile contract with in-process Algorithm-2 kernels

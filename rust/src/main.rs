@@ -100,11 +100,16 @@ Dynamic re-carving flags (serve):
                              never (freeze the admission-time carve),
                              on-idle (re-carve only when the pod is idle),
                              hysteresis (re-carve after a sustained
-                             predicted gain; pays drain + re-setup)
-  --recarve-threshold F      hysteresis: minimum predicted fractional gain
-                             per step (default 0.15 = 15%)
-  --recarve-window N         hysteresis: consecutive gainful dispatches
-                             required before re-carving (default 2)
+                             predicted gain; pays drain + re-setup),
+                             partial (hysteresis-gated, but a busy pod
+                             splits: only its idle machines re-carve —
+                             no drain barrier — while the busy carve
+                             keeps serving; the pod re-unifies when idle)
+  --recarve-threshold F      hysteresis/partial: minimum predicted
+                             fractional gain per step (default 0.15 = 15%)
+  --recarve-window N         hysteresis/partial: consecutive gainful
+                             dispatches required before re-carving
+                             (default 2)
 
 Scheduler flags (serve): every run prints its effective config as one
 `serve: batch=... plan=... recarve=... dispatch=...` line, so a run is
@@ -314,8 +319,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let threshold = args.f64_or("recarve-threshold", 0.15)?;
     let window = args.usize_or("recarve-window", 2)?;
     anyhow::ensure!(window > 0, "--recarve-window must be >= 1");
-    let recarve_name =
-        args.enum_or("recarve", "free", &["free", "never", "on-idle", "hysteresis"])?;
+    let recarve_name = args.enum_or(
+        "recarve",
+        "free",
+        &["free", "never", "on-idle", "hysteresis", "partial"],
+    )?;
     let recarve = RecarvePolicy::from_name(recarve_name, threshold, window)
         .expect("name validated by enum_or");
     let dispatch_name =
@@ -422,6 +430,34 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 e.served
             );
         }
+    }
+    if rc.partial_splits > 0 {
+        println!(
+            "partial re-carves: {} split(s), {} merge(s)",
+            rc.partial_splits, rc.merges
+        );
+        for (pod, g) in &rc.group_epochs {
+            let merged = g
+                .merged_at
+                .map(|t| format!("merged {}", fmt_time(t)))
+                .unwrap_or_else(|| "live".to_string());
+            println!(
+                "  pod {pod} side {}: {:<28} machines [{}, {})  opened {:>10}  \
+                 served {:>5}  {merged}",
+                g.index,
+                g.label(),
+                g.base_machine,
+                g.base_machine + g.machines,
+                fmt_time(g.started_at),
+                g.served
+            );
+        }
+    }
+    if report.co_batched_cross > 0 {
+        println!(
+            "cross-epoch co-batched dispatches: {}",
+            report.co_batched_cross
+        );
     }
     print!("{}", metrics.report());
     Ok(())

@@ -84,9 +84,12 @@ pub fn guided_attention_distributed(
 
     // One thread per cluster rank; each runs its group's schedule. The
     // returned pair is (conditional shard, unconditional shard) — a
-    // single-branch group fills only its side.
+    // single-branch group fills only its side. Ranks outside the plan's
+    // carve (a subset plan of a pod running two carve generations) idle.
     let run = run_cluster(&plan.cluster, mode, |ctx| {
-        let group = plan.group_of(ctx.rank);
+        let Some(group) = plan.try_group_of(ctx.rank) else {
+            return (None, None);
+        };
         let local = group.local_rank(ctx.rank);
         let params = SpParams { shape, chunk, mesh: group.mesh().clone() };
         let run_branch = |ctx: &mut crate::cluster::exec::RankCtx, qkv: &BranchQkv| {
@@ -155,7 +158,10 @@ pub fn hybrid_layer_makespan(
     let ls = shape.l / sp_ranks;
     let algo = plan.algo;
     let run = run_cluster(&plan.cluster, &ExecMode::Timing, |ctx| {
-        let group = plan.group_of(ctx.rank);
+        // ranks outside a subset plan's carve idle (other generation)
+        let Some(group) = plan.try_group_of(ctx.rank) else {
+            return;
+        };
         let params = SpParams { shape, chunk, mesh: group.mesh().clone() };
         let branches = match group.role {
             BranchRole::Both => cfg_evals,

@@ -293,7 +293,10 @@ pub fn guided_pipefusion_step(
     let warmup = caches.is_none();
 
     let run = run_cluster(&plan.cluster, mode, |ctx| {
-        let group = plan.group_of(ctx.rank);
+        // ranks outside a subset plan's carve idle (other generation)
+        let Some(group) = plan.try_group_of(ctx.rank) else {
+            return Vec::new();
+        };
         let flows = ctx.cluster().gpus_per_machine;
         let run_one = |ctx: &mut RankCtx,
                        branch: &'static str,
@@ -456,7 +459,10 @@ pub fn pipefusion_layer_makespan(
     let p = PipeParams { shape, chunk, patches };
     let lp = p.patch_len();
     let run = run_cluster(&plan.cluster, &ExecMode::Timing, |ctx| {
-        let group = plan.group_of(ctx.rank);
+        // ranks outside a subset plan's carve idle (other generation)
+        let Some(group) = plan.try_group_of(ctx.rank) else {
+            return;
+        };
         let flows = ctx.cluster().gpus_per_machine;
         let branches = match group.role {
             BranchRole::Both => cfg_evals,

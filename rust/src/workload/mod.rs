@@ -162,11 +162,22 @@ pub fn bimodal_trace(
     phases: usize,
     per_phase: usize,
 ) -> Vec<Request> {
+    let spec: Vec<(&Workload, usize)> = (0..phases)
+        .map(|p| (if p % 2 == 0 { short } else { long }, per_phase))
+        .collect();
+    phased_trace(&spec)
+}
+
+/// Deterministic phased trace with *asymmetric* phases: one arrival per
+/// second, each `(workload, count)` phase in order — e.g. dense short
+/// phases punctuated by small long-video bursts, the mixed traffic shape
+/// group-granular re-carving (`benches/fig_partial_recarve.rs`) is built
+/// for. [`bimodal_trace`] is the equal-phase special case.
+pub fn phased_trace(phases: &[(&Workload, usize)]) -> Vec<Request> {
     let mut reqs = Vec::new();
-    for phase in 0..phases {
-        let w = if phase % 2 == 0 { short } else { long };
-        for i in 0..per_phase {
-            let id = (phase * per_phase + i) as u64;
+    for &(w, count) in phases {
+        for _ in 0..count {
+            let id = reqs.len() as u64;
             reqs.push(Request { id, workload: w.clone(), arrival: id as f64, seed: id });
         }
     }
@@ -260,6 +271,30 @@ mod tests {
         for (i, r) in reqs.iter().enumerate() {
             assert_eq!(r.id, i as u64);
             assert_eq!(r.arrival, i as f64);
+        }
+    }
+
+    #[test]
+    fn phased_trace_supports_asymmetric_phases() {
+        let s = Workload::short_image_4k();
+        let l = Workload::cfg_video_96k();
+        let reqs = phased_trace(&[(&s, 3), (&l, 1), (&s, 2)]);
+        assert_eq!(reqs.len(), 6);
+        let names: Vec<&str> = reqs.iter().map(|r| r.workload.name).collect();
+        assert_eq!(
+            names,
+            vec![s.name, s.name, s.name, l.name, s.name, s.name]
+        );
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert_eq!(r.arrival, i as f64, "one arrival per second");
+        }
+        // bimodal_trace is the equal-phase special case
+        let a = bimodal_trace(&s, &l, 3, 4);
+        let b = phased_trace(&[(&s, 4), (&l, 4), (&s, 4)]);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!((x.id, x.arrival, x.workload.name), (y.id, y.arrival, y.workload.name));
         }
     }
 

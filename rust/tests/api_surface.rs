@@ -10,6 +10,7 @@
 
 use std::sync::Arc;
 
+use swiftfusion::cluster::recarve::{GroupEpoch, PartialRecarve};
 use swiftfusion::config::{ClusterSpec, ParallelSpec, ParallelSpecError};
 use swiftfusion::coordinator::batcher::{Batch, BatchPolicy};
 use swiftfusion::coordinator::engine::{serve, ServeReport, SimService};
@@ -107,6 +108,18 @@ fn pin_planner(
     (p.admit(w), p.plan_label(w), p.plan_spec(w), p.recarve_gain(w, from))
 }
 
+/// The subset-planning half of [`Planner`] (group-granular re-carving):
+/// footprint-sized plan resolution and the split-gain prediction.
+#[allow(clippy::type_complexity)]
+fn pin_subset_planner(
+    p: &dyn Planner,
+    w: &Workload,
+    from: &ParallelSpec,
+    machines: usize,
+) -> (Option<ParallelSpec>, Option<f64>) {
+    (p.plan_spec_on(w, machines), p.partial_recarve_gain(w, from, machines))
+}
+
 #[test]
 fn trait_method_signatures_are_pinned() {
     let svc = SimService::auto_plan(ClusterSpec::new(2, 2), SpAlgo::SwiftFusion);
@@ -119,6 +132,21 @@ fn trait_method_signatures_are_pinned() {
     assert!(admit.is_ok());
     assert!(label.is_some() && plan.is_some());
     let _ = gain;
+    // subset planning: an auto-planning SimService sizes a carve to a
+    // 1-machine subset of its 2-machine pod and predicts the split gain
+    let (sub, sub_gain) = pin_subset_planner(&svc, &w, &spec, 1);
+    assert!(sub.is_some_and(|s| s.total_ranks() == 2));
+    assert!(sub_gain.is_some());
+    // plan-agnostic models keep the do-not-plan defaults
+    struct NoPlan;
+    impl CostModel for NoPlan {
+        fn service_time(&self, _w: &Workload, batch: usize) -> f64 {
+            batch as f64
+        }
+    }
+    impl Planner for NoPlan {}
+    let (sub, sub_gain) = pin_subset_planner(&NoPlan, &w, &spec, 1);
+    assert!(sub.is_none() && sub_gain.is_none());
 }
 
 /// Public data-shape pins: constructing these structs field-by-field
@@ -145,6 +173,27 @@ fn report_and_event_shapes_are_pinned() {
     let _: &Vec<(u64, String)> = &state.rejected;
     let _: &Vec<RebalanceEvent> = &state.rebalances;
     assert_eq!(state.co_batched, 0);
+    assert_eq!(state.co_batched_cross, 0);
+
+    // group-granular re-carving shapes
+    let ge = GroupEpoch {
+        index: 0,
+        base_machine: 1,
+        machines: 3,
+        plan: None,
+        started_at: 2.0,
+        served: 4,
+        merged_at: Some(9.0),
+    };
+    assert_eq!(ge.label(), "single-mesh");
+    let pr = PartialRecarve {
+        narrowed: None,
+        side: None,
+        base_machine: 1,
+        machines: 3,
+        setup: 0.05,
+    };
+    assert_eq!(pr.base_machine + pr.machines, 4);
 
     let batch = Batch {
         requests: vec![Request {

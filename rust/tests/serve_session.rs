@@ -130,6 +130,174 @@ fn multi_pod_completions_are_in_completion_time_order() {
 }
 
 // ---------------------------------------------------------------------------
+// Group-granular (partial) re-carving
+// ---------------------------------------------------------------------------
+
+/// The recarve_serving.rs scripted model, duplicated here so the golden
+/// below is hermetic: preferred-plan dispatches cost 0.5 s, stale ones
+/// 2 s, every cross-plan gain prediction is 0.75, and no subset planning
+/// is offered (plan_spec_on stays at its `None` default).
+struct StubService;
+
+impl StubService {
+    fn spec_for(w: &Workload) -> ParallelSpec {
+        if w.name.starts_with("flux") {
+            ParallelSpec::new(1, 4, SpDegrees::new(8, 1))
+        } else {
+            ParallelSpec::with_pp(2, 2, 1, SpDegrees::new(8, 1))
+        }
+    }
+}
+
+impl CostModel for StubService {
+    fn service_time(&self, _w: &Workload, batch: usize) -> f64 {
+        0.5 * batch as f64
+    }
+
+    fn service_time_under(
+        &self,
+        w: &Workload,
+        batch: usize,
+        carve: Option<&ParallelSpec>,
+    ) -> f64 {
+        if carve.copied() == Some(Self::spec_for(w)) {
+            0.5 * batch as f64
+        } else {
+            2.0 * batch as f64
+        }
+    }
+}
+
+impl Planner for StubService {
+    fn plan_spec(&self, w: &Workload) -> Option<ParallelSpec> {
+        Some(Self::spec_for(w))
+    }
+
+    fn plan_label(&self, w: &Workload) -> Option<String> {
+        Some(Self::spec_for(w).label())
+    }
+
+    fn recarve_gain(&self, _w: &Workload, _from: &ParallelSpec) -> Option<f64> {
+        Some(0.75)
+    }
+}
+
+fn scripted_trace() -> Vec<Request> {
+    let mk = |id: u64, w: Workload, arrival: f64| Request { id, workload: w, arrival, seed: id };
+    vec![
+        mk(0, Workload::flux_3072(), 0.0),
+        mk(1, Workload::flux_3072(), 1.0),
+        mk(2, Workload::cogvideo_20s(), 2.0),
+        mk(3, Workload::cogvideo_20s(), 3.0),
+        mk(4, Workload::cogvideo_20s(), 4.0),
+        mk(5, Workload::flux_3072(), 5.0),
+    ]
+}
+
+/// Golden: with partial re-carving **off** (`--recarve hysteresis`), the
+/// scripted hysteresis run through `ServeSession` renders the exact
+/// byte string the PR-3 golden pinned — the group-granular machinery in
+/// the tree perturbs nothing unless the `partial` policy is selected,
+/// and none of its fields (`partial`, `co_batched_cross`, group epochs)
+/// leak into the serialized report.
+#[test]
+fn hysteresis_golden_is_bit_for_bit_unchanged_when_partial_is_off() {
+    let mut router = Router::new(4, 8, 1, SpAlgo::SwiftFusion);
+    let config = ServeConfig::new()
+        .batch(BatchPolicy { max_batch: 1, window: 0.0 })
+        .recarve(RecarvePolicy::Hysteresis { threshold: 0.5, window: 2 })
+        .recarve_setup(0.25);
+    let report = ServeSession::new(config, &StubService).run(&mut router, scripted_trace());
+    let golden = concat!(
+        "{\"completed\":6,\"horizon\":7.25,",
+        "\"plan_histogram\":{",
+        "\"cfg1 x pp1 x rep4 x U8R1\":3,",
+        "\"cfg2 x pp2 x rep1 x U8R1\":3},",
+        "\"recarve\":{\"count\":1,\"drain_time\":1,",
+        "\"epoch_histogram\":{",
+        "\"cfg1 x pp1 x rep4 x U8R1\":1,",
+        "\"cfg2 x pp2 x rep1 x U8R1\":1},",
+        "\"epochs\":[",
+        "{\"index\":0,\"plan\":\"cfg1 x pp1 x rep4 x U8R1\",\"pod\":0,",
+        "\"served\":3,\"started_at\":0},",
+        "{\"index\":1,\"plan\":\"cfg2 x pp2 x rep1 x U8R1\",\"pod\":0,",
+        "\"served\":3,\"started_at\":4.25}],",
+        "\"setup_time\":0.25},",
+        "\"rejected\":[]}",
+    );
+    assert_eq!(to_string(&report.to_json()), golden);
+    assert_eq!(report.recarve.partial_splits, 0);
+    assert_eq!(report.co_batched_cross, 0);
+}
+
+/// The *partial* policy on the same scripted trace: without a subset
+/// planner (`StubService` keeps the `plan_spec_on` default of `None`)
+/// the split falls back to exactly the pod-wide hysteresis transition —
+/// graceful degradation, byte for byte.
+#[test]
+fn partial_without_a_subset_planner_degrades_to_hysteresis_bit_for_bit() {
+    let run = |policy: RecarvePolicy| {
+        let mut router = Router::new(4, 8, 1, SpAlgo::SwiftFusion);
+        let config = ServeConfig::new()
+            .batch(BatchPolicy { max_batch: 1, window: 0.0 })
+            .recarve(policy)
+            .recarve_setup(0.25);
+        ServeSession::new(config, &StubService).run(&mut router, scripted_trace())
+    };
+    let hysteresis = run(RecarvePolicy::Hysteresis { threshold: 0.5, window: 2 });
+    let partial = run(RecarvePolicy::Partial { threshold: 0.5, window: 2 });
+    assert_eq!(
+        to_string(&hysteresis.to_json()),
+        to_string(&partial.to_json()),
+        "no subset planner => partial must degrade to pod-wide hysteresis"
+    );
+    assert_eq!(partial.recarve.partial_splits, 0);
+}
+
+/// Partial re-carving through the real timing model: on the saturated
+/// bimodal trace the video phase hits a busy pod, the auto planner
+/// carves the 3 idle machines for the videos, and the pod runs two
+/// generations — every request is served exactly once and attributed to
+/// exactly one (pod-wide or group) epoch, with zero drain paid.
+#[test]
+fn partial_recarving_splits_the_simulated_pod_and_accounts_every_request() {
+    let mut router = Router::new(4, 8, 1, SpAlgo::SwiftFusion);
+    let svc = SimService::auto_plan(router.pods[0].cluster.clone(), SpAlgo::SwiftFusion);
+    let config = ServeConfig::new()
+        .batch(BatchPolicy { max_batch: 1, window: 0.0 })
+        .plan(PlanPolicy::Auto)
+        .recarve(RecarvePolicy::Partial { threshold: 0.05, window: 2 })
+        .recarve_setup(0.01);
+    let trace = bimodal_trace(&short_workload(), &long_workload(), 3, 6);
+    let n = trace.len();
+    let report = ServeSession::new(config, &svc).run(&mut router, trace);
+    assert_eq!(report.metrics.completed(), n);
+    assert!(report.rejected.is_empty());
+    assert!(
+        report.recarve.partial_splits >= 1,
+        "the video phase must split the busy pod: {:?}",
+        report.recarve.group_epochs
+    );
+    assert_eq!(report.recarve.drain_time, 0.0, "splits never drain");
+    // every request lands in exactly one generation's epoch log
+    let main_served: usize = report.recarve.epochs.iter().map(|(_, e)| e.served).sum();
+    let side_served: usize =
+        report.recarve.group_epochs.iter().map(|(_, g)| g.served).sum();
+    assert_eq!(main_served + side_served, n);
+    assert!(side_served >= 1, "the side generation served the shifted traffic");
+    // the side generation is a whole-machine subset of the 4-machine pod
+    for (_, g) in &report.recarve.group_epochs {
+        assert!(g.machines >= 1 && g.base_machine + g.machines <= 4);
+        let spec = g.plan.expect("auto planner always provides a subset plan");
+        assert_eq!(spec.total_ranks(), g.machines * 8, "spec tiles its subset");
+    }
+    // observability: the partial block serializes and round-trips
+    let json = to_string(&report.to_json());
+    assert!(json.contains("\"partial\":{"), "{json}");
+    assert!(swiftfusion::util::json::Json::parse(&json).is_ok());
+}
+
+// ---------------------------------------------------------------------------
 // Replica co-batching
 // ---------------------------------------------------------------------------
 

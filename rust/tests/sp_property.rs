@@ -472,6 +472,130 @@ fn epoch_boundary_recarve_stays_oracle_exact() {
 }
 
 #[test]
+fn partial_epoch_boundary_recarve_stays_oracle_exact() {
+    // Group-granular re-carving's numeric contract: a *partial* epoch
+    // boundary re-carves only a machine subset of the pod while a
+    // sibling group keeps serving uninterrupted — and every request,
+    // on either side of the boundary and on either generation, must
+    // still match the single-device oracle. Here a 4×2 pod starts
+    // carved cfg2 × pp2 × rep2 (four 1-machine branch groups); the
+    // traffic shifts while the replica-0 branch pair (machines 0–1) is
+    // busy, so machines 2–3 re-carve from their cfg2 × pp2 slice to an
+    // sp-only U2R2 mesh — driven through the real policy machinery
+    // (EpochTracker::{on_dispatch, split}) with both generations'
+    // ParallelPlans carved as pod-absolute machine subsets
+    // (ParallelPlan::build_subset), exactly as a live split pod holds
+    // them.
+    let cluster = ClusterSpec::new(4, 2);
+    let full = ParallelSpec::with_pp(2, 2, 2, SpDegrees::new(1, 1));
+    assert!(full.validate(&cluster).is_ok());
+    let narrowed = full
+        .narrowed_to_machines(cluster.gpus_per_machine)
+        .expect("rep2 narrows to the busy rep-0 pair");
+    assert_eq!(narrowed.batch_replicas, 1);
+    assert_eq!(narrowed.total_ranks(), 4, "busy generation = machines 0-1");
+    let side_spec = ParallelSpec::new(1, 1, SpDegrees::new(2, 2));
+
+    let policy = RecarvePolicy::Partial { threshold: 0.1, window: 1 };
+    let mut tracker = EpochTracker::new(policy, 0.05);
+    let t0 = tracker.on_dispatch(0.0, 0.0, Some(full), None);
+    assert!(!t0.recarved && !t0.split_pending);
+
+    // the busy generation: the rep-0 branch pair as a machine subset at
+    // base machine 0, running the displaced patch pipeline (cfg2 x pp2)
+    let plan_main =
+        ParallelPlan::build_subset(&cluster, narrowed, SpAlgo::SwiftFusion, 0).unwrap();
+    assert_eq!(plan_main.base_rank, 0);
+    let shape = AttnShape::new(1, 8, 2, 4);
+    let p = PipeParams { shape, chunk: 2, patches: 2 };
+    let dims = [shape.b, shape.l, shape.h, shape.d];
+
+    // request 1 under epoch 0 (pipelined warm-up step = stacked oracle)
+    let x1 = Tensor::random(&dims, 61_001);
+    let cb = Tensor::random(&dims, 61_002).scale(0.5);
+    let xc1 = x1.add(&cb).unwrap();
+    let mode = ExecMode::HostNumeric;
+    let step1 = guided_pipefusion_step(&plan_main, &p, &xc1, &x1, 4.0, None, &mode).unwrap();
+    let want1 = guidance_combine(
+        &stacked_attention_oracle(&xc1, 2),
+        &stacked_attention_oracle(&x1, 2),
+        4.0,
+    )
+    .unwrap();
+    let d1 = step1.eps.max_abs_diff(&want1);
+    assert!(d1 < TOL, "request 1 (cfg2 x pp2, machines 0-1): diff {d1}");
+    tracker.record_served(1);
+
+    // traffic shifts while the pod is busy (free_at 5 > ready 1): the
+    // Partial policy asks for a split instead of a pod-wide drain
+    let preferred = ParallelSpec::new(1, 1, SpDegrees::new(2, 4));
+    assert!(preferred.validate(&cluster).is_ok());
+    let t1 = tracker.on_dispatch(1.0, 5.0, Some(preferred), Some(0.9));
+    assert!(t1.split_pending, "busy pod must request a split");
+    assert!(!t1.recarved);
+    let pr = tracker.split(1.0, Some(narrowed), Some(side_spec), 2, 2);
+    assert_eq!(pr.setup, 0.05);
+    assert_eq!((pr.base_machine, pr.machines), (2, 2));
+
+    // the idle machines 2-3 re-carve cfg2 x pp2 -> sp-only: a
+    // pod-absolute subset plan whose ranks start at 4
+    let plan_side =
+        ParallelPlan::build_subset(&cluster, side_spec, SpAlgo::SwiftFusion, 2).unwrap();
+    assert_eq!(plan_side.base_rank, 4);
+    assert_eq!(plan_side.groups[0].base(), 4);
+    assert!(!plan_side.contains(0) && plan_side.contains(7));
+
+    // request 2 on the re-carved side generation: guided layer on the
+    // 4-rank U2R2 subset mesh vs the guided oracle
+    let cond = rand_qkv(&shape, 62_001);
+    let uncond = rand_qkv(&shape, 63_001);
+    let (got2, makespan2) = guided_attention_distributed(
+        &plan_side,
+        shape,
+        2,
+        &cond,
+        &uncond,
+        6.5,
+        &ExecMode::HostNumeric,
+    )
+    .unwrap();
+    let want2 = guided_attention_oracle(&cond, &uncond, 6.5).unwrap();
+    let d2 = got2.max_abs_diff(&want2);
+    assert!(d2 < TOL, "request 2 (sp-only side, machines 2-3): diff {d2}");
+    assert!(makespan2 > 0.0);
+    tracker.record_side_served(1);
+
+    // request 3 back on the *sibling* generation, which never stopped:
+    // same carve, same exactness — the split did not touch its meshes
+    let x3 = Tensor::random(&dims, 64_001);
+    let xc3 = x3.add(&cb).unwrap();
+    let step3 = guided_pipefusion_step(&plan_main, &p, &xc3, &x3, 4.0, None, &mode).unwrap();
+    let want3 = guidance_combine(
+        &stacked_attention_oracle(&xc3, 2),
+        &stacked_attention_oracle(&x3, 2),
+        4.0,
+    )
+    .unwrap();
+    let d3 = step3.eps.max_abs_diff(&want3);
+    assert!(d3 < TOL, "request 3 (sibling uninterrupted): diff {d3}");
+    tracker.record_served(1);
+
+    // the epoch machinery attributed every request to its generation
+    assert!(tracker.is_split());
+    assert_eq!(tracker.partial_splits(), 1);
+    assert_eq!(tracker.recarve_count(), 0, "no pod-wide transition happened");
+    assert_eq!(tracker.drain_time(), 0.0, "the split drained nothing");
+    let epochs = tracker.epochs();
+    assert_eq!(epochs.len(), 2, "admission + narrowed main epoch");
+    assert_eq!(epochs[0].served + epochs[1].served, 2);
+    let group = tracker.group_epochs();
+    assert_eq!(group.len(), 1);
+    assert_eq!(group[0].plan, Some(side_spec));
+    assert_eq!(group[0].served, 1);
+    assert_eq!(group[0].merged_at, None);
+}
+
+#[test]
 fn prop_host_mode_agrees_across_algorithms() {
     // Cross-algorithm agreement without any oracle: all six algorithms
     // are the same mathematical function, so pairwise outputs must agree
