@@ -1,0 +1,139 @@
+//! Fleet-scale scheduler throughput: tens of pods, 10^5 requests,
+//! events/sec of the indexed scheduler path vs the pre-PR linear path.
+//!
+//! Both [`SchedulerMode`]s replay the same trace to bit-identical
+//! reports (asserted below); they differ only in per-event cost:
+//!
+//! * **linear** — naive binary event heap, every dispatch re-prices
+//!   every pod through the service model (`O(P)` model calls through a
+//!   mutex-guarded string-keyed cache);
+//! * **indexed** — indexed event heap, memoized pricing
+//!   (`PriceCache`), and `free_at`-pruned earliest-finish selection
+//!   that typically evaluates one or two pods per dispatch.
+//!
+//! The headline figure is **events/sec** (arrivals + dispatches +
+//! completions + the flush, per wall-clock second — the convention
+//! `benches/README.md` documents), and the assertion is the indexed
+//! path's speedup over linear on the same trace.
+//!
+//! Run: `cargo bench --bench fig_fleet_scale` (full: 64 pods, 120k
+//! requests) or with `--smoke` (CI: 16 pods, 8k requests).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use swiftfusion::bench::{BenchRun, Series};
+use swiftfusion::coordinator::batcher::BatchPolicy;
+use swiftfusion::coordinator::engine::{PlanPolicy, ServeReport, SimService};
+use swiftfusion::coordinator::router::Router;
+use swiftfusion::coordinator::session::{
+    EarliestFinish, SchedulerMode, ServeConfig, ServeSession,
+};
+use swiftfusion::sp::SpAlgo;
+use swiftfusion::util::json::to_string;
+use swiftfusion::workload::{Request, Workload};
+
+/// Deterministic two-workload arrival stream at 100 req/s — saturating
+/// for the fleet, so pod timelines spread out and earliest-finish has
+/// real work to do on every dispatch.
+fn trace(n: usize) -> Vec<Request> {
+    let ws = [Workload::short_image_4k(), Workload::flux_3072()];
+    (0..n)
+        .map(|i| Request {
+            id: i as u64,
+            workload: ws[i % 2].clone(),
+            arrival: i as f64 * 0.01,
+            seed: i as u64,
+        })
+        .collect()
+}
+
+fn run_mode(mode: SchedulerMode, pods: usize, n: usize) -> (ServeReport, f64) {
+    // one machine of 8 GPUs per pod: every pod shares one footprint, so
+    // a single auto-planning service model prices the whole fleet
+    let mut router = Router::new(pods, 8, pods, SpAlgo::SwiftFusion);
+    let svc = SimService::auto_plan(router.pods[0].cluster.clone(), SpAlgo::SwiftFusion);
+    let config = ServeConfig::new()
+        .batch(BatchPolicy { max_batch: 1, window: 0.0 })
+        .plan(PlanPolicy::Auto)
+        .dispatch(Arc::new(EarliestFinish))
+        .scheduler(mode);
+    let reqs = trace(n);
+    let t0 = Instant::now();
+    let report = ServeSession::new(config, &svc).run(&mut router, reqs);
+    (report, t0.elapsed().as_secs_f64().max(1e-9))
+}
+
+fn main() {
+    let mut run = BenchRun::from_env("fig_fleet_scale");
+    let smoke = run.smoke();
+    // floors sit far (~10x) below expected throughput so they catch an
+    // accidental return to O(P)-per-event behaviour, not machine noise
+    let (pods, n, min_speedup, min_events_per_sec) = if smoke {
+        (16, 8_000, 1.2, 10_000.0)
+    } else {
+        (64, 120_000, 5.0, 25_000.0)
+    };
+    println!("fig_fleet_scale: {pods} pods (1x8 each), {n} requests, earliest-finish");
+    println!("dispatch; linear (pre-PR reference) vs indexed scheduler\n");
+
+    let (lin, lin_wall) = run_mode(SchedulerMode::Linear, pods, n);
+    let (idx, idx_wall) = run_mode(SchedulerMode::Indexed, pods, n);
+
+    // the two modes are semantics-preserving: same completions, same
+    // virtual horizon (bit-for-bit), same event count, same report JSON
+    assert_eq!(lin.metrics.completed() + lin.rejected.len(), n);
+    assert_eq!(lin.metrics.completed(), idx.metrics.completed());
+    assert_eq!(
+        lin.metrics.horizon.to_bits(),
+        idx.metrics.horizon.to_bits(),
+        "virtual horizons must match bit-for-bit"
+    );
+    assert_eq!(lin.events, idx.events);
+    assert_eq!(
+        to_string(&lin.to_json()),
+        to_string(&idx.to_json()),
+        "reports must be bit-identical across scheduler modes"
+    );
+    assert!(lin.events >= 2 * n as u64, "every request arrives and dispatches");
+
+    let eps_lin = lin.events as f64 / lin_wall;
+    let eps_idx = idx.events as f64 / idx_wall;
+    let speedup = eps_idx / eps_lin;
+    println!(
+        "  linear   {:>9} events in {:>8.3}s  ->  {:>12.0} events/sec",
+        lin.events, lin_wall, eps_lin
+    );
+    println!(
+        "  indexed  {:>9} events in {:>8.3}s  ->  {:>12.0} events/sec",
+        idx.events, idx_wall, eps_idx
+    );
+    println!("\nindexed scheduler: {speedup:.2}x the linear path's events/sec");
+
+    let mut series = vec![Series::new("linear (pre-PR)"), Series::new("indexed")];
+    series[0].push("events/sec", eps_lin);
+    series[0].push("wall s", lin_wall);
+    series[1].push("events/sec", eps_idx);
+    series[1].push("wall s", idx_wall);
+    run.table(
+        "fig_fleet_scale: scheduler events/sec, linear vs indexed",
+        &series,
+        Some("linear (pre-PR)"),
+    );
+    run.note("events", lin.events as f64);
+    run.note("events_per_sec", eps_idx);
+    run.note("events_per_sec_linear", eps_lin);
+    run.note("speedup", speedup);
+
+    assert!(
+        speedup >= min_speedup,
+        "indexed scheduler must be >= {min_speedup}x the linear path \
+         (got {speedup:.2}x: {eps_idx:.0} vs {eps_lin:.0} events/sec)"
+    );
+    assert!(
+        eps_idx >= min_events_per_sec,
+        "indexed scheduler must process >= {min_events_per_sec} events/sec \
+         (got {eps_idx:.0})"
+    );
+    run.finish().expect("write BENCH_fig_fleet_scale.json");
+}

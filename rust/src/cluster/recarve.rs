@@ -300,6 +300,11 @@ pub struct EpochTracker {
     group_epochs: Vec<GroupEpoch>,
     partial_splits: usize,
     merges: usize,
+    /// In-flight batches on the main generation, as `(done_at,
+    /// replica_groups_occupied)` — a co-batched batch scatters shards
+    /// across every replica group of the carve, so one busy replica's
+    /// footprint undercounts it ([`Self::busy_replicas`]).
+    inflight: Vec<(f64, usize)>,
 }
 
 impl EpochTracker {
@@ -318,6 +323,7 @@ impl EpochTracker {
             group_epochs: Vec::new(),
             partial_splits: 0,
             merges: 0,
+            inflight: Vec::new(),
         }
     }
 
@@ -516,6 +522,8 @@ impl EpochTracker {
         };
         self.drain_time += drain;
         self.setup_time += setup;
+        // the drain barrier retires all in-flight work with the old carve
+        self.inflight.clear();
         self.carve = preferred;
         self.epochs.push(PlanEpoch {
             index: self.epochs.len(),
@@ -564,7 +572,9 @@ impl EpochTracker {
         self.setup_time += setup;
         // the busy generation narrows: its in-flight work continues
         // untouched, but future dispatches price (and log) the carve it
-        // actually still holds
+        // actually still holds. Occupancy restarts against the narrowed
+        // carve's replica groups (a split pod never re-splits anyway).
+        self.inflight.clear();
         self.carve = narrowed;
         self.epochs.push(PlanEpoch {
             index: self.epochs.len(),
@@ -625,6 +635,7 @@ impl EpochTracker {
         self.started = false;
         self.carve = None;
         self.streak = 0;
+        self.inflight.clear();
         setup
     }
 
@@ -642,6 +653,7 @@ impl EpochTracker {
         self.started = false;
         self.carve = None;
         self.streak = 0;
+        self.inflight.clear();
         // a live side generation is dissolved by the footprint change
         // (its epoch log entry stays, with `merged_at` left `None`)
         self.side = None;
@@ -652,6 +664,29 @@ impl EpochTracker {
         if let Some(e) = self.epochs.last_mut() {
             e.served += n;
         }
+    }
+
+    /// Record a batch committed to the main generation at virtual time
+    /// `now`, running until `until` and occupying `replicas` replica
+    /// groups of the live carve (1 for an ordinary batch; the full
+    /// scatter width for a co-batched one). Expired entries are retired
+    /// on the way in, so the log stays O(in-flight).
+    pub fn note_inflight(&mut self, now: f64, until: f64, replicas: usize) {
+        self.inflight.retain(|&(u, _)| u > now);
+        self.inflight.push((until, replicas));
+    }
+
+    /// Replica groups of the live carve still serving at virtual time
+    /// `now` — the occupancy a partial re-carve must treat as busy
+    /// footprint. Main-generation dispatches are sequential, so the max
+    /// over live entries is the one batch actually running.
+    pub fn busy_replicas(&self, now: f64) -> usize {
+        self.inflight
+            .iter()
+            .filter(|&&(u, _)| u > now)
+            .map(|&(_, r)| r)
+            .max()
+            .unwrap_or(0)
     }
 }
 
@@ -980,5 +1015,43 @@ mod tests {
         assert_eq!(t.group_epochs().len(), 1, "the log entry survives");
         assert_eq!(t.group_epochs()[0].merged_at, None);
         assert_eq!(t.merges(), 0, "a resize is not a merge");
+    }
+
+    // ---- in-flight replica-group occupancy -------------------------------
+
+    #[test]
+    fn inflight_occupancy_tracks_the_live_batch_footprint() {
+        let mut t = EpochTracker::new(RecarvePolicy::Never, 0.1);
+        t.on_dispatch(0.0, 0.0, Some(spec_a()), None);
+        assert_eq!(t.busy_replicas(0.0), 0, "idle pod occupies nothing");
+        // a co-batched batch scatters across all 4 replica groups
+        t.note_inflight(0.0, 4.0, 4);
+        assert_eq!(t.busy_replicas(1.0), 4);
+        assert_eq!(t.busy_replicas(4.0), 0, "retired at its completion time");
+        // sequential dispatches: the later batch defines the footprint
+        t.note_inflight(4.0, 6.0, 1);
+        assert_eq!(t.busy_replicas(5.0), 1);
+    }
+
+    #[test]
+    fn epoch_boundaries_clear_inflight_occupancy() {
+        // a pod-wide transition drains all in-flight work
+        let mut t = EpochTracker::new(RecarvePolicy::Free, 0.1);
+        t.on_dispatch(0.0, 0.0, Some(spec_a()), None);
+        t.note_inflight(0.0, 10.0, 4);
+        t.force(1.0, 10.0, Some(spec_b()));
+        assert_eq!(t.busy_replicas(1.0), 0, "transition clears occupancy");
+        // split, merge, and resize each reset the footprint log too
+        let mut s = partial_tracker(1);
+        s.note_inflight(0.5, 9.0, 4);
+        s.split(1.0, Some(spec_a()), Some(spec_b()), 1, 3);
+        assert_eq!(s.busy_replicas(1.0), 0, "split restarts occupancy");
+        s.note_inflight(2.0, 9.0, 1);
+        s.merge(9.5);
+        assert_eq!(s.busy_replicas(3.0), 0, "merge clears occupancy");
+        let mut r = partial_tracker(1);
+        r.note_inflight(0.0, 9.0, 2);
+        r.resize_reset();
+        assert_eq!(r.busy_replicas(1.0), 0, "resize clears occupancy");
     }
 }

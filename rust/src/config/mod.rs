@@ -158,7 +158,7 @@ impl ClusterSpec {
 }
 
 /// Attention workload shape, paper notation (§2.2): Q/K/V are [B, L, H, D].
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct AttnShape {
     pub b: usize,
     pub l: usize,
@@ -188,7 +188,7 @@ impl AttnShape {
 
 /// The 2D parallelization degrees: `pu` for Ulysses, `pr` for Ring
 /// (`P_u × P_r` mesh, §4.2). The paper's UxRy notation.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct SpDegrees {
     pub pu: usize,
     pub pr: usize,
@@ -246,7 +246,7 @@ pub fn gcd(a: usize, b: usize) -> usize {
 /// validated spec into carved sub-meshes;
 /// `cfg_degree × pp_degree × batch_replicas × P_u × P_r` must exactly
 /// tile the cluster.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct ParallelSpec {
     /// CFG-parallel degree: 1 = both guidance branches run on one mesh
     /// (sequentially), 2 = conditional/unconditional branches run

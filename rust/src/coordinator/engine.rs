@@ -478,6 +478,12 @@ pub struct ServeReport {
     /// generations** of a split pod (cross-epoch co-batching); zero
     /// unless partial re-carving and co-batching fired together.
     pub co_batched_cross: usize,
+    /// Scheduler events processed over the run (arrivals, dispatches,
+    /// completions, the flush) — the denominator of the fleet-scale
+    /// bench's events/sec figure. Observability only: deliberately
+    /// **not** serialized by [`Self::to_json`], so the pinned goldens
+    /// are unaffected.
+    pub events: u64,
 }
 
 impl ServeReport {

@@ -47,6 +47,7 @@ pub mod batcher;
 pub mod engine;
 pub mod metrics;
 pub mod router;
+pub mod schedule;
 pub mod session;
 
 use crate::config::ParallelSpec;

@@ -22,9 +22,12 @@
 //! [`crate::coordinator::session::RebalancePolicy`] for the policy that
 //! drives it.
 
+use std::collections::BTreeSet;
+
 use crate::analysis;
 use crate::cluster::recarve::{resetup_cost, EpochTracker, RecarvePolicy};
 use crate::config::{ClusterSpec, ParallelSpec, SpDegrees};
+use crate::coordinator::schedule::time_key;
 use crate::sp::SpAlgo;
 use crate::workload::Workload;
 
@@ -102,6 +105,15 @@ pub struct RebalanceEvent {
 #[derive(Debug)]
 pub struct Router {
     pub pods: Vec<Pod>,
+    /// `free_at`-ordered pod index: `(time_key(free_at), id)`, kept in
+    /// sync by every timeline mutation the router itself performs
+    /// ([`Self::dispatch`], [`Self::commit_recarve`],
+    /// [`Self::rebalance_machine`]). Makes earliest-free selection
+    /// `O(log P)` ([`Self::pick_indexed`]) and yields pods in ascending
+    /// `free_at` order for pruned earliest-finish scans
+    /// ([`Self::pods_by_free`]). Code that pokes `pods[i].free_at`
+    /// directly must call [`Self::rebuild_free_index`] afterwards.
+    free_index: BTreeSet<(u64, usize)>,
 }
 
 impl Router {
@@ -126,7 +138,9 @@ impl Router {
                 }
             })
             .collect();
-        Self { pods }
+        let mut r = Self { pods, free_index: BTreeSet::new() };
+        r.rebuild_free_index();
+        r
     }
 
     /// Install a re-carving policy on every pod (the modeled re-setup
@@ -152,7 +166,11 @@ impl Router {
     /// start ([`Self::dispatch`] starts at the updated `free_at`).
     pub fn commit_recarve(&mut self, pod: usize, ready_at: f64, setup: f64) {
         let p = &mut self.pods[pod];
+        let old = p.free_at;
         p.free_at = p.free_at.max(ready_at) + setup;
+        let new = p.free_at;
+        self.free_index.remove(&(time_key(old), pod));
+        self.free_index.insert((time_key(new), pod));
     }
 
     /// Earliest-free pod (ties broken by lowest id — deterministic).
@@ -170,13 +188,44 @@ impl Router {
             .unwrap()
     }
 
+    /// [`Self::pick`] in `O(log P)`: the first entry of the `free_at`
+    /// index. Identical to the linear scan for every timeline the
+    /// scheduler can produce — `time_key` order equals `partial_cmp`
+    /// order for non-NaN times, and pod timelines are built purely from
+    /// non-negative `max`/`+`, so the one divergence of the total order
+    /// (`-0.0 < 0.0`) cannot arise.
+    pub fn pick_indexed(&self) -> usize {
+        self.free_index.iter().next().map(|&(_, id)| id).expect("router has no pods")
+    }
+
+    /// Pod ids in ascending `(free_at, id)` order — the scan order a
+    /// pruned earliest-finish dispatch walks (it can stop as soon as a
+    /// pod's `free_at` alone exceeds the best finish seen).
+    pub fn pods_by_free(&self) -> impl Iterator<Item = usize> + '_ {
+        self.free_index.iter().map(|&(_, id)| id)
+    }
+
+    /// Re-derive the `free_at` index from the pod timelines. Required
+    /// after mutating `pods[i].free_at` without going through the
+    /// router's own methods (tests script timelines this way; the
+    /// serving loop calls it once before its event loop starts).
+    pub fn rebuild_free_index(&mut self) {
+        self.free_index.clear();
+        for p in &self.pods {
+            self.free_index.insert((time_key(p.free_at), p.id));
+        }
+    }
+
     /// Commit a batch to `pod`: service starts when both the pod is free
     /// and the batch is ready.
     pub fn dispatch(&mut self, pod: usize, ready_at: f64, service: f64) -> DispatchOutcome {
         let p = &mut self.pods[pod];
         let start = p.free_at.max(ready_at);
         let done = start + service;
+        let old = p.free_at;
         p.free_at = done;
+        self.free_index.remove(&(time_key(old), pod));
+        self.free_index.insert((time_key(done), pod));
         DispatchOutcome { start, done }
     }
 
@@ -199,8 +248,12 @@ impl Router {
             let p = &mut self.pods[pod];
             let machines = p.cluster.machines.checked_add_signed(delta).unwrap();
             p.cluster = p.cluster.resized(machines);
+            let old = p.free_at;
             p.free_at = p.free_at.max(at) + p.recarver.setup_cost;
+            let new = p.free_at;
             p.recarver.resize_reset();
+            self.free_index.remove(&(time_key(old), pod));
+            self.free_index.insert((time_key(new), pod));
         }
         RebalanceEvent {
             at,
@@ -312,6 +365,42 @@ mod tests {
     fn rebalance_never_empties_a_pod() {
         let mut r = Router::new(2, 8, 2, SpAlgo::SwiftFusion);
         r.rebalance_machine(0, 1, 0.0); // pods have 1 machine each
+    }
+
+    #[test]
+    fn free_index_tracks_every_timeline_mutation() {
+        // 4 pods x 2 machines of 8 GPUs
+        let mut r = Router::new(8, 8, 4, SpAlgo::SwiftFusion);
+        assert_eq!(r.pick_indexed(), r.pick());
+        assert_eq!(r.pick_indexed(), 0, "all idle -> lowest id");
+        r.dispatch(0, 0.0, 10.0);
+        r.dispatch(1, 0.0, 3.0);
+        assert_eq!(r.pick_indexed(), r.pick());
+        assert_eq!(r.pick_indexed(), 2);
+        r.dispatch(2, 0.0, 1.0);
+        r.dispatch(3, 0.0, 2.0);
+        assert_eq!(r.pick_indexed(), r.pick(), "pod 2 free soonest");
+        r.commit_recarve(2, 1.0, 5.0); // pod 2: drained at 1.0 + 5.0 setup
+        assert_eq!(r.pods[2].free_at, 6.0);
+        assert_eq!(r.pick_indexed(), r.pick());
+        assert_eq!(r.pick_indexed(), 3);
+        // ascending (free_at, id): p3=2.0, p1=3.0, p2=6.0, p0=10.0
+        let order: Vec<usize> = r.pods_by_free().collect();
+        assert_eq!(order, vec![3, 1, 2, 0]);
+        // a migration re-times both pods and the index follows
+        let ev = r.rebalance_machine(0, 3, 4.0);
+        assert_eq!((ev.from_machines, ev.to_machines), (1, 3));
+        assert_eq!(r.pick_indexed(), r.pick());
+        // direct timeline pokes need an explicit rebuild
+        r.pods[1].free_at = 100.0;
+        r.rebuild_free_index();
+        assert_eq!(r.pick_indexed(), r.pick());
+        let order: Vec<usize> = r.pods_by_free().collect();
+        assert_eq!(order.len(), 4, "every pod indexed exactly once");
+        assert!(order.windows(2).all(|w| {
+            let (a, b) = (r.pods[w[0]].free_at, r.pods[w[1]].free_at);
+            a < b || (a == b && w[0] < w[1])
+        }));
     }
 
     #[test]

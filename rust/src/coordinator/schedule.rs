@@ -1,0 +1,473 @@
+//! Fleet-scale scheduler data structures: the indexed event heap and the
+//! per-pod pricing cache behind
+//! [`SchedulerMode::Indexed`](crate::coordinator::session::SchedulerMode).
+//!
+//! At the 4×8-testbed scale the scheduler's cost per event is invisible;
+//! at tens of pods and 10⁵–10⁶ requests (`benches/fig_fleet_scale.rs`)
+//! three linear costs dominate the wall clock:
+//!
+//! 1. the event queue — `BinaryHeap<Timed>` pays a `total_cmp` +
+//!    `seq` compare through an `Ord` wrapper at every sift step;
+//! 2. dispatch pricing — every `est(pod, batch)` call re-enters the
+//!    service model (label `String` construction, a `Mutex`, and a
+//!    `String`-keyed `HashMap` inside [`SimService`]);
+//! 3. pod selection — `Router::pick` / `EarliestFinish` scan all `P`
+//!    pods per dispatch, so dispatch cost is `O(P)` and the run is
+//!    `O(N·P)`.
+//!
+//! This module fixes (1) and (2); the `free_at`-ordered pod index fixing
+//! (3) lives on [`crate::coordinator::router::Router`] (it must stay in
+//! sync with the pod timelines the router owns). Everything here is
+//! *order-preserving*: [`EventHeap`] pops in exactly the `(time, seq)`
+//! order of the naive binary heap (the `(time, seq)` pair is packed into
+//! one `u128` via the monotone total-order bit mapping, so heap compares
+//! are single integer compares), and [`PriceCache`] memoizes pure
+//! service-model lookups keyed by (pod footprint, workload class, batch
+//! size, carve) — the determinism-at-scale property test
+//! (`tests/fleet_scale.rs`) pins bit-identical reports against the
+//! naive path.
+//!
+//! [`SimService`]: crate::coordinator::engine::SimService
+
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
+
+use crate::config::{AttnShape, ParallelSpec};
+use crate::workload::Workload;
+
+// ---------------------------------------------------------------------------
+// Monotone time key
+// ---------------------------------------------------------------------------
+
+/// Map an `f64` to a `u64` whose unsigned order equals
+/// [`f64::total_cmp`] order (the standard IEEE-754 total-order
+/// transform: flip all bits of negatives, flip the sign bit of
+/// non-negatives). Virtual times are non-negative finite or `+inf`
+/// (the flush sentinel), but the full transform costs nothing and keeps
+/// the equivalence exact for every input.
+#[inline]
+pub fn time_key(at: f64) -> u64 {
+    let b = at.to_bits();
+    if b >> 63 == 1 {
+        !b
+    } else {
+        b | (1 << 63)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// EventHeap — the indexed event queue
+// ---------------------------------------------------------------------------
+
+/// A 4-ary implicit min-heap over `(time, seq)` with the pair
+/// pre-encoded into one `u128` index key (`time_key(at) << 64 | seq`):
+/// one integer compare per sift step instead of a `total_cmp` +
+/// tiebreak through an `Ord` wrapper, and a shallower tree (log₄ vs
+/// log₂ levels) for the pop-heavy access pattern of an event loop.
+/// `seq` is assigned in push order, so same-instant events pop FIFO —
+/// exactly the ordering contract of the naive `BinaryHeap` path, which
+/// `tests/fleet_scale.rs` pins bit-for-bit.
+pub struct EventHeap<T> {
+    /// `(packed key, original time, payload)` — the raw `f64` rides
+    /// along so `pop` returns it without inverting the bit transform.
+    items: Vec<(u128, f64, T)>,
+    seq: u64,
+}
+
+impl<T> Default for EventHeap<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> EventHeap<T> {
+    pub fn new() -> Self {
+        Self { items: Vec::new(), seq: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Push an event at virtual time `at`; the creation sequence number
+    /// (FIFO tiebreak) is assigned internally.
+    pub fn push(&mut self, at: f64, item: T) {
+        let key = (u128::from(time_key(at)) << 64) | u128::from(self.seq);
+        self.seq += 1;
+        self.items.push((key, at, item));
+        self.sift_up(self.items.len() - 1);
+    }
+
+    /// Pop the earliest event (ties in push order).
+    pub fn pop(&mut self) -> Option<(f64, T)> {
+        if self.items.is_empty() {
+            return None;
+        }
+        let last = self.items.len() - 1;
+        self.items.swap(0, last);
+        let (_, at, item) = self.items.pop().unwrap();
+        if !self.items.is_empty() {
+            self.sift_down(0);
+        }
+        Some((at, item))
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 4;
+            if self.items[i].0 >= self.items[parent].0 {
+                break;
+            }
+            self.items.swap(i, parent);
+            i = parent;
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        let n = self.items.len();
+        loop {
+            let first = 4 * i + 1;
+            if first >= n {
+                break;
+            }
+            let mut min = first;
+            for c in (first + 1)..(first + 4).min(n) {
+                if self.items[c].0 < self.items[min].0 {
+                    min = c;
+                }
+            }
+            if self.items[i].0 <= self.items[min].0 {
+                break;
+            }
+            self.items.swap(i, min);
+            i = min;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FxHasher — a fast deterministic hasher for the pricing cache
+// ---------------------------------------------------------------------------
+
+/// Firefox's multiply-rotate hash. The pricing cache is on the per-event
+/// hot path and its keys are small fixed-size structs; SipHash's
+/// per-lookup setup cost is the dominant term there, and HashDoS
+/// resistance buys nothing against a deterministic simulation's own
+/// keys. Deterministic across runs (no random seed) by construction.
+#[derive(Default)]
+pub struct FxHasher(u64);
+
+const FX_SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+impl FxHasher {
+    #[inline]
+    fn add(&mut self, word: u64) {
+        self.0 = (self.0.rotate_left(5) ^ word).wrapping_mul(FX_SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for chunk in bytes.chunks(8) {
+            let mut word = [0u8; 8];
+            word[..chunk.len()].copy_from_slice(chunk);
+            self.add(u64::from_le_bytes(word));
+        }
+    }
+
+    #[inline]
+    fn write_u64(&mut self, i: u64) {
+        self.add(i);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, i: usize) {
+        self.add(i as u64);
+    }
+
+    #[inline]
+    fn write_u8(&mut self, i: u8) {
+        self.add(u64::from(i));
+    }
+
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+type FxBuild = BuildHasherDefault<FxHasher>;
+
+// ---------------------------------------------------------------------------
+// PriceCache — memoized per-pod service pricing
+// ---------------------------------------------------------------------------
+
+/// Which costing entry point a cached price came from. `Preferred` is
+/// [`crate::coordinator::CostModel::service_time`] (the model's own
+/// plan); `Under` is
+/// [`crate::coordinator::CostModel::service_time_under`] pinned to a
+/// carve (`None` = the model's explicit no-carve path — kept distinct
+/// from `Preferred` because a model may implement the two entry points
+/// differently).
+#[derive(PartialEq, Eq, Hash, Clone, Copy)]
+enum CarveKey {
+    Preferred,
+    Under(Option<ParallelSpec>),
+}
+
+/// Full cache key: pod footprint + the complete workload class + batch
+/// size + carve. The workload *value* (shape, layers, steps, cfg_evals,
+/// name) is in the key — not just the name — so two same-named workloads
+/// with different shapes can never alias an entry.
+#[derive(PartialEq, Eq, Hash, Clone, Copy)]
+struct PriceKey {
+    machines: usize,
+    gpus_per_machine: usize,
+    name: &'static str,
+    shape: AttnShape,
+    layers: usize,
+    steps: usize,
+    cfg_evals: usize,
+    batch: usize,
+    carve: CarveKey,
+}
+
+impl PriceKey {
+    fn new(fp: (usize, usize), w: &Workload, batch: usize, carve: CarveKey) -> Self {
+        Self {
+            machines: fp.0,
+            gpus_per_machine: fp.1,
+            name: w.name,
+            shape: w.shape,
+            layers: w.layers,
+            steps: w.steps,
+            cfg_evals: w.cfg_evals,
+            batch,
+            carve,
+        }
+    }
+}
+
+/// Memoized per-pod pricing: service times keyed by
+/// `(pod footprint, workload class, batch size, carve)`, fronting the
+/// service model so the dispatch path stops re-pricing every estimate
+/// from scratch (label construction + `Mutex` + `String`-keyed map
+/// inside [`crate::coordinator::engine::SimService`], model resolution
+/// inside [`crate::coordinator::session::SimFleet`]).
+///
+/// Soundness: service times are pure functions of the key — the model a
+/// [`crate::coordinator::session::FleetModel`] resolves per footprint
+/// must itself be a pure function of that footprint (true for
+/// `SimFleet`; a shared model trivially so). A disabled cache (the
+/// [`SchedulerMode::Linear`](crate::coordinator::session::SchedulerMode)
+/// reference path) passes every call straight through.
+#[derive(Default)]
+pub struct PriceCache {
+    enabled: bool,
+    prices: HashMap<PriceKey, f64, FxBuild>,
+}
+
+impl PriceCache {
+    pub fn new(enabled: bool) -> Self {
+        Self { enabled, prices: HashMap::default() }
+    }
+
+    /// Cached entries (observability / tests).
+    pub fn len(&self) -> usize {
+        self.prices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prices.is_empty()
+    }
+
+    fn get_or(
+        &mut self,
+        key: PriceKey,
+        compute: impl FnOnce() -> f64,
+    ) -> f64 {
+        if !self.enabled {
+            return compute();
+        }
+        *self.prices.entry(key).or_insert_with(compute)
+    }
+
+    /// Memoized [`crate::coordinator::CostModel::service_time`]. `fp` is
+    /// the pod footprint `(machines, gpus_per_machine)`; `compute` —
+    /// model resolution plus the actual pricing call — runs only on a
+    /// miss, so a fleet-model `Mutex` resolution is skipped entirely on
+    /// the hot (hit) path.
+    pub fn service_time(
+        &mut self,
+        fp: (usize, usize),
+        w: &Workload,
+        batch: usize,
+        compute: impl FnOnce() -> f64,
+    ) -> f64 {
+        self.get_or(PriceKey::new(fp, w, batch, CarveKey::Preferred), compute)
+    }
+
+    /// Memoized [`crate::coordinator::CostModel::service_time_under`];
+    /// `compute` must price `w` at `batch` under exactly `carve`.
+    pub fn service_time_under(
+        &mut self,
+        fp: (usize, usize),
+        w: &Workload,
+        batch: usize,
+        carve: Option<&ParallelSpec>,
+        compute: impl FnOnce() -> f64,
+    ) -> f64 {
+        self.get_or(PriceKey::new(fp, w, batch, CarveKey::Under(carve.copied())), compute)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+    use std::cmp::Ordering;
+    use std::collections::BinaryHeap;
+
+    #[test]
+    fn time_key_matches_total_cmp() {
+        let vals = [
+            0.0,
+            -0.0,
+            1.0,
+            1.5,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::MIN_POSITIVE,
+            -3.25,
+            1e300,
+        ];
+        for &a in &vals {
+            for &b in &vals {
+                assert_eq!(
+                    time_key(a).cmp(&time_key(b)),
+                    a.total_cmp(&b),
+                    "{a} vs {b}"
+                );
+            }
+        }
+    }
+
+    /// The naive reference ordering: min by `(total_cmp(at), seq)`, the
+    /// exact `Timed` wrapper the session's naive path uses.
+    struct Ref {
+        at: f64,
+        seq: u64,
+        v: usize,
+    }
+    impl PartialEq for Ref {
+        fn eq(&self, o: &Self) -> bool {
+            self.at == o.at && self.seq == o.seq
+        }
+    }
+    impl Eq for Ref {}
+    impl PartialOrd for Ref {
+        fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+            Some(self.cmp(o))
+        }
+    }
+    impl Ord for Ref {
+        fn cmp(&self, o: &Self) -> Ordering {
+            o.at.total_cmp(&self.at).then_with(|| o.seq.cmp(&self.seq))
+        }
+    }
+
+    #[test]
+    fn pops_in_naive_binary_heap_order() {
+        // Adversarial mix: heavy time duplication (quantized times) so
+        // the FIFO seq tiebreak carries most of the ordering.
+        let mut rng = SplitMix64::new(9);
+        let mut heap = EventHeap::new();
+        let mut naive = BinaryHeap::new();
+        let mut pushed = Vec::new();
+        for i in 0..5000usize {
+            let at = (rng.below(64) as f64) * 0.25;
+            heap.push(at, i);
+            naive.push(Ref { at, seq: pushed.len() as u64, v: i });
+            pushed.push(at);
+        }
+        // interleave pops and pushes to exercise sift_down mid-stream
+        for i in 5000..6000usize {
+            let (a, va) = heap.pop().unwrap();
+            let r = naive.pop().unwrap();
+            assert_eq!((a.to_bits(), va), (r.at.to_bits(), r.v));
+            let at = (rng.below(64) as f64) * 0.25;
+            heap.push(at, i);
+            naive.push(Ref { at, seq: pushed.len() as u64, v: i });
+            pushed.push(at);
+        }
+        while let Some((a, va)) = heap.pop() {
+            let r = naive.pop().unwrap();
+            assert_eq!((a.to_bits(), va), (r.at.to_bits(), r.v));
+        }
+        assert!(naive.pop().is_none());
+    }
+
+    #[test]
+    fn flush_sentinel_pops_last() {
+        let mut heap = EventHeap::new();
+        heap.push(f64::INFINITY, "flush");
+        heap.push(3.0, "a");
+        heap.push(0.0, "b");
+        assert_eq!(heap.pop().unwrap().1, "b");
+        assert_eq!(heap.pop().unwrap().1, "a");
+        assert_eq!(heap.pop().unwrap().1, "flush");
+        assert!(heap.pop().is_none());
+    }
+
+    use crate::coordinator::{CostModel, Planner};
+    use std::sync::atomic::{AtomicUsize, Ordering as AtomicOrdering};
+
+    struct Counting(AtomicUsize);
+    impl CostModel for Counting {
+        fn service_time(&self, _w: &Workload, batch: usize) -> f64 {
+            self.0.fetch_add(1, AtomicOrdering::SeqCst);
+            batch as f64
+        }
+    }
+    impl Planner for Counting {}
+
+    #[test]
+    fn price_cache_memoizes_by_full_workload_class() {
+        let model = Counting(AtomicUsize::new(0));
+        let mut cache = PriceCache::new(true);
+        let w = Workload::short_image_4k();
+        let fp = (2, 8);
+        let t = cache.service_time(fp, &w, 4, || model.service_time(&w, 4));
+        assert_eq!(t, 4.0);
+        assert_eq!(cache.service_time(fp, &w, 4, || model.service_time(&w, 4)), 4.0);
+        assert_eq!(model.0.load(AtomicOrdering::SeqCst), 1, "second call is a hit");
+        // a different batch size, footprint, or *shape* is a different key
+        cache.service_time(fp, &w, 8, || model.service_time(&w, 8));
+        cache.service_time((4, 8), &w, 4, || model.service_time(&w, 4));
+        let mut shrunk = w.clone();
+        shrunk.layers = 2;
+        cache.service_time(fp, &shrunk, 4, || model.service_time(&shrunk, 4));
+        assert_eq!(model.0.load(AtomicOrdering::SeqCst), 4);
+        assert_eq!(cache.len(), 4);
+        // the carve dimension keys separately, None carve included
+        let spec = ParallelSpec::new(1, 2, crate::config::SpDegrees::new(8, 1));
+        cache.service_time_under(fp, &w, 4, Some(&spec), || {
+            model.service_time_under(&w, 4, Some(&spec))
+        });
+        cache.service_time_under(fp, &w, 4, None, || model.service_time_under(&w, 4, None));
+        cache.service_time_under(fp, &w, 4, Some(&spec), || unreachable!("cached"));
+        assert_eq!(model.0.load(AtomicOrdering::SeqCst), 6);
+        assert_eq!(cache.len(), 6);
+        // disabled cache = passthrough
+        let mut off = PriceCache::new(false);
+        off.service_time(fp, &w, 4, || model.service_time(&w, 4));
+        off.service_time(fp, &w, 4, || model.service_time(&w, 4));
+        assert_eq!(model.0.load(AtomicOrdering::SeqCst), 8);
+        assert!(off.is_empty());
+    }
+}

@@ -30,8 +30,9 @@
 //! recorded in completion-time order (see
 //! [`crate::coordinator::engine::ServeReport::completions`]).
 
-use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap};
+use std::cell::RefCell;
+use std::cmp::{Ordering, Reverse};
+use std::collections::{BTreeSet, BinaryHeap, HashMap};
 use std::sync::{Arc, Mutex};
 
 use crate::cluster::recarve::RecarvePolicy;
@@ -40,6 +41,7 @@ use crate::coordinator::batcher::{Batch, BatchPolicy, Batcher};
 use crate::coordinator::engine::{PlanPolicy, RecarveReport, ServeReport, SimService};
 use crate::coordinator::metrics::{Completion, Metrics};
 use crate::coordinator::router::{RebalanceEvent, Router};
+use crate::coordinator::schedule::{EventHeap, PriceCache};
 use crate::coordinator::{CostModel, Planner, ServiceModel};
 use crate::sp::SpAlgo;
 use crate::workload::{Request, Workload};
@@ -215,6 +217,48 @@ impl std::fmt::Display for RebalancePolicy {
 }
 
 // ---------------------------------------------------------------------------
+// Scheduler mode
+// ---------------------------------------------------------------------------
+
+/// Which data structures drive the event loop. Both modes are
+/// *semantics-preserving*: they produce bit-identical reports on the
+/// same trace (pinned by `tests/fleet_scale.rs`); they differ only in
+/// asymptotic cost per event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerMode {
+    /// The reference path: naive binary event heap, linear pod scans,
+    /// every dispatch re-priced through the service model. `O(P)` per
+    /// dispatch — kept as the oracle the indexed path is compared
+    /// against (and for bisecting scheduler bugs).
+    Linear,
+    /// The fleet-scale path (default): indexed event heap
+    /// ([`crate::coordinator::schedule::EventHeap`]), memoized pricing
+    /// ([`crate::coordinator::schedule::PriceCache`]), and `O(log P)`
+    /// pod selection over the router's `free_at` index.
+    Indexed,
+}
+
+impl SchedulerMode {
+    /// Parse a CLI mode name.
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "linear" => Some(Self::Linear),
+            "indexed" => Some(Self::Indexed),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for SchedulerMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Linear => write!(f, "linear"),
+            Self::Indexed => write!(f, "indexed"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // ServeConfig
 // ---------------------------------------------------------------------------
 
@@ -252,6 +296,10 @@ pub struct ServeConfig {
     /// Cross-pod machine migration policy ([`RebalancePolicy::Never`]
     /// by default).
     pub rebalance: RebalancePolicy,
+    /// Scheduler data structures ([`SchedulerMode::Indexed`] by
+    /// default; `Linear` keeps the naive reference path). Both modes
+    /// produce bit-identical reports.
+    pub scheduler: SchedulerMode,
 }
 
 impl Default for ServeConfig {
@@ -265,6 +313,7 @@ impl Default for ServeConfig {
             dispatch: Arc::new(LeastLoaded),
             co_batch: false,
             rebalance: RebalancePolicy::Never,
+            scheduler: SchedulerMode::Indexed,
         }
     }
 }
@@ -323,6 +372,12 @@ impl ServeConfig {
         self
     }
 
+    /// Select the scheduler data structures (indexed vs linear).
+    pub fn scheduler(mut self, mode: SchedulerMode) -> Self {
+        self.scheduler = mode;
+        self
+    }
+
     /// Build the timing-mode service model this config describes for one
     /// pod footprint — the constructor scatter
     /// (`SimService::{new, auto_plan, with_plan}` + `patches` field
@@ -343,12 +398,13 @@ impl ServeConfig {
 
     /// The effective-config line, e.g.
     /// `serve: batch=4x2s plan=auto patches=4 recarve=hysteresis(15% x 2)
-    /// dispatch=least-loaded co-batch=off rebalance=never` — printed by
-    /// the CLI so a run is reproducible from its log.
+    /// dispatch=least-loaded co-batch=off rebalance=never
+    /// scheduler=indexed` — printed by the CLI so a run is reproducible
+    /// from its log.
     pub fn summary(&self) -> String {
         format!(
             "serve: batch={}x{}s plan={} patches={} recarve={} dispatch={} co-batch={} \
-             rebalance={}",
+             rebalance={} scheduler={}",
             self.batch.max_batch,
             self.batch.window,
             self.plan,
@@ -358,6 +414,7 @@ impl ServeConfig {
             self.dispatch.name(),
             if self.co_batch { "on" } else { "off" },
             self.rebalance,
+            self.scheduler,
         )
     }
 }
@@ -385,6 +442,10 @@ pub struct ServeState {
     /// Of `co_batched`, dispatches whose shards spanned both carve
     /// generations of a split pod (cross-epoch co-batching).
     pub co_batched_cross: usize,
+    /// Scheduler events processed (arrivals, dispatches, completions,
+    /// the flush) — the denominator of the fleet-scale bench's
+    /// events/sec figure.
+    pub events: u64,
 }
 
 impl ServeState {
@@ -416,6 +477,7 @@ impl ServeState {
             rebalances: self.rebalances,
             co_batched: self.co_batched,
             co_batched_cross: self.co_batched_cross,
+            events: self.events,
         }
     }
 }
@@ -464,6 +526,83 @@ impl Ord for Timed {
             .at
             .total_cmp(&self.at)
             .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// The event queue behind the loop: the naive [`BinaryHeap`] of
+/// [`Timed`] entries ([`SchedulerMode::Linear`]) or the indexed
+/// [`EventHeap`] ([`SchedulerMode::Indexed`]). Both pop in identical
+/// `(time, seq)` order — `EventHeap` encodes the same key pair through
+/// [`crate::coordinator::schedule::time_key`] — so the two modes replay
+/// a trace event-for-event.
+enum Queue {
+    Naive { heap: BinaryHeap<Timed>, seq: u64 },
+    Indexed(EventHeap<Event>),
+}
+
+impl Queue {
+    fn new(mode: SchedulerMode) -> Self {
+        match mode {
+            SchedulerMode::Linear => Queue::Naive { heap: BinaryHeap::new(), seq: 0 },
+            SchedulerMode::Indexed => Queue::Indexed(EventHeap::new()),
+        }
+    }
+
+    fn push(&mut self, at: f64, ev: Event) {
+        match self {
+            Queue::Naive { heap, seq } => {
+                heap.push(Timed { at, seq: *seq, ev });
+                *seq += 1;
+            }
+            Queue::Indexed(h) => h.push(at, ev),
+        }
+    }
+
+    fn pop(&mut self) -> Option<(f64, Event)> {
+        match self {
+            Queue::Naive { heap, .. } => heap.pop().map(|t| (t.at, t.ev)),
+            Queue::Indexed(h) => h.pop(),
+        }
+    }
+}
+
+/// Per-run scheduler working state the dispatch handler threads:
+/// fleet-rebalance hysteresis streaks (grow and shrink sides), the set
+/// of currently split pods (so indexed EarliestFinish can price them
+/// outside the `free_at`-pruned scan), and the memoized pricing cache.
+struct SchedState {
+    /// Grow streaks, keyed by the *receiving* pod (mirroring the
+    /// per-pod EpochTracker streak): a pod earns its extra machine with
+    /// its own consecutive gainful dispatches, so two gainful pods
+    /// cannot pool their streaks and interleaved traffic to other pods
+    /// does not reset a pod's progress.
+    grow_streaks: HashMap<usize, usize>,
+    /// Shrink streaks, keyed by the *pressured* (small, queue-building)
+    /// pod — the donor side of the symmetric trigger.
+    pressure_streaks: HashMap<usize, usize>,
+    /// Pods currently running two carve generations.
+    split: BTreeSet<usize>,
+    /// Memoized per-pod pricing (enabled in indexed mode only; the
+    /// linear path re-prices every call, as before).
+    price: RefCell<PriceCache>,
+}
+
+impl SchedState {
+    fn new(config: &ServeConfig, router: &Router) -> Self {
+        Self {
+            grow_streaks: HashMap::new(),
+            pressure_streaks: HashMap::new(),
+            split: router
+                .pods
+                .iter()
+                .filter(|p| p.recarver.is_split())
+                .map(|p| p.id)
+                .collect(),
+            price: RefCell::new(PriceCache::new(matches!(
+                config.scheduler,
+                SchedulerMode::Indexed
+            ))),
+        }
     }
 }
 
@@ -564,24 +703,19 @@ impl<'a> ServeSession<'a> {
 
         let mut state = ServeState::default();
         let mut batcher = Batcher::new(self.config.batch.clone());
-        // Fleet-rebalance hysteresis streaks, keyed by the *receiving*
-        // pod (mirroring the per-pod EpochTracker streak): a pod earns
-        // its machine with its own consecutive gainful dispatches, so
-        // two gainful pods cannot pool their streaks and interleaved
-        // traffic to other pods does not reset a pod's progress.
-        let mut fleet_streaks: HashMap<usize, usize> = HashMap::new();
-        let mut heap: BinaryHeap<Timed> = BinaryHeap::new();
-        let mut seq = 0u64;
-        let mut push = |heap: &mut BinaryHeap<Timed>, at: f64, ev: Event| {
-            heap.push(Timed { at, seq, ev });
-            seq += 1;
-        };
+        let mut sched = SchedState::new(&self.config, router);
+        // Pods may have been mutated directly between runs (tests
+        // pre-script timelines); re-derive the free_at index before
+        // trusting it.
+        router.rebuild_free_index();
+        let mut queue = Queue::new(self.config.scheduler);
         for r in requests {
-            push(&mut heap, r.arrival, Event::Arrival(r));
+            queue.push(r.arrival, Event::Arrival(r));
         }
-        push(&mut heap, f64::INFINITY, Event::Flush);
+        queue.push(f64::INFINITY, Event::Flush);
 
-        while let Some(Timed { at, ev, .. }) = heap.pop() {
+        while let Some((at, ev)) = queue.pop() {
+            state.events += 1;
             match ev {
                 Event::Arrival(r) => {
                     if let Err(reason) = self.source.admit(router, &r.workload) {
@@ -594,14 +728,12 @@ impl<'a> ServeSession<'a> {
                     // exactly at a window deadline joins the closing
                     // batch), dispatch as queued events
                     while let Some(batch) = batcher.pop_ready(at) {
-                        push(&mut heap, at, Event::Dispatch(batch));
+                        queue.push(at, Event::Dispatch(batch));
                     }
                 }
                 Event::Dispatch(batch) => {
-                    for c in
-                        self.dispatch_batch(router, batch, &mut state, &mut fleet_streaks)
-                    {
-                        push(&mut heap, c.done, Event::Completion(c));
+                    for c in self.dispatch_batch(router, batch, &mut state, &mut sched) {
+                        queue.push(c.done, Event::Completion(c));
                     }
                 }
                 Event::Completion(c) => {
@@ -610,7 +742,7 @@ impl<'a> ServeSession<'a> {
                 }
                 Event::Flush => {
                     while let Some(batch) = batcher.pop_any() {
-                        push(&mut heap, at, Event::Dispatch(batch));
+                        queue.push(at, Event::Dispatch(batch));
                     }
                 }
             }
@@ -627,11 +759,12 @@ impl<'a> ServeSession<'a> {
         router: &mut Router,
         batch: Batch,
         state: &mut ServeState,
-        fleet_streaks: &mut HashMap<usize, usize>,
+        sched: &mut SchedState,
     ) -> Vec<Completion> {
         let workload = batch.requests[0].workload.clone();
         let ready = batch.ready_at();
         let source = self.source;
+        let price_cell = &sched.price;
         // Plan-aware dispatch estimates price each pod by the carve it
         // will actually serve under: for pods whose policy can hold a
         // stale carve (anything but the free idealization), that is the
@@ -639,37 +772,80 @@ impl<'a> ServeSession<'a> {
         // dispatches on the strength of a preferred plan it will refuse
         // to adopt. Free-policy pods adopt the preferred plan at
         // dispatch, unpaid, so the preferred-plan estimate remains exact
-        // for them. A split pod is approximated by its cheaper
-        // generation's *duration* (EarliestFinish adds the pod's main
-        // free_at, not the side's own timeline — generation-aware pod
-        // pricing is a known follow-up).
+        // for them. A split pod is priced generation-aware: each
+        // generation is its own `(free_at, duration)` pair, and the
+        // estimate is the earlier of the two finishes re-based onto the
+        // pod's main timeline (`finish - max(main_free_at, ready)`), so
+        // EarliestFinish sees the side generation's *own* availability.
+        // That difference can make the estimate negative — the side may
+        // start before the main timeline frees.
         let est = |pod: usize, b: &Batch| -> f64 {
             let p = &router.pods[pod];
-            let svc = source.for_pod(&p.cluster);
-            let svc = svc.get();
+            let fp = (p.cluster.machines, p.cluster.gpus_per_machine);
             let w = &b.requests[0].workload;
+            let mut price = price_cell.borrow_mut();
             let live = if matches!(p.recarver.policy, RecarvePolicy::Free) {
                 None
             } else {
                 p.recarver.carve()
             };
             match live {
-                None => svc.service_time(w, b.size()),
+                None => price.service_time(fp, w, b.size(), || {
+                    source.for_pod(&p.cluster).get().service_time(w, b.size())
+                }),
                 Some(c) => {
-                    let t = svc.service_time_under(w, b.size(), Some(&c));
-                    match p.recarver.side_carve() {
-                        Some(s) => t.min(svc.service_time_under(w, b.size(), Some(&s))),
-                        None => t,
+                    let t = price.service_time_under(fp, w, b.size(), Some(&c), || {
+                        source
+                            .for_pod(&p.cluster)
+                            .get()
+                            .service_time_under(w, b.size(), Some(&c))
+                    });
+                    match (p.recarver.side_carve(), p.recarver.side_free_at()) {
+                        (Some(s), Some(side_free)) => {
+                            let ts =
+                                price.service_time_under(fp, w, b.size(), Some(&s), || {
+                                    source
+                                        .for_pod(&p.cluster)
+                                        .get()
+                                        .service_time_under(w, b.size(), Some(&s))
+                                });
+                            let ready = b.ready_at();
+                            let fin = |free: f64, dur: f64| {
+                                if dur.is_finite() {
+                                    free.max(ready) + dur
+                                } else {
+                                    f64::INFINITY
+                                }
+                            };
+                            fin(p.free_at, t).min(fin(side_free, ts)) - p.free_at.max(ready)
+                        }
+                        _ => t,
                     }
                 }
             }
         };
-        let pod = self.config.dispatch.pick(router, &batch, &est);
+        let pod = match self.config.scheduler {
+            SchedulerMode::Linear => self.config.dispatch.pick(router, &batch, &est),
+            // O(log P)-flavored selection for the built-in policies:
+            // least-loaded reads the front of the router's free_at
+            // index; earliest-finish prunes its scan with it. Custom
+            // policies keep their own pick.
+            SchedulerMode::Indexed => match self.config.dispatch.name() {
+                "least-loaded" => router.pick_indexed(),
+                "earliest-finish" => {
+                    pruned_earliest_finish(router, &batch, &est, &sched.split)
+                }
+                _ => self.config.dispatch.pick(router, &batch, &est),
+            },
+        };
 
         // Fleet event: would one more machine pay off here, and is some
-        // other pod idle enough to donate one?
+        // other pod idle enough to donate one? Symmetrically: is this
+        // pod queueing behind a strictly bigger pod's leftovers and
+        // should the big pod give a machine back?
         if let RebalancePolicy::Gain { threshold, window } = self.config.rebalance {
             if matches!(self.source, ModelSource::Fleet(_)) {
+                let mut migrated = false;
                 let cur = router.pods[pod].cluster.clone();
                 let grown = cur.resized(cur.machines + 1);
                 let gain = crate::analysis::rebalance_gain(
@@ -680,7 +856,7 @@ impl<'a> ServeSession<'a> {
                     workload.cfg_evals,
                     self.config.patches,
                 );
-                let streak = fleet_streaks.entry(pod).or_insert(0);
+                let streak = sched.grow_streaks.entry(pod).or_insert(0);
                 if gain >= threshold {
                     *streak += 1;
                 } else {
@@ -697,12 +873,65 @@ impl<'a> ServeSession<'a> {
                         .map(|p| p.id);
                     if let Some(donor) = donor {
                         state.rebalances.push(router.rebalance_machine(donor, pod, ready));
-                        fleet_streaks.clear();
+                        sched.grow_streaks.clear();
+                        sched.pressure_streaks.clear();
+                        // rebalance_machine resize-resets both pods,
+                        // dissolving any live split
+                        sched.split.remove(&donor);
+                        sched.split.remove(&pod);
+                        migrated = true;
+                    }
+                }
+                // Donor-side pressure (the shrink half): this pod keeps
+                // receiving dispatches while already busy, and a
+                // strictly bigger pod exists — the earlier grow
+                // overshot for the current mix, so migrate a machine
+                // back from the biggest pod. Unlike the grow trigger
+                // (which only moves an *idle* machine, opportunistic by
+                // design), shrink is a pressure valve and pays the
+                // donor's drain.
+                if !migrated {
+                    let my_machines = router.pods[pod].cluster.machines;
+                    let pressured = router.pods[pod].free_at > ready
+                        && router.pods.iter().any(|p| p.cluster.machines > my_machines);
+                    let ps = sched.pressure_streaks.entry(pod).or_insert(0);
+                    if pressured {
+                        *ps += 1;
+                    } else {
+                        *ps = 0;
+                    }
+                    if *ps >= window.max(1) {
+                        let donor = router
+                            .pods
+                            .iter()
+                            .filter(|p| {
+                                p.id != pod
+                                    && p.cluster.machines > my_machines
+                                    && p.cluster.machines >= 2
+                            })
+                            .min_by_key(|p| (Reverse(p.cluster.machines), p.id))
+                            .map(|p| p.id);
+                        if let Some(donor) = donor {
+                            state
+                                .rebalances
+                                .push(router.rebalance_machine(donor, pod, ready));
+                            sched.grow_streaks.clear();
+                            sched.pressure_streaks.clear();
+                            sched.split.remove(&donor);
+                            sched.split.remove(&pod);
+                        }
                     }
                 }
             }
         }
 
+        // Footprint after any rebalance above — the pricing-cache key
+        // half that, together with the workload class, identifies a
+        // memoized service time.
+        let fp = (
+            router.pods[pod].cluster.machines,
+            router.pods[pod].cluster.gpus_per_machine,
+        );
         let model = self.source.for_pod(&router.pods[pod].cluster);
         let service = model.get();
         let preferred = service.plan_spec(&workload);
@@ -719,6 +948,7 @@ impl<'a> ServeSession<'a> {
                 service,
                 preferred,
                 state,
+                sched,
             );
         }
         let free_at = router.pods[pod].free_at;
@@ -743,7 +973,7 @@ impl<'a> ServeSession<'a> {
             // The Partial policy fired on a busy pod: split off the idle
             // machines and serve this batch on the fresh side carve.
             if let Some(out) =
-                self.try_split(router, pod, &batch, &workload, ready, service, state)
+                self.try_split(router, pod, &batch, &workload, ready, service, state, sched)
             {
                 return out;
             }
@@ -753,7 +983,14 @@ impl<'a> ServeSession<'a> {
             // hysteresis would have made at this point.
             t = router.pods[pod].recarver.force(ready, free_at, preferred);
         }
-        let mut dur = self.service_duration(service, &workload, batch.size(), t.carve.as_ref());
+        let mut dur = self.service_duration(
+            &sched.price,
+            fp,
+            service,
+            &workload,
+            batch.size(),
+            t.carve.as_ref(),
+        );
         if !dur.is_finite() {
             // The live carve cannot serve this batch at all (e.g. a
             // patch granularity larger than the sequence); dispatching
@@ -764,7 +1001,14 @@ impl<'a> ServeSession<'a> {
             let pref_dur = if t.carve == preferred {
                 dur
             } else {
-                self.service_duration(service, &workload, batch.size(), preferred.as_ref())
+                self.service_duration(
+                    &sched.price,
+                    fp,
+                    service,
+                    &workload,
+                    batch.size(),
+                    preferred.as_ref(),
+                )
             };
             if !pref_dur.is_finite() {
                 for r in &batch.requests {
@@ -801,6 +1045,8 @@ impl<'a> ServeSession<'a> {
         }
         router.pods[pod].recarver.record_served(batch.size());
         let out = router.dispatch(pod, ready, dur);
+        let reps = self.occupied_replicas(t.carve.as_ref(), batch.size());
+        router.pods[pod].recarver.note_inflight(ready, out.done, reps);
         batch
             .requests
             .iter()
@@ -814,13 +1060,30 @@ impl<'a> ServeSession<'a> {
             .collect()
     }
 
+    /// How many replica groups of `carve` a dispatched batch occupies
+    /// while in flight: with co-batching on, a batch of `B` scatters
+    /// one shard onto each of `min(R, B)` groups; serial dispatch keeps
+    /// the whole batch on one group. Feeds the per-pod occupancy log
+    /// ([`crate::cluster::recarve::EpochTracker::note_inflight`]) that
+    /// [`Self::try_split`] derives the busy machine footprint from.
+    fn occupied_replicas(&self, carve: Option<&ParallelSpec>, batch_size: usize) -> usize {
+        if self.config.co_batch {
+            carve.map_or(1, |s| s.batch_replicas.min(batch_size).max(1))
+        } else {
+            1
+        }
+    }
+
     /// Modeled service seconds for `batch_size` requests of `workload`
     /// under `carve`: with co-batching on, the batch scatters across the
     /// carve's replica groups and the makespan is one group's largest
     /// shard; otherwise the whole batch serves on one group (the
-    /// pre-redesign behaviour).
+    /// pre-redesign behaviour). Memoized through `price` (keyed by the
+    /// pod footprint `fp` + full workload class) in indexed mode.
     fn service_duration(
         &self,
+        price: &RefCell<PriceCache>,
+        fp: (usize, usize),
         service: &dyn ServiceModel,
         workload: &Workload,
         batch_size: usize,
@@ -833,7 +1096,11 @@ impl<'a> ServeSession<'a> {
         } else {
             batch_size
         };
-        service.service_time_under(workload, eff, carve)
+        price
+            .borrow_mut()
+            .service_time_under(fp, workload, eff, carve, || {
+                service.service_time_under(workload, eff, carve)
+            })
     }
 
     /// Attempt a group-granular split on `pod` (the `Partial` policy
@@ -846,13 +1113,13 @@ impl<'a> ServeSession<'a> {
     /// not clear the policy threshold; the caller then falls back to a
     /// pod-wide transition.
     ///
-    /// Modeling simplification: the busy footprint is taken as **one
-    /// replica's groups** — exact for the serial dispatch path (a batch
-    /// serves on one replica group). A *co-batched* in-flight batch may
-    /// actually occupy every replica group, in which case the split is
-    /// optimistic by up to that batch's residual service time on the
-    /// "idle" machines (the router does not track per-group occupancy;
-    /// a finer model would narrow to the scattered footprint).
+    /// The busy footprint is derived from the pod's in-flight occupancy
+    /// log ([`crate::cluster::recarve::EpochTracker::busy_replicas`]):
+    /// a serial dispatch occupies one replica's groups, but a
+    /// *co-batched* in-flight batch scatters a shard onto every replica
+    /// group it touched — narrowing to one replica's machines would
+    /// hand machines that are still computing to the side carve and
+    /// make the split optimistic by the batch's residual service time.
     #[allow(clippy::too_many_arguments)]
     fn try_split(
         &self,
@@ -863,6 +1130,7 @@ impl<'a> ServeSession<'a> {
         ready: f64,
         service: &dyn ServiceModel,
         state: &mut ServeState,
+        sched: &mut SchedState,
     ) -> Option<Vec<Completion>> {
         let threshold = match router.pods[pod].recarver.policy {
             RecarvePolicy::Partial { threshold, .. } => threshold,
@@ -870,25 +1138,48 @@ impl<'a> ServeSession<'a> {
         };
         let gpm = router.pods[pod].cluster.gpus_per_machine;
         let machines = router.pods[pod].cluster.machines;
+        let fp = (machines, gpm);
         let live = router.pods[pod].recarver.carve()?;
-        // machine-footprint accounting: the in-flight batch occupies one
-        // replica's worth of groups, rounded up to whole machines; only
-        // what is left can re-carve
-        let narrowed = live.narrowed_to_machines(gpm)?;
-        let busy = narrowed.total_ranks() / gpm;
+        // machine-footprint accounting: one replica's worth of groups,
+        // scaled by how many replica groups the in-flight work actually
+        // occupies, rounded up to whole machines; only what is left can
+        // re-carve
+        let unit = live.narrowed_to_machines(gpm)?;
+        let unit_machines = unit.total_ranks() / gpm;
+        let reps = router.pods[pod].recarver.busy_replicas(ready).max(1);
+        let scale = reps.div_ceil(unit.batch_replicas.max(1));
+        let busy = unit_machines * scale;
         let idle = machines.checked_sub(busy).filter(|&i| i > 0)?;
+        let narrowed = if scale > 1 {
+            ParallelSpec::with_pp(
+                unit.cfg_degree,
+                unit.pp_degree,
+                unit.batch_replicas * scale,
+                unit.sp,
+            )
+        } else {
+            unit
+        };
         let side_plan = service.plan_spec_on(workload, idle)?;
         let gain = service.partial_recarve_gain(workload, &live, idle)?;
         if gain < threshold {
             return None;
         }
-        let dur = self.service_duration(service, workload, batch.size(), Some(&side_plan));
+        let dur = self.service_duration(
+            &sched.price,
+            fp,
+            service,
+            workload,
+            batch.size(),
+            Some(&side_plan),
+        );
         if !dur.is_finite() {
             return None;
         }
         router.pods[pod]
             .recarver
             .split(ready, Some(narrowed), Some(side_plan), busy, idle);
+        sched.split.insert(pod);
         let (_, done) = router.pods[pod].recarver.dispatch_side(ready, dur);
         if self.config.co_batch && batch.size() > 1 && side_plan.batch_replicas > 1 {
             state.co_batched += 1;
@@ -915,7 +1206,12 @@ impl<'a> ServeSession<'a> {
         service: &dyn ServiceModel,
         preferred: Option<ParallelSpec>,
         state: &mut ServeState,
+        sched: &mut SchedState,
     ) -> Vec<Completion> {
+        let fp = (
+            router.pods[pod].cluster.machines,
+            router.pods[pod].cluster.gpus_per_machine,
+        );
         let main_free = router.pods[pod].free_at;
         let side_free = router.pods[pod]
             .recarver
@@ -926,12 +1222,20 @@ impl<'a> ServeSession<'a> {
         // batch under the re-admitted full-footprint carve.
         if main_free <= ready && side_free <= ready {
             let setup = router.pods[pod].recarver.merge(ready);
+            sched.split.remove(&pod);
             router.commit_recarve(pod, ready, setup);
             let free_at = router.pods[pod].free_at;
             let t = router.pods[pod]
                 .recarver
                 .on_dispatch(ready, free_at, preferred, None);
-            let dur = self.service_duration(service, workload, batch.size(), t.carve.as_ref());
+            let dur = self.service_duration(
+                &sched.price,
+                fp,
+                service,
+                workload,
+                batch.size(),
+                t.carve.as_ref(),
+            );
             if !dur.is_finite() {
                 for r in &batch.requests {
                     state.rejected.push((
@@ -954,14 +1258,18 @@ impl<'a> ServeSession<'a> {
             }
             router.pods[pod].recarver.record_served(batch.size());
             let out = router.dispatch(pod, ready, dur);
+            let reps = self.occupied_replicas(t.carve.as_ref(), batch.size());
+            router.pods[pod].recarver.note_inflight(ready, out.done, reps);
             return completions_for(&batch, workload, out.done, pod);
         }
 
         let main_carve = router.pods[pod].recarver.carve();
         let side_carve = router.pods[pod].recarver.side_carve();
         let b = batch.size();
-        let dur_main = self.service_duration(service, workload, b, main_carve.as_ref());
-        let dur_side = self.service_duration(service, workload, b, side_carve.as_ref());
+        let dur_main =
+            self.service_duration(&sched.price, fp, service, workload, b, main_carve.as_ref());
+        let dur_side =
+            self.service_duration(&sched.price, fp, service, workload, b, side_carve.as_ref());
         let fin = |free: f64, dur: f64| {
             if dur.is_finite() {
                 free.max(ready) + dur
@@ -981,11 +1289,15 @@ impl<'a> ServeSession<'a> {
             // generations guaranteed a non-empty shard
             let b_main = (b * rm).div_ceil(rm + rs).clamp(1, b - 1);
             let b_side = b - b_main;
-            let dm = self.service_duration(service, workload, b_main, main_carve.as_ref());
-            let ds = self.service_duration(service, workload, b_side, side_carve.as_ref());
+            let dm =
+                self.service_duration(&sched.price, fp, service, workload, b_main, main_carve.as_ref());
+            let ds =
+                self.service_duration(&sched.price, fp, service, workload, b_side, side_carve.as_ref());
             let fin_cross = fin(main_free, dm).max(fin(side_free, ds));
             if fin_cross < fin_main.min(fin_side) {
                 let out_m = router.dispatch(pod, ready, dm);
+                let reps = self.occupied_replicas(main_carve.as_ref(), b_main);
+                router.pods[pod].recarver.note_inflight(ready, out_m.done, reps);
                 let (_, done_s) = router.pods[pod].recarver.dispatch_side(ready, ds);
                 // the batch gathers when its last shard finishes
                 let done = out_m.done.max(done_s);
@@ -1038,10 +1350,61 @@ impl<'a> ServeSession<'a> {
                 *state.plan_histogram.entry(label).or_insert(0) += b;
             }
             let out = router.dispatch(pod, ready, dur_main);
+            let reps = self.occupied_replicas(main_carve.as_ref(), b);
+            router.pods[pod].recarver.note_inflight(ready, out.done, reps);
             router.pods[pod].recarver.record_served(b);
             completions_for(&batch, workload, out.done, pod)
         }
     }
+}
+
+/// [`EarliestFinish`] over the router's `free_at` index instead of a
+/// linear scan. Split pods (whose estimate may be *negative* — the side
+/// generation can start before the main timeline frees) are priced
+/// unconditionally first; the remaining pods are visited in ascending
+/// `(free_at, id)` order, and the scan stops as soon as a pod's
+/// earliest possible start alone exceeds the best finish so far — valid
+/// because estimates are non-negative for unsplit pods. Tie-breaking
+/// (equal finish → lowest pod id) matches the linear policy exactly, so
+/// both paths pick the same pod on every dispatch.
+fn pruned_earliest_finish(
+    router: &Router,
+    batch: &Batch,
+    est: &dyn Fn(usize, &Batch) -> f64,
+    split: &BTreeSet<usize>,
+) -> usize {
+    let ready = batch.ready_at();
+    let mut best: Option<(f64, usize)> = None;
+    let better = |fin: f64, id: usize, best: &Option<(f64, usize)>| match best {
+        None => true,
+        Some((bf, bi)) => match fin.total_cmp(bf) {
+            Ordering::Less => true,
+            Ordering::Equal => id < *bi,
+            Ordering::Greater => false,
+        },
+    };
+    for &id in split {
+        let fin = router.pods[id].free_at.max(ready) + est(id, batch);
+        if better(fin, id, &best) {
+            best = Some((fin, id));
+        }
+    }
+    for id in router.pods_by_free() {
+        if split.contains(&id) {
+            continue;
+        }
+        let start = router.pods[id].free_at.max(ready);
+        if let Some((bf, _)) = best {
+            if start.total_cmp(&bf) == Ordering::Greater {
+                break;
+            }
+        }
+        let fin = start + est(id, batch);
+        if better(fin, id, &best) {
+            best = Some((fin, id));
+        }
+    }
+    best.expect("router has no pods").1
 }
 
 /// One [`Completion`] per request of `batch`, all finishing at `done`
@@ -1097,7 +1460,8 @@ mod tests {
         assert_eq!(
             cfg.summary(),
             "serve: batch=4x2s plan=auto patches=4 recarve=hysteresis(15% x 2) \
-             dispatch=earliest-finish co-batch=on rebalance=gain(10% x 2)"
+             dispatch=earliest-finish co-batch=on rebalance=gain(10% x 2) \
+             scheduler=indexed"
         );
         // defaults render the legacy-shim posture
         let s = ServeConfig::new().summary();
@@ -1106,6 +1470,21 @@ mod tests {
         assert!(s.contains("dispatch=least-loaded"), "{s}");
         assert!(s.contains("co-batch=off"), "{s}");
         assert!(s.contains("rebalance=never"), "{s}");
+        assert!(s.contains("scheduler=indexed"), "{s}");
+    }
+
+    #[test]
+    fn scheduler_mode_names_round_trip() {
+        assert_eq!(SchedulerMode::from_name("indexed"), Some(SchedulerMode::Indexed));
+        assert_eq!(SchedulerMode::from_name("linear"), Some(SchedulerMode::Linear));
+        assert!(SchedulerMode::from_name("fast").is_none());
+        assert_eq!(SchedulerMode::Indexed.to_string(), "indexed");
+        assert_eq!(SchedulerMode::Linear.to_string(), "linear");
+        assert_eq!(ServeConfig::new().scheduler, SchedulerMode::Indexed);
+        assert_eq!(
+            ServeConfig::new().scheduler(SchedulerMode::Linear).scheduler,
+            SchedulerMode::Linear
+        );
     }
 
     #[test]
@@ -1484,5 +1863,176 @@ mod tests {
         let cfg = ServeConfig::new()
             .recarve(RecarvePolicy::Partial { threshold: 0.15, window: 2 });
         assert!(cfg.summary().contains("recarve=partial(15% x 2)"), "{}", cfg.summary());
+    }
+
+    #[test]
+    fn split_pod_side_availability_flips_earliest_finish() {
+        // Satellite regression (split-pod pricing): pod 0 is split — its
+        // main generation is busy until t = 10, but its side generation
+        // is idle and serves the video in 1.5 s. The old estimate took
+        // the cheaper generation's *duration* and let EarliestFinish add
+        // the pod's main free_at (finish 10 + 1.5 = 11.5), so pod 1
+        // (busy till 2, then 1 s ⇒ finish 3) won and the idle side sat
+        // unused. Generation-aware pricing sees the side's own timeline:
+        // pod 0 finishes at 1.5 and wins — in both scheduler modes.
+        let run = |mode: SchedulerMode| {
+            let mut router = Router::new(8, 8, 2, SpAlgo::SwiftFusion);
+            router.set_recarve_with_setup(
+                RecarvePolicy::Partial { threshold: 0.15, window: 1 },
+                0.0,
+            );
+            router.pods[0]
+                .recarver
+                .on_dispatch(0.0, 0.0, Some(narrowed_spec()), None);
+            router.pods[0]
+                .recarver
+                .split(0.0, Some(narrowed_spec()), Some(video_sub()), 1, 3);
+            router.dispatch(0, 0.0, 10.0); // main generation busy till t = 10
+            router.pods[1]
+                .recarver
+                .on_dispatch(0.0, 0.0, Some(video_full()), None);
+            router.dispatch(1, 0.0, 2.0); // pod 1 busy till t = 2
+            ServeSession::new(
+                ServeConfig::new()
+                    .batch(BatchPolicy { max_batch: 1, window: 0.0 })
+                    .dispatch(Arc::new(EarliestFinish))
+                    .scheduler(mode),
+                &SplitScript,
+            )
+            .run(&mut router, vec![req(0, Workload::cfg_video_96k(), 0.0)])
+        };
+        for mode in [SchedulerMode::Linear, SchedulerMode::Indexed] {
+            let report = run(mode);
+            assert_eq!(report.metrics.completed(), 1, "{mode}");
+            assert_eq!(
+                report.completions[0].2, 1.5,
+                "{mode}: served on the idle side generation"
+            );
+        }
+    }
+
+    #[test]
+    fn co_batched_occupancy_blocks_the_partial_split() {
+        // Satellite regression (co-batch occupancy): a co-batched short
+        // batch scatters one shard onto every replica group of the
+        // 4-replica short carve, so *all four* machines are computing
+        // when the video arrives — there is nothing idle to split off,
+        // and the policy must fall back to the pod-wide transition. The
+        // pre-fix footprint model counted one replica's machines busy
+        // (as if the batch were serial) and split optimistically,
+        // handing three still-computing machines to the side carve.
+        let run = |co: bool| {
+            let mut router = Router::new(4, 8, 1, SpAlgo::SwiftFusion);
+            router.set_recarve_with_setup(
+                RecarvePolicy::Partial { threshold: 0.15, window: 1 },
+                0.25,
+            );
+            let mut reqs: Vec<Request> = (0..4)
+                .map(|i| req(i, Workload::short_image_4k(), 0.1 * i as f64))
+                .collect();
+            reqs.push(req(4, Workload::cfg_video_96k(), 0.5));
+            ServeSession::new(
+                ServeConfig::new()
+                    .batch(BatchPolicy { max_batch: 4, window: 1.0 })
+                    .co_batch(co),
+                &SplitScript,
+            )
+            .run(&mut router, reqs)
+        };
+
+        // co-batching off: the shorts queue whole on one replica group
+        // (done at 0.3 + 4·2 = 8.3), three machines really are idle at
+        // t = 0.5, and the split fires exactly as before the fix.
+        let off = run(false);
+        assert_eq!(off.metrics.completed(), 5);
+        assert_eq!(off.recarve.partial_splits, 1);
+        assert_eq!(off.recarve.recarve_count, 0);
+        assert_eq!(off.recarve.drain_time, 0.0);
+        let video = off.completions.iter().find(|c| c.0 == 4).unwrap();
+        // split at 0.5 (0.25 setup), 1.5 s on the 3-machine side carve
+        assert_eq!(video.2, 2.25);
+
+        // co-batching on: the short batch occupies all 4 replica groups
+        // until 0.3 + 2 = 2.3; no split is possible, so the video pays
+        // the pod-wide transition (drain 1.8 + setup 0.25) and serves
+        // under the full-pod video plan at 2.55 + 1 = 3.55.
+        let on = run(true);
+        assert_eq!(on.metrics.completed(), 5);
+        assert_eq!(on.recarve.partial_splits, 0, "no machine is idle to split off");
+        assert_eq!(on.recarve.recarve_count, 1, "pod-wide transition instead");
+        assert_eq!(on.recarve.drain_time, 1.8);
+        assert_eq!(on.recarve.setup_time, 0.25);
+        let video = on.completions.iter().find(|c| c.0 == 4).unwrap();
+        assert_eq!(video.2, 3.55);
+    }
+
+    #[test]
+    fn gain_policy_shrinks_back_when_the_mix_reverses() {
+        // Satellite regression (shrink symmetry). Phase 1 pins the
+        // established grow behaviour: a video-heavy trace on two 2-machine
+        // pods migrates a machine toward the video pod (3 + 1). Phase 2
+        // is the fix: when the mix reverses to shorts — which gain
+        // nothing from a big pod — the 1-machine pod keeps receiving
+        // dispatches while already busy (queue pressure), and the big pod
+        // must give the machine back (2 + 2). Pre-fix, the trigger was
+        // grow-only and the fleet stayed frozen at 3 + 1 forever.
+        struct ScriptFleet;
+        struct ScriptModel {
+            machines: usize,
+        }
+        impl CostModel for ScriptModel {
+            fn service_time(&self, w: &Workload, batch: usize) -> f64 {
+                let b = batch as f64;
+                if is_video(w) {
+                    10.0 * b / self.machines as f64 // videos scale with the pod
+                } else {
+                    2.5 * b // shorts don't
+                }
+            }
+        }
+        impl Planner for ScriptModel {}
+        impl FleetModel for ScriptFleet {
+            fn model_for(&self, cluster: &ClusterSpec) -> Arc<dyn ServiceModel> {
+                Arc::new(ScriptModel { machines: cluster.machines })
+            }
+        }
+
+        let mut reqs: Vec<Request> = (0..3)
+            .map(|i| req(i, Workload::cfg_video_96k(), 20.0 * i as f64))
+            .collect();
+        for i in 0..8 {
+            reqs.push(req(3 + i, Workload::short_image_4k(), 60.0 + i as f64));
+        }
+        let mut router = Router::new(4, 8, 2, SpAlgo::SwiftFusion);
+        let report = ServeSession::with_fleet(
+            ServeConfig::new()
+                .batch(BatchPolicy { max_batch: 1, window: 0.0 })
+                // 16 patches: the regime the grow trigger is known to
+                // clear 10% predicted gain in for the video workload on
+                // a 2-machine pod (pinned by the drifting-mix test)
+                .patches(16)
+                .dispatch(Arc::new(EarliestFinish))
+                .recarve_setup(0.01)
+                .rebalance(RebalancePolicy::Gain { threshold: 0.1, window: 2 }),
+            &ScriptFleet,
+        )
+        .run(&mut router, reqs);
+
+        assert_eq!(report.metrics.completed(), 11);
+        assert_eq!(report.rebalances.len(), 2, "one grow, one shrink");
+        // grow: the second consecutive gainful video dispatch (t = 20)
+        // pulls the idle pod 1's machine toward pod 0
+        let grow = &report.rebalances[0];
+        assert_eq!((grow.from_pod, grow.to_pod), (1, 0));
+        assert_eq!((grow.from_machines, grow.to_machines), (1, 3));
+        // shrink: under the short burst, pod 1 receives its second
+        // consecutive dispatch while busy (t = 65) and pulls the
+        // machine back from the strictly bigger pod 0
+        let shrink = &report.rebalances[1];
+        assert_eq!((shrink.from_pod, shrink.to_pod), (0, 1));
+        assert_eq!((shrink.from_machines, shrink.to_machines), (2, 2));
+        let machines: Vec<usize> =
+            router.pods.iter().map(|p| p.cluster.machines).collect();
+        assert_eq!(machines, vec![2, 2], "fleet returned to balance");
     }
 }

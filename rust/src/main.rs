@@ -26,7 +26,8 @@ use swiftfusion::coordinator::batcher::BatchPolicy;
 use swiftfusion::coordinator::engine::{PlanPolicy, SimService};
 use swiftfusion::coordinator::router::Router;
 use swiftfusion::coordinator::session::{
-    dispatch_policy_from_name, RebalancePolicy, ServeConfig, ServeSession, SimFleet,
+    dispatch_policy_from_name, RebalancePolicy, SchedulerMode, ServeConfig, ServeSession,
+    SimFleet,
 };
 use swiftfusion::runtime::Runtime;
 use swiftfusion::sp::{SpAlgo, SpParams};
@@ -133,6 +134,12 @@ reproducible from its log.
                              (default 0.15 = 15%)
   --rebalance-window N       gain: consecutive gainful dispatches before
                              migrating (default 2)
+  --scheduler MODE           scheduler data structures: indexed (default;
+                             indexed event heap, memoized pricing,
+                             O(log P) pod selection) or linear (the naive
+                             reference path). Both modes produce
+                             bit-identical reports; linear exists for
+                             cross-checking and bisection
 ";
 
 fn workload_by_name(name: &str) -> Result<Workload> {
@@ -337,6 +344,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let rebalance_name = args.enum_or("rebalance", "never", &["never", "gain"])?;
     let rebalance = RebalancePolicy::from_name(rebalance_name, rb_threshold, rb_window)
         .expect("name validated by enum_or");
+    let scheduler_name = args.enum_or("scheduler", "indexed", &["indexed", "linear"])?;
+    let scheduler =
+        SchedulerMode::from_name(scheduler_name).expect("name validated by enum_or");
     let patches = args.usize_or("patches", swiftfusion::analysis::DEFAULT_PATCHES)?;
     anyhow::ensure!(patches > 0, "--patches must be >= 1");
 
@@ -351,7 +361,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .recarve(recarve)
         .dispatch(dispatch)
         .co_batch(co_batch)
-        .rebalance(rebalance);
+        .rebalance(rebalance)
+        .scheduler(scheduler);
     // Only auto planning ever changes a pod's preferred plan; under
     // single/fixed the preferred spec is constant, so any re-carving
     // policy is inert. Say so instead of letting a zero-recarve run

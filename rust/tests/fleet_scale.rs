@@ -1,0 +1,111 @@
+//! Determinism-at-scale regressions for the indexed scheduler path.
+//!
+//! `SchedulerMode::Indexed` (indexed event heap + memoized pricing +
+//! `free_at`-pruned pod selection) is an *optimization*, not a policy
+//! change: on any trace it must replay the naive binary-heap /
+//! re-price-everything `Linear` reference **bit-for-bit** — same event
+//! count, same `ServeReport::to_json`. These tests pin that equivalence
+//! on traces large enough (10^4 requests) and feature-dense enough
+//! (co-batching, partial re-carves, cross-pod re-balancing) that any
+//! ordering or caching divergence has thousands of chances to surface.
+
+use std::sync::Arc;
+
+use swiftfusion::cluster::recarve::RecarvePolicy;
+use swiftfusion::coordinator::batcher::BatchPolicy;
+use swiftfusion::coordinator::engine::{PlanPolicy, ServeReport, SimService};
+use swiftfusion::coordinator::router::Router;
+use swiftfusion::coordinator::session::{
+    EarliestFinish, RebalancePolicy, SchedulerMode, ServeConfig, ServeSession, SimFleet,
+};
+use swiftfusion::sp::SpAlgo;
+use swiftfusion::util::json::to_string;
+use swiftfusion::workload::{TraceGen, Workload};
+
+/// Shrunk workloads (2 layers × 2 steps, as the serve_session tests
+/// use) so the timing simulations stay fast at 10^4 requests.
+fn short_workload() -> Workload {
+    let mut w = Workload::short_image_4k();
+    w.layers = 2;
+    w.steps = 2;
+    w
+}
+
+fn image_workload() -> Workload {
+    let mut w = Workload::flux_3072();
+    w.layers = 2;
+    w.steps = 2;
+    w
+}
+
+fn video_workload() -> Workload {
+    let mut w = Workload::cfg_video_96k();
+    w.layers = 2;
+    w.steps = 2;
+    w
+}
+
+/// 10^4 Poisson requests over a four-pod fleet, with batching,
+/// co-batching, and hysteresis re-carving all live.
+fn run_fleet(mode: SchedulerMode) -> ServeReport {
+    // 8 machines x 8 GPUs, four pods of 2 machines each
+    let mut router = Router::new(8, 8, 4, SpAlgo::SwiftFusion);
+    let svc = SimService::auto_plan(router.pods[0].cluster.clone(), SpAlgo::SwiftFusion);
+    let config = ServeConfig::new()
+        .batch(BatchPolicy { max_batch: 4, window: 1.0 })
+        .plan(PlanPolicy::Auto)
+        .co_batch(true)
+        .recarve(RecarvePolicy::Hysteresis { threshold: 0.15, window: 2 })
+        .dispatch(Arc::new(EarliestFinish))
+        .scheduler(mode);
+    let reqs =
+        TraceGen::new(11, 2.0, vec![short_workload(), image_workload()]).take(10_000);
+    ServeSession::new(config, &svc).run(&mut router, reqs)
+}
+
+#[test]
+fn indexed_scheduler_replays_ten_thousand_requests_bit_identically() {
+    let a = run_fleet(SchedulerMode::Indexed);
+    let b = run_fleet(SchedulerMode::Indexed);
+    let c = run_fleet(SchedulerMode::Linear);
+    assert!(a.metrics.completed() > 9_000, "the trace must mostly complete");
+    assert_eq!(a.events, b.events);
+    assert_eq!(a.events, c.events, "both modes must process identical event streams");
+    let (ja, jb, jc) =
+        (to_string(&a.to_json()), to_string(&b.to_json()), to_string(&c.to_json()));
+    assert_eq!(ja, jb, "the indexed scheduler must be self-deterministic");
+    assert_eq!(ja, jc, "indexed must replay the linear reference bit-for-bit");
+}
+
+/// Every scheduler client at once — partial (group-granular) re-carves,
+/// replica co-batching, and `gain` re-balancing on a two-pod fleet with
+/// a bimodal short/video mix — still bit-identical across modes.
+fn run_feature_soup(mode: SchedulerMode) -> ServeReport {
+    // 8 machines x 8 GPUs, two pods of 4 machines each
+    let mut router = Router::new(8, 8, 2, SpAlgo::SwiftFusion);
+    let fleet = SimFleet::auto(SpAlgo::SwiftFusion, 16);
+    let config = ServeConfig::new()
+        .batch(BatchPolicy { max_batch: 2, window: 0.5 })
+        .plan(PlanPolicy::Auto)
+        .patches(16)
+        .co_batch(true)
+        .recarve(RecarvePolicy::Partial { threshold: 0.15, window: 2 })
+        .dispatch(Arc::new(EarliestFinish))
+        .rebalance(RebalancePolicy::Gain { threshold: 0.1, window: 2 })
+        .scheduler(mode);
+    let reqs = TraceGen::new(7, 1.0, vec![short_workload(), video_workload()]).take(500);
+    ServeSession::with_fleet(config, &fleet).run(&mut router, reqs)
+}
+
+#[test]
+fn feature_soup_is_bit_identical_across_scheduler_modes() {
+    let lin = run_feature_soup(SchedulerMode::Linear);
+    let idx = run_feature_soup(SchedulerMode::Indexed);
+    assert!(lin.metrics.completed() > 400, "the trace must mostly complete");
+    assert_eq!(lin.events, idx.events);
+    assert_eq!(
+        to_string(&lin.to_json()),
+        to_string(&idx.to_json()),
+        "indexed must replay the linear reference bit-for-bit"
+    );
+}
