@@ -149,6 +149,13 @@ pub fn plan_step_cost(
 /// overlapped against one patch's compute. The SP comm terms shrink to
 /// the stage geometry, which is the whole point: a stage that fits in a
 /// machine pays **zero** inter-machine all-to-all.
+///
+/// The comm-layer optimization knobs ([`crate::config::NetSpec`]) enter
+/// here exactly as the executable schedules price them: inter-machine
+/// byte terms scale by `inter_compress`, and a fusible CFG pair
+/// (`cfg_fuse`, two branches, machine-aligned groups) halves the inter
+/// α — so [`choose_spec`] can pick a different plan when compression or
+/// fusion changes which candidate is cheapest.
 pub fn plan_step_cost_patches(
     cluster: &ClusterSpec,
     algo: SpAlgo,
@@ -165,8 +172,17 @@ pub fn plan_step_cost_patches(
 
     let comp = compute_time(shape, cluster, stage);
     let inter_elems = inter_volume(algo, shape, n_g, m_g, spec.sp);
+    // comm-layer optimization pass, mirrored from `comm::CommWorld` so
+    // the chooser sees the same savings the schedules measure: inter
+    // hops ship `inter_compress` of their payload bytes, and a fusible
+    // CFG pair (cfg_fuse on, exactly two branches, machine-aligned
+    // groups — `ParallelPlan::cfg_fusible`) pays half the per-transfer α
+    let wire = cluster.net.inter_compress;
+    let fused =
+        cluster.net.cfg_fuse && spec.cfg_degree == 2 && spec.ranks_per_group() % m == 0;
+    let alpha = if fused { cluster.net.inter_lat * 0.5 } else { cluster.net.inter_lat };
     let inter = if n_g > 1 {
-        cluster.net.inter_lat + inter_elems * 4.0 / cluster.net.inter_bw_per_flow(m_g)
+        alpha + inter_elems * 4.0 * wire / cluster.net.inter_bw_per_flow(m_g)
     } else {
         0.0
     };
@@ -189,8 +205,7 @@ pub fn plan_step_cost_patches(
     // next stage); inter-machine iff the group spans machines.
     let per_rank_patch_bytes = shape.bytes_per_tensor() / mm / stage as f64;
     let hop = if spec.ranks_per_group() > m {
-        cluster.net.inter_lat
-            + per_rank_patch_bytes / cluster.net.inter_bw_per_flow(m_g)
+        alpha + per_rank_patch_bytes * wire / cluster.net.inter_bw_per_flow(m_g)
     } else {
         cluster.net.intra_lat + per_rank_patch_bytes / cluster.net.intra_bw
     };
@@ -536,6 +551,53 @@ mod tests {
         let picked = choose_spec(&c, SpAlgo::SwiftFusion, &s, 2, 1);
         assert!(picked.pp_degree > 1, "chooser prefers a pipelined plan: {picked:?}");
         assert_eq!(picked.cfg_degree, 2, "CFG parallelism survives: {picked:?}");
+    }
+
+    #[test]
+    fn comm_opt_knobs_reach_the_closed_form_and_flip_the_chooser() {
+        // The comm-layer knobs must be visible to the planner, not just
+        // the executable schedules. Three facts pin the wiring:
+        let c = ClusterSpec::paper_testbed();
+        let s = shape(); // 96k tokens, 24 heads
+        // a 16-rank group spans two machines -> pays the inter all-to-all
+        let inter_plan = ParallelSpec::with_gcd_placement(2, 1, 16, 24);
+        // an 8-rank group fits one machine -> zero inter traffic
+        let intra_plan = ParallelSpec::new(2, 2, SpDegrees::new(8, 1));
+        let mut half = c.clone();
+        half.net.inter_compress = 0.5;
+
+        // (1) compression strictly cheapens inter-bearing plans and
+        // leaves fully-intra plans *bit-identical* (off-path safety).
+        let base = plan_step_cost(&c, SpAlgo::SwiftFusion, &s, &inter_plan, 2);
+        let compressed = plan_step_cost(&half, SpAlgo::SwiftFusion, &s, &inter_plan, 2);
+        assert!(compressed < base, "compressed {compressed} vs {base}");
+        assert_eq!(
+            plan_step_cost(&half, SpAlgo::SwiftFusion, &s, &intra_plan, 2),
+            plan_step_cost(&c, SpAlgo::SwiftFusion, &s, &intra_plan, 2),
+            "intra-only plans must not see the inter knob"
+        );
+
+        // (2) CFG fusion saves exactly the halved per-transfer alpha for
+        // a fusible pair (cfg=2, machine-aligned group), once per eval.
+        let mut fuse = c.clone();
+        fuse.net.cfg_fuse = true;
+        let fused = plan_step_cost(&fuse, SpAlgo::SwiftFusion, &s, &inter_plan, 2);
+        let saved = base - fused;
+        assert!(
+            (saved - 0.5 * c.net.inter_lat).abs() < 1e-9,
+            "fusion must halve alpha: saved {saved}"
+        );
+
+        // (3) the chooser flips: a 24k CFG video at 2 patches is served
+        // unpipelined at full precision (the inter-machine activation
+        // hop is too expensive), but 2x compression makes the deeper
+        // cfg2 x pp2 pipeline the argmin. Margins are ~15-30% in the
+        // closed form, so this pin is robust to small model changes.
+        let mid = AttnShape::new(1, 24_000, 24, 64);
+        let plain = choose_spec_with_patches(&c, SpAlgo::SwiftFusion, &mid, 2, 1, 2);
+        let comp = choose_spec_with_patches(&half, SpAlgo::SwiftFusion, &mid, 2, 1, 2);
+        assert_eq!(plain.label(), "cfg2 x pp1 x rep2 x U8R1", "{plain:?}");
+        assert_eq!(comp.label(), "cfg2 x pp2 x rep1 x U8R1", "{comp:?}");
     }
 
     #[test]

@@ -63,6 +63,28 @@ impl<'w> RankCtx<'w> {
         self.clock.advance(seconds, TimeKind::Compute);
     }
 
+    /// The NIC flow count an SP collective over `ranks` should charge
+    /// per inter-machine transfer from this rank's machine. Legacy
+    /// (constant fair-share) mode keeps the historic worst case — every
+    /// GPU of the machine contends — so existing schedules price
+    /// bit-identically. Scheduled mode
+    /// ([`crate::config::NetSpec::nic_schedule`]) counts the flows that
+    /// can *actually* collide: the collective's own ranks on this
+    /// machine (a ring subset with one rank per machine stops paying
+    /// for seven phantom neighbours).
+    pub fn nic_flows(&self, ranks: &[usize]) -> usize {
+        let m = self.cluster().gpus_per_machine;
+        if !self.cluster().net.nic_schedule {
+            return m;
+        }
+        let mine = self.cluster().machine_of(self.rank);
+        ranks
+            .iter()
+            .filter(|&&r| self.cluster().machine_of(r) == mine)
+            .count()
+            .clamp(1, m)
+    }
+
     /// Cost model for one attention tile `[B, lq, g, D] x [B, lk, g, D]`.
     pub fn attn_tile_time(&self, b: usize, lq: usize, lk: usize, g: usize, d: usize) -> f64 {
         let flops = 4.0 * b as f64 * lq as f64 * lk as f64 * g as f64 * d as f64;

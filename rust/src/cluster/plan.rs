@@ -245,6 +245,21 @@ impl ParallelPlan {
         &self.groups[branch * self.spec.batch_replicas + replica]
     }
 
+    /// Is this plan eligible for CFG collective fusion
+    /// ([`crate::config::NetSpec::cfg_fuse`])? Requires exactly two
+    /// guidance branches whose groups have *identical* collective
+    /// footprints — guaranteed here by construction (all groups share
+    /// one spec) — and machine-aligned groups, so the two branches'
+    /// same-shape inter-machine transfers traverse *different* machine
+    /// pairs in lockstep and can share one scheduled flow's handshake.
+    /// A group smaller than a machine would put both branches on the
+    /// same NIC and fusion would just rename contention.
+    pub fn cfg_fusible(&self) -> bool {
+        self.cluster.net.cfg_fuse
+            && self.spec.cfg_degree == 2
+            && self.spec.ranks_per_group() % self.cluster.gpus_per_machine == 0
+    }
+
     /// Groups computing the conditional branch (all groups at cfg 1).
     pub fn conditional_groups(&self) -> impl Iterator<Item = &ParallelGroup> {
         self.groups
@@ -450,6 +465,33 @@ mod tests {
         assert_eq!(full.base_rank, 0);
         assert!(full.contains(0) && full.contains(31));
         assert!(full.try_group_of(31).is_some());
+    }
+
+    #[test]
+    fn cfg_fusible_requires_knob_two_branches_and_alignment() {
+        let mut cluster = ClusterSpec::new(4, 8);
+        let spec = ParallelSpec::new(2, 2, SpDegrees::new(8, 1)); // groups of 8 = 1 machine
+        let plan = ParallelPlan::build(&cluster, spec, SpAlgo::SwiftFusion).unwrap();
+        assert!(!plan.cfg_fusible(), "knob off -> never fusible");
+        cluster.net.cfg_fuse = true;
+        let fusible = ParallelPlan::build(&cluster, spec, SpAlgo::SwiftFusion).unwrap();
+        assert!(fusible.cfg_fusible());
+        // cfg 1: no branch pair to fuse
+        let solo = ParallelPlan::build(
+            &cluster,
+            ParallelSpec::new(1, 4, SpDegrees::new(8, 1)),
+            SpAlgo::SwiftFusion,
+        )
+        .unwrap();
+        assert!(!solo.cfg_fusible());
+        // sub-machine groups: both branches share a NIC, not fusible
+        let tiny = ParallelPlan::build(
+            &cluster,
+            ParallelSpec::new(2, 4, SpDegrees::new(4, 1)),
+            SpAlgo::SwiftFusion,
+        )
+        .unwrap();
+        assert!(!tiny.cfg_fusible());
     }
 
     #[test]

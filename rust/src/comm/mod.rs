@@ -223,6 +223,35 @@ pub struct Traffic {
     pub inter_out: f64,
 }
 
+/// Aggregate comm observability of one (or many, via [`Self::absorb`])
+/// world runs: the serve report's `comm` section and the comm-opt
+/// bench's notes. Inter-machine byte counters are **wire** bytes —
+/// compressed hops ([`NetSpec::inter_compress`]) count what crossed the
+/// NIC, not the logical payload.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CommStats {
+    /// Per-rank [`Traffic`] counters summed over all ranks.
+    pub traffic: Traffic,
+    /// Wire-seconds NICs were busy under scheduled mode
+    /// ([`NetSpec::nic_schedule`]); zero in constant fair-share mode.
+    pub nic_busy: f64,
+    /// Inter-machine transfers priced at the fused CFG-pair rate
+    /// ([`CommWorld::set_cfg_fused`]).
+    pub fused_transfers: u64,
+}
+
+impl CommStats {
+    /// Fold another run's stats into this accumulator.
+    pub fn absorb(&mut self, other: &CommStats) {
+        self.traffic.intra_in += other.traffic.intra_in;
+        self.traffic.intra_out += other.traffic.intra_out;
+        self.traffic.inter_in += other.traffic.inter_in;
+        self.traffic.inter_out += other.traffic.inter_out;
+        self.nic_busy += other.nic_busy;
+        self.fused_transfers += other.fused_transfers;
+    }
+}
+
 struct Shared {
     mailbox: HashMap<MsgKey, Vec<TwoSidedMsg>>,
     windows: HashMap<(usize, String), WindowEntry>,
@@ -235,6 +264,29 @@ struct Shared {
     peak_window_bytes: Vec<f64>,
     traffic: Vec<Traffic>,
     next_seq: u64,
+    /// Per-rank NIC lane timelines for contention-aware chunk
+    /// scheduling ([`crate::config::NetSpec::nic_schedule`]): virtual
+    /// time each rank's ingress/egress NIC share is next free. A lane
+    /// is only ever touched by transfers *its own rank issues* (gets
+    /// and irecvs for ingress, puts for egress), so the values are
+    /// independent of wall-clock thread interleaving — the same
+    /// per-rank-ownership argument the [`RankClock`] queues rely on.
+    nic_in_free: Vec<f64>,
+    nic_out_free: Vec<f64>,
+    /// Wire-seconds each rank's transfers occupied its NIC under
+    /// scheduled mode (chunk time only, no α) — observability for the
+    /// serve report's comm section.
+    nic_busy: Vec<f64>,
+    /// Inter-machine transfers priced at the fused (CFG-pair) rate per
+    /// rank.
+    fused_inter: Vec<u64>,
+    /// Set by the plan layer when the carved plan's CFG branch groups
+    /// have identical collective footprints
+    /// ([`crate::cluster::plan::ParallelPlan::cfg_fusible`]): the two
+    /// branches' same-shape inter-machine transfers move as one
+    /// scheduled flow, so each branch pays half the per-transfer α and
+    /// half the two-sided rendezvous.
+    cfg_fused: bool,
 }
 
 impl Shared {
@@ -270,6 +322,11 @@ impl CommWorld {
                 peak_window_bytes: vec![0.0; n],
                 traffic: vec![Traffic::default(); n],
                 next_seq: 0,
+                nic_in_free: vec![0.0; n],
+                nic_out_free: vec![0.0; n],
+                nic_busy: vec![0.0; n],
+                fused_inter: vec![0; n],
+                cfg_fused: false,
             }),
             cond: Condvar::new(),
         }
@@ -289,6 +346,102 @@ impl CommWorld {
         } else {
             n.inter_lat + bytes / n.inter_bw_per_flow(flows)
         }
+    }
+
+    /// Mark this world's run as CFG-fused (set once, before ranks run):
+    /// inter-machine transfers price at the fused-pair rate — half the
+    /// per-transfer α and half the two-sided rendezvous — because the
+    /// two CFG branches' identical-shape collectives move as one
+    /// scheduled flow. The plan layer gates this on
+    /// [`crate::cluster::plan::ParallelPlan::cfg_fusible`].
+    pub fn set_cfg_fused(&self, on: bool) {
+        self.state.lock().unwrap().cfg_fused = on;
+    }
+
+    /// Price one **inter-machine** hop onto `rank`'s NIC and record its
+    /// wire traffic; returns `(done, dur)` where `dur` is the occupancy
+    /// the issuing kernel observes (the two-sided stream-block charge).
+    /// `earliest` is when the transfer may start (publish time or
+    /// rendezvous), `tax` the SM-contention multiplier (two-sided
+    /// only), `egress` which of `rank`'s lanes it occupies.
+    ///
+    /// With [`NetSpec::nic_schedule`] off this is the legacy model —
+    /// the constant fair-share α–β duration chained through the rank
+    /// clock's egress/ingress queue, bit-identical to the pre-pass
+    /// numbers when compression and fusion are off too. On, transfers
+    /// are TDMA-scheduled on the rank's lane: each chunk moves at
+    /// *full* NIC bandwidth in its round-robin slot (`flows` slots per
+    /// period, this rank staggered by its on-machine index), so a
+    /// burst's early chunks land ~`flows`× sooner and queued chunks
+    /// stop re-paying α, while aggregate NIC throughput is conserved
+    /// (the lane frees at `flows` chunk-times per transfer).
+    #[allow(clippy::too_many_arguments)]
+    fn inter_hop(
+        &self,
+        st: &mut Shared,
+        clock: &mut RankClock,
+        rank: usize,
+        peer: usize,
+        bytes: f64,
+        flows: usize,
+        earliest: f64,
+        tax: f64,
+        egress: bool,
+    ) -> (f64, f64) {
+        let n = self.net();
+        let wire = bytes * n.inter_compress;
+        let mut lat = n.inter_lat;
+        if st.cfg_fused {
+            lat *= 0.5;
+            st.fused_inter[rank] += 1;
+        }
+        let (src, dst) = if egress { (rank, peer) } else { (peer, rank) };
+        st.record_transfer(src, dst, wire, true);
+        if !n.nic_schedule {
+            let dur = (lat + wire / n.inter_bw_per_flow(flows)) * (1.0 + tax);
+            let (_, done) = if egress {
+                clock.reserve_egress(earliest, dur)
+            } else {
+                clock.reserve_ingress(earliest, dur)
+            };
+            return (done, dur);
+        }
+        // chunk wire time at full NIC bandwidth; the SM tax slows the
+        // copy kernel feeding the NIC, not the queueing discipline
+        let c = (wire / n.inter_bw) * (1.0 + tax);
+        let f = flows.max(1);
+        let slot = (rank % self.cluster.gpus_per_machine) % f;
+        let lane = if egress { &mut st.nic_out_free[rank] } else { &mut st.nic_in_free[rank] };
+        // a fresh burst staggers by this rank's TDMA slot; a queued
+        // chunk waits for the lane's next period
+        let start = if earliest >= *lane { earliest + slot as f64 * c } else { *lane };
+        *lane = start + f as f64 * c;
+        st.nic_busy[rank] += c;
+        let dur = lat * (1.0 + tax) + c;
+        (start + dur, dur)
+    }
+
+    /// Quantize a real payload to the wire precision of a compressed
+    /// inter-machine hop ([`NetSpec::inter_compress`]): a uniform
+    /// symmetric grid over the buffer's max magnitude at
+    /// `32 × ratio` bits, so the timing model's wire-byte multiplier
+    /// and the numeric error the property tests bound come from the
+    /// same knob. Shape-only (timing mode) buffers pass through.
+    fn maybe_compress(&self, buf: Buf) -> Buf {
+        let ratio = self.net().inter_compress;
+        if ratio >= 1.0 {
+            return buf;
+        }
+        let Buf::Real(t) = buf else { return buf };
+        let bits = (32.0 * ratio).round().max(2.0);
+        let levels = (2f64.powf(bits - 1.0) - 1.0) as f32;
+        let amax = t.data().iter().fold(0f32, |a, v| a.max(v.abs()));
+        if amax == 0.0 {
+            return Buf::Real(t);
+        }
+        let scale = amax / levels;
+        let data = t.data().iter().map(|v| (v / scale).round() * scale).collect();
+        Buf::Real(Tensor::new(t.shape().to_vec(), data).expect("same shape"))
     }
 
     // -----------------------------------------------------------------
@@ -343,20 +496,44 @@ impl CommWorld {
             if let Some(pos) = msgs.iter().position(|m| m.done.is_none()) {
                 let sender_ready = msgs[pos].sender_ready;
                 let bytes = msgs[pos].buf.bytes();
-                // rendezvous: transfer starts when BOTH sides are ready,
-                // plus the two-sided sync penalty (Fig. 4).
-                let earliest = sender_ready.max(clock.now) + self.net().two_sided_sync;
-                // kernel-based two-sided transfers burn SMs (Challenge 3):
-                // modelled as an effective-bandwidth loss on the transfer
-                // (contention scales with transfer activity).
-                let dur = self.transfer_time(src, dst, bytes, flows)
-                    * (1.0 + self.net().sm_tax);
-                let (_, done) = clock.reserve_ingress(earliest, dur);
+                let inter = !self.cluster.same_machine(src, dst);
+                let (done, dur) = if inter {
+                    // rendezvous: transfer starts when BOTH sides are
+                    // ready, plus the two-sided sync penalty (Fig. 4) —
+                    // paid once for the pair when CFG fusion is on.
+                    // kernel-based two-sided transfers burn SMs
+                    // (Challenge 3): modelled as an effective-bandwidth
+                    // loss on the transfer inside `inter_hop`.
+                    let sync = if st.cfg_fused {
+                        self.net().two_sided_sync * 0.5
+                    } else {
+                        self.net().two_sided_sync
+                    };
+                    let earliest = sender_ready.max(clock.now) + sync;
+                    self.inter_hop(
+                        &mut st,
+                        clock,
+                        dst,
+                        src,
+                        bytes,
+                        flows,
+                        earliest,
+                        self.net().sm_tax,
+                        false,
+                    )
+                } else {
+                    let earliest = sender_ready.max(clock.now) + self.net().two_sided_sync;
+                    let dur = self.transfer_time(src, dst, bytes, flows)
+                        * (1.0 + self.net().sm_tax);
+                    let (_, done) = clock.reserve_ingress(earliest, dur);
+                    st.record_transfer(src, dst, bytes, false);
+                    (done, dur)
+                };
+                let msgs = st.mailbox.entry(key.clone()).or_default();
                 let msg = &mut msgs[pos];
                 msg.done = Some(done);
                 let buf = msg.buf.clone();
-                let inter = !self.cluster.same_machine(src, dst);
-                st.record_transfer(src, dst, bytes, inter);
+                let buf = if inter { self.maybe_compress(buf) } else { buf };
                 // the NCCL kernel occupies stream slots: a fraction of
                 // the transfer blocks the issuing rank outright
                 clock.advance(
@@ -435,10 +612,18 @@ impl CommWorld {
         flows: usize,
     ) -> Event {
         let bytes = buf.bytes();
-        let dur = self.transfer_time(src, dst, bytes, flows);
-        let (_, done) = clock.reserve_egress(clock.now, dur);
+        let now = clock.now;
         let mut st = self.state.lock().unwrap();
-        st.record_transfer(src, dst, bytes, !self.cluster.same_machine(src, dst));
+        let (done, buf) = if self.cluster.same_machine(src, dst) {
+            let dur = self.transfer_time(src, dst, bytes, flows);
+            let (_, done) = clock.reserve_egress(now, dur);
+            st.record_transfer(src, dst, bytes, false);
+            (done, buf)
+        } else {
+            let (done, _) =
+                self.inter_hop(&mut st, clock, src, dst, bytes, flows, now, 0.0, true);
+            (done, self.maybe_compress(buf))
+        };
         st.windows
             .insert((dst, slot.to_string()), WindowEntry { buf, publish_time: done });
         st.window_bytes[dst] += bytes;
@@ -465,18 +650,24 @@ impl CommWorld {
             if let Some(entry) = st.windows.get(&(src, slot.to_string())) {
                 let buf = entry.buf.clone();
                 let publish = entry.publish_time;
-                drop(st);
                 if src == me {
                     return GetHandle { buf, done: publish.max(clock.now) };
                 }
                 let bytes = buf.bytes();
-                let dur = self.transfer_time(src, me, bytes, flows);
-                let (_, done) = clock.reserve_ingress(publish.max(clock.now), dur);
+                let (buf, done) = if self.cluster.same_machine(src, me) {
+                    let dur = self.transfer_time(src, me, bytes, flows);
+                    let (_, done) = clock.reserve_ingress(publish.max(clock.now), dur);
+                    st.record_transfer(src, me, bytes, false);
+                    (buf, done)
+                } else {
+                    let earliest = publish.max(clock.now);
+                    let (done, _) = self.inter_hop(
+                        &mut st, clock, me, src, bytes, flows, earliest, 0.0, false,
+                    );
+                    (self.maybe_compress(buf), done)
+                };
+                drop(st);
                 clock.advance(1e-6, TimeKind::Overhead);
-                self.state
-                    .lock()
-                    .unwrap()
-                    .record_transfer(src, me, bytes, !self.cluster.same_machine(src, me));
                 return GetHandle { buf, done };
             }
             st = self.cond.wait(st).unwrap();
@@ -553,6 +744,49 @@ impl CommWorld {
     /// Measured transfer volume for `rank` (see [`Traffic`]).
     pub fn traffic(&self, rank: usize) -> Traffic {
         self.state.lock().unwrap().traffic[rank]
+    }
+
+    /// Whole-run transfer volume: the per-rank [`Traffic`] counters
+    /// summed (the serve report's comm section).
+    pub fn traffic_totals(&self) -> Traffic {
+        let st = self.state.lock().unwrap();
+        st.traffic.iter().fold(Traffic::default(), |a, t| Traffic {
+            intra_in: a.intra_in + t.intra_in,
+            intra_out: a.intra_out + t.intra_out,
+            inter_in: a.inter_in + t.inter_in,
+            inter_out: a.inter_out + t.inter_out,
+        })
+    }
+
+    /// Wire-seconds `rank`'s transfers occupied its NIC in scheduled
+    /// mode (chunk time only, no α) — zero when
+    /// [`NetSpec::nic_schedule`] is off.
+    pub fn nic_busy_seconds(&self, rank: usize) -> f64 {
+        self.state.lock().unwrap().nic_busy[rank]
+    }
+
+    /// Inter-machine transfers priced at the fused CFG-pair rate,
+    /// summed over ranks — zero unless [`Self::set_cfg_fused`] was
+    /// called with `true` before the run.
+    pub fn fused_transfers(&self) -> u64 {
+        self.state.lock().unwrap().fused_inter.iter().sum()
+    }
+
+    /// Aggregate comm observability of this world's run so far — one
+    /// snapshot the serve engine folds into its accumulated
+    /// [`CommStats`] cell after each pricing run.
+    pub fn stats(&self) -> CommStats {
+        let st = self.state.lock().unwrap();
+        CommStats {
+            traffic: st.traffic.iter().fold(Traffic::default(), |a, t| Traffic {
+                intra_in: a.intra_in + t.intra_in,
+                intra_out: a.intra_out + t.intra_out,
+                inter_in: a.inter_in + t.inter_in,
+                inter_out: a.inter_out + t.inter_out,
+            }),
+            nic_busy: st.nic_busy.iter().sum(),
+            fused_transfers: st.fused_inter.iter().sum(),
+        }
     }
 
     /// Every completed barrier's (sorted) rank group, in completion order —
@@ -802,6 +1036,133 @@ mod tests {
         let c2 = RankClock::new();
         w.expose(&c2, 0, "c", buf(64));
         assert_eq!(w.peak_window_bytes(0), 2048.0);
+    }
+
+    #[test]
+    fn transfer_time_alpha_beta_hand_computed() {
+        // The α–β arithmetic pinned against the p4de preset by hand:
+        // intra = 3 µs + B/300 GB/s, inter = 15 µs + B·flows/25 GB/s.
+        let w = world(2, 2);
+        let b = 1e6;
+        assert_eq!(w.transfer_time(0, 1, b, 1), 3e-6 + b / 300e9);
+        assert_eq!(w.transfer_time(0, 2, b, 1), 15e-6 + b / 25e9);
+        // NIC fair share: 4 concurrent flows quarter the bandwidth —
+        // the +120 µs at 1 MB is the contention the scheduler removes
+        let shared = w.transfer_time(0, 2, b, 4);
+        assert_eq!(shared, 15e-6 + b / (25e9 / 4.0));
+        assert!((shared - (15e-6 + 4.0 * 40e-6)).abs() < 1e-12);
+        // intra transfers never pay the NIC share
+        assert_eq!(w.transfer_time(0, 1, b, 4), 3e-6 + b / 300e9);
+    }
+
+    #[test]
+    fn scheduled_nic_staggers_and_amortizes_alpha() {
+        // TDMA chunk scheduling, hand-computed: chunk time c = B/25 GB/s
+        // at FULL bandwidth; a fresh burst staggers by the rank's slot,
+        // queued chunks wait one lane period (flows·c) but never re-pay α.
+        let mut cluster = ClusterSpec::new(2, 2);
+        cluster.net.nic_schedule = true;
+        let w = CommWorld::new(cluster);
+        let c0 = RankClock::new();
+        w.expose(&c0, 0, "a", buf(1 << 20));
+        w.expose(&c0, 0, "b", buf(1 << 20));
+        let bytes = (1u64 << 22) as f64; // 2^20 elems × 4 B
+        let c = bytes / 25e9;
+        let alpha = 15e-6;
+        // rank 2: local index 0 → slot 0 of 2: first chunk unstaggered
+        let mut puller = RankClock::new();
+        let ha = w.get(&mut puller, 2, 0, "a", 2);
+        let hb = w.get(&mut puller, 2, 0, "b", 2);
+        assert!((ha.done - (alpha + c)).abs() < 1e-12, "{}", ha.done);
+        // second pull queues on the lane (free at 2c), not on α
+        assert!((hb.done - (2.0 * c + alpha + c)).abs() < 1e-12, "{}", hb.done);
+        assert!((w.nic_busy_seconds(2) - 2.0 * c).abs() < 1e-15);
+        // rank 3: local index 1 → slot 1 of 2: staggered one chunk
+        let mut p3 = RankClock::new();
+        let h3 = w.get(&mut p3, 3, 0, "a", 2);
+        assert!((h3.done - (c + alpha + c)).abs() < 1e-12, "{}", h3.done);
+        // completions beat the constant fair-share model (duration
+        // α + flows·c, serialized on the ingress queue): strictly for
+        // early slots and queued chunks; the last slot's first chunk
+        // lands exactly at the constant-model time (slot (f−1)·c + c =
+        // f·c), which is why aggregate NIC throughput is conserved
+        let const_dur = alpha + 2.0 * c;
+        assert!(ha.done < const_dur);
+        assert!(hb.done < 2.0 * const_dur);
+        assert!((h3.done - const_dur).abs() < 1e-12);
+        // intra pulls don't touch the NIC lane
+        let mut p1 = RankClock::new();
+        let h1 = w.get(&mut p1, 1, 0, "a", 2);
+        assert_eq!(h1.done, 3e-6 + bytes / 300e9);
+        assert_eq!(w.nic_busy_seconds(1), 0.0);
+    }
+
+    #[test]
+    fn compressed_inter_hop_halves_wire_bytes_and_quantizes() {
+        let mut cluster = ClusterSpec::new(2, 2);
+        cluster.net.inter_compress = 0.5;
+        let w = CommWorld::new(cluster);
+        let t = Tensor::random(&[1024], 7);
+        let bytes = 4096.0;
+        let mut c0 = RankClock::new();
+        let ev = w.put(&mut c0, 0, 2, "x", Buf::Real(t.clone()), 1);
+        // the timing model and the Traffic counters both see wire bytes
+        assert!((ev.done - (15e-6 + bytes * 0.5 / 25e9)).abs() < 1e-15);
+        assert_eq!(w.traffic(0).inter_out, bytes * 0.5);
+        assert_eq!(w.traffic(2).inter_in, bytes * 0.5);
+        // the payload is quantized to the 16-bit symmetric grid: error
+        // per element ≤ amax/(2·(2^15−1))
+        let mut c2 = RankClock::new();
+        let got = w.wait_get(&mut c2, w.get(&mut c2, 2, 2, "x", 1));
+        let amax = t.data().iter().fold(0f32, |a, v| a.max(v.abs()));
+        let bound = amax / 32767.0;
+        let err = t
+            .data()
+            .iter()
+            .zip(got.tensor().data())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(err <= bound, "quantization error {err} vs bound {bound}");
+        assert!(err > 0.0, "compression must actually quantize");
+        // intra hops ship full precision and full bytes
+        let mut c1 = RankClock::new();
+        let local = w.put(&mut c1, 0, 1, "y", Buf::Real(t.clone()), 1);
+        assert_eq!(w.traffic(1).intra_in, bytes);
+        assert!(local.done > 0.0);
+        let mut cr = RankClock::new();
+        let intact = w.wait_get(&mut cr, w.get(&mut cr, 1, 1, "y", 1));
+        assert_eq!(intact.tensor(), &t);
+    }
+
+    #[test]
+    fn fused_world_halves_alpha_and_rendezvous() {
+        let fused = world(2, 2);
+        fused.set_cfg_fused(true);
+        let plain = world(2, 2);
+        let c0 = RankClock::new();
+        fused.expose(&c0, 0, "q", buf(1 << 20));
+        plain.expose(&c0, 0, "q", buf(1 << 20));
+        let bytes = (1u64 << 22) as f64;
+        let mut pf = RankClock::new();
+        let hf = fused.get(&mut pf, 2, 0, "q", 1);
+        let mut pp = RankClock::new();
+        let hp = plain.get(&mut pp, 2, 0, "q", 1);
+        // one-sided: the fused flow pays half the per-transfer α
+        assert!((hf.done - (7.5e-6 + bytes / 25e9)).abs() < 1e-15);
+        assert!((hp.done - (15e-6 + bytes / 25e9)).abs() < 1e-15);
+        assert_eq!(fused.fused_transfers(), 1);
+        assert_eq!(plain.fused_transfers(), 0);
+        // two-sided: the rendezvous sync halves too
+        let mut s = RankClock::new();
+        let mut r = RankClock::new();
+        let h = fused.isend(&mut s, 0, 2, "m", buf(256));
+        let got = fused.wait_recv(&mut r, 0, 2, "m", 1);
+        fused.wait_send(&mut s, h);
+        assert_eq!(got.shape(), &[256]);
+        let dur = (7.5e-6 + 1024.0 / 25e9) * 1.12;
+        // sender_ready = 0, receiver posts at 0: earliest = 0 + sync/2
+        assert!((s.now - (5e-6 + dur)).abs() < 1e-12, "{}", s.now);
+        assert_eq!(fused.fused_transfers(), 2);
     }
 
     #[test]

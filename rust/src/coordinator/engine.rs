@@ -10,10 +10,10 @@
 use std::collections::{BTreeMap, HashMap};
 use std::sync::Mutex;
 
-use crate::cluster::exec::{run_cluster, ExecMode};
+use crate::cluster::exec::{run_in_world, ExecMode};
 use crate::cluster::plan::ParallelPlan;
 use crate::cluster::recarve::{GroupEpoch, PlanEpoch};
-use crate::comm::Buf;
+use crate::comm::{Buf, CommStats, CommWorld};
 use crate::config::{ClusterSpec, ParallelSpec, ParallelSpecError, SpDegrees};
 use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::metrics::Metrics;
@@ -73,6 +73,11 @@ pub struct SimService {
     /// Subset-plan memo for group-granular re-carving:
     /// (workload name, machines) → chosen spec for that footprint.
     sub_spec_cache: Mutex<HashMap<(String, usize), ParallelSpec>>,
+    /// Comm counters accumulated across every *executed* pricing run
+    /// (cache hits add nothing — the counters describe the modeled
+    /// schedules, not per-request traffic). Surfaced by
+    /// [`Self::comm_stats`] into the serve report's `comm` section.
+    comm: Mutex<CommStats>,
 }
 
 impl SimService {
@@ -86,6 +91,7 @@ impl SimService {
             cache: Mutex::new(HashMap::new()),
             spec_cache: Mutex::new(HashMap::new()),
             sub_spec_cache: Mutex::new(HashMap::new()),
+            comm: Mutex::new(CommStats::default()),
         }
     }
 
@@ -133,11 +139,32 @@ impl SimService {
         };
         let ls = params.shard_len();
         let algo = self.algo;
-        let run = run_cluster(&self.cluster, &ExecMode::Timing, |ctx| {
+        let world = CommWorld::new(self.cluster.clone());
+        let run = run_in_world(&world, &ExecMode::Timing, |ctx| {
             let s = Buf::Shape(vec![shape.b, ls, shape.h, shape.d]);
             algo.run(ctx, &params, s.clone(), s.clone(), s);
         });
+        self.record_comm(&world.stats());
         run.makespan() + self.pointwise_time(&shape, ls)
+    }
+
+    /// Fold one pricing run's comm counters into the service's
+    /// accumulator (see the `comm` field).
+    fn record_comm(&self, stats: &CommStats) {
+        self.comm.lock().unwrap().absorb(stats);
+    }
+
+    /// Accumulated comm observability of every pricing run this service
+    /// executed — `None` while the comm-optimization pass is fully off
+    /// (all [`crate::config::NetSpec`] knobs at their defaults), so the
+    /// serve report's `comm` section stays additive and knob-off runs
+    /// keep rendering byte-identically to the pinned goldens.
+    pub fn comm_stats_if_active(&self) -> Option<CommStats> {
+        let n = &self.cluster.net;
+        if !n.nic_schedule && n.inter_compress >= 1.0 && !n.cfg_fuse {
+            return None;
+        }
+        Some(*self.comm.lock().unwrap())
     }
 
     /// Pointwise (non-attention) stage cost on one rank's `ls`-token
@@ -194,13 +221,14 @@ impl SimService {
             let plan = ParallelPlan::build(cluster, *spec, self.algo)
                 .expect("spec validated against its pricing footprint");
             let chunk = shape.l / self.patches / stage_ranks;
-            let block = pipefusion::pipefusion_layer_makespan(
+            let (block, stats) = pipefusion::pipefusion_layer_makespan_traced(
                 &plan,
                 shape,
                 chunk,
                 self.patches,
                 workload.cfg_evals,
             );
+            self.record_comm(&stats);
             let evals = workload.cfg_evals.div_ceil(spec.cfg_degree) as f64;
             // pointwise pipelines across stages exactly like attention
             // (each stage runs its own layers' pointwise concurrently),
@@ -222,7 +250,9 @@ impl SimService {
         let plan = ParallelPlan::build(cluster, *spec, self.algo)
             .expect("spec validated against its pricing footprint");
         let ls = shape.l / sp_ranks;
-        let attn = hybrid::hybrid_layer_makespan(&plan, shape, ls, workload.cfg_evals);
+        let (attn, stats) =
+            hybrid::hybrid_layer_makespan_traced(&plan, shape, ls, workload.cfg_evals);
+        self.record_comm(&stats);
         let evals = workload.cfg_evals.div_ceil(spec.cfg_degree) as f64;
         attn + evals * self.pointwise_time(&shape, ls)
     }
@@ -313,6 +343,10 @@ impl CostModel for SimService {
         carve: Option<&ParallelSpec>,
     ) -> f64 {
         self.timed(workload, batch, carve.copied())
+    }
+
+    fn comm_stats(&self) -> Option<CommStats> {
+        self.comm_stats_if_active()
     }
 }
 
@@ -484,6 +518,13 @@ pub struct ServeReport {
     /// **not** serialized by [`Self::to_json`], so the pinned goldens
     /// are unaffected.
     pub events: u64,
+    /// Per-link comm counters of the pricing runs behind the session's
+    /// service model ([`CostModel::comm_stats`]): intra- vs
+    /// inter-machine wire bytes, scheduled-NIC busy seconds, fused
+    /// transfer count. `None` — and absent from [`Self::to_json`] —
+    /// whenever the comm-optimization pass is off, so existing goldens
+    /// render unchanged.
+    pub comm: Option<CommStats>,
 }
 
 impl ServeReport {
@@ -587,6 +628,19 @@ impl ServeReport {
                     ("splits", Json::Num(self.recarve.partial_splits as f64)),
                     ("merges", Json::Num(self.recarve.merges as f64)),
                     ("group_epochs", group_epochs),
+                ]),
+            ));
+        }
+        if let Some(c) = &self.comm {
+            fields.push((
+                "comm",
+                obj(vec![
+                    ("intra_in", Json::Num(c.traffic.intra_in)),
+                    ("intra_out", Json::Num(c.traffic.intra_out)),
+                    ("inter_in", Json::Num(c.traffic.inter_in)),
+                    ("inter_out", Json::Num(c.traffic.inter_out)),
+                    ("nic_busy", Json::Num(c.nic_busy)),
+                    ("fused_transfers", Json::Num(c.fused_transfers as f64)),
                 ]),
             ));
         }

@@ -76,6 +76,16 @@ pub trait CostModel: Sync {
     ) -> f64 {
         self.service_time(workload, batch)
     }
+
+    /// Comm observability of the pricing runs behind this model's
+    /// estimates, for the serve report's additive `comm` section.
+    /// `None` (the default, and whenever the comm-optimization pass is
+    /// off) keeps knob-off reports byte-identical to the pinned goldens;
+    /// models that execute measured schedules with a comm-opt knob on
+    /// override this ([`engine::SimService::comm_stats_if_active`]).
+    fn comm_stats(&self) -> Option<crate::comm::CommStats> {
+        None
+    }
 }
 
 /// Plan resolution and admission: which hybrid carve a model would serve

@@ -36,6 +36,7 @@ use std::collections::{BTreeSet, BinaryHeap, HashMap};
 use std::sync::{Arc, Mutex};
 
 use crate::cluster::recarve::RecarvePolicy;
+use crate::comm::CommStats;
 use crate::config::{ClusterSpec, ParallelSpec, ParallelSpecError};
 use crate::coordinator::batcher::{Batch, BatchPolicy, Batcher};
 use crate::coordinator::engine::{PlanPolicy, RecarveReport, ServeReport, SimService};
@@ -138,6 +139,13 @@ pub fn dispatch_policy_from_name(name: &str) -> Option<Arc<dyn DispatchPolicy>> 
 pub trait FleetModel: Sync {
     /// The cost/plan model for a pod carved as `cluster`.
     fn model_for(&self, cluster: &ClusterSpec) -> Arc<dyn ServiceModel>;
+
+    /// Fleet-wide comm observability: the per-footprint models'
+    /// [`CostModel::comm_stats`] folded together, `None` when no model
+    /// reports any (the comm-optimization pass is off everywhere).
+    fn comm_stats(&self) -> Option<CommStats> {
+        None
+    }
 }
 
 /// [`FleetModel`] over auto-planning [`SimService`]s, one per distinct
@@ -168,6 +176,19 @@ impl FleetModel for SimFleet {
         });
         let model: Arc<SimService> = Arc::clone(model);
         model
+    }
+
+    fn comm_stats(&self) -> Option<CommStats> {
+        let models = self.models.lock().unwrap();
+        let mut acc = CommStats::default();
+        let mut any = false;
+        for m in models.values() {
+            if let Some(s) = m.comm_stats_if_active() {
+                acc.absorb(&s);
+                any = true;
+            }
+        }
+        any.then_some(acc)
     }
 }
 
@@ -446,6 +467,9 @@ pub struct ServeState {
     /// the flush) — the denominator of the fleet-scale bench's
     /// events/sec figure.
     pub events: u64,
+    /// Comm counters of the run's pricing models, set by the session
+    /// just before finalizing (None when the comm-opt pass is off).
+    pub comm: Option<CommStats>,
 }
 
 impl ServeState {
@@ -478,6 +502,7 @@ impl ServeState {
             co_batched: self.co_batched,
             co_batched_cross: self.co_batched_cross,
             events: self.events,
+            comm: self.comm,
         }
     }
 }
@@ -639,6 +664,15 @@ impl<'a> ModelSource<'a> {
         }
     }
 
+    /// Comm observability of the run's pricing models, for the report's
+    /// additive `comm` section (None when the pass is off everywhere).
+    fn comm_stats(&self) -> Option<CommStats> {
+        match self {
+            ModelSource::Shared(s) => s.comm_stats(),
+            ModelSource::Fleet(f) => f.comm_stats(),
+        }
+    }
+
     /// Fleet-wide admission: a shared model speaks for every pod; with
     /// a fleet source a request is admitted when *any* pod's
     /// footprint-sized model admits it (footprints diverge after
@@ -747,6 +781,7 @@ impl<'a> ServeSession<'a> {
                 }
             }
         }
+        state.comm = self.source.comm_stats();
         state.into_report(router)
     }
 

@@ -70,7 +70,7 @@ USAGE: swiftfusion <info|validate|bench-layer|serve|volumes|trace> [flags]
   validate  --config small4             numeric check: all SP algos vs oracle
   bench-layer --machines N --gpus M --workload NAME [--algo NAME] [plan flags]
   serve     --machines N --gpus M --pods K --requests R --rate Q [--algo NAME]
-            [plan flags] [re-carving flags] [scheduler flags]
+            [plan flags] [re-carving flags] [scheduler flags] [comm flags]
   volumes   --machines N --gpus M --heads H
   trace     --machines N --gpus M --workload NAME [--algo NAME] [--out FILE]
             (per-rank timeline of one attention layer, chrome://tracing JSON)
@@ -140,6 +140,25 @@ reproducible from its log.
                              reference path). Both modes produce
                              bit-identical reports; linear exists for
                              cross-checking and bisection
+
+Comm-optimization flags (serve): the comm-layer optimization pass. With
+every knob at its default the priced schedules are bit-identical to the
+baseline; when any knob is on, the report gains a `comm` line (modeled
+traffic, NIC busy time, fused transfers).
+  --nic-schedule             contention-aware NIC chunk scheduling: price
+                             inter-machine transfers on a per-NIC TDMA
+                             timeline (only flows that actually contend
+                             share the wire) instead of the constant
+                             fair-share divisor
+  --compress F               inter-machine activation compression: wire
+                             bytes scale by F in (0, 1] (default 1.0 =
+                             off); intra-machine hops are never
+                             compressed
+  --cfg-fuse                 fuse the two CFG branches' identical-shape
+                             inter-machine transfers (halves per-transfer
+                             latency and rendezvous; a plan opts in only
+                             with cfg-degree 2 and machine-aligned
+                             groups)
 ";
 
 fn workload_by_name(name: &str) -> Result<Workload> {
@@ -349,8 +368,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
         SchedulerMode::from_name(scheduler_name).expect("name validated by enum_or");
     let patches = args.usize_or("patches", swiftfusion::analysis::DEFAULT_PATCHES)?;
     anyhow::ensure!(patches > 0, "--patches must be >= 1");
+    let nic_schedule = args.bool_or("nic-schedule", false)?;
+    let compress = args.f64_or("compress", 1.0)?;
+    anyhow::ensure!(
+        compress > 0.0 && compress <= 1.0,
+        "--compress must be in (0, 1]"
+    );
+    let cfg_fuse = args.bool_or("cfg-fuse", false)?;
 
     let mut router = Router::new(n, m, pods, algo);
+    // Comm-opt knobs ride on each pod's NetSpec: the single-model path
+    // prices with a clone of pod 0's cluster and the fleet path builds a
+    // model per pod footprint, so mutating the pods here covers both.
+    for pod in &mut router.pods {
+        pod.cluster.net.nic_schedule = nic_schedule;
+        pod.cluster.net.inter_compress = compress;
+        pod.cluster.net.cfg_fuse = cfg_fuse;
+    }
     // every paper-suite workload has 24 heads
     let plan = plan_policy_for(args, router.pods[0].cluster.total_gpus(), 24)?;
     let plan_label = effective_plan(args)?.to_string();
@@ -410,6 +444,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     if report.co_batched > 0 {
         println!("co-batched dispatches: {}", report.co_batched);
+    }
+    if let Some(c) = &report.comm {
+        println!(
+            "comm (modeled pricing runs): intra {:.3} GB, inter {:.3} GB wire, \
+             nic busy {}, fused transfers {}",
+            (c.traffic.intra_in + c.traffic.intra_out) / 1e9,
+            (c.traffic.inter_in + c.traffic.inter_out) / 1e9,
+            fmt_time(c.nic_busy),
+            c.fused_transfers
+        );
     }
     if !report.rebalances.is_empty() {
         println!("cross-pod re-balances: {}", report.rebalances.len());

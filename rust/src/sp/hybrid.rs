@@ -14,9 +14,9 @@
 
 use anyhow::Result;
 
-use crate::cluster::exec::{run_cluster, ExecMode};
+use crate::cluster::exec::{run_in_world, ExecMode};
 use crate::cluster::plan::{BranchRole, ParallelPlan};
-use crate::comm::Buf;
+use crate::comm::{Buf, CommStats, CommWorld};
 use crate::config::AttnShape;
 use crate::tensor::{Tensor, TensorError};
 
@@ -86,7 +86,11 @@ pub fn guided_attention_distributed(
     // returned pair is (conditional shard, unconditional shard) — a
     // single-branch group fills only its side. Ranks outside the plan's
     // carve (a subset plan of a pod running two carve generations) idle.
-    let run = run_cluster(&plan.cluster, mode, |ctx| {
+    // The world is fused when the plan qualifies, so the branch pair's
+    // lockstep inter-machine transfers price the shared handshake.
+    let world = CommWorld::new(plan.cluster.clone());
+    world.set_cfg_fused(plan.cfg_fusible());
+    let run = run_in_world(&world, mode, |ctx| {
         let Some(group) = plan.try_group_of(ctx.rank) else {
             return (None, None);
         };
@@ -150,6 +154,17 @@ pub fn hybrid_layer_makespan(
     chunk: usize,
     cfg_evals: usize,
 ) -> f64 {
+    hybrid_layer_makespan_traced(plan, shape, chunk, cfg_evals).0
+}
+
+/// [`hybrid_layer_makespan`] plus the run's measured comm counters —
+/// the serve engine accumulates these into the report's `comm` section.
+pub fn hybrid_layer_makespan_traced(
+    plan: &ParallelPlan,
+    shape: AttnShape,
+    chunk: usize,
+    cfg_evals: usize,
+) -> (f64, CommStats) {
     debug_assert_eq!(
         plan.spec.pp_degree, 1,
         "pipelined plans are timed by sp::pipefusion::pipefusion_layer_makespan"
@@ -157,7 +172,9 @@ pub fn hybrid_layer_makespan(
     let sp_ranks = plan.spec.ranks_per_group();
     let ls = shape.l / sp_ranks;
     let algo = plan.algo;
-    let run = run_cluster(&plan.cluster, &ExecMode::Timing, |ctx| {
+    let world = CommWorld::new(plan.cluster.clone());
+    world.set_cfg_fused(plan.cfg_fusible());
+    let run = run_in_world(&world, &ExecMode::Timing, |ctx| {
         // ranks outside a subset plan's carve idle (other generation)
         let Some(group) = plan.try_group_of(ctx.rank) else {
             return;
@@ -174,7 +191,7 @@ pub fn hybrid_layer_makespan(
             ctx.next_epoch();
         }
     });
-    run.makespan()
+    (run.makespan(), world.stats())
 }
 
 #[cfg(test)]
@@ -286,6 +303,25 @@ mod tests {
             t_par < t_seq,
             "cfg-parallel {t_par} must beat sequential branches {t_seq}"
         );
+    }
+
+    #[test]
+    fn cfg_fusion_lowers_makespan_only_for_fusible_plans() {
+        // A cfg2 plan with machine-spanning groups pays inter-machine
+        // transfers in both branches; fusing the branch pair halves the
+        // per-transfer alpha and rendezvous, so the measured makespan
+        // must strictly drop. A knob-off run of the same plan must be
+        // unchanged vs a fresh default world (off-path safety).
+        let mut cluster = ClusterSpec::new(4, 8);
+        let shape = AttnShape::new(1, 65536, 8, 64);
+        let spec = ParallelSpec::new(2, 1, SpDegrees::new(8, 2));
+        let plan = ParallelPlan::build(&cluster, spec, SpAlgo::SwiftFusion).unwrap();
+        let plain = hybrid_layer_makespan(&plan, shape, shape.l / 16, 2);
+        cluster.net.cfg_fuse = true;
+        let fused_plan = ParallelPlan::build(&cluster, spec, SpAlgo::SwiftFusion).unwrap();
+        assert!(fused_plan.cfg_fusible());
+        let fused = hybrid_layer_makespan(&fused_plan, shape, shape.l / 16, 2);
+        assert!(fused < plain, "fused {fused} must beat unfused {plain}");
     }
 
     #[test]

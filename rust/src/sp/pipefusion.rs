@@ -48,10 +48,10 @@
 
 use anyhow::Result;
 
-use crate::cluster::exec::{run_cluster, ExecMode, RankCtx};
+use crate::cluster::exec::{run_in_world, ExecMode, RankCtx};
 use crate::cluster::plan::{BranchRole, ParallelGroup, ParallelPlan};
 use crate::cluster::Mesh2D;
-use crate::comm::Buf;
+use crate::comm::{Buf, CommStats, CommWorld};
 use crate::config::AttnShape;
 use crate::tensor::Tensor;
 
@@ -292,12 +292,14 @@ pub fn guided_pipefusion_step(
     }
     let warmup = caches.is_none();
 
-    let run = run_cluster(&plan.cluster, mode, |ctx| {
+    let world = CommWorld::new(plan.cluster.clone());
+    world.set_cfg_fused(plan.cfg_fusible());
+    let run = run_in_world(&world, mode, |ctx| {
         // ranks outside a subset plan's carve idle (other generation)
         let Some(group) = plan.try_group_of(ctx.rank) else {
             return Vec::new();
         };
-        let flows = ctx.cluster().gpus_per_machine;
+        let flows = ctx.nic_flows(&group.ranks());
         let run_one = |ctx: &mut RankCtx,
                        branch: &'static str,
                        x: &Tensor,
@@ -456,14 +458,28 @@ pub fn pipefusion_layer_makespan(
     patches: usize,
     cfg_evals: usize,
 ) -> f64 {
+    pipefusion_layer_makespan_traced(plan, shape, chunk, patches, cfg_evals).0
+}
+
+/// [`pipefusion_layer_makespan`] plus the run's measured comm counters —
+/// the serve engine accumulates these into the report's `comm` section.
+pub fn pipefusion_layer_makespan_traced(
+    plan: &ParallelPlan,
+    shape: AttnShape,
+    chunk: usize,
+    patches: usize,
+    cfg_evals: usize,
+) -> (f64, CommStats) {
     let p = PipeParams { shape, chunk, patches };
     let lp = p.patch_len();
-    let run = run_cluster(&plan.cluster, &ExecMode::Timing, |ctx| {
+    let world = CommWorld::new(plan.cluster.clone());
+    world.set_cfg_fused(plan.cfg_fusible());
+    let run = run_in_world(&world, &ExecMode::Timing, |ctx| {
         // ranks outside a subset plan's carve idle (other generation)
         let Some(group) = plan.try_group_of(ctx.rank) else {
             return;
         };
-        let flows = ctx.cluster().gpus_per_machine;
+        let flows = ctx.nic_flows(&group.ranks());
         let branches = match group.role {
             BranchRole::Both => cfg_evals,
             BranchRole::Conditional => 1,
@@ -477,7 +493,7 @@ pub fn pipefusion_layer_makespan(
             ctx.next_epoch();
         }
     });
-    run.makespan()
+    (run.makespan(), world.stats())
 }
 
 #[cfg(test)]

@@ -113,7 +113,7 @@ pub fn ring_attention_one_sided(
 /// `p.mesh` — on a carved sub-mesh the ring stays inside the partition.
 pub fn ring_attention_full(ctx: &mut RankCtx, p: &SpParams, q: Buf, k: Buf, v: Buf) -> Buf {
     let group: Vec<usize> = p.mesh.ranks();
-    let flows = ctx.cluster().gpus_per_machine;
+    let flows = ctx.nic_flows(&group);
     let mut accum = AttnAccum::new(ctx, &q, p.chunk);
     ring_attention_group(ctx, &mut accum, &group, k, v, flows);
     accum.finish(ctx)

@@ -85,7 +85,7 @@ pub fn swiftfusion_attention(ctx: &mut RankCtx, p: &SpParams, q: Buf, k: Buf, v:
     let geo = TorusGeometry::new(p, ctx.rank);
     let t_deg = geo.t_degree();
     let t = geo.t;
-    let flows = ctx.cluster().gpus_per_machine;
+    let flows = ctx.nic_flows(&p.mesh.ranks());
 
     // ---- Phase 1: ScatterPush QKV within the intra-machine Ulysses
     // subgroup (line 15) + BarrierAll with quiet (line 16).

@@ -216,7 +216,7 @@ pub fn composed_attention(
 ) -> Buf {
     let geo = TorusGeometry::new(p, ctx.rank);
     let t_deg = geo.t_degree();
-    let flows = ctx.cluster().gpus_per_machine;
+    let flows = ctx.nic_flows(&p.mesh.ranks());
 
     // ---- Phase 1: intra-machine Ulysses (cheap, blocking) -------------
     let q1 = all_to_all(ctx, &geo.intra_u, &q, 2, 1, "iu.q", flows);

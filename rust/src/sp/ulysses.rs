@@ -81,7 +81,7 @@ pub fn ulysses_attention_group(
     v: Buf,
     tag: &str,
 ) -> Buf {
-    let flows = ctx.cluster().gpus_per_machine;
+    let flows = ctx.nic_flows(group);
     let qg = all_to_all(ctx, group, &q, 2, 1, &format!("{tag}.q"), flows);
     let kg = all_to_all(ctx, group, &k, 2, 1, &format!("{tag}.k"), flows);
     let vg = all_to_all(ctx, group, &v, 2, 1, &format!("{tag}.v"), flows);

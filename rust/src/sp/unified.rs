@@ -31,7 +31,7 @@ use super::SpParams;
 pub fn usp_like(ctx: &mut RankCtx, p: &SpParams, q: Buf, k: Buf, v: Buf) -> Buf {
     let ugroup = p.mesh.ulysses_group(ctx.rank);
     let rgroup = p.mesh.ring_group(ctx.rank);
-    let flows = ctx.cluster().gpus_per_machine;
+    let flows = ctx.nic_flows(&p.mesh.ranks());
 
     // Phase 1: Ulysses all-to-alls gather sequence / scatter heads within
     // the Ulysses group.
