@@ -1,0 +1,128 @@
+//! Quality-elastic serving headline (PR 8): approximate inference modes
+//! as a scheduler dimension. A single pod takes a video burst arriving
+//! far faster than it can serve; under `--quality-floor` every batch
+//! that lands on the backlogged pod degrades to the cheapest
+//! [`QualityMode`] whose score clears the floor, while an idle pod still
+//! serves exact — so the floored run must clear the burst *strictly*
+//! faster than the same run forced to full quality, and every completion
+//! must have served at or above the floor.
+//!
+//! Asserted:
+//! 1. both runs complete the whole burst with zero rejections;
+//! 2. every mode in the floored run's quality histogram scores >= the
+//!    floor (the admission contract);
+//! 3. the floored horizon is strictly below the forced-full horizon
+//!    (`backlog_clear_speedup` > 1 in the JSON artifact).
+//!
+//! Run: `cargo bench --bench fig_quality_elastic`. `--smoke` shrinks the
+//! burst for CI; the workload is the cfg-video pair shrunk to 2 layers x
+//! 2 steps (the serve-test convention) so the timing simulations stay
+//! fast — the quality admission flow is what is being measured.
+
+use swiftfusion::bench::{BenchRun, Series};
+use swiftfusion::config::QualityMode;
+use swiftfusion::coordinator::batcher::BatchPolicy;
+use swiftfusion::coordinator::engine::{PlanPolicy, ServeReport};
+use swiftfusion::coordinator::router::Router;
+use swiftfusion::coordinator::session::{ServeConfig, ServeSession};
+use swiftfusion::sp::SpAlgo;
+use swiftfusion::workload::{Request, Workload};
+
+/// The floor the headline run serves under: admits the whole ladder, so
+/// backlogged batches degrade all the way to `steps/2` — which on a CFG
+/// video also drops the second guidance branch (the distillation
+/// arithmetic in `Workload::evals_under`).
+const FLOOR: f64 = 0.5;
+
+fn video_burst(n: usize) -> Vec<Request> {
+    let mut w = Workload::cfg_video_96k();
+    w.layers = 2;
+    w.steps = 2;
+    (0..n)
+        .map(|i| Request {
+            id: i as u64,
+            workload: w.clone(),
+            arrival: i as f64 * 0.05,
+            seed: i as u64,
+        })
+        .collect()
+}
+
+/// One serving run on a 2x8 pod: `floor` = None forces full quality.
+fn serve_burst(floor: Option<f64>, n: usize) -> ServeReport {
+    let mut router = Router::new(2, 8, 1, SpAlgo::SwiftFusion);
+    let mut config = ServeConfig::new()
+        .batch(BatchPolicy { max_batch: 1, window: 0.0 })
+        .plan(PlanPolicy::Auto);
+    config = match floor {
+        Some(f) => config.quality_floor(f),
+        None => config.quality(QualityMode::Full),
+    };
+    let svc = config
+        .sim_service(router.pods[0].cluster.clone(), SpAlgo::SwiftFusion)
+        .expect("auto planner on the 2x8 pod");
+    ServeSession::new(config, &svc).run(&mut router, video_burst(n))
+}
+
+fn main() {
+    let mut run = BenchRun::from_env("fig_quality_elastic");
+    let n = if run.smoke() { 6 } else { 16 };
+    println!("fig_quality_elastic: {n}-request video burst on one 2x8 pod,");
+    println!("forced full quality vs --quality-floor {FLOOR}\n");
+
+    let full = serve_burst(None, n);
+    let floored = serve_burst(Some(FLOOR), n);
+
+    assert_eq!(full.metrics.completed(), n, "forced-full run must serve the burst");
+    assert_eq!(floored.metrics.completed(), n, "floored run must serve the burst");
+    assert!(full.rejected.is_empty() && floored.rejected.is_empty());
+
+    // the admission contract: nothing served below the floor
+    let allowed: Vec<String> = QualityMode::ladder()
+        .iter()
+        .filter(|q| q.score() >= FLOOR)
+        .map(|q| q.label())
+        .collect();
+    for (mode, count) in &floored.quality_histogram {
+        println!("  floored run served {count:>3} request(s) at quality '{mode}'");
+        assert!(
+            allowed.contains(mode),
+            "mode '{mode}' served below the {FLOOR} floor (allowed: {allowed:?})"
+        );
+    }
+    assert!(
+        floored.quality_histogram.len() >= 2,
+        "the backlog must flip at least one batch off full quality: {:?}",
+        floored.quality_histogram
+    );
+
+    let speedup = full.metrics.horizon / floored.metrics.horizon;
+    println!(
+        "\n  horizon: forced full {:.3} s -> floored {:.3} s ({speedup:.2}x faster)",
+        full.metrics.horizon, floored.metrics.horizon
+    );
+    assert!(
+        floored.metrics.horizon < full.metrics.horizon,
+        "the floored pod must clear the burst strictly faster: \
+         {} vs {}",
+        floored.metrics.horizon,
+        full.metrics.horizon
+    );
+
+    let mut series = vec![Series::new("forced full"), Series::new("floored")];
+    series[0].push("burst horizon s", full.metrics.horizon);
+    series[1].push("burst horizon s", floored.metrics.horizon);
+    for (mode, count) in &floored.quality_histogram {
+        series[1].push(format!("served {mode}"), *count as f64);
+    }
+    run.table(
+        "fig_quality_elastic: video burst, forced full vs quality floor (2x8 pod)",
+        &series,
+        None,
+    );
+    run.note("quality_histogram", floored.quality_histogram.len() as f64);
+    run.note("backlog_clear_speedup", speedup);
+    run.note("floored_horizon", floored.metrics.horizon);
+    run.note("full_horizon", full.metrics.horizon);
+    run.finish().expect("write BENCH_fig_quality_elastic.json");
+}

@@ -8,8 +8,9 @@
 //! threaded simulator ([`crate::comm::CommWorld::traffic`]) — the
 //! formulas and the executable schedules must agree.
 
-use crate::config::{AttnShape, ClusterSpec, ParallelSpec, SpDegrees};
+use crate::config::{AttnShape, ClusterSpec, ParallelSpec, QualityMode, SpDegrees};
 use crate::sp::SpAlgo;
+use crate::workload::Workload;
 
 /// Inter-machine communication volume **per GPU, in elements**, for USP
 /// on N machines × M GPUs with degrees (P_u, P_r). Paper Eq. (4)/(5).
@@ -75,6 +76,12 @@ pub fn inter_volume(algo: SpAlgo, shape: &AttnShape, n: usize, m: usize, deg: Sp
         SpAlgo::Ulysses => v_ulysses(shape, n, m),
         SpAlgo::Usp => v_usp(shape, n, m, deg),
         SpAlgo::Tas | SpAlgo::TorusNccl | SpAlgo::SwiftFusion => v_sfu(shape, n, m, deg),
+        // displaced steady state allgathers ONE fresh activation tensor
+        // per step (the layer input doubles as K and V), half of Ring's
+        // two-tensor KV rotation — and off the critical path besides
+        // (the transfer overlaps compute; plan_step_cost_quality models
+        // that part).
+        SpAlgo::DisplacedPatch => v_ring(shape, n, m) / 2.0,
     }
 }
 
@@ -164,25 +171,72 @@ pub fn plan_step_cost_patches(
     cfg_evals: usize,
     patches: usize,
 ) -> f64 {
+    plan_step_cost_quality(cluster, algo, shape, spec, cfg_evals, patches, QualityMode::Full)
+}
+
+/// [`plan_step_cost_patches`] with the quality dimension priced in —
+/// the staleness/approximation term that lets the chooser and the
+/// admission knob trade quality against latency. `QualityMode::Full`
+/// reproduces [`plan_step_cost_patches`] bit-for-bit (the degraded
+/// adjustments below multiply by exactly 1.0 and pick the same branch
+/// arms), so every existing caller and pinned golden is unaffected.
+///
+/// The degraded modes price as their executable schedules behave:
+/// - `Displaced` ([`crate::sp::displaced`]): the fresh-patch allgather
+///   runs *after* the step's attention and only feeds the next step, so
+///   the inter byte term leaves the critical path — only the
+///   non-overlappable per-transfer α survives. Wire bytes (for the
+///   byte *counters*, not this latency) also halve via
+///   [`QualityMode::wire_compress`].
+/// - `FastAttn { keep_ratio }`: each query tile attends `keep_ratio` of
+///   the KV tiles, so the attention compute term scales by
+///   `keep_ratio`; the KV exchange is unchanged (the window is decided
+///   after the allgather).
+/// - `ReducedSteps`: the per-layer, per-eval cost is *unchanged* — the
+///   saving is fewer evals per generation, priced end-to-end by
+///   [`quality_time_factor`] / [`Workload::evals_under`].
+#[allow(clippy::too_many_arguments)]
+pub fn plan_step_cost_quality(
+    cluster: &ClusterSpec,
+    algo: SpAlgo,
+    shape: &AttnShape,
+    spec: &ParallelSpec,
+    cfg_evals: usize,
+    patches: usize,
+    quality: QualityMode,
+) -> f64 {
     let stage = spec.ranks_per_stage();
     let m = cluster.gpus_per_machine;
     // stage sub-geometry: whole machines per stage, or a machine slice
     let (n_g, m_g) = if stage >= m { (stage / m, m) } else { (1, stage) };
     let evals = cfg_evals.div_ceil(spec.cfg_degree.max(1)) as f64;
 
-    let comp = compute_time(shape, cluster, stage);
+    let comp = match quality {
+        // windowed attention: each q tile touches keep_ratio of the KV
+        QualityMode::FastAttn { keep_ratio } => {
+            compute_time(shape, cluster, stage) * keep_ratio
+        }
+        _ => compute_time(shape, cluster, stage),
+    };
     let inter_elems = inter_volume(algo, shape, n_g, m_g, spec.sp);
     // comm-layer optimization pass, mirrored from `comm::CommWorld` so
     // the chooser sees the same savings the schedules measure: inter
     // hops ship `inter_compress` of their payload bytes, and a fusible
     // CFG pair (cfg_fuse on, exactly two branches, machine-aligned
     // groups — `ParallelPlan::cfg_fusible`) pays half the per-transfer α
-    let wire = cluster.net.inter_compress;
+    // per-batch quality compression stacks on the pod-level knob
+    // (both 1.0 under Full, so the Full path is untouched)
+    let wire = cluster.net.inter_compress * quality.wire_compress();
     let fused =
         cluster.net.cfg_fuse && spec.cfg_degree == 2 && spec.ranks_per_group() % m == 0;
     let alpha = if fused { cluster.net.inter_lat * 0.5 } else { cluster.net.inter_lat };
     let inter = if n_g > 1 {
-        alpha + inter_elems * 4.0 * wire / cluster.net.inter_bw_per_flow(m_g)
+        match quality {
+            // the displaced fresh-patch allgather feeds the *next* step,
+            // so its bytes overlap this step's compute; only α is exposed
+            QualityMode::Displaced => alpha,
+            _ => alpha + inter_elems * 4.0 * wire / cluster.net.inter_bw_per_flow(m_g),
+        }
     } else {
         0.0
     };
@@ -221,6 +275,41 @@ pub fn plan_step_cost_patches(
         stage_layer / ppf * (1.0 + (ppf - 1.0) / mm) + (mm + ppf - 1.0) * hop_exposed / ppf;
     evals * per_layer
 }
+
+/// Modeled end-to-end service-time multiplier of serving a whole
+/// generation of `workload` under `quality`, relative to `Full` — the
+/// factor the scheduler applies to its (memoized, quality-agnostic)
+/// service-duration estimate at dispatch time.
+///
+/// - `Full` is 1.0 by definition.
+/// - `Displaced` is [`DISPLACED_TIME_FACTOR`]: the per-step saving from
+///   taking the inter all-to-all off the critical path
+///   ([`plan_step_cost_quality`]'s α-only inter term plus fp16 wire
+///   bytes), averaged over the paper-testbed plan mix.
+/// - `FastAttn { keep_ratio }` keeps `keep_ratio` of the attention
+///   flops but all of the KV exchange and the non-attention layer work:
+///   `0.25 + 0.75·keep_ratio` (attention is ~3/4 of a long-sequence DiT
+///   step's time, the regime where the scheduler degrades).
+/// - `ReducedSteps` is exact arithmetic: the eval count under
+///   distillation over the full eval count
+///   ([`Workload::evals_under`]).
+pub fn quality_time_factor(workload: &Workload, quality: QualityMode) -> f64 {
+    match quality {
+        QualityMode::Full => 1.0,
+        QualityMode::Displaced => DISPLACED_TIME_FACTOR,
+        QualityMode::FastAttn { keep_ratio } => 0.25 + 0.75 * keep_ratio,
+        QualityMode::ReducedSteps { .. } => {
+            workload.evals_under(quality) as f64 / workload.total_evals().max(1) as f64
+        }
+    }
+}
+
+/// Per-step speedup of displaced patch parallelism over exact serving:
+/// the one-step-stale schedule hides the inter-machine byte term behind
+/// compute and ships fresh patches at fp16, leaving the exposed α and
+/// the full-KV attention — about 15 % of a comm-bound step's time
+/// saved on the paper testbed's chosen plans.
+pub const DISPLACED_TIME_FACTOR: f64 = 0.85;
 
 /// Predicted fractional per-step improvement of re-carving a pod from
 /// plan `from` to plan `to` for a workload of `shape`:
@@ -598,6 +687,104 @@ mod tests {
         let comp = choose_spec_with_patches(&half, SpAlgo::SwiftFusion, &mid, 2, 1, 2);
         assert_eq!(plain.label(), "cfg2 x pp1 x rep2 x U8R1", "{plain:?}");
         assert_eq!(comp.label(), "cfg2 x pp2 x rep1 x U8R1", "{comp:?}");
+    }
+
+    #[test]
+    fn quality_pricing_reaches_the_closed_form() {
+        use crate::workload::Workload;
+        let c = ClusterSpec::paper_testbed();
+        let s = shape(); // 96k tokens, 24 heads
+        // a 16-rank group spans two machines -> pays the inter all-to-all
+        let inter_plan = ParallelSpec::with_gcd_placement(2, 1, 16, 24);
+        // an 8-rank group fits one machine -> zero inter traffic
+        let intra_plan = ParallelSpec::new(2, 2, SpDegrees::new(8, 1));
+        let cost = |spec: &ParallelSpec, q: QualityMode| {
+            plan_step_cost_quality(&c, SpAlgo::SwiftFusion, &s, spec, 2, DEFAULT_PATCHES, q)
+        };
+
+        // (1) Full is bit-identical to the unpriced form — on every
+        // candidate the chooser enumerates, not just hand-picked plans.
+        for spec in enumerate_specs(&c, s.h) {
+            assert_eq!(
+                cost(&spec, QualityMode::Full),
+                plan_step_cost(&c, SpAlgo::SwiftFusion, &s, &spec, 2),
+                "Full must not move {spec:?}"
+            );
+        }
+
+        // (2) Displaced hides the inter byte term: strictly cheaper on an
+        // inter-bearing plan, bit-identical on a fully-intra plan (no
+        // inter term to hide).
+        let full = cost(&inter_plan, QualityMode::Full);
+        let disp = cost(&inter_plan, QualityMode::Displaced);
+        assert!(disp < full, "displaced {disp} vs full {full}");
+        assert_eq!(
+            cost(&intra_plan, QualityMode::Displaced),
+            cost(&intra_plan, QualityMode::Full),
+            "no inter all-to-all to take off the critical path"
+        );
+        // exactly the byte term is saved (cfg2 runs its one eval's inter
+        // all-to-all on the n_g=2, m_g=8 stage sub-geometry)
+        let byte_term = full - disp;
+        let elems = inter_volume(SpAlgo::SwiftFusion, &s, 2, 8, inter_plan.sp);
+        let expect = elems * 4.0 / c.net.inter_bw_per_flow(8);
+        assert!(
+            (byte_term - expect).abs() < 1e-9 * expect,
+            "displaced must save the byte term: {byte_term} vs {expect}"
+        );
+
+        // (3) FastAttn scales the compute term by keep_ratio: cheaper
+        // everywhere, and on an intra-only plan the saving is exactly
+        // half the compute time at keep_ratio = 0.5.
+        let fa = QualityMode::FastAttn { keep_ratio: 0.5 };
+        assert!(cost(&inter_plan, fa) < cost(&inter_plan, QualityMode::Full));
+        // cfg2 runs one eval per group, so the saving is keep_ratio of
+        // one eval's compute
+        let intra_saved = cost(&intra_plan, QualityMode::Full) - cost(&intra_plan, fa);
+        let comp = compute_time(&s, &c, intra_plan.ranks_per_stage());
+        assert!(
+            (intra_saved - 0.5 * comp).abs() < 1e-9 * comp,
+            "fastattn must save keep_ratio of compute per eval: {intra_saved} vs {comp}"
+        );
+
+        // (4) ReducedSteps leaves the per-layer cost alone (its saving is
+        // fewer evals, priced by quality_time_factor below).
+        assert_eq!(
+            cost(&inter_plan, QualityMode::ReducedSteps { factor: 2 }),
+            cost(&inter_plan, QualityMode::Full)
+        );
+
+        // (5) the end-to-end factors: exact arithmetic for step
+        // reduction, documented constants for the per-step modes, and
+        // the admission ladder strictly cheapens for a CFG workload.
+        let video = Workload::cfg_video_96k();
+        let flux = Workload::flux_3072();
+        assert_eq!(quality_time_factor(&video, QualityMode::Full), 1.0);
+        assert_eq!(
+            quality_time_factor(&video, QualityMode::Displaced),
+            DISPLACED_TIME_FACTOR
+        );
+        assert_eq!(quality_time_factor(&video, fa), 0.625);
+        assert_eq!(
+            quality_time_factor(&video, QualityMode::ReducedSteps { factor: 2 }),
+            0.25, // 25 evals of 100: halved steps AND folded uncond branch
+        );
+        assert_eq!(
+            quality_time_factor(&flux, QualityMode::ReducedSteps { factor: 2 }),
+            0.5, // already distilled: only the step halving remains
+        );
+        let ladder_factors: Vec<f64> = QualityMode::ladder()
+            .iter()
+            .map(|&q| quality_time_factor(&video, q))
+            .collect();
+        assert!(
+            ladder_factors.windows(2).all(|w| w[0] > w[1]),
+            "ladder must strictly cheapen: {ladder_factors:?}"
+        );
+        // scores strictly degrade down the ladder, from exactly 1.0
+        let scores: Vec<f64> = QualityMode::ladder().iter().map(|q| q.score()).collect();
+        assert_eq!(scores[0], 1.0);
+        assert!(scores.windows(2).all(|w| w[0] > w[1]), "{scores:?}");
     }
 
     #[test]

@@ -282,6 +282,120 @@ pub fn gcd(a: usize, b: usize) -> usize {
     }
 }
 
+/// Serving quality mode — the fourth scheduler dimension (beside
+/// `cfg × pp × sp`). Each degraded mode trades bounded output error for
+/// latency; the bounds are derived and pinned in
+/// `rust/tests/sp_property.rs` against the plain-softmax oracle, the
+/// prices in [`crate::analysis::plan_step_cost_quality`] /
+/// [`crate::analysis::quality_time_factor`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum QualityMode {
+    /// Exact serving: the plan's SP algorithm, fresh KV every layer.
+    Full,
+    /// DistriFusion-style displaced patch parallelism
+    /// ([`crate::sp::displaced`]): remote KV served one-step-stale, the
+    /// fresh-patch allgather pushed off the critical path, and — because
+    /// stale activations already admit `STALE_TOL`-scale error — fresh
+    /// patches ship half-precision (`inter_compress = 0.5`) on the wire.
+    /// This is the per-batch form of the `NetSpec::inter_compress` knob:
+    /// the scheduler decides it per dispatch instead of per pod.
+    Displaced,
+    /// DiTFastAttn-style windowed attention
+    /// ([`crate::sp::displaced::fastattn_attention`]): each query tile
+    /// attends only the `keep_ratio` fraction of KV tiles nearest to it.
+    /// `keep_ratio = 1.0` is exact.
+    FastAttn {
+        /// Fraction of KV tiles each query tile keeps, in (0, 1].
+        keep_ratio: f64,
+    },
+    /// Distilled few-step sampling under SLO pressure: run
+    /// `steps / factor` diffusion steps, and — guidance distillation —
+    /// drop the unconditional branch when the workload runs CFG
+    /// (`Workload::evals_under` prices this).
+    ReducedSteps {
+        /// Step-count divisor, ≥ 1.
+        factor: usize,
+    },
+}
+
+impl QualityMode {
+    /// Histogram / CLI label.
+    pub fn label(&self) -> String {
+        match self {
+            QualityMode::Full => "full".to_string(),
+            QualityMode::Displaced => "displaced".to_string(),
+            QualityMode::FastAttn { keep_ratio } => format!("fastattn@{keep_ratio:.2}"),
+            QualityMode::ReducedSteps { factor } => format!("steps/{factor}"),
+        }
+    }
+
+    /// Parse a CLI spelling: `full`, `displaced`, `fastattn[:RATIO]`
+    /// (default ratio 0.5), `reduced[:FACTOR]` (default factor 2).
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "full" => return Some(QualityMode::Full),
+            "displaced" => return Some(QualityMode::Displaced),
+            "fastattn" => return Some(QualityMode::FastAttn { keep_ratio: 0.5 }),
+            "reduced" => return Some(QualityMode::ReducedSteps { factor: 2 }),
+            _ => {}
+        }
+        if let Some(r) = s.strip_prefix("fastattn:") {
+            let keep_ratio: f64 = r.parse().ok()?;
+            if keep_ratio > 0.0 && keep_ratio <= 1.0 {
+                return Some(QualityMode::FastAttn { keep_ratio });
+            }
+            return None;
+        }
+        if let Some(f) = s.strip_prefix("reduced:") {
+            let factor: usize = f.parse().ok()?;
+            if factor >= 1 {
+                return Some(QualityMode::ReducedSteps { factor });
+            }
+            return None;
+        }
+        None
+    }
+
+    /// Quality score in (0, 1] the `--quality-floor` admission knob
+    /// compares against: 1.0 is exact; degraded modes discount by their
+    /// bounded error. `Displaced` scores `1 − STALE_TOL` (the one-step
+    /// staleness bound); `FastAttn` scores the kept attention fraction
+    /// blended toward exact (`0.5 + keep_ratio/2` — half the mass a
+    /// window drops is far-field and near-zero after softmax);
+    /// `ReducedSteps` scores `1/factor` (few-step sampling loses detail
+    /// roughly with the step budget).
+    pub fn score(&self) -> f64 {
+        match self {
+            QualityMode::Full => 1.0,
+            QualityMode::Displaced => 0.9,
+            QualityMode::FastAttn { keep_ratio } => 0.5 + 0.5 * keep_ratio,
+            QualityMode::ReducedSteps { factor } => 1.0 / (*factor).max(1) as f64,
+        }
+    }
+
+    /// Wire-byte multiplier this mode applies to inter-machine hops —
+    /// the per-batch `inter_compress` decision. Exact serving ships full
+    /// precision; every degraded mode already tolerates quantization
+    /// noise, so it ships fp16 (`0.5`).
+    pub fn wire_compress(&self) -> f64 {
+        match self {
+            QualityMode::Full => 1.0,
+            _ => 0.5,
+        }
+    }
+
+    /// The admission ladder, best quality first — what the scheduler
+    /// walks when the priced queue delay exceeds the floor.
+    pub fn ladder() -> [QualityMode; 4] {
+        [
+            QualityMode::Full,
+            QualityMode::Displaced,
+            QualityMode::FastAttn { keep_ratio: 0.5 },
+            QualityMode::ReducedSteps { factor: 2 },
+        ]
+    }
+}
+
 /// Full parallelization recipe for a cluster: the 3D plan space
 /// `cfg_degree × pp_degree × batch_replicas` with 2D SP degrees *inside
 /// each pipeline stage*. The hybrid planner (`cluster::plan`) turns a

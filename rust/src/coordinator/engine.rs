@@ -498,6 +498,14 @@ pub struct ServeReport {
     /// have preferred. Empty when the service model does not report
     /// plans.
     pub plan_histogram: BTreeMap<String, usize>,
+    /// Quality mode *served under* → request count
+    /// ([`crate::config::QualityMode::label`] keys, sorted). Populated
+    /// only when a quality knob
+    /// (`ServeConfig::quality_floor` / `ServeConfig::quality` in
+    /// [`crate::coordinator::session`]) is set; empty — and absent from
+    /// [`Self::to_json`] — otherwise, so knob-off runs render
+    /// byte-identically to the pre-quality format.
+    pub quality_histogram: BTreeMap<String, usize>,
     /// Epoch/drain observability (see [`RecarveReport`]).
     pub recarve: RecarveReport,
     /// Fleet-scope machine migrations
@@ -594,6 +602,15 @@ impl ServeReport {
                 ]),
             ),
         ];
+        if !self.quality_histogram.is_empty() {
+            let quality_histogram = Json::Obj(
+                self.quality_histogram
+                    .iter()
+                    .map(|(k, &v)| (k.clone(), Json::Num(v as f64)))
+                    .collect(),
+            );
+            fields.push(("quality_histogram", quality_histogram));
+        }
         if self.co_batched > 0 {
             fields.push(("co_batched", Json::Num(self.co_batched as f64)));
         }

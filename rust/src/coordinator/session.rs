@@ -37,7 +37,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::cluster::recarve::RecarvePolicy;
 use crate::comm::CommStats;
-use crate::config::{ClusterSpec, ParallelSpec, ParallelSpecError};
+use crate::config::{ClusterSpec, ParallelSpec, ParallelSpecError, QualityMode};
 use crate::coordinator::batcher::{Batch, BatchPolicy, Batcher};
 use crate::coordinator::engine::{PlanPolicy, RecarveReport, ServeReport, SimService};
 use crate::coordinator::metrics::{Completion, Metrics};
@@ -321,6 +321,16 @@ pub struct ServeConfig {
     /// default; `Linear` keeps the naive reference path). Both modes
     /// produce bit-identical reports.
     pub scheduler: SchedulerMode,
+    /// Quality-elastic admission floor in (0, 1]: when set, a batch
+    /// dispatched onto a backlogged pod degrades to the cheapest
+    /// [`QualityMode`] whose [`QualityMode::score`] clears the floor
+    /// (an idle pod always serves `Full`). `None` (the default) serves
+    /// everything exact and leaves the report byte-identical to the
+    /// pre-quality output.
+    pub quality_floor: Option<f64>,
+    /// Force one [`QualityMode`] for every batch, overriding the floor
+    /// walk (`--quality` on the CLI). `None` by default.
+    pub quality: Option<QualityMode>,
 }
 
 impl Default for ServeConfig {
@@ -335,6 +345,8 @@ impl Default for ServeConfig {
             co_batch: false,
             rebalance: RebalancePolicy::Never,
             scheduler: SchedulerMode::Indexed,
+            quality_floor: None,
+            quality: None,
         }
     }
 }
@@ -399,6 +411,23 @@ impl ServeConfig {
         self
     }
 
+    /// Set the quality-elastic admission floor (see
+    /// [`Self::quality_floor`]).
+    pub fn quality_floor(mut self, floor: f64) -> Self {
+        assert!(
+            floor > 0.0 && floor <= 1.0,
+            "quality floor must be in (0, 1], got {floor}"
+        );
+        self.quality_floor = Some(floor);
+        self
+    }
+
+    /// Force one quality mode for every batch.
+    pub fn quality(mut self, mode: QualityMode) -> Self {
+        self.quality = Some(mode);
+        self
+    }
+
     /// Build the timing-mode service model this config describes for one
     /// pod footprint — the constructor scatter
     /// (`SimService::{new, auto_plan, with_plan}` + `patches` field
@@ -423,7 +452,7 @@ impl ServeConfig {
     /// scheduler=indexed` — printed by the CLI so a run is reproducible
     /// from its log.
     pub fn summary(&self) -> String {
-        format!(
+        let mut line = format!(
             "serve: batch={}x{}s plan={} patches={} recarve={} dispatch={} co-batch={} \
              rebalance={} scheduler={}",
             self.batch.max_batch,
@@ -436,7 +465,16 @@ impl ServeConfig {
             if self.co_batch { "on" } else { "off" },
             self.rebalance,
             self.scheduler,
-        )
+        );
+        // quality knobs are appended only when set, so knob-off logs
+        // (and the tests pinning them) are unchanged
+        if let Some(q) = self.quality {
+            line.push_str(&format!(" quality={}", q.label()));
+        }
+        if let Some(f) = self.quality_floor {
+            line.push_str(&format!(" quality-floor={f}"));
+        }
+        line
     }
 }
 
@@ -456,6 +494,11 @@ pub struct ServeState {
     pub rejected: Vec<(u64, String)>,
     /// Plan label served under → request count.
     pub plan_histogram: std::collections::BTreeMap<String, usize>,
+    /// Quality mode served under → request count. Only populated when a
+    /// quality knob ([`ServeConfig::quality_floor`] /
+    /// [`ServeConfig::quality`]) is set; empty otherwise so the report
+    /// stays byte-identical to pre-quality output.
+    pub quality_histogram: std::collections::BTreeMap<String, usize>,
     /// Fleet-scope machine migrations, in commit order.
     pub rebalances: Vec<RebalanceEvent>,
     /// Dispatches whose batch was scattered across replica groups.
@@ -497,6 +540,7 @@ impl ServeState {
             completions: self.completions,
             rejected: self.rejected,
             plan_histogram: self.plan_histogram,
+            quality_histogram: self.quality_histogram,
             recarve,
             rebalances: self.rebalances,
             co_batched: self.co_batched,
@@ -974,7 +1018,7 @@ impl<'a> ServeSession<'a> {
         // RecarvePolicy::Partial) has its own dispatch path: merge when
         // the whole pod is idle, otherwise route between generations.
         if router.pods[pod].recarver.is_split() {
-            return self.dispatch_split(
+            let out = self.dispatch_split(
                 router,
                 pod,
                 batch,
@@ -985,6 +1029,18 @@ impl<'a> ServeSession<'a> {
                 state,
                 sched,
             );
+            // Split pods run the exact pipeline on both carve
+            // generations; with a quality knob on, record them as Full
+            // so the histogram still accounts for every completion.
+            if (self.config.quality.is_some() || self.config.quality_floor.is_some())
+                && !out.is_empty()
+            {
+                *state
+                    .quality_histogram
+                    .entry(QualityMode::Full.label())
+                    .or_insert(0) += out.len();
+            }
+            return out;
         }
         let free_at = router.pods[pod].free_at;
         // Compute the modeled gain only for policies that read it.
@@ -1010,6 +1066,15 @@ impl<'a> ServeSession<'a> {
             if let Some(out) =
                 self.try_split(router, pod, &batch, &workload, ready, service, state, sched)
             {
+                // Side-carve dispatches run the exact pipeline.
+                if (self.config.quality.is_some() || self.config.quality_floor.is_some())
+                    && !out.is_empty()
+                {
+                    *state
+                        .quality_histogram
+                        .entry(QualityMode::Full.label())
+                        .or_insert(0) += out.len();
+                }
                 return out;
             }
             // No machine-aligned split exists (or the model cannot plan
@@ -1062,6 +1127,14 @@ impl<'a> ServeSession<'a> {
             t = router.pods[pod].recarver.force(ready, free_at, preferred);
             dur = pref_dur;
         }
+        // Quality-elastic admission: scale the (finite, memoized-exact)
+        // duration by the chosen mode's time factor. The factor applies
+        // outside `service_duration` so the pricing cache stays keyed on
+        // exact plans only.
+        if let Some(q) = self.pick_quality(free_at, ready) {
+            dur *= crate::analysis::quality_time_factor(&workload, q);
+            *state.quality_histogram.entry(q.label()).or_insert(0) += batch.size();
+        }
         if t.recarved && t.setup > 0.0 {
             router.commit_recarve(pod, ready, t.setup);
         }
@@ -1093,6 +1166,34 @@ impl<'a> ServeSession<'a> {
                 pod,
             })
             .collect()
+    }
+
+    /// Pick the quality mode for a batch dispatched at `ready` onto a
+    /// pod free at `free_at`, or `None` when both quality knobs are off
+    /// (the knob-off path must not touch the histogram or the duration,
+    /// keeping reports byte-identical to pre-quality output).
+    ///
+    /// A forced [`ServeConfig::quality`] always wins. Under a
+    /// [`ServeConfig::quality_floor`], an idle pod serves `Full`; a
+    /// backlogged pod walks [`QualityMode::ladder`] (ordered
+    /// best-to-cheapest) and takes the cheapest mode whose score still
+    /// clears the floor, falling back to `Full` when the floor excludes
+    /// every approximate mode.
+    fn pick_quality(&self, free_at: f64, ready: f64) -> Option<QualityMode> {
+        if let Some(q) = self.config.quality {
+            return Some(q);
+        }
+        let floor = self.config.quality_floor?;
+        if free_at <= ready {
+            return Some(QualityMode::Full);
+        }
+        Some(
+            QualityMode::ladder()
+                .into_iter()
+                .filter(|q| q.score() >= floor)
+                .last()
+                .unwrap_or(QualityMode::Full),
+        )
     }
 
     /// How many replica groups of `carve` a dispatched batch occupies

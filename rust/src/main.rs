@@ -21,7 +21,7 @@ use anyhow::{bail, Result};
 use swiftfusion::cluster::exec::{run_cluster, ExecMode};
 use swiftfusion::cluster::recarve::RecarvePolicy;
 use swiftfusion::comm::Buf;
-use swiftfusion::config::{AttnShape, ClusterSpec, ParallelSpec, SpDegrees};
+use swiftfusion::config::{AttnShape, ClusterSpec, ParallelSpec, QualityMode, SpDegrees};
 use swiftfusion::coordinator::batcher::BatchPolicy;
 use swiftfusion::coordinator::engine::{PlanPolicy, SimService};
 use swiftfusion::coordinator::router::Router;
@@ -71,6 +71,7 @@ USAGE: swiftfusion <info|validate|bench-layer|serve|volumes|trace> [flags]
   bench-layer --machines N --gpus M --workload NAME [--algo NAME] [plan flags]
   serve     --machines N --gpus M --pods K --requests R --rate Q [--algo NAME]
             [plan flags] [re-carving flags] [scheduler flags] [comm flags]
+            [quality flags]
   volumes   --machines N --gpus M --heads H
   trace     --machines N --gpus M --workload NAME [--algo NAME] [--out FILE]
             (per-rank timeline of one attention layer, chrome://tracing JSON)
@@ -159,6 +160,26 @@ traffic, NIC busy time, fused transfers).
                              latency and rendezvous; a plan opts in only
                              with cfg-degree 2 and machine-aligned
                              groups)
+
+Quality-elastic serving flags (serve): approximate inference modes as a
+scheduler dimension. With both flags unset every batch serves exact
+(Full) and the report is byte-identical to the pre-quality output; when
+either is set, the report gains a `quality_histogram` of modes served
+under.
+  --quality-floor F          admission floor in (0, 1]: a batch landing
+                             on a backlogged pod degrades to the
+                             cheapest quality mode whose score still
+                             clears F (full=1.0, displaced=0.9,
+                             fastattn@0.50=0.75, steps/2=0.5); an idle
+                             pod always serves full quality
+  --quality MODE             force one mode for every batch, overriding
+                             the floor: full, displaced (one-step-stale
+                             remote patches, DistriFusion-style),
+                             fastattn[:R] (windowed attention keeping
+                             ratio R of KV tiles, default 0.5),
+                             reduced[:K] (1/K denoising steps + dropped
+                             CFG branch on distillable workloads,
+                             default 2)
 ";
 
 fn workload_by_name(name: &str) -> Result<Workload> {
@@ -375,6 +396,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "--compress must be in (0, 1]"
     );
     let cfg_fuse = args.bool_or("cfg-fuse", false)?;
+    let quality_floor = if args.has("quality-floor") {
+        let f = args.f64_or("quality-floor", 1.0)?;
+        anyhow::ensure!(
+            f > 0.0 && f <= 1.0,
+            "--quality-floor must be in (0, 1]"
+        );
+        Some(f)
+    } else {
+        None
+    };
+    let quality = if args.has("quality") {
+        let name = args.str_or("quality", "full");
+        Some(QualityMode::from_name(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "bad --quality '{name}' (expected full, displaced, fastattn[:R], \
+                 reduced[:K])"
+            )
+        })?)
+    } else {
+        None
+    };
 
     let mut router = Router::new(n, m, pods, algo);
     // Comm-opt knobs ride on each pod's NetSpec: the single-model path
@@ -388,7 +430,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // every paper-suite workload has 24 heads
     let plan = plan_policy_for(args, router.pods[0].cluster.total_gpus(), 24)?;
     let plan_label = effective_plan(args)?.to_string();
-    let config = ServeConfig::new()
+    let mut config = ServeConfig::new()
         .batch(BatchPolicy { max_batch, window: 30.0 })
         .plan(plan)
         .patches(patches)
@@ -397,6 +439,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .co_batch(co_batch)
         .rebalance(rebalance)
         .scheduler(scheduler);
+    if let Some(f) = quality_floor {
+        config = config.quality_floor(f);
+    }
+    if let Some(q) = quality {
+        config = config.quality(q);
+    }
     // Only auto planning ever changes a pod's preferred plan; under
     // single/fixed the preferred spec is constant, so any re-carving
     // policy is inert. Say so instead of letting a zero-recarve run
@@ -439,6 +487,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if !report.plan_histogram.is_empty() {
         println!("plans served under (recarve policy: {recarve}):");
         for (label, count) in &report.plan_histogram {
+            println!("  {label:<28} {count:>5} request(s)");
+        }
+    }
+    if !report.quality_histogram.is_empty() {
+        println!("quality modes served under:");
+        for (label, count) in &report.quality_histogram {
             println!("  {label:<28} {count:>5} request(s)");
         }
     }

@@ -1,0 +1,576 @@
+//! DistriFusion-style **displaced patch parallelism** — the executable
+//! core of the quality-elastic serving axis
+//! ([`crate::config::QualityMode::Displaced`]).
+//!
+//! Where the six exact SP algorithms pay a fresh KV exchange inside
+//! every layer, displaced patch parallelism splits the sequence into one
+//! patch per rank and serves **remote patches from the previous step's
+//! activations**: each rank attends its own fresh patch against its own
+//! fresh KV plus the one-step-stale KV of every other rank, and the
+//! allgather of fresh patches happens *asynchronously* — its results are
+//! only needed at the next diffusion step, so the transfer overlaps the
+//! current step's compute instead of sitting on the critical path. The
+//! comm substrate is the same one-sided stale-window contract the
+//! PipeFusion stale-KV path already uses ([`super::pipefusion`]):
+//! exposed buffers stay readable for the epoch, and a stale read is a
+//! legal read.
+//!
+//! ## Warm-up guarantee
+//!
+//! Exactly like the patch pipeline, the **first step of a generation
+//! runs synchronously**: every rank blocks on the full fresh KV and the
+//! step equals the plain-softmax oracle within the repo-wide 1e-4 f32
+//! tile tolerance. Staleness therefore only ever appears *after* a
+//! fully-correct step, bounding the steady-state error by one step of
+//! input drift — the same argument (and the same `STALE_TOL` bound in
+//! `rust/tests/sp_property.rs`) as stale-KV pipelining.
+//!
+//! The synchronous schedule doubles as the [`super::SpAlgo`] entry
+//! point: [`SpAlgo::DisplacedPatch`](super::SpAlgo) has no cross-layer
+//! cache in the stateless `run` contract, so `run` executes
+//! [`displaced_sync_attention`] — the oracle-exact warm-up — and the
+//! stale steady state lives in [`guided_displaced_step`] /
+//! [`guided_displaced_generate`].
+//!
+//! ## DiTFastAttn-style windowed attention
+//!
+//! [`fastattn_attention`] implements the second approximate mode
+//! ([`crate::config::QualityMode::FastAttn`]): each q tile attends only
+//! the `keep_ratio` fraction of KV tiles nearest to it (a sliding
+//! window, clamped at the sequence ends, always containing the tile's
+//! own diagonal). The dropped attention mass bounds the error — the
+//! property suite derives the tolerance from the data rather than
+//! pinning a constant. `keep_ratio = 1` degenerates to the exact
+//! schedule.
+
+use anyhow::Result;
+
+use crate::cluster::exec::{run_in_world, ExecMode, RankCtx};
+use crate::cluster::plan::{BranchRole, ParallelPlan};
+use crate::cluster::Mesh2D;
+use crate::comm::{Buf, CommWorld};
+use crate::config::AttnShape;
+use crate::tensor::Tensor;
+
+use super::hybrid::guidance_combine;
+use super::tiles::AttnAccum;
+use super::SpParams;
+
+/// One-sided allgather of each rank's `own` buffer under `slot`,
+/// reassembled in mesh-rank order. Every rank exposes before pulling, so
+/// within one epoch all reads see the fresh buffers.
+fn allgather_patches(
+    ctx: &mut RankCtx,
+    group: &[usize],
+    local: usize,
+    own: &Buf,
+    slot: &str,
+    flows: usize,
+) -> Buf {
+    let sp = group.len();
+    if sp == 1 {
+        return own.clone();
+    }
+    ctx.expose(slot, own.clone());
+    let mut parts: Vec<Option<Buf>> = vec![None; sp];
+    parts[local] = Some(own.clone());
+    let mut pulls = Vec::new();
+    for (j, &peer) in group.iter().enumerate() {
+        if j != local {
+            pulls.push((j, ctx.get(peer, slot, flows)));
+        }
+    }
+    for (j, h) in pulls {
+        parts[j] = Some(ctx.wait_get(h));
+    }
+    let bufs: Vec<Buf> = parts.into_iter().map(|b| b.unwrap()).collect();
+    Buf::concat(&bufs, 1)
+}
+
+/// The synchronous (oracle-exact) displaced-patch schedule: allgather
+/// the full fresh K and V, then tile-attend the rank's own patch against
+/// the whole sequence. This is the warm-up step of a displaced
+/// generation and the stateless [`super::SpAlgo::run`] entry for
+/// [`super::SpAlgo::DisplacedPatch`].
+pub fn displaced_sync_attention(ctx: &mut RankCtx, p: &SpParams, q: Buf, k: Buf, v: Buf) -> Buf {
+    let group = p.mesh.ranks();
+    let flows = ctx.nic_flows(&group);
+    let local = group
+        .iter()
+        .position(|&r| r == ctx.rank)
+        .expect("rank must belong to its own mesh");
+    let kf = allgather_patches(ctx, &group, local, &k, "dp.sync.k", flows);
+    let vf = allgather_patches(ctx, &group, local, &v, "dp.sync.v", flows);
+    let mut accum = AttnAccum::new(ctx, &q, p.chunk);
+    accum.absorb(ctx, &kf, &vf, None);
+    accum.finish(ctx)
+}
+
+/// DiTFastAttn-style windowed attention: each q tile absorbs only the
+/// `keep_ratio` fraction of global KV tiles nearest to its own position
+/// (window clamped at the sequence ends, always spanning the tile's
+/// diagonal). KV is allgathered exactly like the synchronous displaced
+/// schedule; the saving is compute, not communication.
+pub fn fastattn_attention(
+    ctx: &mut RankCtx,
+    p: &SpParams,
+    q: Buf,
+    k: Buf,
+    v: Buf,
+    keep_ratio: f64,
+) -> Buf {
+    let group = p.mesh.ranks();
+    let flows = ctx.nic_flows(&group);
+    let local = group
+        .iter()
+        .position(|&r| r == ctx.rank)
+        .expect("rank must belong to its own mesh");
+    let kf = allgather_patches(ctx, &group, local, &k, "dp.fa.k", flows);
+    let vf = allgather_patches(ctx, &group, local, &v, "dp.fa.v", flows);
+    let nt = p.shape.l / p.chunk;
+    let keep = ((keep_ratio * nt as f64).ceil() as usize).clamp(1, nt);
+    let mut accum = AttnAccum::new(ctx, &q, p.chunk);
+    let base_tile = local * (p.shard_len() / p.chunk);
+    for i in 0..accum.num_tiles() {
+        let gi = base_tile + i;
+        // window start: centered on the q tile, clamped into [0, nt-keep]
+        let start = gi.saturating_sub(keep / 2).min(nt - keep);
+        let ks = kf.slice(1, start * p.chunk, (start + keep) * p.chunk);
+        let vs = vf.slice(1, start * p.chunk, (start + keep) * p.chunk);
+        accum.absorb(ctx, &ks, &vs, Some(&[i]));
+    }
+    accum.finish(ctx)
+}
+
+/// Knobs of the displaced-patch schedules shared by warm-up and steady
+/// state.
+#[derive(Debug, Clone, Copy)]
+pub struct DispParams {
+    /// Full per-branch attention shape `[B, L, H, D]`.
+    pub shape: AttnShape,
+    /// Tile granularity; must divide the per-rank patch `L / sp_ranks`.
+    pub chunk: usize,
+}
+
+/// One branch's per-rank result: (full fresh layer input, own output
+/// shard).
+type BranchResult = (Tensor, Tensor);
+/// Per-rank results, tagged by branch ("c" / "u").
+type BranchOut = (&'static str, BranchResult);
+
+fn branch_out<'a>(per_rank: &'a [BranchOut], tag: &str) -> &'a BranchResult {
+    per_rank
+        .iter()
+        .find(|(t, _)| *t == tag)
+        .map(|(_, v)| v)
+        .unwrap_or_else(|| panic!("missing '{tag}' branch output"))
+}
+
+/// Result of one guided diffusion step under displaced patch parallelism.
+pub struct GuidedDispStep {
+    /// The CFG-combined output `[B, L, H, D]`.
+    pub eps: Tensor,
+    /// The conditional branch's full fresh layer input — next step's
+    /// stale activation cache.
+    pub cond_cache: Tensor,
+    /// Same for the unconditional branch.
+    pub uncond_cache: Tensor,
+    /// Virtual-time makespan of the step.
+    pub makespan: f64,
+}
+
+/// One branch of one step on this rank: returns (full fresh layer input,
+/// own output shard). `cache` is the previous step's full fresh input
+/// (`None` selects the synchronous warm-up).
+fn branch_step(
+    ctx: &mut RankCtx,
+    p: &DispParams,
+    mesh: &Mesh2D,
+    branch: &str,
+    x: &Buf,
+    cache: Option<&Buf>,
+    flows: usize,
+) -> (Buf, Buf) {
+    let group = mesh.ranks();
+    let sp = group.len();
+    let local = group
+        .iter()
+        .position(|&r| r == ctx.rank)
+        .expect("rank must belong to its own mesh");
+    let ls = p.shape.l / sp;
+    let own = x.slice(1, local * ls, (local + 1) * ls);
+    match cache {
+        // ---- warm-up: synchronous, oracle-exact ------------------------
+        None => {
+            let full =
+                allgather_patches(ctx, &group, local, &own, &format!("dp.{branch}.sync"), flows);
+            let mut accum = AttnAccum::new(ctx, &own, p.chunk);
+            accum.absorb(ctx, &full, &full, None);
+            let out = accum.finish(ctx);
+            (full, out)
+        }
+        // ---- steady state: fresh own patch, one-step-stale remotes -----
+        Some(cache_full) => {
+            let mut accum = AttnAccum::new(ctx, &own, p.chunk);
+            for j in 0..sp {
+                let kv = if j == local {
+                    own.clone()
+                } else {
+                    cache_full.slice(1, j * ls, (j + 1) * ls)
+                };
+                accum.absorb(ctx, &kv, &kv, None);
+            }
+            let out = accum.finish(ctx);
+            // async allgather of the fresh patches: the result feeds the
+            // *next* step's cache, so the transfer runs after (i.e.
+            // overlapped with) this step's attention instead of gating it
+            let full =
+                allgather_patches(ctx, &group, local, &own, &format!("dp.{branch}.fresh"), flows);
+            (full, out)
+        }
+    }
+}
+
+/// Run one guided diffusion step of displaced patch parallelism under
+/// `plan` (a `pp_degree == 1` plan; each group's stage-0 mesh is the
+/// patch mesh, one patch per rank). `caches` carries each branch's full
+/// fresh layer input from the previous step; `None` selects the
+/// synchronous warm-up schedule (oracle-exact, see the module docs). The
+/// toy network is one self-attention layer per step — the same network
+/// [`super::pipefusion::guided_pipefusion_oracle`] with `pp = 1`
+/// evaluates exactly.
+pub fn guided_displaced_step(
+    plan: &ParallelPlan,
+    p: &DispParams,
+    cond_x: &Tensor,
+    uncond_x: &Tensor,
+    scale: f32,
+    caches: Option<(&Tensor, &Tensor)>,
+    mode: &ExecMode,
+) -> Result<GuidedDispStep> {
+    anyhow::ensure!(mode.is_numeric(), "displaced step needs a numeric ExecMode");
+    anyhow::ensure!(
+        plan.spec.pp_degree == 1,
+        "displaced patch parallelism is a flat-mesh schedule (pp_degree == 1); \
+         compose with the patch pipeline via SpAlgo inside a stage instead"
+    );
+    plan.spec.validate_workload(&p.shape)?;
+    let sp = plan.spec.ranks_per_stage();
+    let ls = p.shape.l / sp;
+    anyhow::ensure!(
+        ls > 0 && ls % p.chunk == 0,
+        "chunk {} must divide the per-rank patch {} (L={} sp={})",
+        p.chunk,
+        ls,
+        p.shape.l,
+        sp
+    );
+
+    let world = CommWorld::new(plan.cluster.clone());
+    world.set_cfg_fused(plan.cfg_fusible());
+    let run = run_in_world(&world, mode, |ctx| {
+        // ranks outside a subset plan's carve idle (other generation)
+        let Some(group) = plan.try_group_of(ctx.rank) else {
+            return Vec::new();
+        };
+        let flows = ctx.nic_flows(&group.ranks());
+        let mesh = group.mesh();
+        let run_one = |ctx: &mut RankCtx,
+                       branch: &'static str,
+                       x: &Tensor,
+                       cache: Option<&Tensor>|
+         -> (Tensor, Tensor) {
+            let x_buf = Buf::Real(x.clone());
+            let cache_buf = cache.map(|c| Buf::Real(c.clone()));
+            let (full, out) =
+                branch_step(ctx, p, mesh, branch, &x_buf, cache_buf.as_ref(), flows);
+            (full.into_tensor(), out.into_tensor())
+        };
+        match group.role {
+            BranchRole::Conditional => {
+                vec![("c", run_one(ctx, "c", cond_x, caches.map(|c| c.0)))]
+            }
+            BranchRole::Unconditional => {
+                vec![("u", run_one(ctx, "u", uncond_x, caches.map(|c| c.1)))]
+            }
+            BranchRole::Both => {
+                let c = run_one(ctx, "c", cond_x, caches.map(|c| c.0));
+                // fresh window epoch so the second branch can never read
+                // the first branch's exposed buffers
+                ctx.next_epoch();
+                let u = run_one(ctx, "u", uncond_x, caches.map(|c| c.1));
+                vec![("c", c), ("u", u)]
+            }
+        }
+    });
+
+    // Assemble each branch from replica 0 of its role: output shards
+    // rank-major, the fresh-input cache from the mesh's base rank.
+    let assemble = |role: BranchRole, tag: &str| -> Result<(Tensor, Tensor)> {
+        let group = plan.group_for(role, 0);
+        let ranks = group.mesh().ranks();
+        let shards: Vec<&Tensor> = ranks
+            .iter()
+            .map(|&r| &branch_out(&run.outputs[r], tag).1)
+            .collect();
+        let full = Tensor::concat(&shards, 1)?;
+        let cache = branch_out(&run.outputs[ranks[0]], tag).0.clone();
+        Ok((full, cache))
+    };
+
+    let (c_out, cond_cache) = assemble(BranchRole::Conditional, "c")?;
+    let (u_out, uncond_cache) = assemble(BranchRole::Unconditional, "u")?;
+    let eps = guidance_combine(&c_out, &u_out, scale)?;
+    Ok(GuidedDispStep { eps, cond_cache, uncond_cache, makespan: run.makespan() })
+}
+
+/// Drive `steps` diffusion steps of displaced patch parallelism: step 0
+/// is the synchronous warm-up, later steps attend fresh-own /
+/// stale-remote patches. The latent update `x ← x + η·(eps − x)` models
+/// the slowly-drifting inputs DistriFusion's temporal-redundancy
+/// argument relies on; `cond_bias` is a fixed conditioning offset so the
+/// two guidance branches differ. Returns the final latent and the summed
+/// per-step makespan. The staleness-free reference is
+/// [`super::pipefusion::guided_pipefusion_oracle`] with `pp = 1`.
+pub fn guided_displaced_generate(
+    plan: &ParallelPlan,
+    p: &DispParams,
+    steps: usize,
+    eta: f32,
+    x0: &Tensor,
+    cond_bias: &Tensor,
+    scale: f32,
+    mode: &ExecMode,
+) -> Result<(Tensor, f64)> {
+    let mut x = x0.clone();
+    let mut caches: Option<(Tensor, Tensor)> = None;
+    let mut makespan = 0.0;
+    for _ in 0..steps {
+        let xc = x.add(cond_bias)?;
+        let step = guided_displaced_step(
+            plan,
+            p,
+            &xc,
+            &x,
+            scale,
+            caches.as_ref().map(|(c, u)| (c, u)),
+            mode,
+        )?;
+        makespan += step.makespan;
+        x = x.add(&step.eps.sub(&x)?.scale(eta))?;
+        caches = Some((step.cond_cache, step.uncond_cache));
+    }
+    Ok((x, makespan))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterSpec, ParallelSpec, SpDegrees};
+    use crate::sp::pipefusion::guided_pipefusion_oracle;
+    use crate::sp::tiles::host;
+    use crate::sp::SpAlgo;
+
+    #[test]
+    fn warmup_step_matches_oracle() {
+        // sp2 on one 2-GPU machine, synchronous warm-up.
+        let cluster = ClusterSpec::new(1, 2);
+        let plan = ParallelPlan::build(
+            &cluster,
+            ParallelSpec::new(1, 1, SpDegrees::new(2, 1)),
+            SpAlgo::DisplacedPatch,
+        )
+        .unwrap();
+        let shape = AttnShape::new(1, 32, 4, 8);
+        let p = DispParams { shape, chunk: 4 };
+        let dims = [1, 32, 4, 8];
+        let x = Tensor::random(&dims, 21);
+        let cb = Tensor::random(&dims, 22).scale(0.5);
+        let step = guided_displaced_step(
+            &plan,
+            &p,
+            &x.add(&cb).unwrap(),
+            &x,
+            3.0,
+            None,
+            &ExecMode::HostNumeric,
+        )
+        .unwrap();
+        let xc = x.add(&cb).unwrap();
+        let want = guidance_combine(
+            &host::attention_oracle(&xc, &xc, &xc),
+            &host::attention_oracle(&x, &x, &x),
+            3.0,
+        )
+        .unwrap();
+        let diff = step.eps.max_abs_diff(&want);
+        assert!(diff < 1e-4, "warm-up vs oracle: {diff}");
+        assert!(step.makespan > 0.0);
+        // the warm-up cache is the branch's exact layer input
+        let c0 = step.cond_cache.max_abs_diff(&xc);
+        assert!(c0 < 1e-6, "cache is the step input: {c0}");
+    }
+
+    #[test]
+    fn steady_step_on_unchanged_input_is_a_fixed_point() {
+        // After warm-up, a steady step against *unchanged* inputs must
+        // reproduce the oracle exactly (the stale cache equals the fresh
+        // activations when the input did not move).
+        let cluster = ClusterSpec::new(1, 2);
+        let plan = ParallelPlan::build(
+            &cluster,
+            ParallelSpec::new(1, 1, SpDegrees::new(2, 1)),
+            SpAlgo::DisplacedPatch,
+        )
+        .unwrap();
+        let shape = AttnShape::new(1, 16, 2, 4);
+        let p = DispParams { shape, chunk: 4 };
+        let dims = [1, 16, 2, 4];
+        let x = Tensor::random(&dims, 87);
+        let cb = Tensor::random(&dims, 88).scale(0.5);
+        let warm = guided_displaced_step(
+            &plan,
+            &p,
+            &x.add(&cb).unwrap(),
+            &x,
+            2.0,
+            None,
+            &ExecMode::HostNumeric,
+        )
+        .unwrap();
+        let steady = guided_displaced_step(
+            &plan,
+            &p,
+            &x.add(&cb).unwrap(),
+            &x,
+            2.0,
+            Some((&warm.cond_cache, &warm.uncond_cache)),
+            &ExecMode::HostNumeric,
+        )
+        .unwrap();
+        let diff = steady.eps.max_abs_diff(&warm.eps);
+        assert!(diff < 2e-4, "fixed-point steady step vs warm-up: {diff}");
+    }
+
+    #[test]
+    fn generate_tracks_the_exact_oracle() {
+        let cluster = ClusterSpec::new(1, 2);
+        let plan = ParallelPlan::build(
+            &cluster,
+            ParallelSpec::new(1, 1, SpDegrees::new(2, 1)),
+            SpAlgo::DisplacedPatch,
+        )
+        .unwrap();
+        let shape = AttnShape::new(1, 16, 2, 4);
+        let p = DispParams { shape, chunk: 4 };
+        let dims = [1, 16, 2, 4];
+        let x0 = Tensor::random(&dims, 5);
+        let cb = Tensor::random(&dims, 6).scale(0.3);
+        let (got, makespan) = guided_displaced_generate(
+            &plan,
+            &p,
+            3,
+            0.05,
+            &x0,
+            &cb,
+            2.0,
+            &ExecMode::HostNumeric,
+        )
+        .unwrap();
+        let want = guided_pipefusion_oracle(1, 3, 0.05, &x0, &cb, 2.0).unwrap();
+        let diff = got.max_abs_diff(&want);
+        assert!(diff < 0.1, "3-step displaced generate vs oracle: {diff}");
+        assert!(makespan > 0.0);
+    }
+
+    #[test]
+    fn step_rejects_pipelined_plans_and_bad_chunks() {
+        let cluster = ClusterSpec::new(1, 4);
+        let pp_plan = ParallelPlan::build(
+            &cluster,
+            ParallelSpec::with_pp(1, 2, 1, SpDegrees::new(2, 1)),
+            SpAlgo::DisplacedPatch,
+        )
+        .unwrap();
+        let shape = AttnShape::new(1, 32, 4, 8);
+        let x = Tensor::random(&[1, 32, 4, 8], 9);
+        let err = guided_displaced_step(
+            &pp_plan,
+            &DispParams { shape, chunk: 4 },
+            &x,
+            &x,
+            1.0,
+            None,
+            &ExecMode::HostNumeric,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("pp_degree"), "{err}");
+        let flat = ParallelPlan::build(
+            &cluster,
+            ParallelSpec::new(1, 1, SpDegrees::new(4, 1)),
+            SpAlgo::DisplacedPatch,
+        )
+        .unwrap();
+        // chunk 3 does not divide the 8-token patch
+        let err = guided_displaced_step(
+            &flat,
+            &DispParams { shape, chunk: 3 },
+            &x,
+            &x,
+            1.0,
+            None,
+            &ExecMode::HostNumeric,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("chunk"), "{err}");
+    }
+
+    #[test]
+    fn fastattn_full_window_is_exact_and_pruning_prunes_compute() {
+        use crate::cluster::exec::run_cluster;
+        // keep_ratio = 1 degenerates to the exact schedule.
+        let c = ClusterSpec::new(1, 1);
+        let (b, l, h, d) = (1, 64, 2, 8);
+        let q = Tensor::random(&[b, l, h, d], 31);
+        let k = Tensor::random(&[b, l, h, d], 32);
+        let v = Tensor::random(&[b, l, h, d], 33);
+        let want = host::attention_oracle(&q, &k, &v);
+        let params = SpParams {
+            shape: AttnShape::new(b, l, h, d),
+            chunk: 8,
+            mesh: SpAlgo::DisplacedPatch.mesh(&c, SpDegrees::new(1, 1)),
+        };
+        let run = run_cluster(&c, &ExecMode::HostNumeric, |ctx| {
+            fastattn_attention(
+                ctx,
+                &params,
+                Buf::Real(q.clone()),
+                Buf::Real(k.clone()),
+                Buf::Real(v.clone()),
+                1.0,
+            )
+            .into_tensor()
+        });
+        let diff = run.outputs[0].max_abs_diff(&want);
+        assert!(diff < 1e-4, "keep_ratio=1 vs oracle: {diff}");
+        // pruned windows cost measurably less virtual compute time; use a
+        // paper-scale shape so tile flops dominate fixed per-op overheads
+        let tshape = AttnShape::new(1, 4096, 8, 64);
+        let tparams = SpParams {
+            shape: tshape,
+            chunk: 256,
+            mesh: SpAlgo::DisplacedPatch.mesh(&c, SpDegrees::new(1, 1)),
+        };
+        let timed = |r: f64| {
+            let run = run_cluster(&c, &ExecMode::Timing, |ctx| {
+                let s = Buf::Shape(vec![tshape.b, tshape.l, tshape.h, tshape.d]);
+                fastattn_attention(ctx, &tparams, s.clone(), s.clone(), s, r);
+                ctx.clock.now
+            });
+            run.outputs[0]
+        };
+        let full = timed(1.0);
+        let half = timed(0.5);
+        assert!(half < 0.8 * full, "half window {half} vs full {full}");
+    }
+}

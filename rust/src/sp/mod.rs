@@ -28,6 +28,7 @@
 //! Q/KV tensors with carried softmax state), so numeric mode maps 1:1
 //! onto the AOT Pallas artifacts.
 
+pub mod displaced;
 pub mod hybrid;
 pub mod pipefusion;
 pub mod ring;
@@ -78,6 +79,13 @@ pub enum SpAlgo {
     TorusNccl,
     /// Full SwiftFusion: TAS + Torus + one-sided (Algorithm 1).
     SwiftFusion,
+    /// DistriFusion-style displaced patch parallelism: one patch per
+    /// rank, remote KV served one-step-stale in steady state
+    /// ([`displaced`]). The stateless `run` entry executes the
+    /// synchronous warm-up schedule (oracle-exact); not in [`Self::ALL`]
+    /// because the exact-algorithm sweeps (property tests, volume
+    /// cross-validation) cover the six always-fresh algorithms.
+    DisplacedPatch,
 }
 
 impl SpAlgo {
@@ -98,10 +106,14 @@ impl SpAlgo {
             SpAlgo::Tas => "tas",
             SpAlgo::TorusNccl => "torus-nccl",
             SpAlgo::SwiftFusion => "swiftfusion",
+            SpAlgo::DisplacedPatch => "displaced-patch",
         }
     }
 
     pub fn from_name(s: &str) -> Option<Self> {
+        if s == "displaced-patch" {
+            return Some(SpAlgo::DisplacedPatch);
+        }
         Self::ALL.iter().copied().find(|a| a.name() == s)
     }
 
@@ -133,6 +145,7 @@ impl SpAlgo {
                 torus::torus_attention(ctx, p, q, k, v, torus::CommStyle::TwoSided)
             }
             SpAlgo::SwiftFusion => swiftfusion::swiftfusion_attention(ctx, p, q, k, v),
+            SpAlgo::DisplacedPatch => displaced::displaced_sync_attention(ctx, p, q, k, v),
         }
     }
 }
@@ -176,6 +189,13 @@ mod tests {
         for a in SpAlgo::ALL {
             assert_eq!(SpAlgo::from_name(a.name()), Some(a));
         }
+        // displaced-patch is addressable by name but not part of the
+        // exact-algorithm sweep
+        assert_eq!(
+            SpAlgo::from_name("displaced-patch"),
+            Some(SpAlgo::DisplacedPatch)
+        );
+        assert!(!SpAlgo::ALL.contains(&SpAlgo::DisplacedPatch));
         assert_eq!(SpAlgo::from_name("nope"), None);
     }
 

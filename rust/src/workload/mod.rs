@@ -3,7 +3,7 @@
 //! lengths, and a Poisson request-trace generator for the serving
 //! benchmarks.
 
-use crate::config::AttnShape;
+use crate::config::{AttnShape, QualityMode};
 use crate::util::rng::SplitMix64;
 
 /// Latent patchification arithmetic: pixels → VAE latents (8× spatial
@@ -138,6 +138,32 @@ impl Workload {
         let mut w = self.clone();
         w.shape.l -= w.shape.l % p;
         w
+    }
+
+    /// Total guidance evaluations of a full generation: `steps ×
+    /// cfg_evals` — the unit the per-layer cost model multiplies out to
+    /// end-to-end time.
+    pub fn total_evals(&self) -> usize {
+        self.steps * self.cfg_evals
+    }
+
+    /// Total guidance evaluations under a [`QualityMode`].
+    /// `ReducedSteps { factor }` is distilled few-step sampling: the
+    /// step count divides by `factor`, and — guidance distillation —
+    /// a CFG workload (`cfg_evals >= 2`) folds its unconditional branch
+    /// into the student, dropping to one eval per step (the same
+    /// distinction that separates Flux-distilled from CFG video in the
+    /// presets). Every other mode keeps the step budget; its saving is
+    /// per-step, priced by [`crate::analysis::quality_time_factor`].
+    pub fn evals_under(&self, quality: QualityMode) -> usize {
+        match quality {
+            QualityMode::ReducedSteps { factor } => {
+                let steps = (self.steps / factor.max(1)).max(1);
+                let evals = if self.cfg_evals >= 2 { 1 } else { self.cfg_evals };
+                steps * evals
+            }
+            _ => self.total_evals(),
+        }
     }
 }
 
@@ -296,6 +322,37 @@ mod tests {
         for (x, y) in a.iter().zip(&b) {
             assert_eq!((x.id, x.arrival, x.workload.name), (y.id, y.arrival, y.workload.name));
         }
+    }
+
+    #[test]
+    fn cfg_evals_and_reduced_steps_pin_the_distillation_arithmetic() {
+        // Flux is already guidance-distilled: 28 steps x 1 eval. Reduced
+        // sampling halves the step count and has no uncond branch to drop.
+        let flux = Workload::flux_3072();
+        assert_eq!((flux.steps, flux.cfg_evals), (28, 1));
+        assert_eq!(flux.total_evals(), 28);
+        assert_eq!(flux.evals_under(QualityMode::ReducedSteps { factor: 2 }), 14);
+        // CFG video pays 2 evals per step: 50 x 2 = 100. Distillation at
+        // factor 2 halves the steps AND folds the uncond branch: 25 x 1.
+        let video = Workload::cfg_video_96k();
+        assert_eq!((video.steps, video.cfg_evals), (50, 2));
+        assert_eq!(video.total_evals(), 100);
+        assert_eq!(video.evals_under(QualityMode::ReducedSteps { factor: 2 }), 25);
+        // same arithmetic on the paper preset the serve benches use
+        let cog = Workload::cogvideo_20s();
+        assert_eq!(cog.total_evals(), 100);
+        assert_eq!(cog.evals_under(QualityMode::ReducedSteps { factor: 5 }), 10);
+        // non-step modes keep the eval budget; factor never rounds to 0
+        assert_eq!(flux.evals_under(QualityMode::Full), 28);
+        assert_eq!(flux.evals_under(QualityMode::Displaced), 28);
+        assert_eq!(
+            flux.evals_under(QualityMode::FastAttn { keep_ratio: 0.5 }),
+            28
+        );
+        assert_eq!(
+            flux.evals_under(QualityMode::ReducedSteps { factor: 100 }),
+            1
+        );
     }
 
     #[test]

@@ -13,7 +13,8 @@
 use std::sync::Arc;
 
 use swiftfusion::cluster::recarve::RecarvePolicy;
-use swiftfusion::config::{ParallelSpec, SpDegrees};
+use swiftfusion::analysis::DISPLACED_TIME_FACTOR;
+use swiftfusion::config::{ParallelSpec, QualityMode, SpDegrees};
 use swiftfusion::coordinator::batcher::BatchPolicy;
 use swiftfusion::coordinator::engine::{serve, PlanPolicy, ServeReport, SimService};
 use swiftfusion::coordinator::router::Router;
@@ -488,6 +489,110 @@ fn cross_pod_rebalancing_beats_the_frozen_fleet_on_a_drifting_mix() {
     // observability: the migration serializes (only) when it happened
     assert!(to_string(&adaptive.to_json()).contains("\"rebalance\":["));
     assert!(!to_string(&frozen.to_json()).contains("\"rebalance\""));
+}
+
+// ---------------------------------------------------------------------------
+// Quality-elastic serving
+// ---------------------------------------------------------------------------
+
+/// Flat-cost scripted model: every dispatch costs `2 · batch` seconds
+/// regardless of workload, so the quality ladder's time factors are the
+/// only thing that can change a completion time.
+struct Flat;
+
+impl CostModel for Flat {
+    fn service_time(&self, _w: &Workload, batch: usize) -> f64 {
+        2.0 * batch as f64
+    }
+}
+
+impl Planner for Flat {}
+
+fn quality_run(config: ServeConfig) -> ServeReport {
+    let mut router = Router::new(4, 8, 1, SpAlgo::SwiftFusion);
+    ServeSession::new(config, &Flat).run(&mut router, burst(4))
+}
+
+/// The byte-identity contract: with both quality knobs unset nothing
+/// quality-related reaches the report (the PR-3 golden above already
+/// pins the exact bytes); with the knob on but the floor at 1.0 every
+/// batch still serves Full — durations are bit-identical (×1.0 is exact
+/// in IEEE arithmetic) and the *only* addition is the quality histogram.
+#[test]
+fn quality_knob_off_is_byte_identical_and_floor_one_only_adds_the_histogram() {
+    let base = || ServeConfig::new().batch(BatchPolicy { max_batch: 1, window: 0.0 });
+    let off = quality_run(base());
+    assert!(off.quality_histogram.is_empty());
+    let json_off = to_string(&off.to_json());
+    assert!(!json_off.contains("quality"), "knob-off report must not mention quality");
+
+    let full = quality_run(base().quality_floor(1.0));
+    assert_eq!(off.completions, full.completions, "x1.0 durations are bit-identical");
+    assert_eq!(
+        off.metrics.horizon.to_bits(),
+        full.metrics.horizon.to_bits(),
+        "bit-identical horizon under floor 1.0"
+    );
+    assert_eq!(full.quality_histogram.get("full"), Some(&4));
+    assert!(to_string(&full.to_json()).contains("\"quality_histogram\":{\"full\":4}"));
+    // the config line advertises the knob (and only then)
+    assert!(!base().summary().contains("quality"));
+    assert!(base().quality_floor(1.0).summary().ends_with("quality-floor=1"));
+}
+
+/// The admission flow itself: under a 0.9 floor the first burst batch
+/// lands on an idle pod (Full), every later batch sees the backlog and
+/// degrades to Displaced — the cheapest mode at or above the floor —
+/// clearing the burst strictly faster than forced full quality, with the
+/// histogram recording the flip.
+#[test]
+fn quality_floor_flips_backlogged_batches_to_displaced() {
+    let base = || ServeConfig::new().batch(BatchPolicy { max_batch: 1, window: 0.0 });
+    let floored = quality_run(base().quality_floor(0.9));
+    let forced_full = quality_run(base().quality(QualityMode::Full));
+
+    assert_eq!(floored.metrics.completed(), 4);
+    assert_eq!(forced_full.metrics.completed(), 4);
+    assert_eq!(floored.quality_histogram.get("full"), Some(&1), "idle pod serves exact");
+    assert_eq!(
+        floored.quality_histogram.get("displaced"),
+        Some(&3),
+        "every backlogged batch flipped: {:?}",
+        floored.quality_histogram
+    );
+    assert_eq!(forced_full.quality_histogram.get("full"), Some(&4));
+
+    // exact arithmetic: r0 serves 2 s at full quality, r1..r3 queue and
+    // serve 2 · DISPLACED_TIME_FACTOR each, back to back from t = 2
+    let expected = 2.0 + 3.0 * (2.0 * DISPLACED_TIME_FACTOR);
+    assert!(
+        (floored.metrics.horizon - expected).abs() < 1e-12,
+        "floored horizon {} vs expected {expected}",
+        floored.metrics.horizon
+    );
+    assert_eq!(forced_full.metrics.horizon, 8.0, "four 2 s dispatches back to back");
+    assert!(
+        floored.metrics.horizon < forced_full.metrics.horizon,
+        "the floor must clear the burst strictly faster"
+    );
+    // serialization: BTreeMap orders the mode labels
+    assert!(to_string(&floored.to_json())
+        .contains("\"quality_histogram\":{\"displaced\":3,\"full\":1}"));
+}
+
+/// Forced step reduction prices through the workload's distillation
+/// arithmetic: the shrunk image workload (2 steps × 1 eval) halves to 1
+/// eval under `steps/2`, so every dispatch costs exactly half.
+#[test]
+fn forced_reduced_steps_halves_the_flat_cost_run() {
+    let base = || ServeConfig::new().batch(BatchPolicy { max_batch: 1, window: 0.0 });
+    let reduced = quality_run(base().quality(QualityMode::ReducedSteps { factor: 2 }));
+    assert_eq!(reduced.metrics.completed(), 4);
+    assert_eq!(reduced.quality_histogram.get("steps/2"), Some(&4));
+    assert_eq!(
+        reduced.metrics.horizon, 4.0,
+        "four 1 s dispatches back to back (2 s x the 0.5 eval ratio)"
+    );
 }
 
 // ---------------------------------------------------------------------------
