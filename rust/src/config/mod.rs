@@ -318,7 +318,51 @@ pub enum QualityMode {
     },
 }
 
+/// Typed "unknown name" error for the CLI-facing `from_name` parsers
+/// ([`QualityMode::from_name`], [`crate::sp::SpAlgo::from_name`]):
+/// carries what was being named, the rejected spelling, and every
+/// accepted spelling, so callers print an actionable message instead of
+/// a bare failure.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NameError {
+    /// What was being named (e.g. `quality mode`, `sp algorithm`).
+    pub what: &'static str,
+    /// The rejected spelling.
+    pub given: String,
+    /// Every accepted spelling (forms like `fastattn[:RATIO]` allowed).
+    pub valid: Vec<String>,
+}
+
+impl NameError {
+    pub fn new(what: &'static str, given: &str, valid: &[&str]) -> Self {
+        Self {
+            what,
+            given: given.to_string(),
+            valid: valid.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+impl std::fmt::Display for NameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "unknown {} '{}': expected one of {}",
+            self.what,
+            self.given,
+            self.valid.join(", ")
+        )
+    }
+}
+
+impl std::error::Error for NameError {}
+
 impl QualityMode {
+    /// The accepted [`Self::from_name`] spellings, for error messages
+    /// and CLI help.
+    pub const NAME_FORMS: [&'static str; 4] =
+        ["full", "displaced", "fastattn[:RATIO]", "reduced[:FACTOR]"];
+
     /// Histogram / CLI label.
     pub fn label(&self) -> String {
         match self {
@@ -331,29 +375,32 @@ impl QualityMode {
 
     /// Parse a CLI spelling: `full`, `displaced`, `fastattn[:RATIO]`
     /// (default ratio 0.5), `reduced[:FACTOR]` (default factor 2).
-    pub fn from_name(s: &str) -> Option<Self> {
+    /// Misspellings and malformed parameters return a typed
+    /// [`NameError`] listing every accepted form.
+    pub fn from_name(s: &str) -> Result<Self, NameError> {
+        let unknown = || NameError::new("quality mode", s, &Self::NAME_FORMS);
         match s {
-            "full" => return Some(QualityMode::Full),
-            "displaced" => return Some(QualityMode::Displaced),
-            "fastattn" => return Some(QualityMode::FastAttn { keep_ratio: 0.5 }),
-            "reduced" => return Some(QualityMode::ReducedSteps { factor: 2 }),
+            "full" => return Ok(QualityMode::Full),
+            "displaced" => return Ok(QualityMode::Displaced),
+            "fastattn" => return Ok(QualityMode::FastAttn { keep_ratio: 0.5 }),
+            "reduced" => return Ok(QualityMode::ReducedSteps { factor: 2 }),
             _ => {}
         }
         if let Some(r) = s.strip_prefix("fastattn:") {
-            let keep_ratio: f64 = r.parse().ok()?;
+            let keep_ratio: f64 = r.parse().map_err(|_| unknown())?;
             if keep_ratio > 0.0 && keep_ratio <= 1.0 {
-                return Some(QualityMode::FastAttn { keep_ratio });
+                return Ok(QualityMode::FastAttn { keep_ratio });
             }
-            return None;
+            return Err(unknown());
         }
         if let Some(f) = s.strip_prefix("reduced:") {
-            let factor: usize = f.parse().ok()?;
+            let factor: usize = f.parse().map_err(|_| unknown())?;
             if factor >= 1 {
-                return Some(QualityMode::ReducedSteps { factor });
+                return Ok(QualityMode::ReducedSteps { factor });
             }
-            return None;
+            return Err(unknown());
         }
-        None
+        Err(unknown())
     }
 
     /// Quality score in (0, 1] the `--quality-floor` admission knob

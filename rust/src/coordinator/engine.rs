@@ -63,6 +63,10 @@ pub struct SimService {
     /// Patch count for pipelined (`pp_degree > 1`) plans — PipeFusion's
     /// `M`, shared with the cost model's pipeline term.
     pub patches: usize,
+    /// When set, [`Self::patches`] is ignored and the patch count is
+    /// chosen per workload by the closed-form argmin
+    /// ([`crate::analysis::choose_patches`]) — `--patches auto`.
+    pub patches_auto: bool,
     /// (workload, batch, plan label) → service seconds. The plan label
     /// keys the cache because the epoch-aware engine may serve the same
     /// workload under a *stale* carve as well as its preferred plan.
@@ -73,6 +77,9 @@ pub struct SimService {
     /// Subset-plan memo for group-granular re-carving:
     /// (workload name, machines) → chosen spec for that footprint.
     sub_spec_cache: Mutex<HashMap<(String, usize), ParallelSpec>>,
+    /// Auto-patch memo: workload name → argmin patch count (the argmin
+    /// re-prices every candidate × the whole plan space otherwise).
+    patch_cache: Mutex<HashMap<String, usize>>,
     /// Comm counters accumulated across every *executed* pricing run
     /// (cache hits add nothing — the counters describe the modeled
     /// schedules, not per-request traffic). Surfaced by
@@ -88,9 +95,11 @@ impl SimService {
             fixed_overhead: 0.05,
             plan: PlanPolicy::SingleMesh,
             patches: crate::analysis::DEFAULT_PATCHES,
+            patches_auto: false,
             cache: Mutex::new(HashMap::new()),
             spec_cache: Mutex::new(HashMap::new()),
             sub_spec_cache: Mutex::new(HashMap::new()),
+            patch_cache: Mutex::new(HashMap::new()),
             comm: Mutex::new(CommStats::default()),
         }
     }
@@ -112,6 +121,30 @@ impl SimService {
         let mut s = Self::new(cluster, algo);
         s.plan = PlanPolicy::Auto;
         s
+    }
+
+    /// The pipeline patch count used for `workload`: the fixed
+    /// [`Self::patches`] normally, or the per-workload closed-form
+    /// argmin when [`Self::patches_auto`] is on (memoized — the argmin
+    /// prices every candidate against the whole plan space).
+    pub fn patches_for(&self, workload: &Workload) -> usize {
+        if !self.patches_auto {
+            return self.patches;
+        }
+        if let Some(&m) = self.patch_cache.lock().unwrap().get(workload.name) {
+            return m;
+        }
+        let m = crate::analysis::choose_patches(
+            &self.cluster,
+            self.algo,
+            &workload.shape,
+            workload.cfg_evals,
+        );
+        self.patch_cache
+            .lock()
+            .unwrap()
+            .insert(workload.name.to_string(), m);
+        m
     }
 
     /// One attention layer's simulated makespan for `workload` at batch b.
@@ -208,10 +241,11 @@ impl SimService {
     ) -> f64 {
         if spec.pp_degree > 1 {
             let stage_ranks = spec.ranks_per_stage();
+            let patches = self.patches_for(workload);
             // the pipeline shards by patches x stage ranks (pp partitions
             // layers, not the sequence) — the same granularity admit()
             // checks, so admitted requests are never cropped
-            let w = workload.aligned_to(stage_ranks * self.patches);
+            let w = workload.aligned_to(stage_ranks * patches);
             if w.shape.l == 0 {
                 // the workload is too short to patch-pipeline at all
                 return f64::INFINITY;
@@ -220,12 +254,12 @@ impl SimService {
             shape.b = batch;
             let plan = ParallelPlan::build(cluster, *spec, self.algo)
                 .expect("spec validated against its pricing footprint");
-            let chunk = shape.l / self.patches / stage_ranks;
+            let chunk = shape.l / patches / stage_ranks;
             let (block, stats) = pipefusion::pipefusion_layer_makespan_traced(
                 &plan,
                 shape,
                 chunk,
-                self.patches,
+                patches,
                 workload.cfg_evals,
             );
             self.record_comm(&stats);
@@ -294,7 +328,7 @@ impl SimService {
                     &workload.shape,
                     workload.cfg_evals,
                     1,
-                    self.patches,
+                    self.patches_for(workload),
                 );
                 self.spec_cache
                     .lock()
@@ -365,7 +399,7 @@ impl Planner for SimService {
             self.algo,
             &workload.shape,
             workload.cfg_evals,
-            self.patches,
+            self.patches_for(workload),
             from,
             &to,
         ))
@@ -391,7 +425,7 @@ impl Planner for SimService {
             &workload.shape,
             workload.cfg_evals,
             1,
-            self.patches,
+            self.patches_for(workload),
         );
         self.sub_spec_cache.lock().unwrap().insert(key, s);
         Some(s)
@@ -414,7 +448,7 @@ impl Planner for SimService {
             self.algo,
             &workload.shape,
             workload.cfg_evals,
-            self.patches,
+            self.patches_for(workload),
             idle_machines,
             from,
         ))
@@ -427,7 +461,7 @@ impl Planner for SimService {
             PlanPolicy::Fixed(spec) => {
                 spec.validate_workload(&workload.shape).map_err(|e| e.to_string())?;
                 if spec.pp_degree > 1 {
-                    spec.validate_patches(&workload.shape, self.patches)
+                    spec.validate_patches(&workload.shape, self.patches_for(workload))
                         .map_err(|e| e.to_string())?;
                 }
                 Ok(())
@@ -533,6 +567,15 @@ pub struct ServeReport {
     /// whenever the comm-optimization pass is off, so existing goldens
     /// render unchanged.
     pub comm: Option<CommStats>,
+    /// Stage-pipeline observability
+    /// ([`crate::coordinator::stages::StageReport`]): per-class
+    /// queue-depth histogram, decode/diffusion overlap seconds, and
+    /// per-class machine counts over time. `Some` only when the run was
+    /// staged (`ServeConfig::stages` in
+    /// [`crate::coordinator::session`]); `None` — and absent from
+    /// [`Self::to_json`] — otherwise, so the monolithic goldens stay
+    /// byte-identical.
+    pub stages: Option<crate::coordinator::stages::StageReport>,
 }
 
 impl ServeReport {
@@ -660,6 +703,9 @@ impl ServeReport {
                     ("fused_transfers", Json::Num(c.fused_transfers as f64)),
                 ]),
             ));
+        }
+        if let Some(stages) = &self.stages {
+            fields.push(("stages", stages.to_json()));
         }
         if !self.rebalances.is_empty() {
             fields.push((

@@ -14,6 +14,10 @@
 //! * [`engine`] — the service models ([`engine::SimService`] times the
 //!   *actual* SP schedules; `examples/serve_images.rs` plugs in measured
 //!   numeric sampling) plus the legacy [`engine::serve`] shim;
+//! * [`stages`] — the decoupled multi-stage request pipeline
+//!   (text-encode → diffusion → VAE decode as a stage DAG over
+//!   stage-class pods with bounded inter-stage queues), selected by the
+//!   `stages` knob on [`session::ServeConfig`];
 //! * [`metrics`] — per-workload latency/throughput summaries.
 //!
 //! Serving is *epoch-aware*: each pod carries an
@@ -49,6 +53,7 @@ pub mod metrics;
 pub mod router;
 pub mod schedule;
 pub mod session;
+pub mod stages;
 
 use crate::config::ParallelSpec;
 use crate::workload::Workload;

@@ -43,9 +43,10 @@ use crate::coordinator::engine::{PlanPolicy, RecarveReport, ServeReport, SimServ
 use crate::coordinator::metrics::{Completion, Metrics};
 use crate::coordinator::router::{RebalanceEvent, Router};
 use crate::coordinator::schedule::{EventHeap, PriceCache};
+use crate::coordinator::stages::{self, StagePolicy};
 use crate::coordinator::{CostModel, Planner, ServiceModel};
 use crate::sp::SpAlgo;
-use crate::workload::{Request, Workload};
+use crate::workload::{Request, StageClass, Workload};
 
 // ---------------------------------------------------------------------------
 // Dispatch policy
@@ -154,6 +155,7 @@ pub trait FleetModel: Sync {
 pub struct SimFleet {
     algo: SpAlgo,
     patches: usize,
+    patches_auto: bool,
     models: Mutex<HashMap<(usize, usize), Arc<SimService>>>,
 }
 
@@ -161,7 +163,14 @@ impl SimFleet {
     /// An auto-planning fleet: every footprint gets
     /// [`SimService::auto_plan`] with the given patch count.
     pub fn auto(algo: SpAlgo, patches: usize) -> Self {
-        Self { algo, patches, models: Mutex::new(HashMap::new()) }
+        Self { algo, patches, patches_auto: false, models: Mutex::new(HashMap::new()) }
+    }
+
+    /// Choose the patch count per workload by the closed-form argmin on
+    /// every footprint model (`--patches auto`).
+    pub fn auto_patches(mut self) -> Self {
+        self.patches_auto = true;
+        self
     }
 }
 
@@ -172,6 +181,7 @@ impl FleetModel for SimFleet {
         let model = models.entry(key).or_insert_with(|| {
             let mut svc = SimService::auto_plan(cluster.clone(), self.algo);
             svc.patches = self.patches;
+            svc.patches_auto = self.patches_auto;
             Arc::new(svc)
         });
         let model: Arc<SimService> = Arc::clone(model);
@@ -331,6 +341,18 @@ pub struct ServeConfig {
     /// Force one [`QualityMode`] for every batch, overriding the floor
     /// walk (`--quality` on the CLI). `None` by default.
     pub quality: Option<QualityMode>,
+    /// Decoupled multi-stage pipeline: when set, the fleet is
+    /// partitioned into stage-class pods and every request walks the
+    /// text-encode → diffusion → VAE-decode DAG through bounded
+    /// inter-stage queues ([`crate::coordinator::stages`]). `None` (the
+    /// default) keeps the monolithic loop and its byte-identical
+    /// goldens.
+    pub stages: Option<StagePolicy>,
+    /// Pick the pipeline patch count per workload by the closed-form
+    /// argmin ([`crate::analysis::choose_patches`]) instead of the
+    /// fixed [`Self::patches`] (`--patches auto` on the CLI). Off by
+    /// default.
+    pub patches_auto: bool,
 }
 
 impl Default for ServeConfig {
@@ -347,6 +369,8 @@ impl Default for ServeConfig {
             scheduler: SchedulerMode::Indexed,
             quality_floor: None,
             quality: None,
+            stages: None,
+            patches_auto: false,
         }
     }
 }
@@ -428,6 +452,20 @@ impl ServeConfig {
         self
     }
 
+    /// Turn the fleet into a decoupled stage pipeline (see
+    /// [`Self::stages`]).
+    pub fn stages(mut self, policy: StagePolicy) -> Self {
+        self.stages = Some(policy);
+        self
+    }
+
+    /// Choose the pipeline patch count per workload by the closed-form
+    /// argmin instead of the fixed [`Self::patches`].
+    pub fn patches_auto(mut self, on: bool) -> Self {
+        self.patches_auto = on;
+        self
+    }
+
     /// Build the timing-mode service model this config describes for one
     /// pod footprint — the constructor scatter
     /// (`SimService::{new, auto_plan, with_plan}` + `patches` field
@@ -443,6 +481,7 @@ impl ServeConfig {
             PlanPolicy::Fixed(spec) => SimService::with_plan(cluster, algo, *spec)?,
         };
         svc.patches = self.patches;
+        svc.patches_auto = self.patches_auto;
         Ok(svc)
     }
 
@@ -452,13 +491,18 @@ impl ServeConfig {
     /// scheduler=indexed` — printed by the CLI so a run is reproducible
     /// from its log.
     pub fn summary(&self) -> String {
+        let patches = if self.patches_auto {
+            "auto".to_string()
+        } else {
+            self.patches.to_string()
+        };
         let mut line = format!(
             "serve: batch={}x{}s plan={} patches={} recarve={} dispatch={} co-batch={} \
              rebalance={} scheduler={}",
             self.batch.max_batch,
             self.batch.window,
             self.plan,
-            self.patches,
+            patches,
             self.recarve
                 .map_or_else(|| "inherit".to_string(), |p| p.to_string()),
             self.dispatch.name(),
@@ -473,6 +517,9 @@ impl ServeConfig {
         }
         if let Some(f) = self.quality_floor {
             line.push_str(&format!(" quality-floor={f}"));
+        }
+        if let Some(s) = self.stages {
+            line.push_str(&format!(" stages={s}"));
         }
         line
     }
@@ -547,6 +594,9 @@ impl ServeState {
             co_batched_cross: self.co_batched_cross,
             events: self.events,
             comm: self.comm,
+            // the staged path sets this after finalizing; monolithic
+            // runs never populate it
+            stages: None,
         }
     }
 }
@@ -779,6 +829,10 @@ impl<'a> ServeSession<'a> {
             }
         }
 
+        if let Some(policy) = self.config.stages {
+            return self.run_staged(router, requests, policy);
+        }
+
         let mut state = ServeState::default();
         let mut batcher = Batcher::new(self.config.batch.clone());
         let mut sched = SchedState::new(&self.config, router);
@@ -827,6 +881,86 @@ impl<'a> ServeSession<'a> {
         }
         state.comm = self.source.comm_stats();
         state.into_report(router)
+    }
+
+    /// The staged path of [`Self::run`]: hand the trace to
+    /// [`stages::run_staged`], pricing each stage as its
+    /// [`crate::workload::StageShape::time_share`] of the configured
+    /// cost model's monolithic service time on the serving pod's
+    /// footprint — so staged and monolithic fleets price the same total
+    /// work — with the VAE stage additionally patch-parallel
+    /// ([`crate::analysis::vae_decode_time`]). The outcome folds into
+    /// the regular [`ServeReport`] with the additive `stages` section.
+    fn run_staged(
+        self,
+        router: &mut Router,
+        requests: Vec<Request>,
+        policy: StagePolicy,
+    ) -> ServeReport {
+        let source = self.source;
+        let algo = router.pods.first().map_or(SpAlgo::SwiftFusion, |p| p.algo);
+        let patches = self.config.patches;
+        // Admission is checked against the fleet's *initial* footprints:
+        // cross-class migrations only move machines between pods that
+        // could already serve their class's stage.
+        let clusters: Vec<ClusterSpec> =
+            router.pods.iter().map(|p| p.cluster.clone()).collect();
+        let mut stage_time = |cluster: &ClusterSpec, w: &Workload, class: StageClass| -> f64 {
+            let mono = source.for_pod(cluster).get().service_time(w, 1);
+            let stage = w.stage_shapes()[class.index()].clone();
+            let serial = stage.time_share * mono;
+            if class == StageClass::VaeDecode {
+                let ranks = crate::analysis::stage_spec(cluster, algo, &stage, patches)
+                    .ranks_per_group()
+                    .max(1);
+                let hop = cluster.net.intra_lat
+                    + stage.shape.bytes_per_tensor() / patches.max(1) as f64
+                        / cluster.net.intra_bw;
+                crate::analysis::vae_decode_time(serial, ranks, patches, hop)
+            } else {
+                serial
+            }
+        };
+        let mut admit = |w: &Workload| -> Result<(), String> {
+            match source {
+                ModelSource::Shared(s) => s.admit(w),
+                ModelSource::Fleet(f) => {
+                    let mut first_err = None;
+                    for c in &clusters {
+                        match f.model_for(c).admit(w) {
+                            Ok(()) => return Ok(()),
+                            Err(e) => {
+                                first_err.get_or_insert(e);
+                            }
+                        }
+                    }
+                    Err(first_err.unwrap_or_else(|| "router has no pods".to_string()))
+                }
+            }
+        };
+        let outcome = stages::run_staged(
+            router,
+            requests,
+            &policy,
+            &self.config.rebalance,
+            algo,
+            patches,
+            &mut stage_time,
+            &mut admit,
+        );
+        let state = ServeState {
+            metrics: outcome.metrics,
+            completions: outcome.completions,
+            rejected: outcome.rejected,
+            plan_histogram: outcome.plan_histogram,
+            rebalances: outcome.rebalances,
+            events: outcome.events,
+            comm: source.comm_stats(),
+            ..ServeState::default()
+        };
+        let mut report = state.into_report(router);
+        report.stages = Some(outcome.report);
+        report
     }
 
     /// The dispatch handler: pick a pod, run the fleet re-balancing and

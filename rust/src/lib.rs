@@ -111,6 +111,22 @@
 //! re-balancing: migrating a machine resizes two pods at once, both
 //! re-admitting footprint-sized carves behind the migration barrier.
 //!
+//! Above the per-pod plan space sits the **stage pipeline**
+//! ([`coordinator::stages`], `--stages`): a request decomposes into its
+//! linear stage DAG — text-encode → diffusion → VAE decode
+//! ([`workload::StageClass`], [`workload::Workload::stage_shapes`]) —
+//! and each stage class owns its own pods and carves
+//! ([`coordinator::stages::StagePlacement`]; diffusion keeps the full
+//! hybrid chooser, encode/decode run sp-only
+//! [`analysis::stage_spec`] carves, the decode priced patch-parallel by
+//! [`analysis::vae_decode_time`]). Requests flow between classes
+//! through bounded inter-stage queues in the same deterministic
+//! event order, so request *n*'s DiT steps overlap request *n−1*'s
+//! decode, and `--rebalance gain` arbitrates machines *between stage
+//! classes* under drifting load. `--patches auto`
+//! ([`analysis::choose_patches`]) completes the picture by choosing the
+//! pipeline patch count per workload with the same closed form.
+//!
 //! Numeric validation of all of this is hermetic: `ExecMode::HostNumeric`
 //! backs the tile contract with in-process Algorithm-2 kernels
 //! ([`sp::tiles::host`]), so `rust/tests/sp_property.rs` proves every

@@ -29,6 +29,7 @@ use swiftfusion::coordinator::session::{
     dispatch_policy_from_name, RebalancePolicy, SchedulerMode, ServeConfig, ServeSession,
     SimFleet,
 };
+use swiftfusion::coordinator::stages::{StagePlacement, StagePolicy};
 use swiftfusion::runtime::Runtime;
 use swiftfusion::sp::{SpAlgo, SpParams};
 use swiftfusion::tensor::Tensor;
@@ -89,8 +90,11 @@ Hybrid plan flags (bench-layer, serve):
   --pp-degree K              patch-pipeline stages per group (PipeFusion's
                              displaced patch pipeline; only --plan fixed
                              reads it, default 1 = off)
-  --patches M                patch count the sequence streams through
-                             pipelined plans as (all plan modes; default 4)
+  --patches M|auto           patch count the sequence streams through
+                             pipelined plans as (all plan modes;
+                             default 4), or `auto` to argmin the modeled
+                             per-step time over the candidate counts
+                             per workload
   --batch-replicas R         independent replica groups beyond the CFG split
                              (only --plan fixed reads it, default 1)
 
@@ -160,6 +164,23 @@ traffic, NIC busy time, fused transfers).
                              latency and rendezvous; a plan opts in only
                              with cfg-degree 2 and machine-aligned
                              groups)
+
+Stage-pipeline flags (serve): decouple each request into its stage DAG
+(text-encode -> diffusion -> VAE decode) and give every stage class its
+own pods, so request n's denoising overlaps request n-1's decode. With
+--stages off the monolithic loop runs and the report is byte-identical
+to the pre-stage output; when on, the report gains a `stages` section
+(overlap time, per-stage-class dispatches, queue depths).
+  --stages                   split the fleet's pods across the stage
+                             classes (balanced: 1 encode pod, 1 decode
+                             pod, the rest diffusion; needs >= 3 pods)
+                             and flow requests through bounded
+                             inter-stage queues; --rebalance gain
+                             arbitrates machines between stage classes
+  --stage-queue N            inter-stage queue bound per downstream pod
+                             class (default 8): an upstream stage whose
+                             successor queue is full blocks instead of
+                             dispatching
 
 Quality-elastic serving flags (serve): approximate inference modes as a
 scheduler dimension. With both flags unset every batch serves exact
@@ -241,12 +262,25 @@ fn service_for(
     algo: SpAlgo,
     heads: usize,
 ) -> Result<SimService> {
-    let patches = args.usize_or("patches", swiftfusion::analysis::DEFAULT_PATCHES)?;
-    anyhow::ensure!(patches > 0, "--patches must be >= 1");
+    let (patches, patches_auto) = patches_flags(args)?;
     let config = ServeConfig::new()
         .plan(plan_policy_for(args, cluster.total_gpus(), heads)?)
-        .patches(patches);
+        .patches(patches)
+        .patches_auto(patches_auto);
     Ok(config.sim_service(cluster, algo)?)
+}
+
+/// The `--patches` flag: a fixed pipeline patch count, or `auto` for
+/// the per-workload closed-form argmin
+/// ([`swiftfusion::analysis::choose_patches`]). Returns
+/// `(fixed count, auto?)`.
+fn patches_flags(args: &Args) -> Result<(usize, bool)> {
+    if args.get("patches") == Some("auto") {
+        return Ok((swiftfusion::analysis::DEFAULT_PATCHES, true));
+    }
+    let patches = args.usize_or("patches", swiftfusion::analysis::DEFAULT_PATCHES)?;
+    anyhow::ensure!(patches > 0, "--patches must be >= 1");
+    Ok((patches, false))
 }
 
 fn cmd_info() -> Result<()> {
@@ -331,7 +365,7 @@ fn cmd_bench_layer(args: &Args) -> Result<()> {
         w.shape.l, w.shape.h, w.shape.d
     );
     let algos: Vec<SpAlgo> = match args.get("algo") {
-        Some(a) => vec![SpAlgo::from_name(a).ok_or_else(|| anyhow::anyhow!("bad algo"))?],
+        Some(a) => vec![SpAlgo::from_name(a)?],
         None => SpAlgo::ALL.to_vec(),
     };
     let mut baseline = None;
@@ -360,8 +394,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let pods = args.usize_or("pods", 1)?;
     let nreq = args.usize_or("requests", 32)?;
     let rate = args.f64_or("rate", 0.05)?;
-    let algo = SpAlgo::from_name(args.str_or("algo", "swiftfusion"))
-        .ok_or_else(|| anyhow::anyhow!("bad algo"))?;
+    let algo = SpAlgo::from_name(args.str_or("algo", "swiftfusion"))?;
     let max_batch = args.usize_or("max-batch", 2)?;
     let threshold = args.f64_or("recarve-threshold", 0.15)?;
     let window = args.usize_or("recarve-window", 2)?;
@@ -387,8 +420,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let scheduler_name = args.enum_or("scheduler", "indexed", &["indexed", "linear"])?;
     let scheduler =
         SchedulerMode::from_name(scheduler_name).expect("name validated by enum_or");
-    let patches = args.usize_or("patches", swiftfusion::analysis::DEFAULT_PATCHES)?;
-    anyhow::ensure!(patches > 0, "--patches must be >= 1");
+    let (patches, patches_auto) = patches_flags(args)?;
     let nic_schedule = args.bool_or("nic-schedule", false)?;
     let compress = args.f64_or("compress", 1.0)?;
     anyhow::ensure!(
@@ -406,17 +438,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     } else {
         None
     };
-    let quality = if args.has("quality") {
-        let name = args.str_or("quality", "full");
-        Some(QualityMode::from_name(name).ok_or_else(|| {
-            anyhow::anyhow!(
-                "bad --quality '{name}' (expected full, displaced, fastattn[:R], \
-                 reduced[:K])"
-            )
-        })?)
-    } else {
-        None
-    };
+    // the typed NameError lists every valid spelling on a misspelling
+    let quality = args.choice_or("quality", QualityMode::from_name)?;
+    let stages_on = args.bool_or("stages", false)?;
+    let stage_queue = args.usize_or("stage-queue", 8)?;
+    anyhow::ensure!(stage_queue >= 1, "--stage-queue must be >= 1");
 
     let mut router = Router::new(n, m, pods, algo);
     // Comm-opt knobs ride on each pod's NetSpec: the single-model path
@@ -434,6 +460,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .batch(BatchPolicy { max_batch, window: 30.0 })
         .plan(plan)
         .patches(patches)
+        .patches_auto(patches_auto)
         .recarve(recarve)
         .dispatch(dispatch)
         .co_batch(co_batch)
@@ -444,6 +471,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     if let Some(q) = quality {
         config = config.quality(q);
+    }
+    if stages_on {
+        anyhow::ensure!(
+            pods >= 3,
+            "--stages needs at least 3 pods (one per stage class)"
+        );
+        config = config
+            .stages(StagePolicy::new(StagePlacement::balanced(pods)).queue_bound(stage_queue));
     }
     // Only auto planning ever changes a pod's preferred plan; under
     // single/fixed the preferred spec is constant, so any re-carving
@@ -471,7 +506,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
              for its new footprint)"
         );
         anyhow::ensure!(pods >= 2, "--rebalance gain needs at least 2 pods");
-        let fleet = SimFleet::auto(algo, patches);
+        let mut fleet = SimFleet::auto(algo, patches);
+        if patches_auto {
+            fleet = fleet.auto_patches();
+        }
         ServeSession::with_fleet(config, &fleet).run(&mut router, reqs)
     } else {
         let svc = config.sim_service(router.pods[0].cluster.clone(), algo)?;
@@ -520,6 +558,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 ev.from_machines,
                 ev.to_machines
             );
+        }
+    }
+    if let Some(st) = &report.stages {
+        println!(
+            "stage pipeline: overlap {} across {} stage dispatch(es)",
+            fmt_time(st.overlap_time),
+            st.dispatches.values().sum::<usize>()
+        );
+        for (label, count) in &st.dispatches {
+            println!("  {label:<40} {count:>5} dispatch(es)");
+        }
+        for (class, depths) in &st.queue_depth {
+            let peak = depths.keys().max().copied().unwrap_or(0);
+            println!("  {class} queue peak depth {peak}");
         }
     }
     let rc = &report.recarve;
@@ -581,8 +633,7 @@ fn cmd_trace(args: &Args) -> Result<()> {
 
     let n = args.usize_or("machines", 4)?;
     let m = args.usize_or("gpus", 8)?;
-    let algo = SpAlgo::from_name(args.str_or("algo", "swiftfusion"))
-        .ok_or_else(|| anyhow::anyhow!("bad algo"))?;
+    let algo = SpAlgo::from_name(args.str_or("algo", "swiftfusion"))?;
     let wname = args.str_or("workload", "cogvideox-20s");
     let out_path = args.str_or("out", "/tmp/swiftfusion_trace.json").to_string();
     let w = workload_by_name(wname)?.aligned_to(n * m * 64);

@@ -110,11 +110,17 @@ impl SpAlgo {
         }
     }
 
-    pub fn from_name(s: &str) -> Option<Self> {
+    /// Parse a CLI spelling. Misspellings return a typed
+    /// [`crate::config::NameError`] listing every algorithm name.
+    pub fn from_name(s: &str) -> Result<Self, crate::config::NameError> {
         if s == "displaced-patch" {
-            return Some(SpAlgo::DisplacedPatch);
+            return Ok(SpAlgo::DisplacedPatch);
         }
-        Self::ALL.iter().copied().find(|a| a.name() == s)
+        Self::ALL.iter().copied().find(|a| a.name() == s).ok_or_else(|| {
+            let mut valid: Vec<&str> = Self::ALL.iter().map(|a| a.name()).collect();
+            valid.push("displaced-patch");
+            crate::config::NameError::new("sp algorithm", s, &valid)
+        })
     }
 
     /// Mesh placement this algorithm assumes (§4.2): USP puts Ulysses
@@ -187,16 +193,22 @@ mod tests {
     #[test]
     fn algo_names_roundtrip() {
         for a in SpAlgo::ALL {
-            assert_eq!(SpAlgo::from_name(a.name()), Some(a));
+            assert_eq!(SpAlgo::from_name(a.name()).ok(), Some(a));
         }
         // displaced-patch is addressable by name but not part of the
         // exact-algorithm sweep
         assert_eq!(
-            SpAlgo::from_name("displaced-patch"),
+            SpAlgo::from_name("displaced-patch").ok(),
             Some(SpAlgo::DisplacedPatch)
         );
         assert!(!SpAlgo::ALL.contains(&SpAlgo::DisplacedPatch));
-        assert_eq!(SpAlgo::from_name("nope"), None);
+        // a misspelling names every valid algorithm in the error
+        let err = SpAlgo::from_name("nope").unwrap_err().to_string();
+        assert!(err.contains("'nope'"), "{err}");
+        for a in SpAlgo::ALL {
+            assert!(err.contains(a.name()), "{err} missing {}", a.name());
+        }
+        assert!(err.contains("displaced-patch"), "{err}");
     }
 
     #[test]

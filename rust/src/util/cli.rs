@@ -17,6 +17,10 @@ pub enum CliError {
     Invalid(String, String, &'static str),
     /// Value outside a closed choice set (see [`Args::enum_or`]).
     InvalidChoice(String, String, &'static [&'static str]),
+    /// Value rejected by a typed domain parser whose error already
+    /// lists the valid spellings — the rendered message is carried
+    /// verbatim (see [`Args::choice_or`]).
+    Typed(String, String),
 }
 
 impl std::fmt::Display for CliError {
@@ -31,6 +35,7 @@ impl std::fmt::Display for CliError {
                 "argument --{k} has invalid value '{v}': expected one of {}",
                 allowed.join(", ")
             ),
+            CliError::Typed(k, msg) => write!(f, "argument --{k} is invalid: {msg}"),
         }
     }
 }
@@ -131,6 +136,26 @@ impl Args {
             Some(v) => Err(CliError::InvalidChoice(key.into(), v.into(), allowed)),
         }
     }
+
+    /// Like [`Self::enum_or`], but for parameterized choices validated
+    /// by a typed domain parser (e.g.
+    /// `QualityMode::from_name("fastattn:0.25")`, whose valid spellings
+    /// are open-ended forms a `&'static` choice list cannot enumerate):
+    /// returns `None` when the flag is absent, the parsed value when the
+    /// parser accepts it, and the parser's own error — which lists the
+    /// valid spellings — wrapped in [`CliError::Typed`] otherwise.
+    pub fn choice_or<T, E: std::fmt::Display>(
+        &self,
+        key: &str,
+        parse: impl Fn(&str) -> Result<T, E>,
+    ) -> Result<Option<T>, CliError> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => parse(v)
+                .map(Some)
+                .map_err(|e| CliError::Typed(key.into(), e.to_string())),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -187,5 +212,29 @@ mod tests {
     fn trailing_flag_is_boolean() {
         let a = parse("--verbose");
         assert!(a.bool_or("verbose", false).unwrap());
+    }
+
+    /// Regression: a misspelled `--quality` must surface the typed
+    /// parser's message (which names every valid spelling), not a bare
+    /// failure.
+    #[test]
+    fn choice_or_surfaces_the_typed_parser_error() {
+        use crate::config::QualityMode;
+        let bad = parse("--quality fastatn");
+        let err = bad.choice_or("quality", QualityMode::from_name).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("--quality"), "{msg}");
+        assert!(msg.contains("'fastatn'"), "{msg}");
+        for form in QualityMode::NAME_FORMS {
+            assert!(msg.contains(form), "{msg} missing {form}");
+        }
+        // absent flag → None; valid spelling → parsed value
+        assert!(parse("").choice_or("quality", QualityMode::from_name).unwrap().is_none());
+        assert_eq!(
+            parse("--quality reduced:4")
+                .choice_or("quality", QualityMode::from_name)
+                .unwrap(),
+            Some(QualityMode::ReducedSteps { factor: 4 })
+        );
     }
 }

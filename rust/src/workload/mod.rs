@@ -25,6 +25,71 @@ pub fn video_tokens(
     frames * image_tokens(width, height, patch)
 }
 
+/// One stage of the request DAG every diffusion request walks:
+/// text-encode → DiT denoising loop → VAE decode (PipeDiT's
+/// task decomposition, arxiv 2511.12056). The serving layer
+/// ([`crate::coordinator::stages`]) gives each class its own pods and
+/// carves; the monolithic path folds all three into one service time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum StageClass {
+    /// Prompt encoding: tiny, sequence-short (a few hundred tokens).
+    TextEncode,
+    /// The denoising step loop — the stage the paper parallelizes.
+    Diffusion,
+    /// Latent → pixel decode: sp-only patch-parallel à la xDiT's
+    /// Parallel VAE (arxiv 2411.01738), no step loop, no guidance.
+    VaeDecode,
+}
+
+impl StageClass {
+    /// Pipeline order of the linear stage DAG.
+    pub const ALL: [StageClass; 3] =
+        [StageClass::TextEncode, StageClass::Diffusion, StageClass::VaeDecode];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StageClass::TextEncode => "text-encode",
+            StageClass::Diffusion => "diffusion",
+            StageClass::VaeDecode => "vae-decode",
+        }
+    }
+
+    /// Position in [`Self::ALL`] (the DAG is linear, so the index is
+    /// the stage's pipeline depth).
+    pub fn index(&self) -> usize {
+        *self as usize
+    }
+}
+
+/// Sequence length of the text-encoder stage: one padded prompt.
+pub const ENCODE_TOKENS: usize = 512;
+/// Encoder work per prompt token, in DiT-layer-token equivalents.
+const ENCODE_WORK_PER_TOKEN: f64 = 4.0;
+/// VAE decode work per latent token, in DiT-layer-token equivalents —
+/// the 8× spatial upsample makes decode a meaningful fraction of a
+/// few-step generation, and negligible against a 28-step loop.
+const DECODE_WORK_PER_TOKEN: f64 = 8.0;
+
+/// Per-stage cost shape of one request: what the stage computes over
+/// (`shape`/`layers`/`steps`/`cfg_evals`) plus the stage's share of the
+/// *monolithic* request cost. Shares are derived from per-stage work in
+/// a common unit (layer-token equivalents) and always sum to 1.0, so a
+/// staged fleet and a monolithic fleet price the same total work — the
+/// staged fleet wins by overlap and per-class carves, never by
+/// dropping work.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageShape {
+    pub class: StageClass,
+    /// Attention shape the stage runs over (tokens matter: the VAE
+    /// stage patch-parallelizes across them).
+    pub shape: AttnShape,
+    pub layers: usize,
+    pub steps: usize,
+    pub cfg_evals: usize,
+    /// This stage's fraction of the monolithic request service time.
+    pub time_share: f64,
+}
+
 /// One of the paper's evaluation workloads.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Workload {
@@ -145,6 +210,51 @@ impl Workload {
     /// end-to-end time.
     pub fn total_evals(&self) -> usize {
         self.steps * self.cfg_evals
+    }
+
+    /// The linear stage DAG of one request: text-encode → diffusion →
+    /// VAE decode, each with its own cost shape and a `time_share`
+    /// decomposition of the monolithic request cost. Work per stage is
+    /// measured in layer-token equivalents: the encoder runs one cheap
+    /// pass over a padded prompt, the diffusion stage pays the full
+    /// `tokens × layers × evals` step loop, and the VAE pays a
+    /// per-token decode constant — so on few-step (distilled or
+    /// test-shrunk) workloads decode is a large share worth hiding,
+    /// while on a 28-step generation it is a few percent.
+    pub fn stage_shapes(&self) -> [StageShape; 3] {
+        let l = self.shape.l as f64;
+        let w_enc = ENCODE_TOKENS as f64 * ENCODE_WORK_PER_TOKEN;
+        let w_diff = l * self.layers as f64 * self.total_evals() as f64;
+        let w_dec = l * DECODE_WORK_PER_TOKEN;
+        let total = w_enc + w_diff + w_dec;
+        let enc_shape = AttnShape::new(self.shape.b, ENCODE_TOKENS, self.shape.h, self.shape.d);
+        let flat = AttnShape::new(self.shape.b, self.shape.l, self.shape.h, self.shape.d);
+        [
+            StageShape {
+                class: StageClass::TextEncode,
+                shape: enc_shape,
+                layers: 1,
+                steps: 1,
+                cfg_evals: 1,
+                time_share: w_enc / total,
+            },
+            StageShape {
+                class: StageClass::Diffusion,
+                shape: self.shape,
+                layers: self.layers,
+                steps: self.steps,
+                cfg_evals: self.cfg_evals,
+                time_share: w_diff / total,
+            },
+            StageShape {
+                class: StageClass::VaeDecode,
+                shape: flat,
+                layers: 1,
+                steps: 1,
+                cfg_evals: 1,
+                time_share: w_dec / total,
+            },
+        ]
     }
 
     /// Total guidance evaluations under a [`QualityMode`].
@@ -353,6 +463,44 @@ mod tests {
             flux.evals_under(QualityMode::ReducedSteps { factor: 100 }),
             1
         );
+    }
+
+    #[test]
+    fn stage_shapes_decompose_the_request() {
+        for w in Workload::paper_suite()
+            .into_iter()
+            .chain([Workload::short_image_4k(), Workload::cfg_video_96k()])
+        {
+            let stages = w.stage_shapes();
+            // linear DAG in pipeline order
+            let classes: Vec<StageClass> = stages.iter().map(|s| s.class).collect();
+            assert_eq!(classes, StageClass::ALL.to_vec());
+            // shares partition the monolithic cost exactly
+            let total: f64 = stages.iter().map(|s| s.time_share).sum();
+            assert!((total - 1.0).abs() < 1e-12, "{total}");
+            assert!(stages.iter().all(|s| s.time_share > 0.0));
+            // the diffusion stage is the existing step loop, untouched
+            let diff = &stages[StageClass::Diffusion.index()];
+            assert_eq!(diff.shape, w.shape);
+            assert_eq!((diff.layers, diff.steps, diff.cfg_evals), (w.layers, w.steps, w.cfg_evals));
+            // the encoder is tiny and sequence-short; no step loop on
+            // either side stage
+            let enc = &stages[StageClass::TextEncode.index()];
+            assert_eq!(enc.shape.l, ENCODE_TOKENS);
+            assert!(enc.time_share < 0.01, "{}", enc.time_share);
+            let dec = &stages[StageClass::VaeDecode.index()];
+            assert_eq!((enc.steps, dec.steps), (1, 1));
+            assert_eq!(dec.shape.l, w.shape.l);
+            // a full 28+-step loop dominates; decode is a few percent
+            assert!(diff.time_share > 0.9, "{}", diff.time_share);
+        }
+        // on a few-step (test-shrunk) workload decode is a large share —
+        // the regime where hiding it inside the diffusion loop pays
+        let mut w = Workload::cfg_video_96k();
+        w.layers = 2;
+        w.steps = 2;
+        let dec = w.stage_shapes()[StageClass::VaeDecode.index()].time_share;
+        assert!(dec > 0.3, "{dec}");
     }
 
     #[test]

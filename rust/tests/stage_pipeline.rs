@@ -1,0 +1,184 @@
+//! Integration coverage for the decoupled multi-stage request pipeline
+//! (stage DAGs, stage-class pods, inter-stage queues):
+//!
+//! * the stage cost decomposition partitions the monolithic price: the
+//!   per-stage `time_share`s of every workload sum to exactly 1, so a
+//!   staged fleet and a monolithic fleet price the same total work
+//!   under the same `SimService`;
+//! * with the `stages` knob off the report carries no `stages` section
+//!   (the monolithic JSON goldens stay byte-identical); with it on, the
+//!   section appears and accounts every stage dispatch;
+//! * stage-completion event ordering is deterministic: two identical
+//!   staged runs serialize to byte-equal `to_json`;
+//! * a tight burst actually pipelines — request n's diffusion overlaps
+//!   request n-1's decode (overlap_time > 0).
+
+use swiftfusion::coordinator::batcher::BatchPolicy;
+use swiftfusion::coordinator::engine::{PlanPolicy, ServeReport, SimService};
+use swiftfusion::coordinator::router::Router;
+use swiftfusion::coordinator::session::{ServeConfig, ServeSession};
+use swiftfusion::coordinator::stages::{StagePlacement, StagePolicy};
+use swiftfusion::coordinator::CostModel;
+use swiftfusion::sp::SpAlgo;
+use swiftfusion::util::json::to_string;
+use swiftfusion::workload::{phased_trace, Request, StageClass, Workload};
+
+/// The serve-test convention: paper shapes shrunk to 2 layers x 2 steps
+/// so the timing simulations stay fast.
+fn short_workload() -> Workload {
+    let mut w = Workload::short_image_4k();
+    w.layers = 2;
+    w.steps = 2;
+    w
+}
+
+fn long_workload() -> Workload {
+    let mut w = Workload::cfg_video_96k();
+    w.layers = 2;
+    w.steps = 2;
+    w
+}
+
+fn staged_config() -> ServeConfig {
+    ServeConfig::new()
+        .batch(BatchPolicy { max_batch: 1, window: 0.0 })
+        .plan(PlanPolicy::Auto)
+        .stages(StagePolicy::new(StagePlacement::balanced(3)))
+}
+
+/// A burst of `n` videos arriving every `spacing` seconds — far tighter
+/// than a stage time, so consecutive requests occupy different stages
+/// concurrently.
+fn video_burst(n: usize, spacing: f64) -> Vec<Request> {
+    (0..n)
+        .map(|i| Request {
+            id: i as u64,
+            workload: long_workload(),
+            arrival: i as f64 * spacing,
+            seed: i as u64,
+        })
+        .collect()
+}
+
+fn run_staged(reqs: Vec<Request>) -> ServeReport {
+    let mut router = Router::new(3, 8, 3, SpAlgo::SwiftFusion);
+    let config = staged_config();
+    let svc = config
+        .sim_service(router.pods[0].cluster.clone(), SpAlgo::SwiftFusion)
+        .expect("auto planner on the 1x8 pod");
+    ServeSession::new(config, &svc).run(&mut router, reqs)
+}
+
+/// The per-stage `time_share`s partition the monolithic request price
+/// exactly: summed against a real `SimService`'s closed-form service
+/// time they reproduce it to fp round-off, for every paper workload.
+/// This is the invariant that makes the staged-vs-monolithic bench a
+/// fair fight — the staged fleet is never given cheaper work.
+#[test]
+fn stage_costs_partition_the_sim_service_price() {
+    let cluster = swiftfusion::config::ClusterSpec::paper_testbed();
+    let svc = SimService::auto_plan(cluster, SpAlgo::SwiftFusion);
+    let mut suite = Workload::paper_suite();
+    suite.push(short_workload());
+    suite.push(long_workload());
+    for w in &suite {
+        let shares: f64 = w.stage_shapes().iter().map(|s| s.time_share).sum();
+        assert!(
+            (shares - 1.0).abs() < 1e-12,
+            "{}: stage shares sum to {shares}",
+            w.name
+        );
+        let mono = svc.service_time(w, 1);
+        let staged: f64 = w
+            .stage_shapes()
+            .iter()
+            .map(|s| s.time_share * mono)
+            .sum();
+        assert!(
+            (staged - mono).abs() <= 1e-9 * mono,
+            "{}: staged serial sum {staged} vs monolithic {mono}",
+            w.name
+        );
+        // the DiT step loop dominates; the encoder is negligible
+        let sh = w.stage_shapes();
+        assert!(
+            sh[StageClass::Diffusion.index()].time_share
+                > sh[StageClass::TextEncode.index()].time_share,
+            "{}",
+            w.name
+        );
+    }
+}
+
+/// Knob off → no `stages` key in the serialized report (the existing
+/// monolithic goldens stay untouched); knob on → the section appears,
+/// every request completes, and all three stage classes dispatched.
+#[test]
+fn stages_section_is_additive() {
+    let trace = || phased_trace(&[(&short_workload(), 2), (&long_workload(), 2)]);
+
+    let monolithic = {
+        let mut router = Router::new(3, 8, 3, SpAlgo::SwiftFusion);
+        let config = ServeConfig::new()
+            .batch(BatchPolicy { max_batch: 1, window: 0.0 })
+            .plan(PlanPolicy::Auto);
+        let svc = config
+            .sim_service(router.pods[0].cluster.clone(), SpAlgo::SwiftFusion)
+            .expect("auto planner");
+        ServeSession::new(config, &svc).run(&mut router, trace())
+    };
+    assert_eq!(monolithic.metrics.completed(), 4);
+    assert!(monolithic.stages.is_none());
+    assert!(
+        !to_string(&monolithic.to_json()).contains("\"stages\""),
+        "knob-off JSON must not gain a stages key"
+    );
+
+    let staged = run_staged(trace());
+    assert_eq!(staged.metrics.completed(), 4, "every request crosses the DAG");
+    assert!(staged.rejected.is_empty());
+    let st = staged.stages.as_ref().expect("knob-on report carries the section");
+    // one dispatch per stage per request
+    assert_eq!(st.dispatches.values().sum::<usize>(), 3 * 4);
+    let json = to_string(&staged.to_json());
+    assert!(json.contains("\"stages\""), "{json}");
+    assert!(json.contains("\"overlap_time\""), "{json}");
+
+    // the effective-config line names the staged layout, knob-off lines
+    // are unchanged
+    let line = staged_config().summary();
+    assert!(line.ends_with("stages=enc1/dit1/vae1 q8"), "{line}");
+    assert!(!ServeConfig::new().summary().contains("stages="), "knob-off summary");
+}
+
+/// Stage-completion events drain in the deterministic `(time, seq)`
+/// order: two identical staged runs — fresh routers, fresh services —
+/// serialize to byte-equal reports.
+#[test]
+fn staged_runs_are_deterministic_byte_for_byte() {
+    let a = run_staged(video_burst(6, 0.05));
+    let b = run_staged(video_burst(6, 0.05));
+    assert_eq!(to_string(&a.to_json()), to_string(&b.to_json()));
+    assert_eq!(a.metrics.completed(), 6);
+}
+
+/// A tight burst actually pipelines: while request n denoises, request
+/// n-1 decodes on the VAE pod — the overlap the staged fleet exists for.
+#[test]
+fn tight_burst_overlaps_diffusion_with_decode() {
+    let report = run_staged(video_burst(6, 0.05));
+    assert_eq!(report.metrics.completed(), 6);
+    let st = report.stages.as_ref().expect("stages section");
+    assert!(
+        st.overlap_time > 0.0,
+        "diffusion and decode never overlapped: {st:?}"
+    );
+    // every stage class ran under its own carve label
+    for prefix in ["text-encode:", "diffusion:", "vae-decode:"] {
+        assert!(
+            report.plan_histogram.keys().any(|k| k.starts_with(prefix)),
+            "missing {prefix} in {:?}",
+            report.plan_histogram
+        );
+    }
+}
