@@ -591,7 +591,10 @@ pub fn stage_service_time(
     let spec =
         choose_spec_with_patches(cluster, algo, &workload.shape, workload.cfg_evals, 1, patches);
     let step = plan_step_cost_patches(cluster, algo, &workload.shape, &spec, workload.cfg_evals, patches);
-    let mono = step * workload.layers as f64 * workload.steps as f64;
+    // `effective_layers` weights uneven per-layer DiT block costs when
+    // the workload declares them ([`Workload::layer_costs`]); uniform
+    // workloads reduce to the plain layer count bit-for-bit.
+    let mono = step * workload.effective_layers() * workload.steps as f64;
     let stage = &workload.stage_shapes()[class.index()];
     let serial = stage.time_share * mono;
     if class != StageClass::VaeDecode {
@@ -632,6 +635,98 @@ pub fn choose_stage_placement(
     let frac = if t_diff + t_dec > 0.0 { t_diff / (t_diff + t_dec) } else { 0.5 };
     let diff = ((rest as f64 * frac).round() as usize).clamp(1, rest - 1);
     [1, diff, rest - diff]
+}
+
+// ---------------------------------------------------------------------------
+// Arrival-mix forecasting
+// ---------------------------------------------------------------------------
+
+/// A windowed per-workload-class arrival-mix forecaster: observes the
+/// request trace as it arrives and predicts what share of near-future
+/// traffic each class will be. The scheduler reads the prediction at
+/// decision time (via `PolicyCtx::forecast_share`) to act *ahead* of a
+/// mix shift — proactive re-carves
+/// ([`crate::cluster::recarve::RecarvePolicy::Forecast`]) and
+/// cost-gated side-carve absorption — instead of waiting for a
+/// hysteresis window to confirm what the trace already announced.
+///
+/// Object-safe by design (the session stores a `Box<dyn Forecaster>`),
+/// with [`EwmaForecaster`] as the default implementation.
+pub trait Forecaster {
+    /// Record one arrival of workload class `class` at virtual time
+    /// `at`. Observations must be fed in non-decreasing time order
+    /// (the serving loop's arrival order).
+    fn observe(&mut self, class: &'static str, at: f64);
+
+    /// Predicted share of the arrival mix belonging to `class` at
+    /// virtual time `at` (in `[0, 1]`; `0.0` before any observation).
+    fn share(&self, class: &str, at: f64) -> f64;
+
+    /// Display name of the forecasting scheme.
+    fn name(&self) -> &'static str {
+        "ewma"
+    }
+}
+
+/// Continuous-time exponential moving average of per-class arrival
+/// rates: each observed arrival adds `1/tau` to its class's rate after
+/// decaying every class by `exp(-dt/tau)`, so a class that stops
+/// arriving fades with time constant `tau` (the *window*, in virtual
+/// seconds) and a class that starts arriving at rate `r` converges to
+/// rate `r`. The predicted mix share is the class's rate over the sum
+/// — scale-free, so absolute traffic intensity cancels out.
+#[derive(Debug, Clone)]
+pub struct EwmaForecaster {
+    /// Decay time constant (virtual seconds).
+    tau: f64,
+    /// Per-class decayed arrival rates, keyed by workload name.
+    /// BTreeMap for deterministic iteration (reports, debugging).
+    rates: std::collections::BTreeMap<&'static str, f64>,
+    /// Time of the last observation (rates are decayed to this point).
+    last: f64,
+}
+
+impl EwmaForecaster {
+    /// A forecaster with decay window `window` virtual seconds
+    /// (clamped below at a small epsilon so a zero window degrades to
+    /// "only the latest arrival counts" rather than dividing by zero).
+    pub fn new(window: f64) -> Self {
+        Self {
+            tau: window.max(1e-9),
+            rates: std::collections::BTreeMap::new(),
+            last: 0.0,
+        }
+    }
+
+    /// Decay every class's rate from `self.last` to `at`.
+    fn decay_to(&mut self, at: f64) {
+        let dt = (at - self.last).max(0.0);
+        if dt > 0.0 {
+            let f = (-dt / self.tau).exp();
+            for rate in self.rates.values_mut() {
+                *rate *= f;
+            }
+        }
+        self.last = self.last.max(at);
+    }
+}
+
+impl Forecaster for EwmaForecaster {
+    fn observe(&mut self, class: &'static str, at: f64) {
+        self.decay_to(at);
+        *self.rates.entry(class).or_insert(0.0) += 1.0 / self.tau;
+    }
+
+    fn share(&self, class: &str, at: f64) -> f64 {
+        // decay is uniform across classes, so the *share* at any
+        // `at >= last` equals the share at `last` — no mutation needed
+        let _ = at;
+        let total: f64 = self.rates.values().sum();
+        if total <= 0.0 {
+            return 0.0;
+        }
+        self.rates.get(class).copied().unwrap_or(0.0) / total
+    }
 }
 
 #[cfg(test)]
@@ -736,6 +831,42 @@ mod tests {
             video_heavy[2] >= image_heavy[2],
             "video-heavy grows the VAE class: {video_heavy:?} vs {image_heavy:?}"
         );
+    }
+
+    #[test]
+    fn layer_costs_shift_stage_pricing_and_placement() {
+        let cluster = ClusterSpec::paper_testbed();
+        let algo = SpAlgo::SwiftFusion;
+        // the shrunk few-step video where decode is a big share — the
+        // regime where cost-weighting the diffusion depth moves pods
+        let mut vid = Workload::cfg_video_96k();
+        vid.layers = 2;
+        vid.steps = 2;
+        // heavy DiT blocks (8x an average block each): the diffusion
+        // stage's absolute priced time grows, decode's stays put (its
+        // work is per-token, not per-layer)
+        let heavy = vid.clone().with_layer_costs(vec![8.0, 8.0]);
+        let diff_u = stage_service_time(&cluster, algo, &vid, StageClass::Diffusion, 4);
+        let diff_h = stage_service_time(&cluster, algo, &heavy, StageClass::Diffusion, 4);
+        assert!(diff_h > diff_u, "{diff_h} !> {diff_u}");
+        let dec_u = stage_service_time(&cluster, algo, &vid, StageClass::VaeDecode, 4);
+        let dec_h = stage_service_time(&cluster, algo, &heavy, StageClass::VaeDecode, 4);
+        assert!(
+            (dec_h - dec_u).abs() / dec_u < 1e-12,
+            "decode work is layer-independent: {dec_h} vs {dec_u}"
+        );
+        // and the placement chooser moves pods from decode to diffusion
+        let uniform = choose_stage_placement(&cluster, algo, &[(&vid, 8)], 4, 8);
+        let weighted = choose_stage_placement(&cluster, algo, &[(&heavy, 8)], 4, 8);
+        assert_eq!(weighted.iter().sum::<usize>(), 8);
+        assert!(
+            weighted[1] > uniform[1],
+            "cost-weighted layers grow the diffusion class: {weighted:?} vs {uniform:?}"
+        );
+        // uniform unit costs are the identity on pricing
+        let unit = vid.clone().with_layer_costs(vec![1.0, 1.0]);
+        let diff_unit = stage_service_time(&cluster, algo, &unit, StageClass::Diffusion, 4);
+        assert_eq!(diff_unit.to_bits(), diff_u.to_bits(), "bit-identical when uniform");
     }
 
     #[test]
@@ -1271,5 +1402,80 @@ mod tests {
             shallow.ranks_per_group() <= c.gpus_per_machine,
             "small request stays on one machine: {shallow:?}"
         );
+    }
+
+    // ---- arrival-mix forecasting ------------------------------------------
+
+    #[test]
+    fn ewma_empty_trace_predicts_nothing() {
+        let f = EwmaForecaster::new(4.0);
+        assert_eq!(f.share("short_image_4k", 0.0), 0.0);
+        assert_eq!(f.share("short_image_4k", 100.0), 0.0);
+    }
+
+    #[test]
+    fn ewma_step_response_tracks_a_phase_shift() {
+        // one arrival/second of shorts, then the trace flips to videos:
+        // the video share must cross dominance within ~a window of the
+        // shift and keep climbing toward 1
+        let mut f = EwmaForecaster::new(4.0);
+        for t in 0..16 {
+            f.observe("short_image_4k", t as f64);
+        }
+        assert!(
+            f.share("short_image_4k", 15.0) > 0.99,
+            "sustained single-class traffic saturates its share"
+        );
+        assert_eq!(f.share("cfg_video_96k", 15.0), 0.0);
+        let mut crossed_at = None;
+        for t in 16..40 {
+            f.observe("cfg_video_96k", t as f64);
+            let s = f.share("cfg_video_96k", t as f64);
+            if crossed_at.is_none() && s >= 0.5 {
+                crossed_at = Some(t);
+            }
+        }
+        let crossed = crossed_at.expect("video share must reach dominance");
+        assert!(
+            (16..=16 + 5).contains(&crossed),
+            "dominance within ~one window of the shift, got t={crossed}"
+        );
+        let late = f.share("cfg_video_96k", 39.0);
+        assert!(late > 0.95, "old class fades to noise: {late}");
+        // shares always partition the mix
+        let sum = f.share("cfg_video_96k", 39.0) + f.share("short_image_4k", 39.0);
+        assert!((sum - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ewma_window_sets_the_reaction_speed() {
+        // the shorter the window, the sooner a phase shift dominates
+        let cross = |window: f64| -> usize {
+            let mut f = EwmaForecaster::new(window);
+            for t in 0..32 {
+                f.observe("short_image_4k", t as f64);
+            }
+            for t in 32..200 {
+                f.observe("cfg_video_96k", t as f64);
+                if f.share("cfg_video_96k", t as f64) >= 0.5 {
+                    return t;
+                }
+            }
+            panic!("video never dominated under window {window}");
+        };
+        let fast = cross(2.0);
+        let slow = cross(16.0);
+        assert!(
+            fast < slow,
+            "smaller window reacts sooner: {fast} !< {slow}"
+        );
+    }
+
+    #[test]
+    fn forecaster_trait_is_object_safe_and_named() {
+        let mut f: Box<dyn Forecaster> = Box::new(EwmaForecaster::new(4.0));
+        f.observe("flux_3072", 0.0);
+        assert!(f.share("flux_3072", 0.0) > 0.99);
+        assert_eq!(f.name(), "ewma");
     }
 }

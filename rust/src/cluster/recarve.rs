@@ -94,7 +94,39 @@ pub enum RecarvePolicy {
         /// Consecutive gainful dispatches required before re-carving.
         window: usize,
     },
+    /// Forecast-driven re-carving: gated by the same `recarve_gain`
+    /// arithmetic as [`Self::Hysteresis`], but the confirmation window
+    /// is short-circuited when the arrival-mix forecaster
+    /// ([`crate::analysis::Forecaster`]) already predicts the incoming
+    /// workload class *dominates* the near-future mix
+    /// ([`FORECAST_DOMINANCE`]): one gainful dispatch suffices, so the
+    /// pod re-carves during the lull at the front of a phase shift
+    /// instead of serving `window` requests stale first. When the
+    /// forecast is silent (no dominant class, or no forecaster
+    /// configured) the policy degrades to plain hysteresis — it never
+    /// fires *later* than [`Self::Hysteresis`] with the same
+    /// `threshold`/`window`.
+    Forecast {
+        /// Minimum predicted fractional gain (e.g. `0.1` for 10 %).
+        threshold: f64,
+        /// Hysteresis fallback window when the forecast is silent.
+        window: usize,
+    },
 }
+
+/// Forecast share above which an incoming workload class counts as
+/// *dominating* the predicted arrival mix — the proactive trigger of
+/// [`RecarvePolicy::Forecast`]. A strict majority: two-class traffic
+/// cannot have both classes proactive at once.
+pub const FORECAST_DOMINANCE: f64 = 0.5;
+
+/// Forecast share below which a drained side carve's workload class
+/// counts as *gone* from the predicted arrival mix — the cost-gate of
+/// the forecast-driven absorb ([`EpochTracker::absorb_side`]): a
+/// main-busy pod re-unifies a drained side generation only when the
+/// forecaster says the side's class will not return, so the pod never
+/// pays a merge it would immediately have to split back out of.
+pub const FORECAST_ABSORB_EPS: f64 = 0.05;
 
 impl RecarvePolicy {
     /// Does this policy read the modeled gain prediction passed to
@@ -102,11 +134,15 @@ impl RecarvePolicy {
     /// [`crate::analysis::recarve_gain`] for policies that ignore it —
     /// keep it in sync when adding a gain-driven policy variant.
     pub fn wants_gain(&self) -> bool {
-        matches!(self, Self::Hysteresis { .. } | Self::Partial { .. })
+        matches!(
+            self,
+            Self::Hysteresis { .. } | Self::Partial { .. } | Self::Forecast { .. }
+        )
     }
 
-    /// Parse a CLI policy name; `threshold`/`window` feed the hysteresis
-    /// and partial variants and are ignored by the others.
+    /// Parse a CLI policy name; `threshold`/`window` feed the
+    /// hysteresis, partial, and forecast variants and are ignored by
+    /// the others.
     pub fn from_name(name: &str, threshold: f64, window: usize) -> Option<Self> {
         match name {
             "free" => Some(Self::Free),
@@ -114,6 +150,7 @@ impl RecarvePolicy {
             "on-idle" => Some(Self::OnIdle),
             "hysteresis" => Some(Self::Hysteresis { threshold, window }),
             "partial" => Some(Self::Partial { threshold, window }),
+            "forecast" => Some(Self::Forecast { threshold, window }),
             _ => None,
         }
     }
@@ -131,7 +168,80 @@ impl std::fmt::Display for RecarvePolicy {
             Self::Partial { threshold, window } => {
                 write!(f, "partial({:.0}% x {window})", threshold * 100.0)
             }
+            Self::Forecast { threshold, window } => {
+                write!(f, "forecast({:.0}% x {window})", threshold * 100.0)
+            }
         }
+    }
+}
+
+/// The one view every per-dispatch policy decision reads: clock,
+/// backlog, the plan preference, the modeled gain of adopting it, and
+/// the forecaster's opinion of the incoming class — instead of the
+/// ad-hoc positional argument lists the [`EpochTracker::on_dispatch`]
+/// and `DispatchPolicy::pick` call sites grew across PRs 3–9. Built
+/// with [`PolicyCtx::at`] plus chainable setters; fields a caller does
+/// not know stay at their cheap defaults (`None` / `0`), and policies
+/// that do not read a field never observe the difference (the knob-off
+/// goldens are byte-identical by construction).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PolicyCtx {
+    /// Virtual time the batch is ready to start.
+    pub ready: f64,
+    /// Virtual time the pod's in-flight work drains.
+    pub free_at: f64,
+    /// The plan the service model would carve for this batch's
+    /// workload (`None` for unplanned models).
+    pub preferred: Option<ParallelSpec>,
+    /// Predicted fractional per-step improvement of moving from the
+    /// current carve to `preferred`
+    /// ([`crate::analysis::recarve_gain`]); only gain-driven policies
+    /// read it ([`RecarvePolicy::wants_gain`]), so callers may leave
+    /// it `None` for the others.
+    pub gain: Option<f64>,
+    /// The forecaster's predicted arrival-mix share of the incoming
+    /// batch's workload class (`None` when no forecaster is
+    /// configured); read by [`RecarvePolicy::Forecast`].
+    pub forecast_share: Option<f64>,
+    /// Requests queued behind this batch at decision time.
+    pub backlog: usize,
+}
+
+impl PolicyCtx {
+    /// The minimal context: the two clocks every policy reads.
+    pub fn at(ready: f64, free_at: f64) -> Self {
+        Self {
+            ready,
+            free_at,
+            preferred: None,
+            gain: None,
+            forecast_share: None,
+            backlog: 0,
+        }
+    }
+
+    /// Attach the service model's preferred plan.
+    pub fn preferred(mut self, spec: impl Into<Option<ParallelSpec>>) -> Self {
+        self.preferred = spec.into();
+        self
+    }
+
+    /// Attach the modeled re-carve gain.
+    pub fn gain(mut self, gain: impl Into<Option<f64>>) -> Self {
+        self.gain = gain.into();
+        self
+    }
+
+    /// Attach the forecast share of the incoming workload class.
+    pub fn forecast_share(mut self, share: impl Into<Option<f64>>) -> Self {
+        self.forecast_share = share.into();
+        self
+    }
+
+    /// Attach the queue depth behind this batch.
+    pub fn backlog(mut self, backlog: usize) -> Self {
+        self.backlog = backlog;
+        self
     }
 }
 
@@ -294,8 +404,15 @@ pub struct EpochTracker {
     recarve_count: usize,
     drain_time: f64,
     setup_time: f64,
+    /// Epoch transitions fired by the forecast short-circuit *before*
+    /// the hysteresis fallback window would have confirmed them.
+    proactive_recarves: usize,
     /// Live side generation of a split pod ([`RecarvePolicy::Partial`]).
     side: Option<SideCarve>,
+    /// Workload class the live side generation was opened for — what
+    /// the forecast-gated absorb ([`Self::absorb_side`]) checks
+    /// against the predicted mix.
+    side_class: Option<&'static str>,
     /// Log of every side generation opened on this pod, in order.
     group_epochs: Vec<GroupEpoch>,
     partial_splits: usize,
@@ -319,7 +436,9 @@ impl EpochTracker {
             recarve_count: 0,
             drain_time: 0.0,
             setup_time: 0.0,
+            proactive_recarves: 0,
             side: None,
+            side_class: None,
             group_epochs: Vec::new(),
             partial_splits: 0,
             merges: 0,
@@ -352,6 +471,26 @@ impl EpochTracker {
     /// Total re-setup seconds charged to the pod's timeline.
     pub fn setup_time(&self) -> f64 {
         self.setup_time
+    }
+
+    /// Epoch transitions the forecast short-circuit fired *ahead* of
+    /// the hysteresis fallback window (always 0 for other policies).
+    pub fn proactive_recarves(&self) -> usize {
+        self.proactive_recarves
+    }
+
+    /// Workload class the live side generation was opened for
+    /// (`None` when unsplit or unrecorded).
+    pub fn side_class(&self) -> Option<&'static str> {
+        self.side_class
+    }
+
+    /// Record the workload class the live side generation serves, for
+    /// the forecast-gated absorb check ([`Self::absorb_side`]).
+    pub fn note_side_class(&mut self, class: &'static str) {
+        if self.side.is_some() {
+            self.side_class = Some(class);
+        }
     }
 
     /// Is the pod currently running two carve generations?
@@ -404,30 +543,22 @@ impl EpochTracker {
             .and_then(|spec| ParallelPlan::build(cluster, spec, algo).ok())
     }
 
-    /// Decide (and apply) the epoch transition for one batch dispatch.
+    /// Decide (and apply) the epoch transition for one batch dispatch,
+    /// reading every decision input from one [`PolicyCtx`] view
+    /// (clock, preference, modeled gain, forecast share, backlog).
+    /// Callers that do not run a gain-driven policy may leave
+    /// `ctx.gain` unset ([`RecarvePolicy::wants_gain`]); only
+    /// [`RecarvePolicy::Forecast`] reads `ctx.forecast_share`.
     ///
-    /// * `ready_at` — when the batch is ready to start;
-    /// * `free_at` — when the pod's in-flight work drains;
-    /// * `preferred` — the plan the service model would carve for this
-    ///   batch's workload (`None` for unplanned models);
-    /// * `gain` — predicted fractional per-step improvement of moving
-    ///   from the current carve to `preferred`
-    ///   ([`crate::analysis::recarve_gain`]); only the hysteresis policy
-    ///   reads it, so callers may pass `None` for other policies.
-    ///
-    /// The first dispatch adopts `preferred` as the admission-time carve
-    /// (epoch 0) at no cost. Afterwards a transition happens only when
-    /// `preferred` differs from the current carve *and* the policy fires;
-    /// the returned [`Transition`] carries the carve to serve under plus
-    /// the drain/setup accounting the caller must commit to the pod's
-    /// timeline ([`crate::coordinator::router::Router::commit_recarve`]).
-    pub fn on_dispatch(
-        &mut self,
-        ready_at: f64,
-        free_at: f64,
-        preferred: Option<ParallelSpec>,
-        gain: Option<f64>,
-    ) -> Transition {
+    /// The first dispatch adopts `ctx.preferred` as the admission-time
+    /// carve (epoch 0) at no cost. Afterwards a transition happens only
+    /// when the preference differs from the current carve *and* the
+    /// policy fires; the returned [`Transition`] carries the carve to
+    /// serve under plus the drain/setup accounting the caller must
+    /// commit to the pod's timeline
+    /// ([`crate::coordinator::router::Router::commit_recarve`]).
+    pub fn on_dispatch(&mut self, ctx: &PolicyCtx) -> Transition {
+        let (ready_at, free_at, preferred) = (ctx.ready, ctx.free_at, ctx.preferred);
         if !self.started {
             self.started = true;
             self.carve = preferred;
@@ -451,7 +582,7 @@ impl EpochTracker {
             RecarvePolicy::Never => false,
             RecarvePolicy::OnIdle => free_at <= ready_at,
             RecarvePolicy::Hysteresis { threshold, window } => {
-                if gain.is_some_and(|g| g >= threshold) {
+                if ctx.gain.is_some_and(|g| g >= threshold) {
                     self.streak += 1;
                 } else {
                     self.streak = 0;
@@ -459,7 +590,7 @@ impl EpochTracker {
                 self.streak >= window.max(1)
             }
             RecarvePolicy::Partial { threshold, window } => {
-                if gain.is_some_and(|g| g >= threshold) {
+                if ctx.gain.is_some_and(|g| g >= threshold) {
                     self.streak += 1;
                 } else {
                     self.streak = 0;
@@ -477,6 +608,26 @@ impl EpochTracker {
                     t.split_pending = true;
                     return t;
                 }
+            }
+            RecarvePolicy::Forecast { threshold, window } => {
+                if ctx.gain.is_some_and(|g| g >= threshold) {
+                    self.streak += 1;
+                } else {
+                    self.streak = 0;
+                }
+                let confirmed = self.streak >= window.max(1);
+                // the proactive short-circuit: one gainful dispatch is
+                // enough when the forecaster already predicts the
+                // incoming class dominates the near-future mix — the
+                // re-carve lands at the front of the phase shift
+                let predicted = self.streak >= 1
+                    && ctx
+                        .forecast_share
+                        .is_some_and(|s| s >= FORECAST_DOMINANCE);
+                if predicted && !confirmed {
+                    self.proactive_recarves += 1;
+                }
+                confirmed || predicted
             }
         };
         if !recarve {
@@ -498,7 +649,7 @@ impl EpochTracker {
         preferred: Option<ParallelSpec>,
     ) -> Transition {
         if !self.started || self.carve == preferred {
-            return self.on_dispatch(ready_at, free_at, preferred, None);
+            return self.on_dispatch(&PolicyCtx::at(ready_at, free_at).preferred(preferred));
         }
         self.transition(ready_at, free_at, preferred)
     }
@@ -628,6 +779,7 @@ impl EpochTracker {
     /// [`crate::coordinator::router::Router::commit_recarve`]).
     pub fn merge(&mut self, at: f64) -> f64 {
         let s = self.side.take().expect("merge on an unsplit pod");
+        self.side_class = None;
         self.group_epochs[s.epoch].merged_at = Some(at);
         self.merges += 1;
         let setup = self.setup_cost;
@@ -636,6 +788,26 @@ impl EpochTracker {
         self.carve = None;
         self.streak = 0;
         self.inflight.clear();
+        setup
+    }
+
+    /// Cost-gated early re-unification of a split pod: the side
+    /// generation has drained and the forecaster says its traffic
+    /// class won't return, so the **main-busy** pod absorbs the side's
+    /// machines now instead of waiting for the fully-idle merge
+    /// barrier ([`Self::merge`]). Unlike `merge`, the main generation
+    /// is untouched — its carve, epoch, streak, and in-flight work all
+    /// survive (the absorbed machines simply rejoin the pod footprint
+    /// at the next pod-wide re-carve) — so only the side's teardown
+    /// re-setup, returned here, is charged; the caller commits it to
+    /// the pod timeline like any other transition cost.
+    pub fn absorb_side(&mut self, at: f64) -> f64 {
+        let s = self.side.take().expect("absorb_side on an unsplit pod");
+        self.side_class = None;
+        self.group_epochs[s.epoch].merged_at = Some(at);
+        self.merges += 1;
+        let setup = self.setup_cost;
+        self.setup_time += setup;
         setup
     }
 
@@ -657,6 +829,7 @@ impl EpochTracker {
         // a live side generation is dissolved by the footprint change
         // (its epoch log entry stays, with `merged_at` left `None`)
         self.side = None;
+        self.side_class = None;
     }
 
     /// Attribute `n` served requests to the live epoch.
@@ -712,7 +885,7 @@ mod tests {
             RecarvePolicy::Hysteresis { threshold: 0.1, window: 2 },
         ] {
             let mut t = EpochTracker::new(policy, 0.03);
-            let tr = t.on_dispatch(1.0, 0.0, Some(spec_a()), None);
+            let tr = t.on_dispatch(&PolicyCtx::at(1.0, 0.0).preferred(spec_a()));
             assert!(!tr.recarved, "{policy:?}");
             assert_eq!(tr.carve, Some(spec_a()));
             assert_eq!((tr.drain, tr.setup), (0.0, 0.0));
@@ -725,8 +898,8 @@ mod tests {
     #[test]
     fn never_serves_stale_under_the_admission_carve() {
         let mut t = EpochTracker::new(RecarvePolicy::Never, 0.03);
-        t.on_dispatch(0.0, 0.0, Some(spec_a()), None);
-        let tr = t.on_dispatch(1.0, 5.0, Some(spec_b()), Some(0.9));
+        t.on_dispatch(&PolicyCtx::at(0.0, 0.0).preferred(spec_a()));
+        let tr = t.on_dispatch(&PolicyCtx::at(1.0, 5.0).preferred(spec_b()).gain(0.9));
         assert!(!tr.recarved);
         assert_eq!(tr.carve, Some(spec_a()), "stale carve kept");
         assert_eq!(t.epochs().len(), 1);
@@ -736,8 +909,8 @@ mod tests {
     #[test]
     fn free_adopts_every_preference_at_zero_cost() {
         let mut t = EpochTracker::new(RecarvePolicy::Free, 0.03);
-        t.on_dispatch(0.0, 0.0, Some(spec_a()), None);
-        let tr = t.on_dispatch(1.0, 9.0, Some(spec_b()), None);
+        t.on_dispatch(&PolicyCtx::at(0.0, 0.0).preferred(spec_a()));
+        let tr = t.on_dispatch(&PolicyCtx::at(1.0, 9.0).preferred(spec_b()));
         assert!(tr.recarved);
         assert_eq!(tr.carve, Some(spec_b()));
         assert_eq!((tr.drain, tr.setup), (0.0, 0.0), "free = unpaid");
@@ -749,12 +922,12 @@ mod tests {
     #[test]
     fn on_idle_recarves_only_when_drained() {
         let mut t = EpochTracker::new(RecarvePolicy::OnIdle, 0.03);
-        t.on_dispatch(0.0, 0.0, Some(spec_a()), None);
+        t.on_dispatch(&PolicyCtx::at(0.0, 0.0).preferred(spec_a()));
         // pod busy until t=5, batch ready at t=1: keep the carve
-        let busy = t.on_dispatch(1.0, 5.0, Some(spec_b()), None);
+        let busy = t.on_dispatch(&PolicyCtx::at(1.0, 5.0).preferred(spec_b()));
         assert!(!busy.recarved);
         // pod idle: re-carve, drain free, setup charged
-        let idle = t.on_dispatch(6.0, 5.0, Some(spec_b()), None);
+        let idle = t.on_dispatch(&PolicyCtx::at(6.0, 5.0).preferred(spec_b()));
         assert!(idle.recarved);
         assert_eq!(idle.drain, 0.0);
         assert_eq!(idle.setup, 0.03);
@@ -765,16 +938,16 @@ mod tests {
     fn hysteresis_needs_a_sustained_gain_streak() {
         let mut t =
             EpochTracker::new(RecarvePolicy::Hysteresis { threshold: 0.2, window: 2 }, 0.03);
-        t.on_dispatch(0.0, 0.0, Some(spec_a()), None);
+        t.on_dispatch(&PolicyCtx::at(0.0, 0.0).preferred(spec_a()));
         // gainful once, then below threshold: streak resets
-        assert!(!t.on_dispatch(1.0, 2.0, Some(spec_b()), Some(0.5)).recarved);
-        assert!(!t.on_dispatch(2.0, 3.0, Some(spec_b()), Some(0.1)).recarved);
+        assert!(!t.on_dispatch(&PolicyCtx::at(1.0, 2.0).preferred(spec_b()).gain(0.5)).recarved);
+        assert!(!t.on_dispatch(&PolicyCtx::at(2.0, 3.0).preferred(spec_b()).gain(0.1)).recarved);
         // a dispatch already on the preferred plan also resets the streak
-        assert!(!t.on_dispatch(3.0, 4.0, Some(spec_b()), Some(0.5)).recarved);
-        assert!(!t.on_dispatch(4.0, 5.0, Some(spec_a()), None).recarved);
+        assert!(!t.on_dispatch(&PolicyCtx::at(3.0, 4.0).preferred(spec_b()).gain(0.5)).recarved);
+        assert!(!t.on_dispatch(&PolicyCtx::at(4.0, 5.0).preferred(spec_a())).recarved);
         // two consecutive gainful dispatches: the second one fires
-        assert!(!t.on_dispatch(5.0, 8.0, Some(spec_b()), Some(0.5)).recarved);
-        let fire = t.on_dispatch(6.0, 8.0, Some(spec_b()), Some(0.5));
+        assert!(!t.on_dispatch(&PolicyCtx::at(5.0, 8.0).preferred(spec_b()).gain(0.5)).recarved);
+        let fire = t.on_dispatch(&PolicyCtx::at(6.0, 8.0).preferred(spec_b()).gain(0.5));
         assert!(fire.recarved);
         // drain = in-flight work (until t=8) minus readiness (t=6)
         assert_eq!(fire.drain, 2.0);
@@ -789,7 +962,7 @@ mod tests {
     #[test]
     fn force_overrides_never_and_invalid_carves_yield_no_plan() {
         let mut t = EpochTracker::new(RecarvePolicy::Never, 0.1);
-        t.on_dispatch(0.0, 0.0, Some(spec_a()), None);
+        t.on_dispatch(&PolicyCtx::at(0.0, 0.0).preferred(spec_a()));
         // the policy says keep; physics (an unserveable carve) says go
         let f = t.force(2.0, 5.0, Some(spec_b()));
         assert!(f.recarved);
@@ -811,7 +984,7 @@ mod tests {
     fn unplanned_models_stay_in_one_epoch() {
         let mut t = EpochTracker::new(RecarvePolicy::Free, 0.03);
         for i in 0..4 {
-            let tr = t.on_dispatch(i as f64, 0.0, None, None);
+            let tr = t.on_dispatch(&PolicyCtx::at(i as f64, 0.0));
             assert!(!tr.recarved);
             assert_eq!(tr.carve, None);
             t.record_served(1);
@@ -824,13 +997,13 @@ mod tests {
     #[test]
     fn resize_reset_reopens_admission_for_free() {
         let mut t = EpochTracker::new(RecarvePolicy::Never, 0.1);
-        t.on_dispatch(0.0, 0.0, Some(spec_a()), None);
+        t.on_dispatch(&PolicyCtx::at(0.0, 0.0).preferred(spec_a()));
         t.record_served(2);
         t.resize_reset();
         assert!(t.carve().is_none(), "carve obsolete after the resize");
         // next dispatch re-admits the (new-footprint) preferred plan at
         // no cost, even under Never — the migration barrier already paid
-        let tr = t.on_dispatch(3.0, 1.0, Some(spec_b()), None);
+        let tr = t.on_dispatch(&PolicyCtx::at(3.0, 1.0).preferred(spec_b()));
         assert!(!tr.recarved);
         assert_eq!(tr.carve, Some(spec_b()));
         assert_eq!((tr.drain, tr.setup), (0.0, 0.0));
@@ -845,7 +1018,7 @@ mod tests {
         let cluster = ClusterSpec::new(4, 8);
         let mut t = EpochTracker::new(RecarvePolicy::Free, 0.0);
         assert!(t.carved_plan(&cluster, SpAlgo::SwiftFusion).is_none());
-        t.on_dispatch(0.0, 0.0, Some(spec_b()), None);
+        t.on_dispatch(&PolicyCtx::at(0.0, 0.0).preferred(spec_b()));
         let plan = t.carved_plan(&cluster, SpAlgo::SwiftFusion).unwrap();
         assert_eq!(plan.spec, spec_b());
         assert_eq!(plan.groups.len(), 2);
@@ -879,9 +1052,14 @@ mod tests {
             RecarvePolicy::from_name("partial", 0.1, 2),
             Some(RecarvePolicy::Partial { threshold: 0.1, window: 2 })
         );
+        assert_eq!(
+            RecarvePolicy::from_name("forecast", 0.1, 2),
+            Some(RecarvePolicy::Forecast { threshold: 0.1, window: 2 })
+        );
         assert_eq!(RecarvePolicy::from_name("sometimes", 0.0, 0), None);
         assert!(RecarvePolicy::Hysteresis { threshold: 0.1, window: 2 }.wants_gain());
         assert!(RecarvePolicy::Partial { threshold: 0.1, window: 2 }.wants_gain());
+        assert!(RecarvePolicy::Forecast { threshold: 0.1, window: 2 }.wants_gain());
         assert!(!RecarvePolicy::Never.wants_gain());
         assert!(!RecarvePolicy::Free.wants_gain());
         assert!(!RecarvePolicy::OnIdle.wants_gain());
@@ -892,6 +1070,90 @@ mod tests {
         assert!(RecarvePolicy::Partial { threshold: 0.1, window: 2 }
             .to_string()
             .starts_with("partial(10%"));
+        assert!(RecarvePolicy::Forecast { threshold: 0.1, window: 2 }
+            .to_string()
+            .starts_with("forecast(10%"));
+    }
+
+    // ---- forecast-driven (proactive) re-carving --------------------------
+
+    #[test]
+    fn forecast_without_a_share_degrades_to_plain_hysteresis() {
+        let policy = RecarvePolicy::Forecast { threshold: 0.2, window: 2 };
+        let mut t = EpochTracker::new(policy, 0.03);
+        t.on_dispatch(&PolicyCtx::at(0.0, 0.0).preferred(spec_a()));
+        // no forecast share in the ctx: the fallback window gates
+        assert!(!t
+            .on_dispatch(&PolicyCtx::at(1.0, 2.0).preferred(spec_b()).gain(0.5))
+            .recarved);
+        let fire = t.on_dispatch(&PolicyCtx::at(2.0, 3.0).preferred(spec_b()).gain(0.5));
+        assert!(fire.recarved, "second gainful dispatch clears the window");
+        assert_eq!(t.proactive_recarves(), 0, "nothing was ahead of the window");
+    }
+
+    #[test]
+    fn forecast_dominance_short_circuits_the_window() {
+        let policy = RecarvePolicy::Forecast { threshold: 0.2, window: 4 };
+        let mut t = EpochTracker::new(policy, 0.03);
+        t.on_dispatch(&PolicyCtx::at(0.0, 0.0).preferred(spec_a()));
+        // a sub-dominant share keeps the hysteresis gate
+        let held = t.on_dispatch(
+            &PolicyCtx::at(1.0, 2.0)
+                .preferred(spec_b())
+                .gain(0.5)
+                .forecast_share(0.4),
+        );
+        assert!(!held.recarved);
+        // a dominant predicted share fires on the very next gainful
+        // dispatch, 2 dispatches ahead of the window-4 fallback
+        let fire = t.on_dispatch(
+            &PolicyCtx::at(2.0, 3.0)
+                .preferred(spec_b())
+                .gain(0.5)
+                .forecast_share(0.8),
+        );
+        assert!(fire.recarved, "dominant forecast short-circuits");
+        assert_eq!(t.proactive_recarves(), 1);
+        assert_eq!(t.recarve_count(), 1);
+        assert_eq!(t.carve(), Some(spec_b()));
+        // a dominant share with a below-threshold gain never fires:
+        // the forecast accelerates the gain gate, it does not replace it
+        let quiet = t.on_dispatch(
+            &PolicyCtx::at(3.0, 4.0)
+                .preferred(spec_a())
+                .gain(0.05)
+                .forecast_share(0.9),
+        );
+        assert!(!quiet.recarved, "gain threshold still gates");
+        assert_eq!(t.proactive_recarves(), 1);
+    }
+
+    // ---- forecast-gated side absorption ----------------------------------
+
+    #[test]
+    fn absorb_side_reunifies_without_touching_the_main_generation() {
+        let mut t = partial_tracker(1);
+        let narrowed = ParallelSpec::new(1, 1, SpDegrees::new(8, 1));
+        t.split(2.0, Some(narrowed), Some(spec_b()), 1, 3);
+        t.note_side_class("cfg_video_96k");
+        assert_eq!(t.side_class(), Some("cfg_video_96k"));
+        t.dispatch_side(2.0, 1.0);
+        t.record_side_served(1);
+        // main generation keeps serving (busy) while the side drains
+        t.note_inflight(3.0, 9.0, 1);
+        let setup = t.absorb_side(5.0);
+        assert_eq!(setup, 0.25);
+        assert!(!t.is_split());
+        assert_eq!(t.side_class(), None);
+        assert_eq!(t.merges(), 1, "an absorb is a (cost-gated) merge");
+        assert_eq!(t.group_epochs()[0].merged_at, Some(5.0));
+        assert_eq!(t.group_epochs()[0].served, 1);
+        // unlike merge: the main generation survives untouched
+        assert_eq!(t.carve(), Some(narrowed), "main carve kept");
+        assert_eq!(t.busy_replicas(4.0), 1, "in-flight work kept");
+        let tr = t.on_dispatch(&PolicyCtx::at(6.0, 9.0).preferred(narrowed));
+        assert!(!tr.recarved, "no forced re-admission epoch");
+        assert_eq!(t.epochs().len(), 2, "admission + narrowed epoch only");
     }
 
     // ---- group-granular (partial) re-carving -----------------------------
@@ -899,7 +1161,7 @@ mod tests {
     fn partial_tracker(window: usize) -> EpochTracker {
         let policy = RecarvePolicy::Partial { threshold: 0.2, window };
         let mut t = EpochTracker::new(policy, 0.25);
-        t.on_dispatch(0.0, 0.0, Some(spec_a()), None);
+        t.on_dispatch(&PolicyCtx::at(0.0, 0.0).preferred(spec_a()));
         t
     }
 
@@ -907,10 +1169,10 @@ mod tests {
     fn partial_on_an_idle_pod_transitions_pod_wide_like_hysteresis() {
         let mut t = partial_tracker(2);
         // one gainful dispatch: streak below window, carve kept
-        let held = t.on_dispatch(1.0, 0.5, Some(spec_b()), Some(0.9));
+        let held = t.on_dispatch(&PolicyCtx::at(1.0, 0.5).preferred(spec_b()).gain(0.9));
         assert!(!held.recarved && !held.split_pending);
         // second gainful dispatch, pod idle: pod-wide transition fires
-        let fire = t.on_dispatch(2.0, 1.5, Some(spec_b()), Some(0.9));
+        let fire = t.on_dispatch(&PolicyCtx::at(2.0, 1.5).preferred(spec_b()).gain(0.9));
         assert!(fire.recarved, "idle pod degenerates to hysteresis");
         assert!(!fire.split_pending);
         assert_eq!((fire.drain, fire.setup), (0.0, 0.25));
@@ -925,14 +1187,14 @@ mod tests {
         let mut t = partial_tracker(1);
         // gainful dispatch on a busy pod (free_at > ready): no pod-wide
         // transition, the caller is asked to split
-        let tr = t.on_dispatch(1.0, 9.0, Some(spec_b()), Some(0.9));
+        let tr = t.on_dispatch(&PolicyCtx::at(1.0, 9.0).preferred(spec_b()).gain(0.9));
         assert!(tr.split_pending);
         assert!(!tr.recarved);
         assert_eq!(tr.carve, Some(spec_a()), "carve kept until the split");
         assert_eq!(t.recarve_count(), 0);
         // a below-threshold gain resets the streak and never asks
         let mut t2 = partial_tracker(1);
-        let quiet = t2.on_dispatch(1.0, 9.0, Some(spec_b()), Some(0.1));
+        let quiet = t2.on_dispatch(&PolicyCtx::at(1.0, 9.0).preferred(spec_b()).gain(0.1));
         assert!(!quiet.split_pending && !quiet.recarved);
     }
 
@@ -998,7 +1260,7 @@ mod tests {
         assert_eq!(t.group_epochs()[0].served, 1, "closed epoch keeps its log");
         assert!(t.carve().is_none(), "carve obsolete until re-admission");
         // next dispatch re-admits the preferred full-pod plan at no cost
-        let tr = t.on_dispatch(9.0, 8.0, Some(spec_b()), None);
+        let tr = t.on_dispatch(&PolicyCtx::at(9.0, 8.0).preferred(spec_b()));
         assert!(!tr.recarved && !tr.split_pending);
         assert_eq!(tr.carve, Some(spec_b()));
         assert_eq!((tr.drain, tr.setup), (0.0, 0.0));
@@ -1022,7 +1284,7 @@ mod tests {
     #[test]
     fn inflight_occupancy_tracks_the_live_batch_footprint() {
         let mut t = EpochTracker::new(RecarvePolicy::Never, 0.1);
-        t.on_dispatch(0.0, 0.0, Some(spec_a()), None);
+        t.on_dispatch(&PolicyCtx::at(0.0, 0.0).preferred(spec_a()));
         assert_eq!(t.busy_replicas(0.0), 0, "idle pod occupies nothing");
         // a co-batched batch scatters across all 4 replica groups
         t.note_inflight(0.0, 4.0, 4);
@@ -1037,7 +1299,7 @@ mod tests {
     fn epoch_boundaries_clear_inflight_occupancy() {
         // a pod-wide transition drains all in-flight work
         let mut t = EpochTracker::new(RecarvePolicy::Free, 0.1);
-        t.on_dispatch(0.0, 0.0, Some(spec_a()), None);
+        t.on_dispatch(&PolicyCtx::at(0.0, 0.0).preferred(spec_a()));
         t.note_inflight(0.0, 10.0, 4);
         t.force(1.0, 10.0, Some(spec_b()));
         assert_eq!(t.busy_replicas(1.0), 0, "transition clears occupancy");

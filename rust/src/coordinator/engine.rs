@@ -501,6 +501,12 @@ pub struct RecarveReport {
     /// Side generations merged back into their pod's full-footprint
     /// carve.
     pub merges: usize,
+    /// Of `recarve_count`, transitions the forecast short-circuited
+    /// ahead of the hysteresis window
+    /// ([`crate::cluster::recarve::RecarvePolicy::Forecast`]).
+    /// Deliberately kept out of [`ServeReport::to_json`] so knob-off
+    /// reports stay byte-identical to the pinned goldens.
+    pub proactive_recarves: usize,
     /// Every pod's side-generation log, as (pod id, group epoch) in pod
     /// order; empty unless partial re-carving fired.
     pub group_epochs: Vec<(usize, GroupEpoch)>,

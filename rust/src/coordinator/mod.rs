@@ -46,6 +46,37 @@
 //! | `Router::pick` hard-wired in `serve()` | [`session::DispatchPolicy`] (least-loaded stays the default) |
 //! | `Router::dispatch` `(f64, f64)` return | [`router::DispatchOutcome`]                   |
 //! | `serve_batch`'s six-`&mut` closure     | [`session::ServeState`]                       |
+//!
+//! ## Migration note (ad-hoc policy arguments → [`crate::cluster::recarve::PolicyCtx`])
+//!
+//! Per-dispatch policy decisions used to receive whatever positional
+//! arguments their call sites had grown; they now read one shared
+//! context view, built with chainable setters (fields a caller does not
+//! know stay `None`/`0`):
+//!
+//! | old call shape                                            | new call shape                                |
+//! |-----------------------------------------------------------|-----------------------------------------------|
+//! | `EpochTracker::on_dispatch(ready, free_at, preferred, gain)` | `on_dispatch(&PolicyCtx::at(ready, free_at).preferred(spec).gain(g))` |
+//! | `DispatchPolicy::pick(router, batch, est)`                | `pick(router, batch, &ctx, est)` — `ctx.ready` replaces `batch.ready_at()` re-derivation |
+//! | forecast inputs (new)                                     | `ctx.forecast_share` ([`session::ServeConfig::forecast_window`] knob), read by `RecarvePolicy::Forecast` and the cost-gated absorb |
+//! | `EpochTracker::force(ready, free_at, preferred)`          | unchanged — the physics override is not a policy decision |
+//!
+//! ## Migration note (loose `ServeConfig` fields → typed sub-structs)
+//!
+//! The ~20 loose knobs accreted across PRs 3–9 are grouped into policy
+//! sub-structs; every *builder method* keeps its old name and
+//! signature, so code built through the builder compiles unchanged.
+//! Direct field accesses map as follows:
+//!
+//! | old field                  | new path                              |
+//! |----------------------------|---------------------------------------|
+//! | `config.recarve`           | `config.recarve.policy` ([`session::RecarveCfg`]) |
+//! | `config.recarve_setup`     | `config.recarve.setup`                |
+//! | `config.rebalance`         | `config.rebalance.policy` ([`session::RebalanceCfg`]) |
+//! | `config.quality`           | `config.quality.forced` ([`session::QualityCfg`]) |
+//! | `config.quality_floor`     | `config.quality.floor`                |
+//! | `config.stages`            | `config.stages.policy` ([`session::StageCfg`]) |
+//! | *(new)*                    | `config.forecast` ([`session::ForecastCfg`], `None` = knob off) |
 
 pub mod batcher;
 pub mod engine;

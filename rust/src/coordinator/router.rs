@@ -268,6 +268,7 @@ impl Router {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::recarve::PolicyCtx;
 
     #[test]
     fn pods_partition_the_cluster() {
@@ -331,7 +332,7 @@ mod tests {
         // adopt admission carves so the reset is observable
         let spec = crate::config::ParallelSpec::new(2, 1, crate::config::SpDegrees::new(8, 2));
         for p in &mut r.pods {
-            p.recarver.on_dispatch(0.0, 0.0, Some(spec), None);
+            p.recarver.on_dispatch(&PolicyCtx::at(0.0, 0.0).preferred(spec));
         }
         // pod 0 busy until t=5, pod 1 idle; migrate 1 -> 0 at t=2
         r.dispatch(0, 0.0, 5.0);
@@ -353,7 +354,7 @@ mod tests {
         assert_eq!(r.pods[1].free_at, 2.25);
         // both trackers re-admit on the next dispatch (fresh epoch, free)
         for p in &mut r.pods {
-            let tr = p.recarver.on_dispatch(6.0, p.free_at, Some(spec), None);
+            let tr = p.recarver.on_dispatch(&PolicyCtx::at(6.0, p.free_at).preferred(spec));
             assert!(!tr.recarved, "re-admission after a resize is unpaid");
             assert_eq!((tr.drain, tr.setup), (0.0, 0.0));
         }

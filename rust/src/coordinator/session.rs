@@ -35,7 +35,8 @@ use std::cmp::{Ordering, Reverse};
 use std::collections::{BTreeSet, BinaryHeap, HashMap};
 use std::sync::{Arc, Mutex};
 
-use crate::cluster::recarve::RecarvePolicy;
+use crate::analysis::{EwmaForecaster, Forecaster};
+use crate::cluster::recarve::{PolicyCtx, RecarvePolicy, FORECAST_ABSORB_EPS};
 use crate::comm::CommStats;
 use crate::config::{ClusterSpec, ParallelSpec, ParallelSpecError, QualityMode};
 use crate::coordinator::batcher::{Batch, BatchPolicy, Batcher};
@@ -52,10 +53,14 @@ use crate::workload::{Request, StageClass, Workload};
 // Dispatch policy
 // ---------------------------------------------------------------------------
 
-/// Pluggable "which pod serves this batch" policy. `est(pod, batch)`
-/// is a service-time estimate on that pod (the pod-sized model's
-/// preferred-plan time); policies that only read queue state may ignore
-/// it — it is never called unless the policy asks.
+/// Pluggable "which pod serves this batch" policy. Decision inputs
+/// arrive through one [`PolicyCtx`] view (clock, backlog, forecast —
+/// the same struct the re-carve policies read, minus the pod-scoped
+/// fields, which stay at their defaults at fleet scope) instead of the
+/// ad-hoc argument list this trait grew across PRs 3–9; `est(pod,
+/// batch)` is a service-time estimate on that pod (the pod-sized
+/// model's live-carve time). Policies that only read queue state may
+/// ignore both — `est` is never called unless the policy asks.
 pub trait DispatchPolicy: Sync {
     /// Stable policy name for the effective-config line
     /// ([`ServeConfig::summary`]) and CLI parsing.
@@ -66,6 +71,7 @@ pub trait DispatchPolicy: Sync {
         &self,
         router: &Router,
         batch: &Batch,
+        ctx: &PolicyCtx,
         est: &dyn Fn(usize, &Batch) -> f64,
     ) -> usize;
 }
@@ -84,6 +90,7 @@ impl DispatchPolicy for LeastLoaded {
         &self,
         router: &Router,
         _batch: &Batch,
+        _ctx: &PolicyCtx,
         _est: &dyn Fn(usize, &Batch) -> f64,
     ) -> usize {
         router.pick()
@@ -107,9 +114,10 @@ impl DispatchPolicy for EarliestFinish {
         &self,
         router: &Router,
         batch: &Batch,
+        ctx: &PolicyCtx,
         est: &dyn Fn(usize, &Batch) -> f64,
     ) -> usize {
-        let ready = batch.ready_at();
+        let ready = ctx.ready;
         router
             .pods
             .iter()
@@ -204,10 +212,11 @@ impl FleetModel for SimFleet {
 
 /// When the fleet may migrate an idle machine between pods
 /// ([`crate::coordinator::router::Router::rebalance_machine`]).
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub enum RebalancePolicy {
     /// Pods keep their admission-time footprint (the pre-redesign
     /// behaviour, and the default).
+    #[default]
     Never,
     /// Migrate one machine toward the dispatching pod when
     /// [`crate::analysis::rebalance_gain`] predicts at least `threshold`
@@ -290,6 +299,86 @@ impl std::fmt::Display for SchedulerMode {
 }
 
 // ---------------------------------------------------------------------------
+// Policy sub-configs
+// ---------------------------------------------------------------------------
+
+/// Re-carving knobs: the policy installed on every pod at run start and
+/// the per-transition setup cost. Both `None` by default — the
+/// legacy-shim posture that inherits whatever the router already has.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RecarveCfg {
+    /// Re-carving policy to install on every pod at run start; `None`
+    /// (the default) inherits whatever the router already has.
+    pub policy: Option<RecarvePolicy>,
+    /// Per-transition re-setup seconds to install on every pod at run
+    /// start; `None` keeps each pod's modeled
+    /// [`crate::cluster::recarve::resetup_cost`].
+    pub setup: Option<f64>,
+}
+
+/// Cross-pod machine migration knobs ([`RebalancePolicy::Never`] by
+/// default — pods keep their admission-time footprint).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RebalanceCfg {
+    /// When the fleet may migrate an idle machine between pods.
+    pub policy: RebalancePolicy,
+}
+
+/// Quality-elastic serving knobs: the admission floor and the forced
+/// mode. Both `None` by default, which serves everything exact and
+/// leaves the report byte-identical to pre-quality output.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct QualityCfg {
+    /// Quality-elastic admission floor in (0, 1]: when set, a batch
+    /// dispatched onto a backlogged pod degrades to the cheapest
+    /// [`QualityMode`] whose [`QualityMode::score`] clears the floor
+    /// (an idle pod always serves `Full`).
+    pub floor: Option<f64>,
+    /// Force one [`QualityMode`] for every batch, overriding the floor
+    /// walk (`--quality` on the CLI).
+    pub forced: Option<QualityMode>,
+}
+
+/// Stage-pipeline knobs: `None` (the default) keeps the monolithic
+/// loop and its byte-identical goldens.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StageCfg {
+    /// Decoupled multi-stage pipeline: when set, the fleet is
+    /// partitioned into stage-class pods and every request walks the
+    /// text-encode → diffusion → VAE-decode DAG through bounded
+    /// inter-stage queues ([`crate::coordinator::stages`]).
+    pub policy: Option<StagePolicy>,
+}
+
+/// Arrival-mix forecasting knobs. Present (`ServeConfig::forecast` is
+/// `Some`) ⇒ the session observes every admitted arrival through an
+/// [`EwmaForecaster`] and feeds the predicted class shares to the
+/// policy layer: [`RecarvePolicy::Forecast`]'s proactive trigger and
+/// the cost-gated side-carve absorb
+/// ([`crate::cluster::recarve::EpochTracker::absorb_side`]). Absent ⇒
+/// no forecaster runs and every report stays byte-identical to the
+/// pre-forecast output.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ForecastCfg {
+    /// EWMA time constant in virtual seconds
+    /// ([`EwmaForecaster::new`]): how far back the arrival mix is
+    /// remembered — small windows react within a few arrivals, large
+    /// ones smooth bursts out.
+    pub window: f64,
+}
+
+impl Default for ForecastCfg {
+    fn default() -> Self {
+        Self { window: DEFAULT_FORECAST_WINDOW }
+    }
+}
+
+/// Default [`ForecastCfg::window`]: long enough to smooth a one-off
+/// stray arrival, short enough to flip the dominant class within a
+/// handful of arrivals at one request per second.
+pub const DEFAULT_FORECAST_WINDOW: f64 = 8.0;
+
+// ---------------------------------------------------------------------------
 // ServeConfig
 // ---------------------------------------------------------------------------
 
@@ -298,6 +387,13 @@ impl std::fmt::Display for SchedulerMode {
 /// `SimService` constructors, and `Router` setters. Built with the
 /// builder methods; [`Self::summary`] renders the effective config as
 /// one line so any run is reproducible from its log.
+///
+/// Knobs are grouped into typed policy sub-structs ([`RecarveCfg`],
+/// [`RebalanceCfg`], [`QualityCfg`], [`StageCfg`], [`ForecastCfg`])
+/// rather than the ~20 loose fields they accreted as; the builder
+/// methods keep their original names and signatures, so existing call
+/// sites compile unchanged. [`Self::preset`] names three common
+/// postures.
 #[derive(Clone)]
 pub struct ServeConfig {
     /// Batching policy (max batch size + batching window — how long
@@ -309,14 +405,11 @@ pub struct ServeConfig {
     pub plan: PlanPolicy,
     /// Patch count for pipelined (`pp_degree > 1`) plans.
     pub patches: usize,
-    /// Re-carving policy to install on every pod at run start; `None`
-    /// (the default) inherits whatever the router already has — the
-    /// legacy-shim behaviour.
-    pub recarve: Option<RecarvePolicy>,
-    /// Per-transition re-setup seconds to install on every pod at run
-    /// start; `None` keeps each pod's modeled
-    /// [`crate::cluster::recarve::resetup_cost`].
-    pub recarve_setup: Option<f64>,
+    /// Pick the pipeline patch count per workload by the closed-form
+    /// argmin ([`crate::analysis::choose_patches`]) instead of the
+    /// fixed [`Self::patches`] (`--patches auto` on the CLI). Off by
+    /// default.
+    pub patches_auto: bool,
     /// Which pod serves each batch ([`LeastLoaded`] by default).
     pub dispatch: Arc<dyn DispatchPolicy>,
     /// Replica co-batching: scatter a closed batch across its carve's
@@ -324,35 +417,21 @@ pub struct ServeConfig {
     /// of queueing the whole batch on one group. Off by default (the
     /// pre-redesign behaviour).
     pub co_batch: bool,
-    /// Cross-pod machine migration policy ([`RebalancePolicy::Never`]
-    /// by default).
-    pub rebalance: RebalancePolicy,
     /// Scheduler data structures ([`SchedulerMode::Indexed`] by
     /// default; `Linear` keeps the naive reference path). Both modes
     /// produce bit-identical reports.
     pub scheduler: SchedulerMode,
-    /// Quality-elastic admission floor in (0, 1]: when set, a batch
-    /// dispatched onto a backlogged pod degrades to the cheapest
-    /// [`QualityMode`] whose [`QualityMode::score`] clears the floor
-    /// (an idle pod always serves `Full`). `None` (the default) serves
-    /// everything exact and leaves the report byte-identical to the
-    /// pre-quality output.
-    pub quality_floor: Option<f64>,
-    /// Force one [`QualityMode`] for every batch, overriding the floor
-    /// walk (`--quality` on the CLI). `None` by default.
-    pub quality: Option<QualityMode>,
-    /// Decoupled multi-stage pipeline: when set, the fleet is
-    /// partitioned into stage-class pods and every request walks the
-    /// text-encode → diffusion → VAE-decode DAG through bounded
-    /// inter-stage queues ([`crate::coordinator::stages`]). `None` (the
-    /// default) keeps the monolithic loop and its byte-identical
-    /// goldens.
-    pub stages: Option<StagePolicy>,
-    /// Pick the pipeline patch count per workload by the closed-form
-    /// argmin ([`crate::analysis::choose_patches`]) instead of the
-    /// fixed [`Self::patches`] (`--patches auto` on the CLI). Off by
-    /// default.
-    pub patches_auto: bool,
+    /// Per-pod re-carving knobs.
+    pub recarve: RecarveCfg,
+    /// Cross-pod machine migration knobs.
+    pub rebalance: RebalanceCfg,
+    /// Quality-elastic serving knobs.
+    pub quality: QualityCfg,
+    /// Stage-pipeline knobs.
+    pub stages: StageCfg,
+    /// Arrival-mix forecasting knobs; `None` (the default) runs no
+    /// forecaster and keeps every report byte-identical.
+    pub forecast: Option<ForecastCfg>,
 }
 
 impl Default for ServeConfig {
@@ -361,16 +440,15 @@ impl Default for ServeConfig {
             batch: BatchPolicy::default(),
             plan: PlanPolicy::SingleMesh,
             patches: crate::analysis::DEFAULT_PATCHES,
-            recarve: None,
-            recarve_setup: None,
+            patches_auto: false,
             dispatch: Arc::new(LeastLoaded),
             co_batch: false,
-            rebalance: RebalancePolicy::Never,
             scheduler: SchedulerMode::Indexed,
-            quality_floor: None,
-            quality: None,
-            stages: None,
-            patches_auto: false,
+            recarve: RecarveCfg::default(),
+            rebalance: RebalanceCfg::default(),
+            quality: QualityCfg::default(),
+            stages: StageCfg::default(),
+            forecast: None,
         }
     }
 }
@@ -378,6 +456,44 @@ impl Default for ServeConfig {
 impl ServeConfig {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// A named configuration posture — the three most common knob
+    /// bundles, spelled once:
+    ///
+    /// * `"throughput"` — saturate the fleet: auto planning, replica
+    ///   co-batching, earliest-finish dispatch, group-granular
+    ///   re-carving ([`RecarvePolicy::Partial`]) and gain-driven
+    ///   machine re-balancing.
+    /// * `"latency"` — immediate dispatch (batch of 1, zero window),
+    ///   earliest-finish, and predictive re-carving
+    ///   ([`RecarvePolicy::Forecast`] + the arrival-mix forecaster) so
+    ///   carve transitions happen ahead of the mix instead of behind
+    ///   it.
+    /// * `"quality"` — auto planning with every batch pinned to
+    ///   [`QualityMode::Full`]: no approximate mode is ever chosen, and
+    ///   the quality histogram records the guarantee.
+    ///
+    /// Presets are plain starting points: chain further builder calls
+    /// to override any knob. Panics on an unknown name (the CLI
+    /// validates first).
+    pub fn preset(name: &str) -> Self {
+        let base = Self::new().plan(PlanPolicy::Auto).dispatch(Arc::new(EarliestFinish));
+        match name {
+            "throughput" => base
+                .batch(BatchPolicy { max_batch: 8, window: 2.0 })
+                .co_batch(true)
+                .recarve(RecarvePolicy::Partial { threshold: 0.1, window: 2 })
+                .rebalance(RebalancePolicy::Gain { threshold: 0.1, window: 2 }),
+            "latency" => base
+                .batch(BatchPolicy { max_batch: 1, window: 0.0 })
+                .recarve(RecarvePolicy::Forecast { threshold: 0.1, window: 2 })
+                .forecast_window(DEFAULT_FORECAST_WINDOW),
+            "quality" => base.quality(QualityMode::Full),
+            _ => panic!(
+                "unknown preset '{name}' (expected throughput, latency, or quality)"
+            ),
+        }
     }
 
     /// Set the batching policy.
@@ -401,13 +517,13 @@ impl ServeConfig {
 
     /// Install a re-carving policy on every pod at run start.
     pub fn recarve(mut self, policy: RecarvePolicy) -> Self {
-        self.recarve = Some(policy);
+        self.recarve.policy = Some(policy);
         self
     }
 
     /// Pin the per-transition re-setup cost (seconds) on every pod.
     pub fn recarve_setup(mut self, seconds: f64) -> Self {
-        self.recarve_setup = Some(seconds);
+        self.recarve.setup = Some(seconds);
         self
     }
 
@@ -425,7 +541,7 @@ impl ServeConfig {
 
     /// Set the cross-pod re-balancing policy.
     pub fn rebalance(mut self, policy: RebalancePolicy) -> Self {
-        self.rebalance = policy;
+        self.rebalance.policy = policy;
         self
     }
 
@@ -436,26 +552,26 @@ impl ServeConfig {
     }
 
     /// Set the quality-elastic admission floor (see
-    /// [`Self::quality_floor`]).
+    /// [`QualityCfg::floor`]).
     pub fn quality_floor(mut self, floor: f64) -> Self {
         assert!(
             floor > 0.0 && floor <= 1.0,
             "quality floor must be in (0, 1], got {floor}"
         );
-        self.quality_floor = Some(floor);
+        self.quality.floor = Some(floor);
         self
     }
 
     /// Force one quality mode for every batch.
     pub fn quality(mut self, mode: QualityMode) -> Self {
-        self.quality = Some(mode);
+        self.quality.forced = Some(mode);
         self
     }
 
     /// Turn the fleet into a decoupled stage pipeline (see
-    /// [`Self::stages`]).
+    /// [`StageCfg::policy`]).
     pub fn stages(mut self, policy: StagePolicy) -> Self {
-        self.stages = Some(policy);
+        self.stages.policy = Some(policy);
         self
     }
 
@@ -463,6 +579,14 @@ impl ServeConfig {
     /// argmin instead of the fixed [`Self::patches`].
     pub fn patches_auto(mut self, on: bool) -> Self {
         self.patches_auto = on;
+        self
+    }
+
+    /// Enable the arrival-mix forecaster with the given EWMA window
+    /// (virtual seconds, see [`ForecastCfg::window`]).
+    pub fn forecast_window(mut self, window: f64) -> Self {
+        assert!(window > 0.0, "forecast window must be > 0, got {window}");
+        self.forecast = Some(ForecastCfg { window });
         self
     }
 
@@ -504,22 +628,26 @@ impl ServeConfig {
             self.plan,
             patches,
             self.recarve
+                .policy
                 .map_or_else(|| "inherit".to_string(), |p| p.to_string()),
             self.dispatch.name(),
             if self.co_batch { "on" } else { "off" },
-            self.rebalance,
+            self.rebalance.policy,
             self.scheduler,
         );
-        // quality knobs are appended only when set, so knob-off logs
+        // optional knobs are appended only when set, so knob-off logs
         // (and the tests pinning them) are unchanged
-        if let Some(q) = self.quality {
+        if let Some(q) = self.quality.forced {
             line.push_str(&format!(" quality={}", q.label()));
         }
-        if let Some(f) = self.quality_floor {
+        if let Some(f) = self.quality.floor {
             line.push_str(&format!(" quality-floor={f}"));
         }
-        if let Some(s) = self.stages {
+        if let Some(s) = self.stages.policy {
             line.push_str(&format!(" stages={s}"));
+        }
+        if let Some(f) = self.forecast {
+            line.push_str(&format!(" forecast=ewma({}s)", f.window));
         }
         line
     }
@@ -578,6 +706,7 @@ impl ServeState {
             }
             recarve.partial_splits += rc.partial_splits();
             recarve.merges += rc.merges();
+            recarve.proactive_recarves += rc.proactive_recarves();
             for e in rc.group_epochs() {
                 recarve.group_epochs.push((pod.id, e.clone()));
             }
@@ -704,6 +833,13 @@ struct SchedState {
     /// Memoized per-pod pricing (enabled in indexed mode only; the
     /// linear path re-prices every call, as before).
     price: RefCell<PriceCache>,
+    /// Arrival-mix forecaster (the [`ServeConfig::forecast_window`]
+    /// knob): observes every admitted arrival, and its predicted class
+    /// shares feed the [`PolicyCtx`] every dispatch decision reads —
+    /// the proactive [`RecarvePolicy::Forecast`] trigger and the
+    /// cost-gated side-carve absorb. `None` when the knob is off, so
+    /// knob-off runs never consult a forecast.
+    forecaster: Option<Box<dyn Forecaster>>,
 }
 
 impl SchedState {
@@ -721,6 +857,9 @@ impl SchedState {
                 config.scheduler,
                 SchedulerMode::Indexed
             ))),
+            forecaster: config
+                .forecast
+                .map(|f| Box::new(EwmaForecaster::new(f.window)) as Box<dyn Forecaster>),
         }
     }
 }
@@ -818,18 +957,18 @@ impl<'a> ServeSession<'a> {
     /// virtual time; every request ends as exactly one completion or one
     /// rejection in the report.
     pub fn run(self, router: &mut Router, requests: Vec<Request>) -> ServeReport {
-        if let Some(policy) = self.config.recarve {
-            match self.config.recarve_setup {
+        if let Some(policy) = self.config.recarve.policy {
+            match self.config.recarve.setup {
                 Some(s) => router.set_recarve_with_setup(policy, s),
                 None => router.set_recarve(policy),
             }
-        } else if let Some(s) = self.config.recarve_setup {
+        } else if let Some(s) = self.config.recarve.setup {
             for p in &mut router.pods {
                 p.recarver.setup_cost = s;
             }
         }
 
-        if let Some(policy) = self.config.stages {
+        if let Some(policy) = self.config.stages.policy {
             return self.run_staged(router, requests, policy);
         }
 
@@ -853,6 +992,10 @@ impl<'a> ServeSession<'a> {
                     if let Err(reason) = self.source.admit(router, &r.workload) {
                         state.rejected.push((r.id, reason));
                         continue;
+                    }
+                    // every admitted arrival updates the predicted mix
+                    if let Some(f) = sched.forecaster.as_mut() {
+                        f.observe(r.workload.name, at);
                     }
                     batcher.push(r);
                     // batch-close: sweep synchronously at the arrival
@@ -942,7 +1085,7 @@ impl<'a> ServeSession<'a> {
             router,
             requests,
             &policy,
-            &self.config.rebalance,
+            &self.config.rebalance.policy,
             algo,
             patches,
             &mut stage_time,
@@ -977,6 +1120,12 @@ impl<'a> ServeSession<'a> {
         let workload = batch.requests[0].workload.clone();
         let ready = batch.ready_at();
         let source = self.source;
+        // The forecaster's opinion of this batch's class, threaded to
+        // every policy decision below through the shared PolicyCtx.
+        let forecast_share = sched
+            .forecaster
+            .as_ref()
+            .map(|f| f.share(workload.name, ready));
         let price_cell = &sched.price;
         // Plan-aware dispatch estimates price each pod by the carve it
         // will actually serve under: for pods whose policy can hold a
@@ -1037,8 +1186,16 @@ impl<'a> ServeSession<'a> {
                 }
             }
         };
+        // The fleet-scope decision view: pod-scoped fields (free_at,
+        // preferred, gain) stay at their defaults — no pod is chosen
+        // yet.
+        let fleet_ctx = PolicyCtx::at(ready, 0.0)
+            .forecast_share(forecast_share)
+            .backlog(batch.size());
         let pod = match self.config.scheduler {
-            SchedulerMode::Linear => self.config.dispatch.pick(router, &batch, &est),
+            SchedulerMode::Linear => {
+                self.config.dispatch.pick(router, &batch, &fleet_ctx, &est)
+            }
             // O(log P)-flavored selection for the built-in policies:
             // least-loaded reads the front of the router's free_at
             // index; earliest-finish prunes its scan with it. Custom
@@ -1048,7 +1205,7 @@ impl<'a> ServeSession<'a> {
                 "earliest-finish" => {
                     pruned_earliest_finish(router, &batch, &est, &sched.split)
                 }
-                _ => self.config.dispatch.pick(router, &batch, &est),
+                _ => self.config.dispatch.pick(router, &batch, &fleet_ctx, &est),
             },
         };
 
@@ -1056,7 +1213,7 @@ impl<'a> ServeSession<'a> {
         // other pod idle enough to donate one? Symmetrically: is this
         // pod queueing behind a strictly bigger pod's leftovers and
         // should the big pod give a machine back?
-        if let RebalancePolicy::Gain { threshold, window } = self.config.rebalance {
+        if let RebalancePolicy::Gain { threshold, window } = self.config.rebalance.policy {
             if matches!(self.source, ModelSource::Fleet(_)) {
                 let mut migrated = false;
                 let cur = router.pods[pod].cluster.clone();
@@ -1166,7 +1323,7 @@ impl<'a> ServeSession<'a> {
             // Split pods run the exact pipeline on both carve
             // generations; with a quality knob on, record them as Full
             // so the histogram still accounts for every completion.
-            if (self.config.quality.is_some() || self.config.quality_floor.is_some())
+            if (self.config.quality.forced.is_some() || self.config.quality.floor.is_some())
                 && !out.is_empty()
             {
                 *state
@@ -1191,9 +1348,12 @@ impl<'a> ServeSession<'a> {
                 None
             }
         };
-        let mut t = router.pods[pod]
-            .recarver
-            .on_dispatch(ready, free_at, preferred, gain);
+        let ctx = PolicyCtx::at(ready, free_at)
+            .preferred(preferred)
+            .gain(gain)
+            .forecast_share(forecast_share)
+            .backlog(batch.size());
+        let mut t = router.pods[pod].recarver.on_dispatch(&ctx);
         if t.split_pending {
             // The Partial policy fired on a busy pod: split off the idle
             // machines and serve this batch on the fresh side carve.
@@ -1201,7 +1361,7 @@ impl<'a> ServeSession<'a> {
                 self.try_split(router, pod, &batch, &workload, ready, service, state, sched)
             {
                 // Side-carve dispatches run the exact pipeline.
-                if (self.config.quality.is_some() || self.config.quality_floor.is_some())
+                if (self.config.quality.forced.is_some() || self.config.quality.floor.is_some())
                     && !out.is_empty()
                 {
                     *state
@@ -1314,10 +1474,10 @@ impl<'a> ServeSession<'a> {
     /// clears the floor, falling back to `Full` when the floor excludes
     /// every approximate mode.
     fn pick_quality(&self, free_at: f64, ready: f64) -> Option<QualityMode> {
-        if let Some(q) = self.config.quality {
+        if let Some(q) = self.config.quality.forced {
             return Some(q);
         }
-        let floor = self.config.quality_floor?;
+        let floor = self.config.quality.floor?;
         if free_at <= ready {
             return Some(QualityMode::Full);
         }
@@ -1449,6 +1609,9 @@ impl<'a> ServeSession<'a> {
         router.pods[pod]
             .recarver
             .split(ready, Some(narrowed), Some(side_plan), busy, idle);
+        // the side carve exists to serve this class — remember it so
+        // the forecast-gated absorb can ask whether it will return
+        router.pods[pod].recarver.note_side_class(workload.name);
         sched.split.insert(pod);
         let (_, done) = router.pods[pod].recarver.dispatch_side(ready, dur);
         if self.config.co_batch && batch.size() > 1 && side_plan.batch_replicas > 1 {
@@ -1497,7 +1660,7 @@ impl<'a> ServeSession<'a> {
             let free_at = router.pods[pod].free_at;
             let t = router.pods[pod]
                 .recarver
-                .on_dispatch(ready, free_at, preferred, None);
+                .on_dispatch(&PolicyCtx::at(ready, free_at).preferred(preferred));
             let dur = self.service_duration(
                 &sched.price,
                 fp,
@@ -1531,6 +1694,60 @@ impl<'a> ServeSession<'a> {
             let reps = self.occupied_replicas(t.carve.as_ref(), batch.size());
             router.pods[pod].recarver.note_inflight(ready, out.done, reps);
             return completions_for(&batch, workload, out.done, pod);
+        }
+
+        // Cost-gated absorb (the forecast knob): the side generation
+        // drained but the main is still busy — the full-idle merge
+        // above cannot fire, and without a forecast the split idles
+        // until it does. When the forecaster says the side's class has
+        // left the mix ([`FORECAST_ABSORB_EPS`]), the side will not see
+        // traffic again: re-unify *now*
+        // ([`crate::cluster::recarve::EpochTracker::absorb_side`] — the
+        // busy main generation keeps computing through the setup) and
+        // serve this batch on the re-unified main timeline.
+        if let Some(f) = sched.forecaster.as_ref() {
+            let side_gone = router.pods[pod]
+                .recarver
+                .side_class()
+                .is_none_or(|c| f.share(c, ready) < FORECAST_ABSORB_EPS);
+            if side_free <= ready && main_free > ready && side_gone {
+                let setup = router.pods[pod].recarver.absorb_side(ready);
+                sched.split.remove(&pod);
+                router.commit_recarve(pod, ready, setup);
+                let carve = router.pods[pod].recarver.carve();
+                let dur = self.service_duration(
+                    &sched.price,
+                    fp,
+                    service,
+                    workload,
+                    batch.size(),
+                    carve.as_ref(),
+                );
+                if !dur.is_finite() {
+                    for r in &batch.requests {
+                        state.rejected.push((
+                            r.id,
+                            format!(
+                                "no plan can serve workload '{}' on this pod after \
+                                 side-carve absorption",
+                                workload.name
+                            ),
+                        ));
+                    }
+                    return Vec::new();
+                }
+                if let Some(label) = carve
+                    .map(|s| s.label())
+                    .or_else(|| service.plan_label(workload))
+                {
+                    *state.plan_histogram.entry(label).or_insert(0) += batch.size();
+                }
+                router.pods[pod].recarver.record_served(batch.size());
+                let out = router.dispatch(pod, ready, dur);
+                let reps = self.occupied_replicas(carve.as_ref(), batch.size());
+                router.pods[pod].recarver.note_inflight(ready, out.done, reps);
+                return completions_for(&batch, workload, out.done, pod);
+            }
         }
 
         let main_carve = router.pods[pod].recarver.carve();
@@ -1780,7 +1997,8 @@ mod tests {
         router.dispatch(0, 0.0, 10.0);
         let batch = Batch { requests: vec![req(0, Workload::flux_3072(), 0.0)] };
         let est = |_: usize, _: &Batch| 0.0;
-        assert_eq!(LeastLoaded.pick(&router, &batch, &est), router.pick());
+        let ctx = PolicyCtx::at(batch.ready_at(), 0.0);
+        assert_eq!(LeastLoaded.pick(&router, &batch, &ctx, &est), router.pick());
     }
 
     #[test]
@@ -1791,12 +2009,13 @@ mod tests {
         router.dispatch(1, 0.0, 1.0);
         let batch = Batch { requests: vec![req(0, Workload::flux_3072(), 0.0)] };
         let est = |pod: usize, _: &Batch| if pod == 0 { 100.0 } else { 2.0 };
-        assert_eq!(EarliestFinish.pick(&router, &batch, &est), 1);
-        assert_eq!(LeastLoaded.pick(&router, &batch, &est), 0);
+        let ctx = PolicyCtx::at(batch.ready_at(), 0.0);
+        assert_eq!(EarliestFinish.pick(&router, &batch, &ctx, &est), 1);
+        assert_eq!(LeastLoaded.pick(&router, &batch, &ctx, &est), 0);
         // ties break to the lowest pod id
         let router2 = Router::new(2, 2, 2, SpAlgo::SwiftFusion);
         let flat = |_: usize, _: &Batch| 1.0;
-        assert_eq!(EarliestFinish.pick(&router2, &batch, &flat), 0);
+        assert_eq!(EarliestFinish.pick(&router2, &batch, &ctx, &flat), 0);
     }
 
     #[test]
@@ -2040,7 +2259,7 @@ mod tests {
             );
             router.pods[0]
                 .recarver
-                .on_dispatch(0.0, 0.0, Some(narrowed_spec()), None);
+                .on_dispatch(&PolicyCtx::at(0.0, 0.0).preferred(narrowed_spec()));
             router.pods[0]
                 .recarver
                 .split(0.0, Some(narrowed_spec()), Some(video_sub()), 1, 3);
@@ -2108,11 +2327,11 @@ mod tests {
         // pod 0: idle, but frozen on the stale carve it admitted
         router.pods[0]
             .recarver
-            .on_dispatch(0.0, 0.0, Some(short_spec()), None);
+            .on_dispatch(&PolicyCtx::at(0.0, 0.0).preferred(short_spec()));
         // pod 1: on the preferred carve, busy until t = 1
         router.pods[1]
             .recarver
-            .on_dispatch(0.0, 0.0, Some(video_full()), None);
+            .on_dispatch(&PolicyCtx::at(0.0, 0.0).preferred(video_full()));
         router.dispatch(1, 0.0, 1.0);
         let report = ServeSession::new(
             ServeConfig::new()
@@ -2153,14 +2372,14 @@ mod tests {
             );
             router.pods[0]
                 .recarver
-                .on_dispatch(0.0, 0.0, Some(narrowed_spec()), None);
+                .on_dispatch(&PolicyCtx::at(0.0, 0.0).preferred(narrowed_spec()));
             router.pods[0]
                 .recarver
                 .split(0.0, Some(narrowed_spec()), Some(video_sub()), 1, 3);
             router.dispatch(0, 0.0, 10.0); // main generation busy till t = 10
             router.pods[1]
                 .recarver
-                .on_dispatch(0.0, 0.0, Some(video_full()), None);
+                .on_dispatch(&PolicyCtx::at(0.0, 0.0).preferred(video_full()));
             router.dispatch(1, 0.0, 2.0); // pod 1 busy till t = 2
             ServeSession::new(
                 ServeConfig::new()

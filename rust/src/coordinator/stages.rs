@@ -22,6 +22,16 @@
 //! from an idle pod of another class via
 //! [`crate::coordinator::router::Router::rebalance_machine`] — the
 //! same drain + `resize_reset` machinery the monolithic fleet uses.
+//!
+//! Stage boundaries balance *cost*, not layer count: the per-class
+//! `time_share` split that prices every stage here
+//! ([`crate::workload::Workload::stage_shapes`]) weights uneven
+//! per-layer DiT block costs when the workload declares them
+//! ([`crate::workload::Workload::layer_costs`]) — a heavy
+//! joint-attention front block grows the diffusion stage's share, and
+//! [`crate::analysis::choose_stage_placement`] sizes the stage-class
+//! pods accordingly. Workloads without declared costs (every preset)
+//! keep the uniform split bit-for-bit.
 
 use std::collections::{BTreeMap, HashMap, VecDeque};
 
@@ -606,6 +616,43 @@ mod tests {
         assert!(
             diff.keys().any(|&d| d > 1),
             "the diffusion queue never hit its bound: {diff:?}"
+        );
+    }
+
+    #[test]
+    fn layer_costs_reweight_the_staged_bottleneck() {
+        // declared per-layer costs grow the diffusion stage's share of
+        // the request (cost-weighted stage boundaries) ...
+        let heavy = shrunk_video().with_layer_costs(vec![8.0, 8.0]);
+        let share = |w: &Workload| w.stage_shapes()[StageClass::Diffusion.index()].time_share;
+        assert!(share(&heavy) > share(&shrunk_video()));
+        // ... and the staged pipeline's rate is set by its bottleneck
+        // stage: each request still costs 1 s end to end under the
+        // unit pricing (the shares sum to 1), but the heavier
+        // diffusion stage serializes more of the burst behind its pod
+        let run_w = |w: &Workload| {
+            let mut router = Router::new(3, 8, 3, SpAlgo::SwiftFusion);
+            let policy = StagePolicy::new(StagePlacement::balanced(3)).queue_bound(2);
+            run_staged(
+                &mut router,
+                burst(4, w, 0.01),
+                &policy,
+                &RebalancePolicy::Never,
+                SpAlgo::SwiftFusion,
+                4,
+                &mut unit_stage_time,
+                &mut |_w| Ok(()),
+            )
+        };
+        let uniform = run_w(&shrunk_video());
+        let weighted = run_w(&heavy);
+        assert_eq!(uniform.metrics.completed(), 4);
+        assert_eq!(weighted.metrics.completed(), 4);
+        assert!(
+            weighted.metrics.horizon > uniform.metrics.horizon,
+            "cost-weighted diffusion must dominate the pipeline rate: {} vs {}",
+            weighted.metrics.horizon,
+            uniform.metrics.horizon
         );
     }
 

@@ -27,7 +27,7 @@ use swiftfusion::coordinator::engine::{PlanPolicy, SimService};
 use swiftfusion::coordinator::router::Router;
 use swiftfusion::coordinator::session::{
     dispatch_policy_from_name, RebalancePolicy, SchedulerMode, ServeConfig, ServeSession,
-    SimFleet,
+    SimFleet, DEFAULT_FORECAST_WINDOW,
 };
 use swiftfusion::coordinator::stages::{StagePlacement, StagePolicy};
 use swiftfusion::runtime::Runtime;
@@ -71,8 +71,8 @@ USAGE: swiftfusion <info|validate|bench-layer|serve|volumes|trace> [flags]
   validate  --config small4             numeric check: all SP algos vs oracle
   bench-layer --machines N --gpus M --workload NAME [--algo NAME] [plan flags]
   serve     --machines N --gpus M --pods K --requests R --rate Q [--algo NAME]
-            [plan flags] [re-carving flags] [scheduler flags] [comm flags]
-            [quality flags]
+            [--preset NAME] [plan flags] [re-carving flags] [scheduler flags]
+            [comm flags] [quality flags]
   volumes   --machines N --gpus M --heads H
   trace     --machines N --gpus M --workload NAME [--algo NAME] [--out FILE]
             (per-rank timeline of one attention layer, chrome://tracing JSON)
@@ -98,6 +98,20 @@ Hybrid plan flags (bench-layer, serve):
   --batch-replicas R         independent replica groups beyond the CFG split
                              (only --plan fixed reads it, default 1)
 
+Config presets (serve): a named ServeConfig posture as the flag base —
+every explicitly-passed flag still overrides its knob, so a preset is a
+starting point, not a mode.
+  --preset NAME              throughput (auto plan, earliest-finish,
+                             batch 8 / 2s window, replica co-batching,
+                             partial re-carving, gain re-balancing),
+                             latency (auto plan, earliest-finish,
+                             batch 1 / zero window, forecast re-carving
+                             with the default EWMA window), or quality
+                             (auto plan, earliest-finish, every batch
+                             pinned to full quality). A one-pod fleet
+                             silently drops a preset's re-balancing
+                             (nothing to migrate between)
+
 Dynamic re-carving flags (serve):
   --recarve POLICY           when a live pod may drain and re-carve to the
                              plan the cost model prefers for the current
@@ -110,12 +124,34 @@ Dynamic re-carving flags (serve):
                              partial (hysteresis-gated, but a busy pod
                              splits: only its idle machines re-carve —
                              no drain barrier — while the busy carve
-                             keeps serving; the pod re-unifies when idle)
-  --recarve-threshold F      hysteresis/partial: minimum predicted
-                             fractional gain per step (default 0.15 = 15%)
-  --recarve-window N         hysteresis/partial: consecutive gainful
-                             dispatches required before re-carving
-                             (default 2)
+                             keeps serving; the pod re-unifies when idle),
+                             forecast (hysteresis arithmetic, but the
+                             confirmation window is short-circuited when
+                             the arrival-mix forecaster already predicts
+                             the incoming class dominates the mix — the
+                             pod re-carves ahead of the shift instead of
+                             serving the window stale; never fires later
+                             than hysteresis)
+  --recarve-threshold F      hysteresis/partial/forecast: minimum
+                             predicted fractional gain per step
+                             (default 0.15 = 15%)
+  --recarve-window N         hysteresis/partial/forecast: consecutive
+                             gainful dispatches required before
+                             re-carving (default 2)
+
+Forecast flags (serve): a windowed EWMA over observed arrivals predicts
+each workload class's share of the near-future mix. The forecast feeds
+--recarve forecast (proactive re-carves) and cost-gates side-carve
+merges: a main-busy split pod absorbs its drained side carve as soon as
+the forecast says the side's class won't return, instead of waiting for
+the whole pod to idle. With the knob off no forecaster runs and reports
+are byte-identical to pre-forecast output.
+  --forecast-window S        EWMA time constant in virtual seconds
+                             (default 8): how far back the mix is
+                             remembered — small values react within a
+                             few arrivals, large ones smooth bursts.
+                             --recarve forecast without this flag gets
+                             the default window automatically
 
 Scheduler flags (serve): every run prints its effective config as one
 `serve: batch=... plan=... recarve=... dispatch=...` line, so a run is
@@ -402,9 +438,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let recarve_name = args.enum_or(
         "recarve",
         "free",
-        &["free", "never", "on-idle", "hysteresis", "partial"],
+        &["free", "never", "on-idle", "hysteresis", "partial", "forecast"],
     )?;
-    let recarve = RecarvePolicy::from_name(recarve_name, threshold, window)
+    let recarve_cli = RecarvePolicy::from_name(recarve_name, threshold, window)
         .expect("name validated by enum_or");
     let dispatch_name =
         args.enum_or("dispatch", "least-loaded", &["least-loaded", "earliest-finish"])?;
@@ -453,19 +489,57 @@ fn cmd_serve(args: &Args) -> Result<()> {
         pod.cluster.net.inter_compress = compress;
         pod.cluster.net.cfg_fuse = cfg_fuse;
     }
+    // A preset is the config base; every explicitly-passed flag still
+    // overrides its knob. Without --preset the pre-preset behaviour is
+    // reproduced exactly: every knob is applied, flag defaults included.
+    let preset_name = if args.has("preset") {
+        Some(args.enum_or("preset", "latency", &["throughput", "latency", "quality"])?)
+    } else {
+        None
+    };
+    let mut config = match preset_name {
+        Some(name) => ServeConfig::preset(name),
+        None => ServeConfig::new(),
+    };
+    let explicit = |flag: &str| preset_name.is_none() || args.has(flag);
     // every paper-suite workload has 24 heads
-    let plan = plan_policy_for(args, router.pods[0].cluster.total_gpus(), 24)?;
-    let plan_label = effective_plan(args)?.to_string();
-    let mut config = ServeConfig::new()
-        .batch(BatchPolicy { max_batch, window: 30.0 })
-        .plan(plan)
-        .patches(patches)
-        .patches_auto(patches_auto)
-        .recarve(recarve)
-        .dispatch(dispatch)
-        .co_batch(co_batch)
-        .rebalance(rebalance)
-        .scheduler(scheduler);
+    let plan_flags = args.has("plan")
+        || args.has("cfg-degree")
+        || args.has("pp-degree")
+        || args.has("batch-replicas");
+    let plan_label = if preset_name.is_some() && !plan_flags {
+        // every preset plans with the auto chooser
+        "auto".to_string()
+    } else {
+        effective_plan(args)?.to_string()
+    };
+    if preset_name.is_none() || plan_flags {
+        config =
+            config.plan(plan_policy_for(args, router.pods[0].cluster.total_gpus(), 24)?);
+    }
+    if explicit("max-batch") {
+        config = config.batch(BatchPolicy { max_batch, window: 30.0 });
+    }
+    config = config.patches(patches).patches_auto(patches_auto);
+    if explicit("recarve") || args.has("recarve-threshold") || args.has("recarve-window")
+    {
+        config = config.recarve(recarve_cli);
+    }
+    if explicit("dispatch") {
+        config = config.dispatch(dispatch);
+    }
+    if explicit("co-batch") {
+        config = config.co_batch(co_batch);
+    }
+    if explicit("rebalance")
+        || args.has("rebalance-threshold")
+        || args.has("rebalance-window")
+    {
+        config = config.rebalance(rebalance);
+    }
+    if explicit("scheduler") {
+        config = config.scheduler(scheduler);
+    }
     if let Some(f) = quality_floor {
         config = config.quality_floor(f);
     }
@@ -479,6 +553,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
         config = config
             .stages(StagePolicy::new(StagePlacement::balanced(pods)).queue_bound(stage_queue));
+    }
+    // The effective (post-preset) policies drive everything below.
+    let recarve = config.recarve.policy.unwrap_or(RecarvePolicy::Free);
+    // a one-pod fleet has nothing to migrate between: drop a preset's
+    // re-balancing rather than erroring on the preset's behalf
+    if preset_name.is_some() && pods < 2 && !args.has("rebalance") {
+        config = config.rebalance(RebalancePolicy::Never);
+    }
+    let rebalance = config.rebalance.policy;
+    if args.has("forecast-window") {
+        let fw = args.f64_or("forecast-window", DEFAULT_FORECAST_WINDOW)?;
+        anyhow::ensure!(fw > 0.0, "--forecast-window must be > 0");
+        config = config.forecast_window(fw);
+    }
+    // --recarve forecast without a forecaster would silently degrade to
+    // plain hysteresis; give it the default window instead.
+    if matches!(recarve, RecarvePolicy::Forecast { .. }) && config.forecast.is_none() {
+        config = config.forecast_window(DEFAULT_FORECAST_WINDOW);
     }
     // Only auto planning ever changes a pod's preferred plan; under
     // single/fixed the preferred spec is constant, so any re-carving

@@ -105,6 +105,14 @@ pub struct Workload {
     /// parallel plans (`config::ParallelSpec::cfg_degree == 2`) run the
     /// two branches concurrently on disjoint device groups.
     pub cfg_evals: usize,
+    /// Optional per-layer relative costs (one entry per layer, in units
+    /// of an average DiT block). Real DiT stacks are not uniform —
+    /// joint-attention blocks, token-refiner layers, and final-layer
+    /// projections run heavier than the plain blocks — and pipeline
+    /// stage boundaries should balance *cost*, not layer count. `None`
+    /// (every preset) means uniform layers and reproduces the plain
+    /// `layers` arithmetic bit-for-bit; see [`Self::effective_layers`].
+    pub layer_costs: Option<Vec<f64>>,
 }
 
 impl Workload {
@@ -118,6 +126,7 @@ impl Workload {
             layers: 19,
             steps: 28,
             cfg_evals: 1,
+            layer_costs: None,
         }
     }
 
@@ -129,6 +138,7 @@ impl Workload {
             layers: 19,
             steps: 28,
             cfg_evals: 1,
+            layer_costs: None,
         }
     }
 
@@ -143,6 +153,7 @@ impl Workload {
             layers: 30,
             steps: 50,
             cfg_evals: 2,
+            layer_costs: None,
         }
     }
 
@@ -155,6 +166,7 @@ impl Workload {
             layers: 30,
             steps: 50,
             cfg_evals: 2,
+            layer_costs: None,
         }
     }
 
@@ -170,6 +182,7 @@ impl Workload {
             layers: 19,
             steps: 28,
             cfg_evals: 1,
+            layer_costs: None,
         }
     }
 
@@ -184,6 +197,7 @@ impl Workload {
             layers: 30,
             steps: 50,
             cfg_evals: 2,
+            layer_costs: None,
         }
     }
 
@@ -212,6 +226,35 @@ impl Workload {
         self.steps * self.cfg_evals
     }
 
+    /// Attach per-layer relative costs (see [`Self::layer_costs`]).
+    /// `costs` must have exactly `layers` entries, all positive.
+    pub fn with_layer_costs(mut self, costs: Vec<f64>) -> Self {
+        assert_eq!(
+            costs.len(),
+            self.layers,
+            "one cost per layer ({} layers)",
+            self.layers
+        );
+        assert!(costs.iter().all(|&c| c > 0.0), "layer costs must be positive");
+        self.layer_costs = Some(costs);
+        self
+    }
+
+    /// The workload's depth in *cost* units: the sum of
+    /// [`Self::layer_costs`] when provided, else `layers` — so uniform
+    /// workloads (`None`, every preset) keep the plain `layers as f64`
+    /// arithmetic bit-for-bit. Every closed form that multiplies by
+    /// layer count ([`Self::stage_shapes`],
+    /// [`crate::analysis::stage_service_time`]) goes through this, so
+    /// stage shares and stage placement shift consistently when layer
+    /// costs are declared.
+    pub fn effective_layers(&self) -> f64 {
+        match &self.layer_costs {
+            Some(costs) => costs.iter().sum(),
+            None => self.layers as f64,
+        }
+    }
+
     /// The linear stage DAG of one request: text-encode → diffusion →
     /// VAE decode, each with its own cost shape and a `time_share`
     /// decomposition of the monolithic request cost. Work per stage is
@@ -224,7 +267,10 @@ impl Workload {
     pub fn stage_shapes(&self) -> [StageShape; 3] {
         let l = self.shape.l as f64;
         let w_enc = ENCODE_TOKENS as f64 * ENCODE_WORK_PER_TOKEN;
-        let w_diff = l * self.layers as f64 * self.total_evals() as f64;
+        // cost-weighted depth: uneven per-layer costs grow (or shrink)
+        // the diffusion stage's share of the request; `None` reduces to
+        // `layers as f64` exactly
+        let w_diff = l * self.effective_layers() * self.total_evals() as f64;
         let w_dec = l * DECODE_WORK_PER_TOKEN;
         let total = w_enc + w_diff + w_dec;
         let enc_shape = AttnShape::new(self.shape.b, ENCODE_TOKENS, self.shape.h, self.shape.d);
@@ -501,6 +547,34 @@ mod tests {
         w.steps = 2;
         let dec = w.stage_shapes()[StageClass::VaeDecode.index()].time_share;
         assert!(dec > 0.3, "{dec}");
+    }
+
+    #[test]
+    fn layer_costs_weight_the_effective_depth() {
+        let w = Workload::short_image_4k();
+        // uniform (None) reduces to the plain layer count bit-for-bit
+        assert_eq!(w.effective_layers(), w.layers as f64);
+        // uniform costs of 1.0 are the identity too
+        let uniform = w.clone().with_layer_costs(vec![1.0; w.layers]);
+        assert_eq!(uniform.effective_layers(), w.layers as f64);
+        assert_eq!(uniform.stage_shapes(), w.stage_shapes());
+        // heavier blocks grow the effective depth and the diffusion
+        // stage's share of the request
+        let mut costs = vec![1.0; w.layers];
+        costs[0] = 4.0; // a heavy joint-attention front block
+        let heavy = w.clone().with_layer_costs(costs);
+        assert_eq!(heavy.effective_layers(), w.layers as f64 + 3.0);
+        let share = |wl: &Workload| wl.stage_shapes()[StageClass::Diffusion.index()].time_share;
+        assert!(share(&heavy) > share(&w));
+        // shares still partition the request exactly
+        let total: f64 = heavy.stage_shapes().iter().map(|s| s.time_share).sum();
+        assert!((total - 1.0).abs() < 1e-12, "{total}");
+    }
+
+    #[test]
+    #[should_panic(expected = "one cost per layer")]
+    fn layer_costs_must_match_the_layer_count() {
+        let _ = Workload::short_image_4k().with_layer_costs(vec![1.0; 3]);
     }
 
     #[test]

@@ -10,15 +10,19 @@
 
 use std::sync::Arc;
 
-use swiftfusion::cluster::recarve::{GroupEpoch, PartialRecarve};
-use swiftfusion::config::{ClusterSpec, ParallelSpec, ParallelSpecError};
+use swiftfusion::analysis::{EwmaForecaster, Forecaster};
+use swiftfusion::cluster::recarve::{
+    EpochTracker, GroupEpoch, PartialRecarve, PolicyCtx, RecarvePolicy, Transition,
+};
+use swiftfusion::config::{ClusterSpec, ParallelSpec, ParallelSpecError, QualityMode};
 use swiftfusion::coordinator::batcher::{Batch, BatchPolicy};
 use swiftfusion::coordinator::engine::{serve, ServeReport, SimService};
 use swiftfusion::coordinator::metrics::Completion;
 use swiftfusion::coordinator::router::{DispatchOutcome, RebalanceEvent, Router};
 use swiftfusion::coordinator::session::{
-    dispatch_policy_from_name, DispatchPolicy, EarliestFinish, FleetModel, LeastLoaded,
-    RebalancePolicy, ServeConfig, ServeSession, ServeState, SimFleet,
+    dispatch_policy_from_name, DispatchPolicy, EarliestFinish, FleetModel, ForecastCfg,
+    LeastLoaded, QualityCfg, RebalanceCfg, RebalancePolicy, RecarveCfg, ServeConfig, ServeSession,
+    ServeState, SimFleet, StageCfg, DEFAULT_FORECAST_WINDOW,
 };
 use swiftfusion::coordinator::{CostModel, Planner, ServiceModel};
 use swiftfusion::sp::SpAlgo;
@@ -66,14 +70,125 @@ fn session_api_signatures_are_pinned() {
 
     let parse: fn(&str) -> Option<Arc<dyn DispatchPolicy>> = dispatch_policy_from_name;
     let _ = parse;
+
+    // Sub-struct builders keep their pre-redesign names and signatures
+    // (the back-compat promise of the config regrouping), plus the new
+    // forecast knob and the preset constructor.
+    let rc: fn(ServeConfig, RecarvePolicy) -> ServeConfig = ServeConfig::recarve;
+    let rs: fn(ServeConfig, f64) -> ServeConfig = ServeConfig::recarve_setup;
+    let q: fn(ServeConfig, QualityMode) -> ServeConfig = ServeConfig::quality;
+    let qf: fn(ServeConfig, f64) -> ServeConfig = ServeConfig::quality_floor;
+    let fw: fn(ServeConfig, f64) -> ServeConfig = ServeConfig::forecast_window;
+    let preset: fn(&str) -> ServeConfig = ServeConfig::preset;
+    let _ = (rc, rs, q, qf, fw, preset);
+}
+
+/// The typed config sub-structs: constructing each field-by-field
+/// pins its shape, and the defaults pin the knob-off posture (every
+/// `None`/`Never` default keeps reports byte-identical to the
+/// pre-regrouping output).
+#[test]
+fn config_substruct_shapes_are_pinned() {
+    let rc = RecarveCfg { policy: Some(RecarvePolicy::Free), setup: Some(0.5) };
+    assert!(rc.policy.is_some() && rc.setup.is_some());
+    assert!(RecarveCfg::default().policy.is_none());
+
+    let rb = RebalanceCfg { policy: RebalancePolicy::Never };
+    assert_eq!(rb.policy, RebalanceCfg::default().policy);
+
+    let q = QualityCfg { floor: Some(0.9), forced: Some(QualityMode::Full) };
+    assert!(q.floor.is_some() && q.forced.is_some());
+    assert!(QualityCfg::default().floor.is_none());
+
+    let st = StageCfg { policy: None };
+    assert!(st.policy.is_none() && StageCfg::default().policy.is_none());
+
+    let f = ForecastCfg { window: 4.0 };
+    assert!(f.window < DEFAULT_FORECAST_WINDOW);
+    assert_eq!(ForecastCfg::default().window, DEFAULT_FORECAST_WINDOW);
+
+    // The default config keeps every knob off, and its summary line is
+    // the same one the pre-regrouping config printed.
+    let config = ServeConfig::new();
+    assert!(config.recarve.policy.is_none() && config.recarve.setup.is_none());
+    assert_eq!(config.rebalance.policy, RebalancePolicy::Never);
+    assert!(config.quality.floor.is_none() && config.quality.forced.is_none());
+    assert!(config.stages.policy.is_none());
+    assert!(config.forecast.is_none());
+    assert!(!config.summary().contains("forecast="));
+}
+
+/// The three presets: each is an ordinary config (explicit builder
+/// calls still override it), and only `latency` turns the forecaster
+/// on.
+#[test]
+fn presets_are_pinned() {
+    let t = ServeConfig::preset("throughput");
+    assert!(t.co_batch && t.forecast.is_none());
+    assert!(matches!(t.recarve.policy, Some(RecarvePolicy::Partial { .. })));
+    assert!(matches!(t.rebalance.policy, RebalancePolicy::Gain { .. }));
+
+    let l = ServeConfig::preset("latency");
+    assert!(matches!(l.recarve.policy, Some(RecarvePolicy::Forecast { .. })));
+    assert_eq!(l.forecast.map(|f| f.window), Some(DEFAULT_FORECAST_WINDOW));
+    assert_eq!(l.batch.max_batch, 1);
+
+    let q = ServeConfig::preset("quality");
+    assert_eq!(q.quality.forced, Some(QualityMode::Full));
+
+    // presets compose with the builder like any other base config
+    let over = ServeConfig::preset("latency").forecast_window(2.0);
+    assert_eq!(over.forecast.map(|f| f.window), Some(2.0));
+}
+
+/// The shared policy-decision view: field-by-field construction pins
+/// the shape; the builder chain pins the chainable setters.
+#[test]
+fn policy_ctx_shape_is_pinned() {
+    let full = PolicyCtx {
+        ready: 1.0,
+        free_at: 0.5,
+        preferred: None,
+        gain: Some(0.2),
+        forecast_share: Some(0.8),
+        backlog: 3,
+    };
+    let built = PolicyCtx::at(1.0, 0.5).gain(0.2).forecast_share(0.8).backlog(3);
+    assert_eq!(full, built);
+    assert_eq!(PolicyCtx::at(0.0, 0.0).preferred(None).preferred, None);
+
+    // EpochTracker's decision entry point takes the view by reference.
+    let on_dispatch: fn(&mut EpochTracker, &PolicyCtx) -> Transition = EpochTracker::on_dispatch;
+    let _ = on_dispatch;
 }
 
 /// The split traits compose back into `ServiceModel` via the blanket
 /// impl — for concrete models, trait objects, and plan-agnostic models
 /// that only implement `CostModel` plus an empty `Planner`.
 fn is_service_model<T: ServiceModel + ?Sized>() {}
-fn is_dispatch_policy<T: DispatchPolicy>() {}
+fn is_dispatch_policy<T: DispatchPolicy + ?Sized>() {}
 fn is_fleet_model<T: FleetModel>() {}
+fn is_forecaster<T: Forecaster + ?Sized>() {}
+
+/// `DispatchPolicy::pick` routes its decision inputs through the
+/// shared [`PolicyCtx`] view; calling it through the trait object pins
+/// both the new signature and object safety.
+fn pin_dispatch_policy(
+    p: &dyn DispatchPolicy,
+    router: &Router,
+    batch: &Batch,
+    ctx: &PolicyCtx,
+) -> usize {
+    p.pick(router, batch, ctx, &|_pod, b| b.size() as f64)
+}
+
+/// [`Forecaster`] stays object-safe (the session stores a
+/// `Box<dyn Forecaster>`): observe, predict, and name through the
+/// object type.
+fn pin_forecaster(f: &mut dyn Forecaster) -> (f64, &'static str) {
+    f.observe("flux-3072", 1.0);
+    (f.share("flux-3072", 2.0), f.name())
+}
 
 #[test]
 fn trait_composition_is_pinned() {
@@ -81,7 +196,22 @@ fn trait_composition_is_pinned() {
     is_service_model::<dyn ServiceModel>();
     is_dispatch_policy::<LeastLoaded>();
     is_dispatch_policy::<EarliestFinish>();
+    is_dispatch_policy::<dyn DispatchPolicy>();
     is_fleet_model::<SimFleet>();
+    is_forecaster::<EwmaForecaster>();
+    is_forecaster::<dyn Forecaster>();
+
+    let mut ewma: Box<dyn Forecaster> = Box::new(EwmaForecaster::new(DEFAULT_FORECAST_WINDOW));
+    let (share, name) = pin_forecaster(ewma.as_mut());
+    assert!((0.0..=1.0).contains(&share) && share > 0.0);
+    assert_eq!(name, "ewma");
+
+    let router = Router::new(2, 2, 2, SpAlgo::SwiftFusion);
+    let batch = Batch {
+        requests: vec![Request { id: 0, workload: Workload::flux_3072(), arrival: 0.0, seed: 0 }],
+    };
+    let pod = pin_dispatch_policy(&EarliestFinish, &router, &batch, &PolicyCtx::at(0.0, 0.0));
+    assert!(pod < 2);
 
     struct OnlyCost;
     impl CostModel for OnlyCost {

@@ -24,7 +24,7 @@ use swiftfusion::coordinator::session::{
 use swiftfusion::coordinator::{CostModel, Planner};
 use swiftfusion::sp::SpAlgo;
 use swiftfusion::util::json::to_string;
-use swiftfusion::workload::{bimodal_trace, Request, Workload};
+use swiftfusion::workload::{bimodal_trace, phased_trace, Request, Workload};
 
 /// The recarve-bench workload pair, shrunk (2 layers × 2 steps) so the
 /// timing simulations stay fast — same shapes the engine unit tests use.
@@ -296,6 +296,200 @@ fn partial_recarving_splits_the_simulated_pod_and_accounts_every_request() {
     let json = to_string(&report.to_json());
     assert!(json.contains("\"partial\":{"), "{json}");
     assert!(swiftfusion::util::json::Json::parse(&json).is_ok());
+}
+
+// ---------------------------------------------------------------------------
+// Arrival-mix forecasting: proactive re-carving + cost-gated absorb
+// ---------------------------------------------------------------------------
+
+/// The predictive-planning claim, in exact scripted arithmetic: on a
+/// phased flux → video trace, hysteresis serves one stale 2 s video
+/// while it waits out its confirmation window, then pays a 1 s drain
+/// because the confirming dispatch lands on a busy pod. The forecast
+/// policy runs the *same* gain arithmetic, but the EWMA already sees
+/// the video phase at its first arrival and short-circuits the window:
+/// the re-carve lands at the front of the phase shift, on a still-idle
+/// pod (zero drain), and the run finishes strictly sooner.
+#[test]
+fn forecast_recarving_beats_hysteresis_on_the_phased_trace() {
+    let trace = || phased_trace(&[(&Workload::flux_3072(), 4), (&Workload::cogvideo_20s(), 4)]);
+    let run = |policy: RecarvePolicy, window: Option<f64>| {
+        let mut router = Router::new(4, 8, 1, SpAlgo::SwiftFusion);
+        let mut config = ServeConfig::new()
+            .batch(BatchPolicy { max_batch: 1, window: 0.0 })
+            .recarve(policy)
+            .recarve_setup(0.25);
+        if let Some(w) = window {
+            config = config.forecast_window(w);
+        }
+        ServeSession::new(config, &StubService).run(&mut router, trace())
+    };
+    let hysteresis = run(RecarvePolicy::Hysteresis { threshold: 0.5, window: 2 }, None);
+    let forecast = run(RecarvePolicy::Forecast { threshold: 0.5, window: 2 }, Some(1.0));
+
+    assert_eq!(hysteresis.metrics.completed(), 8);
+    assert_eq!(forecast.metrics.completed(), 8);
+    // hysteresis: stale 2 s video at t=4, streak confirms at t=5 on the
+    // now-busy pod (1 s drain + 0.25 s setup), then 0.5 s videos
+    assert_eq!(hysteresis.metrics.horizon, 7.75);
+    assert_eq!(hysteresis.recarve.drain_time, 1.0);
+    assert_eq!(hysteresis.recarve.proactive_recarves, 0);
+    // forecast: the t=4 video flips the EWMA mix (share ≈ 0.64 ≥ the
+    // 0.5 dominance bar), the window short-circuits while the pod is
+    // still idle — zero drain, every video serves under its carve
+    assert_eq!(forecast.metrics.horizon, 7.5);
+    assert_eq!(forecast.recarve.drain_time, 0.0);
+    assert_eq!(forecast.recarve.proactive_recarves, 1);
+    assert!(
+        forecast.metrics.horizon < hysteresis.metrics.horizon,
+        "the forecast run must finish strictly sooner"
+    );
+    assert_eq!(forecast.recarve.recarve_count, hysteresis.recarve.recarve_count);
+
+    // with the knob off, Forecast has no forecaster to consult: it
+    // degrades to plain hysteresis, byte for byte
+    let silent = run(RecarvePolicy::Forecast { threshold: 0.5, window: 2 }, None);
+    assert_eq!(to_string(&silent.to_json()), to_string(&hysteresis.to_json()));
+    assert_eq!(silent.recarve.proactive_recarves, 0);
+}
+
+/// Scripted split-pod model for the cost-gated absorb: flux prefers
+/// the wide 4-machine replica carve and costs 3 s under any main-
+/// generation epoch (but cannot run on the video side carve at all);
+/// videos prefer a full-pod plan, subset-plan onto a 3-machine side
+/// carve (1 s there, 2 s anywhere else), and every gain prediction
+/// clears the threshold.
+struct SplitStub;
+
+impl SplitStub {
+    fn wide() -> ParallelSpec {
+        ParallelSpec::new(1, 4, SpDegrees::new(8, 1))
+    }
+
+    fn video_pref() -> ParallelSpec {
+        ParallelSpec::with_pp(2, 2, 1, SpDegrees::new(8, 1))
+    }
+
+    fn side3() -> ParallelSpec {
+        ParallelSpec::with_pp(1, 3, 1, SpDegrees::new(8, 1))
+    }
+}
+
+impl CostModel for SplitStub {
+    fn service_time(&self, w: &Workload, batch: usize) -> f64 {
+        self.service_time_under(w, batch, None)
+    }
+
+    fn service_time_under(
+        &self,
+        w: &Workload,
+        batch: usize,
+        carve: Option<&ParallelSpec>,
+    ) -> f64 {
+        if w.name.starts_with("flux") {
+            if carve.copied() == Some(Self::side3()) {
+                f64::INFINITY
+            } else {
+                3.0 * batch as f64
+            }
+        } else if carve.copied() == Some(Self::side3()) {
+            1.0 * batch as f64
+        } else {
+            2.0 * batch as f64
+        }
+    }
+}
+
+impl Planner for SplitStub {
+    fn plan_spec(&self, w: &Workload) -> Option<ParallelSpec> {
+        if w.name.starts_with("flux") {
+            Some(Self::wide())
+        } else {
+            Some(Self::video_pref())
+        }
+    }
+
+    fn recarve_gain(&self, _w: &Workload, _from: &ParallelSpec) -> Option<f64> {
+        Some(0.75)
+    }
+
+    fn plan_spec_on(&self, w: &Workload, machines: usize) -> Option<ParallelSpec> {
+        if !w.name.starts_with("flux") && machines == 3 {
+            Some(Self::side3())
+        } else {
+            None
+        }
+    }
+
+    fn partial_recarve_gain(
+        &self,
+        _w: &Workload,
+        _from: &ParallelSpec,
+        _idle: usize,
+    ) -> Option<f64> {
+        Some(0.75)
+    }
+}
+
+/// The cost-gated merge: a lone video splits a 3-machine side carve
+/// off the flux pod; the flux stream keeps the main generation busy
+/// back to back, so the full-idle merge barrier can never fire and a
+/// forecast-less pod stays split past the end of the trace. With the
+/// forecaster on, the t=3 flux dispatch still holds the gate (the
+/// video's EWMA share is ≈ 0.12, above the absorb epsilon), and the
+/// t=4 dispatch fires it: the side's class has faded from the mix, the
+/// main-busy pod absorbs the drained side for exactly one re-setup,
+/// and the pod finishes the trace re-unified.
+#[test]
+fn forecast_gated_absorb_reunifies_a_main_busy_split_pod() {
+    let mk = |id: u64, w: Workload, at: f64| Request { id, workload: w, arrival: at, seed: id };
+    let run = |forecast: bool| {
+        let mut router = Router::new(4, 8, 1, SpAlgo::SwiftFusion);
+        let mut config = ServeConfig::new()
+            .batch(BatchPolicy { max_batch: 1, window: 0.0 })
+            .recarve(RecarvePolicy::Partial { threshold: 0.5, window: 1 })
+            .recarve_setup(0.25);
+        if forecast {
+            config = config.forecast_window(0.5);
+        }
+        let trace = vec![
+            mk(0, Workload::flux_3072(), 0.0),
+            mk(1, Workload::flux_3072(), 1.0),
+            mk(2, Workload::cogvideo_20s(), 2.0),
+            mk(3, Workload::flux_3072(), 3.0),
+            mk(4, Workload::flux_3072(), 4.0),
+        ];
+        ServeSession::new(config, &SplitStub).run(&mut router, trace)
+    };
+    let frozen = run(false);
+    let gated = run(true);
+
+    assert_eq!(frozen.metrics.completed(), 5);
+    assert_eq!(gated.metrics.completed(), 5);
+    assert!(frozen.rejected.is_empty() && gated.rejected.is_empty());
+    assert_eq!(frozen.recarve.partial_splits, 1);
+    assert_eq!(gated.recarve.partial_splits, 1);
+
+    // without a forecaster the split outlives the trace: the main
+    // generation never idles, so the merge barrier cannot fire
+    assert_eq!(frozen.recarve.merges, 0);
+    assert_eq!(frozen.recarve.group_epochs[0].1.merged_at, None);
+
+    // the gate held at t=3 and fired at t=4 — the absorb timestamp is
+    // the proof the decision was forecast-driven, not drain-driven
+    assert_eq!(gated.recarve.merges, 1);
+    assert_eq!(gated.recarve.group_epochs[0].1.merged_at, Some(4.0));
+    assert_eq!(gated.recarve.group_epochs[0].1.served, 1, "the side served the video");
+    assert!(to_string(&gated.to_json()).contains("\"merges\":1"));
+
+    // exact accounting: absorbing charges one side-teardown re-setup
+    // (0.25 s) to the main timeline — the whole price of handing the 3
+    // side machines back while the main keeps computing. (The *payoff*
+    // — a wider footprint for later re-carves — needs a
+    // footprint-aware cost model; `benches/fig_forecast.rs` shows it
+    // end to end.)
+    assert_eq!(gated.metrics.horizon, frozen.metrics.horizon + 0.25);
+    assert_eq!(gated.recarve.setup_time, frozen.recarve.setup_time + 0.25);
 }
 
 // ---------------------------------------------------------------------------

@@ -11,7 +11,7 @@
 
 use swiftfusion::cluster::exec::{run_cluster, run_in_world, ExecMode};
 use swiftfusion::cluster::plan::ParallelPlan;
-use swiftfusion::cluster::recarve::{EpochTracker, RecarvePolicy};
+use swiftfusion::cluster::recarve::{EpochTracker, PolicyCtx, RecarvePolicy};
 use swiftfusion::comm::{Buf, CommWorld};
 use swiftfusion::config::{gcd, AttnShape, ClusterSpec, ParallelSpec, SpDegrees};
 use swiftfusion::sp::displaced::{
@@ -442,7 +442,7 @@ fn epoch_boundary_recarve_stays_oracle_exact() {
         EpochTracker::new(RecarvePolicy::Hysteresis { threshold: 0.1, window: 1 }, 0.03);
 
     // admission: the pod carves into the pipelined plan (epoch 0)
-    let t0 = tracker.on_dispatch(0.0, 0.0, Some(piped), None);
+    let t0 = tracker.on_dispatch(&PolicyCtx::at(0.0, 0.0).preferred(piped));
     assert!(!t0.recarved);
     let plan_a = tracker.carved_plan(&cluster, SpAlgo::SwiftFusion).unwrap();
     assert_eq!(plan_a.spec, piped);
@@ -469,7 +469,7 @@ fn epoch_boundary_recarve_stays_oracle_exact() {
 
     // traffic shifts: the chooser prefers the sp-only plan and the
     // hysteresis policy fires — drain the pod, rebuild the carve
-    let t1 = tracker.on_dispatch(1.0, 0.5, Some(sp_only), Some(0.5));
+    let t1 = tracker.on_dispatch(&PolicyCtx::at(1.0, 0.5).preferred(sp_only).gain(0.5));
     assert!(t1.recarved, "policy must fire across the boundary");
     assert_eq!(t1.setup, 0.03);
     let plan_b = tracker.carved_plan(&cluster, SpAlgo::SwiftFusion).unwrap();
@@ -533,7 +533,7 @@ fn partial_epoch_boundary_recarve_stays_oracle_exact() {
 
     let policy = RecarvePolicy::Partial { threshold: 0.1, window: 1 };
     let mut tracker = EpochTracker::new(policy, 0.05);
-    let t0 = tracker.on_dispatch(0.0, 0.0, Some(full), None);
+    let t0 = tracker.on_dispatch(&PolicyCtx::at(0.0, 0.0).preferred(full));
     assert!(!t0.recarved && !t0.split_pending);
 
     // the busy generation: the rep-0 branch pair as a machine subset at
@@ -565,7 +565,7 @@ fn partial_epoch_boundary_recarve_stays_oracle_exact() {
     // Partial policy asks for a split instead of a pod-wide drain
     let preferred = ParallelSpec::new(1, 1, SpDegrees::new(2, 4));
     assert!(preferred.validate(&cluster).is_ok());
-    let t1 = tracker.on_dispatch(1.0, 5.0, Some(preferred), Some(0.9));
+    let t1 = tracker.on_dispatch(&PolicyCtx::at(1.0, 5.0).preferred(preferred).gain(0.9));
     assert!(t1.split_pending, "busy pod must request a split");
     assert!(!t1.recarved);
     let pr = tracker.split(1.0, Some(narrowed), Some(side_spec), 2, 2);
